@@ -1,0 +1,115 @@
+//! End-to-end driver: the full Aurora bring-up -> validation -> benchmark
+//! campaign of the paper, exercising every layer of the stack on a real
+//! small workload:
+//!
+//! 1. fabric-manager bring-up (routing tables, sweeps, a link flap);
+//! 2. the §3.8 validation ladder with injected node faults, repair loop;
+//! 3. the all2all + GPCNet pre-flight gates;
+//! 4. **functional HPL** — a distributed blocked LU where every tile op
+//!    executes the AOT Pallas/JAX artifacts through PJRT (L1+L2) over the
+//!    simulated fabric (L3), accepted by the HPL scaled-residual check;
+//! 5. functional HPL-MxP IR, HPCG CG, Nekbone CG, Graph500 BFS;
+//! 6. at-scale performance reproduction of the paper's headline numbers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example exascale_campaign
+//! ```
+
+use aurorasim::apps;
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabricmgr::FabricManager;
+use aurorasim::machine::Machine;
+use aurorasim::metrics::{fmt_flops, fmt_time};
+use aurorasim::reproduce;
+use aurorasim::runtime::Runtime;
+use aurorasim::topology::LinkId;
+use aurorasim::validate::{NodeFault, Validator};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== 1. fabric bring-up ===");
+    let aurora_cfg = AuroraConfig::aurora();
+    let mut fm = FabricManager::new(&aurora_cfg);
+    let machine = Machine::new(&AuroraConfig::small(8, 4)); // 64-node testbed
+    println!("fabric manager controls {} switches", fm.switch_count());
+    println!(
+        "routing table entries: {}",
+        fm.routing_table_entries(&Machine::aurora().topo)
+    );
+    let flappy = LinkId::Global { src: 1, dst: 5, idx: 0 };
+    fm.record_flap(flappy, 60.0, 3);
+    println!("link {flappy:?} flapped -> drained: bw x{}",
+             fm.bw_multiplier(&flappy));
+    fm.retune_complete(flappy);
+    println!("retuned -> bw x{}", fm.bw_multiplier(&flappy));
+    for fired in [fm.tick(5.0), fm.tick(5.0)] {
+        println!("sweeps fired: {fired:?}");
+    }
+
+    println!("\n=== 2. validation ladder (§3.8) ===");
+    let mut v = Validator::new(&machine);
+    v.inject(5, NodeFault { perf_factor: 0.4, ..Default::default() });
+    v.inject(11, NodeFault { hw_errors: 2, ..Default::default() });
+    let all: Vec<usize> = (0..machine.cfg.nodes()).collect();
+    for rep in v.systematic(&all) {
+        println!(
+            "  {:?}: tested {:3}  failed {:?}",
+            rep.level, rep.tested_nodes, rep.failed_nodes
+        );
+    }
+    let repaired = v.repair_and_revalidate();
+    println!("  repaired + revalidated: {repaired:?}");
+
+    println!("\n=== 3. pre-flight gates ===");
+    let bw = apps::alltoall::small_scale_check(&machine, 16, 4, 64 << 10);
+    println!("  all2all (16 nodes x 4): aggregate {:.1} GB/s", bw / 1e9);
+    let gp = apps::gpcnet::Gpcnet::default().run(&machine, true);
+    println!(
+        "  GPCNet: isolated RR lat {:.1} us, congested {:.1} us \
+         (CIF {:.1}x)",
+        gp.rr_lat_isolated.0 * 1e6,
+        gp.rr_lat_congested.0 * 1e6,
+        gp.cif_lat.0
+    );
+
+    println!("\n=== 4-5. functional benchmarks (PJRT artifacts) ===");
+    let mut rt = Runtime::open("artifacts")?;
+    println!("  PJRT platform: {}", rt.platform());
+    print!("{}", reproduce::functional_suite(&mut rt)?);
+    let counts = rt.call_counts();
+    let total_calls: u64 = counts.values().sum();
+    println!("  artifact executions: {total_calls} across {} kernels",
+             counts.len());
+
+    println!("\n=== 6. at-scale reproduction (headline numbers) ===");
+    let hpl = apps::hpl::performance(&aurora_cfg, 9234);
+    println!(
+        "  HPL     : {} on 9,234 nodes ({:.2}% eff, {})  [paper: 1.012 \
+         EF/s, 78.84%, 4h21m54s]",
+        fmt_flops(hpl.rate),
+        hpl.efficiency * 100.0,
+        fmt_time(hpl.time)
+    );
+    let mxp = apps::hpl_mxp::performance(&aurora_cfg, 9500);
+    println!(
+        "  HPL-MxP : {} on 9,500 nodes  [paper: 11.64 EF/s]",
+        fmt_flops(mxp.rate)
+    );
+    let g = apps::graph500::performance(&aurora_cfg, 8192, 42);
+    println!(
+        "  Graph500: {:.0} GTEPS at scale 42 on 8,192 nodes  [paper: \
+         69,373]",
+        g.gteps
+    );
+    let h = apps::hpcg::performance(&aurora_cfg, 4096);
+    println!(
+        "  HPCG    : {:.3} PF/s on 4,096 nodes  [paper: 5.613]",
+        h.pflops
+    );
+    let a2a = apps::alltoall::Alltoall::paper().peak(&aurora_cfg);
+    println!(
+        "  all2all : {:.2} TB/s aggregate at 9,658 nodes  [paper: 228.92]",
+        a2a / 1e12
+    );
+    println!("\ncampaign complete.");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Fabric bring-up and operations tour (paper §3-§4): topology
+//! addressing, adaptive routing under load, congestion management on/off,
+//! QoS allocation, fabric-manager sweeps + orchestrated maintenance, and
+//! the MPI microbenchmarks of §5.1.
+//!
+//! ```bash
+//! cargo run --release --example fabric_bringup
+//! ```
+
+use aurorasim::apps::osu;
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{DesOpts, DesSim};
+use aurorasim::fabric::qos::QosProfile;
+use aurorasim::fabric::{Flow, Router, RoutedFlow, TrafficClass};
+use aurorasim::fabricmgr::FabricManager;
+use aurorasim::machine::Machine;
+use aurorasim::topology::LinkId;
+
+fn main() -> anyhow::Result<()> {
+    let machine = Machine::new(&AuroraConfig::small(8, 4));
+    let topo = &machine.topo;
+
+    println!("=== algorithmic addressing (§3.6/§3.7) ===");
+    for nic in [0u32, 77, 511] {
+        let addr = topo.fabric_addr(nic);
+        println!("  nic {nic}: group {} switch {} port {} (static ARP \
+                  resolves back to {})",
+                 addr.group, addr.switch, addr.port, topo.resolve(addr));
+    }
+
+    println!("\n=== adaptive routing under a hot group pair (§3.1) ===");
+    let mut router = Router::new(topo);
+    for i in 0..600 {
+        let f = Flow::new((i % 16) as u32, 300 + (i % 16) as u32, 1 << 20);
+        router.route(&f);
+    }
+    println!("  routed {} flows, {} diverted non-minimally (Valiant)",
+             router.total_routed, router.nonminimal_count);
+
+    println!("\n=== congestion management on/off (§3.1, Fig 5) ===");
+    let mut r2 = Router::new(topo);
+    let mut flows: Vec<RoutedFlow> = (0..10)
+        .map(|i| {
+            let f = Flow::new(i * 8, 200, 8 << 20); // 10-way incast
+            RoutedFlow { path: r2.route(&f), flow: f }
+        })
+        .collect();
+    let victim = Flow::new(1, 280, 1 << 20);
+    flows.push(RoutedFlow { path: r2.route(&victim), flow: victim });
+    for mgmt in [true, false] {
+        let sim = DesSim::new(topo,
+            DesOpts { congestion_mgmt: mgmt, ..DesOpts::default() });
+        let res = sim.run_simultaneous(&flows);
+        println!("  congestion mgmt {}: victim flow time {:.2} ms",
+                 if mgmt { "ON " } else { "OFF" },
+                 res.per_flow[10] * 1e3);
+    }
+
+    println!("\n=== QoS profile LlBeBdEt (§4.2.3) ===");
+    let q = QosProfile::llbebdet();
+    let shares = q.allocate(&[
+        (TrafficClass::LowLatency, 0.5),
+        (TrafficClass::BulkData, 2.0),
+        (TrafficClass::BestEffort, 2.0),
+        (TrafficClass::Ethernet, 1.0),
+    ]);
+    println!("  contended link shares: LL {:.2} Bd {:.2} Be {:.2} Et {:.2}",
+             shares[0], shares[1], shares[2], shares[3]);
+
+    println!("\n=== fabric manager (§3.5, §4.1-4.2) ===");
+    let mut fm = FabricManager::new(&machine.cfg);
+    let link = LinkId::Local { group: 2, a: 0, b: 3 };
+    fm.set_degraded(link, 2);
+    println!("  degraded link {link:?}: bw x{}", fm.bw_multiplier(&link));
+    fm.enter_maintenance(link);
+    println!("  orchestrated maintenance: bw x{}", fm.bw_multiplier(&link));
+    fm.restore(link);
+    println!("  restored: bw x{}", fm.bw_multiplier(&link));
+    fm.failover();
+    println!("  active-standby failover: active = {}", fm.active);
+
+    println!("\n=== §5.1 microbenchmarks ===");
+    println!("  Fig 10 p2p latency:");
+    for (b, l) in osu::p2p_latency_sweep(&machine, &[8, 64, 128, 4096]) {
+        println!("    {b:>6} B: {:.2} us", l * 1e6);
+    }
+    println!("  Fig 11/13 socket bandwidth (8 ranks):");
+    println!("    host: {:.1} GB/s   gpu: {:.1} GB/s",
+             osu::socket_bandwidth(&machine, 8, false) / 1e9,
+             osu::socket_bandwidth(&machine, 8, true) / 1e9);
+    Ok(())
+}

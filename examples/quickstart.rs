@@ -1,0 +1,42 @@
+//! Quickstart: build the Aurora machine model, launch an MPI job through
+//! the coordinator, and read the reports.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::coordinator::{JobSpec, Launcher};
+use aurorasim::machine::Machine;
+use aurorasim::mpi::{coll, Comm};
+
+fn main() -> anyhow::Result<()> {
+    // The full 10,624-node Aurora (topology is algorithmic: O(1) memory).
+    let aurora = Machine::aurora();
+    println!("{}\n", aurora.spec_table());
+
+    // A small dragonfly with identical per-link constants for job runs.
+    let machine = Machine::new(&AuroraConfig::small(8, 4)); // 64 nodes
+    let mut launcher = Launcher::new(&machine);
+
+    // Launch: 16 nodes x 8 ranks, balanced NUMA/NIC binding (§3.8.4).
+    let spec = JobSpec::new("quickstart-allreduce", 16, 8);
+    let report = launcher.launch(&spec, |world| {
+        let comm = Comm::world(16 * 8);
+        let mut out = Vec::new();
+        for bytes in [8u64, 1 << 10, 64 << 10, 1 << 20] {
+            out.push((bytes, coll::allreduce(world, &comm, bytes)));
+        }
+        out
+    })?;
+
+    println!("MPI_Allreduce on {} ranks:", spec.ranks());
+    for (bytes, t) in &report.result {
+        println!("  {:>8} B  {:>10.1} us", bytes, t * 1e6);
+    }
+    println!("\ncpu-bind (first 4 ranks): {:?}",
+             &report.cpu_binds[..4.min(report.cpu_binds.len())]);
+    println!("{}", report.mpich_summary);
+    println!("{}", report.counter_report);
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT-lower the L2 compute graphs to HLO *text* + a manifest for Rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Writes one `<name>.hlo.txt` per entry point plus `manifest.json` describing
+argument shapes/dtypes, output arity and a FLOP estimate per call, which
+`rust/src/runtime/manifest.rs` consumes. Python runs exactly once, at build
+time; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32, F64 = jnp.float32, jnp.float64
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# Fixed functional-mode shapes (see DESIGN.md §5): HPL tiles are padded to
+# these by the Rust driver (zero-padding is exact for all four HPL ops).
+NB = 64          # HPL block size
+MLOC = 128       # HPL local tile edge
+HPCG_N = 32      # HPCG local block edge
+FFT_N = 32       # HACC local grid edge
+NEK_E, NEK_P = 32, 9   # Nekbone: elements per call, poly order nx1=9
+
+
+def _waxpby(x, y, ab):
+    """waxpby with (2,)-packed scalars so Rust passes plain vec literals."""
+    return model.hpcg_waxpby(ab[0], x, ab[1], y)
+
+
+def _symgs(xp, r):
+    return model.hpcg_symgs(xp, r, sweeps=1)
+
+
+# name -> (fn, [arg specs], flops-per-call estimate)
+REGISTRY = {
+    "hpl_panel_factor": (
+        model.hpl_panel_factor, [_spec((NB, NB), F64)], (2 / 3) * NB**3),
+    "hpl_trsm_row": (
+        model.hpl_trsm_row, [_spec((NB, NB), F64), _spec((NB, MLOC), F64)],
+        NB * NB * MLOC),
+    "hpl_trsm_col": (
+        model.hpl_trsm_col, [_spec((NB, NB), F64), _spec((MLOC, NB), F64)],
+        NB * NB * MLOC),
+    "hpl_update": (
+        model.hpl_update,
+        [_spec((MLOC, NB), F64), _spec((NB, MLOC), F64),
+         _spec((MLOC, MLOC), F64)],
+        2 * MLOC * MLOC * NB),
+    "hpl_residual": (
+        model.hpl_residual,
+        [_spec((4 * NB, 4 * NB), F64), _spec((4 * NB,), F64),
+         _spec((4 * NB,), F64)],
+        2 * (4 * NB) ** 2),
+    "mxp_update": (
+        model.mxp_update,
+        [_spec((MLOC, NB), F32), _spec((NB, MLOC), F32),
+         _spec((MLOC, MLOC), F32)],
+        2 * MLOC * MLOC * NB),
+    "mxp_ir_step": (
+        model.mxp_ir_step,
+        [_spec((4 * NB, 4 * NB), F64), _spec((4 * NB,), F64),
+         _spec((4 * NB,), F64)],
+        2 * (4 * NB) ** 2),
+    "mxp_gemm": (
+        lambda x, y: model.mxp_gemm(x, y),
+        [_spec((256, 256), F32), _spec((256, 256), F32)],
+        2 * 256**3),
+    "hpcg_spmv": (
+        model.hpcg_spmv, [_spec((HPCG_N + 2,) * 3, F32)],
+        27 * 2 * HPCG_N**3),
+    "hpcg_symgs": (
+        _symgs, [_spec((HPCG_N + 2,) * 3, F32), _spec((HPCG_N,) * 3, F32)],
+        2 * 27 * 2 * HPCG_N**3),
+    "hpcg_dot": (
+        model.hpcg_dot, [_spec((HPCG_N,) * 3, F32), _spec((HPCG_N,) * 3, F32)],
+        2 * HPCG_N**3),
+    "hpcg_waxpby": (
+        _waxpby,
+        [_spec((HPCG_N,) * 3, F32), _spec((HPCG_N,) * 3, F32),
+         _spec((2,), F32)],
+        3 * HPCG_N**3),
+    "hacc_fft_poisson": (
+        model.hacc_fft_poisson, [_spec((FFT_N,) * 3, F32)],
+        5 * FFT_N**3 * (3 * 10) * 2),  # ~5 N^3 log2(N^3) per FFT, x2
+    "hacc_short_range": (
+        model.hacc_short_range, [_spec((256, 3), F32)], 20 * 256 * 256),
+    "nekbone_ax": (
+        model.nekbone_ax,
+        [_spec((NEK_E, NEK_P, NEK_P, NEK_P), F64), _spec((NEK_P, NEK_P), F64)],
+        12 * NEK_E * NEK_P**4),
+    "lammps_pair_tile": (
+        model.lammps_pair_tile, [_spec((128, 3), F32)], 30 * 128 * 128),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _n_outputs(fn, specs) -> int:
+    out = jax.eval_shape(fn, *specs)
+    return len(out) if isinstance(out, (tuple, list)) else 1
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--outdir", default="../artifacts")
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of artifact names")
+    args = p.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    names = list(REGISTRY) if args.only is None else args.only.split(",")
+    manifest = {}
+    for name in names:
+        fn, specs, flops = REGISTRY[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out = jax.eval_shape(fn, *specs)
+        outs = list(out) if isinstance(out, (tuple, list)) else [out]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                     for s in specs],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in outs],
+            "flops": float(flops),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts + {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True).
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis assert
+allclose across shape/dtype sweeps. The kernels are written MXU/VMEM-shaped
+(128-aligned BlockSpec tiles, bf16 x bf16 -> f32 contractions) per
+DESIGN.md section "Hardware adaptation".
+"""
+
+from .mxp_gemm import mxp_gemm
+from .hpl_update import hpl_trailing_update
+from .stencil27 import stencil27
+
+__all__ = ["mxp_gemm", "hpl_trailing_update", "stencil27"]

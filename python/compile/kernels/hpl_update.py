@@ -1,0 +1,67 @@
+"""FP64 blocked trailing-submatrix update — the HPL hot spot (paper §5.2.1).
+
+Each HPL iteration applies C -= L_panel @ U_row to the trailing submatrix;
+>90% of HPL runtime is this rank-nb update. Same three-level blocked
+structure as mxp_gemm but in full FP64 (the Top500 run is pure FP64), with
+the C tile loaded once, swept over K, and written back — i.e. a fused
+"GEMM with beta=1, alpha=-1" rather than a separate add.
+
+VMEM per step at (bm, bn, bk) = (128, 128, 128) in f64:
+  a 128 KiB + b 128 KiB + c 128 KiB = 384 KiB, still deep inside VMEM;
+on a real MXU part f64 is emulated (6-pass), which DESIGN.md §Perf accounts
+for when translating the paper's PVC FP64 numbers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(a_ref, b_ref, c_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] -= jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def hpl_trailing_update(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                        bm: int = 128, bn: int = 128, bk: int = 64) -> jax.Array:
+    """Return C - A @ B (f64). A: (m, nb), B: (nb, n), C: (m, n)."""
+    if a.shape[0] != c.shape[0] or b.shape[1] != c.shape[1] \
+            or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad update shapes {a.shape} {b.shape} {c.shape}")
+    m, kdim = a.shape
+    n = b.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    mp, np_, kp = _ru(m, bm), _ru(n, bn), _ru(kdim, bk)
+    f64 = jnp.float64
+    ap = jnp.pad(a.astype(f64), ((0, mp - m), (0, kp - kdim)))
+    bp = jnp.pad(b.astype(f64), ((0, kp - kdim), (0, np_ - n)))
+    cp = jnp.pad(c.astype(f64), ((0, mp - m), (0, np_ - n)))
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_update_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), f64),
+        interpret=True,
+    )(ap, bp, cp)
+    return out[:m, :n]
+
+
+def _ru(v: int, b: int) -> int:
+    return (v + b - 1) // b * b

@@ -1,0 +1,90 @@
+"""Mixed-precision blocked GEMM — the HPL-MxP hot spot (paper §5.2.2).
+
+HPL-MxP factors in FP16/FP32 on the PVC matrix engines and refines in FP64.
+On our TPU-shaped substrate the analogue is a bf16 x bf16 -> f32 MXU
+contraction.  The kernel is a classic three-level blocked GEMM:
+
+  grid = (M/bm, N/bn, K/bk)   -- K innermost so the f32 accumulator tile
+                                 stays resident in VMEM across the K sweep
+  x tile (bm, bk), y tile (bk, bn), out tile (bm, bn)
+
+BlockSpec expresses the HBM->VMEM schedule the GPU code does with
+workgroups/SLM staging; tiles default to 128x128 (MXU systolic array edge).
+
+VMEM footprint per step (defaults, bf16 in / f32 acc):
+  x 128x128x2 B + y 128x128x2 B + acc 128x128x4 B = 128 KiB  (<< 16 MiB VMEM)
+so real-TPU double buffering of both input streams fits trivially; the MXU
+sees one full 128x128x128 MACC block per grid step => structural utilization
+is bounded by the K-sweep pipeline fill only (see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mxp_gemm_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # bf16 x bf16 -> f32: preferred_element_type keeps the accumulator wide,
+    # exactly the MXU mixed-precision contract (and the PVC XMX one).
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a: jax.Array, m: int, n: int) -> jax.Array:
+    return jnp.pad(a, ((0, m - a.shape[0]), (0, n - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mxp_gemm(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+             bk: int = 128) -> jax.Array:
+    """C = A @ B with bf16 inputs and f32 accumulation.
+
+    Accepts any float input dtype (cast to bf16 at the door — matching
+    HPL-MxP's demotion of the FP64 problem into the low-precision factor);
+    returns f32. Shapes need not be tile-aligned; we pad and slice.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"bad gemm shapes {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm, bk, bn = min(bm, _ceil_mult(m)), min(bk, _ceil_mult(k)), min(bn, _ceil_mult(n))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xb = _pad_to(x.astype(jnp.bfloat16), mp, kp)
+    yb = _pad_to(y.astype(jnp.bfloat16), kp, np_)
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mxp_gemm_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only.
+    )(xb, yb)
+    return out[:m, :n]
+
+
+def _round_up(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def _ceil_mult(v: int) -> int:
+    """Largest power-of-two tile edge <= 128 that is not absurd for tiny v."""
+    e = 8
+    while e < 128 and e < v:
+        e *= 2
+    return e

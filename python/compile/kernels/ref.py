@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle to tight tolerances
+across the hypothesis shape/dtype sweep in python/tests/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .stencil27 import DIAG, OFF
+
+
+def mxp_gemm_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """bf16 x bf16 -> f32 matmul, same rounding as the kernel."""
+    return jnp.dot(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+
+
+def hpl_trailing_update_ref(a, b, c) -> jax.Array:
+    f64 = jnp.float64
+    return c.astype(f64) - jnp.dot(a.astype(f64), b.astype(f64))
+
+
+def stencil27_ref(x_padded: jax.Array) -> jax.Array:
+    nz, ny, nx = (d - 2 for d in x_padded.shape)
+    acc = jnp.zeros((nz, ny, nx), x_padded.dtype)
+    for dz in range(3):
+        for dy in range(3):
+            for dx in range(3):
+                w = DIAG if (dz, dy, dx) == (1, 1, 1) else OFF
+                acc = acc + w * x_padded[dz:dz + nz, dy:dy + ny, dx:dx + nx]
+    return acc

@@ -1,0 +1,154 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+hypothesis sweeps shapes/dtypes; every Pallas kernel must match its pure-jnp
+ref to tight tolerances (identical rounding for mxp_gemm, f64 ulps for HPL).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import hpl_trailing_update, mxp_gemm, stencil27
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=97)
+SMALL = st.integers(min_value=3, max_value=20)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- mxp_gemm
+
+class TestMxpGemm:
+    def test_square(self):
+        rng = np.random.default_rng(0)
+        x, y = _rand(rng, 64, 64), _rand(rng, 64, 64)
+        np.testing.assert_allclose(mxp_gemm(x, y), ref.mxp_gemm_ref(x, y),
+                                   rtol=1e-6)
+
+    def test_tile_aligned_256(self):
+        rng = np.random.default_rng(1)
+        x, y = _rand(rng, 256, 128), _rand(rng, 128, 256)
+        np.testing.assert_allclose(mxp_gemm(x, y), ref.mxp_gemm_ref(x, y),
+                                   rtol=1e-6)
+
+    def test_returns_f32(self):
+        x = jnp.ones((8, 8), jnp.float32)
+        assert mxp_gemm(x, x).dtype == jnp.float32
+
+    def test_identity(self):
+        eye = jnp.eye(32, dtype=jnp.float32)
+        a = jnp.arange(32.0 * 32).reshape(32, 32) / 64.0
+        got = mxp_gemm(a, eye)
+        np.testing.assert_allclose(
+            got, a.astype(jnp.bfloat16).astype(jnp.float32), rtol=1e-6)
+
+    def test_bad_shapes_raise(self):
+        with pytest.raises(ValueError):
+            mxp_gemm(jnp.ones((4, 5)), jnp.ones((4, 5)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = _rand(rng, m, k), _rand(rng, k, n)
+        got, want = mxp_gemm(x, y), ref.mxp_gemm_ref(x, y)
+        # identical bf16 rounding => near-exact agreement
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS)
+    def test_f64_inputs_accepted(self, m, k, n):
+        rng = np.random.default_rng(7)
+        x = _rand(rng, m, k, dtype=np.float64)
+        y = _rand(rng, k, n, dtype=np.float64)
+        np.testing.assert_allclose(mxp_gemm(x, y), ref.mxp_gemm_ref(x, y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- trailing update
+
+class TestHplUpdate:
+    def test_square(self):
+        rng = np.random.default_rng(2)
+        a = _rand(rng, 96, 32, dtype=np.float64)
+        b = _rand(rng, 32, 96, dtype=np.float64)
+        c = _rand(rng, 96, 96, dtype=np.float64)
+        np.testing.assert_allclose(hpl_trailing_update(a, b, c),
+                                   ref.hpl_trailing_update_ref(a, b, c),
+                                   rtol=1e-13)
+
+    def test_zero_a_is_identity(self):
+        rng = np.random.default_rng(3)
+        c = _rand(rng, 40, 40, dtype=np.float64)
+        a = jnp.zeros((40, 16), jnp.float64)
+        b = _rand(rng, 16, 40, dtype=np.float64)
+        np.testing.assert_allclose(hpl_trailing_update(a, b, c), c, rtol=0)
+
+    def test_bad_shapes_raise(self):
+        one = jnp.ones((4, 4))
+        with pytest.raises(ValueError):
+            hpl_trailing_update(one, one, jnp.ones((5, 4)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, k=st.integers(1, 48), n=DIMS, seed=st.integers(0, 2**31))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, m, k, dtype=np.float64)
+        b = _rand(rng, k, n, dtype=np.float64)
+        c = _rand(rng, m, n, dtype=np.float64)
+        np.testing.assert_allclose(hpl_trailing_update(a, b, c),
+                                   ref.hpl_trailing_update_ref(a, b, c),
+                                   rtol=1e-12, atol=1e-12)
+
+
+# ----------------------------------------------------------------- stencil
+
+class TestStencil27:
+    def test_constant_field_interior(self):
+        """constant x: interior rows see 26*x - 26*x = 0."""
+        xp = jnp.ones((8, 8, 8), jnp.float32)
+        out = stencil27(xp)
+        np.testing.assert_allclose(out[1:-1, 1:-1, 1:-1], 0.0, atol=1e-5)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(4)
+        xp = _rand(rng, 10, 9, 11)
+        np.testing.assert_allclose(stencil27(xp), ref.stencil27_ref(xp),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_too_small_raises(self):
+        with pytest.raises(ValueError):
+            stencil27(jnp.ones((2, 5, 5)))
+
+    def test_symmetry(self):
+        """operator is symmetric: <Ax, y> == <x, Ay> on zero-padded blocks."""
+        rng = np.random.default_rng(5)
+        n = 6
+        x = rng.standard_normal((n, n, n)).astype(np.float32)
+        y = rng.standard_normal((n, n, n)).astype(np.float32)
+        pad = lambda v: jnp.pad(jnp.asarray(v), 1)
+        ax = stencil27(pad(x))
+        ay = stencil27(pad(y))
+        np.testing.assert_allclose(np.sum(np.asarray(ax) * y),
+                                   np.sum(np.asarray(ay) * x), rtol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(nz=SMALL, ny=SMALL, nx=SMALL, seed=st.integers(0, 2**31))
+    def test_hypothesis_shapes(self, nz, ny, nx, seed):
+        rng = np.random.default_rng(seed)
+        xp = _rand(rng, nz, ny, nx)
+        np.testing.assert_allclose(stencil27(xp), ref.stencil27_ref(xp),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_f64(self):
+        rng = np.random.default_rng(6)
+        xp = _rand(rng, 7, 7, 7, dtype=np.float64)
+        np.testing.assert_allclose(stencil27(xp), ref.stencil27_ref(xp),
+                                   rtol=1e-12)

@@ -1,0 +1,106 @@
+//! Ablation studies for the design choices DESIGN.md calls out: what the
+//! simulated Aurora loses when each Slingshot/config feature is turned
+//! off. Each section prints feature-on vs feature-off for the metric the
+//! paper motivates the feature with.
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::analytic;
+use aurorasim::fabric::des::{DesOpts, DesSim};
+use aurorasim::fabric::{Flow, RoutedFlow, Router};
+use aurorasim::machine::Machine;
+use aurorasim::mpi::{coll, Comm, World};
+use aurorasim::util::Pcg;
+
+fn main() {
+    println!("== ablation: adaptive routing / group-load setting (§4.2.1) ==");
+    // hot group pair + load-aware vs probabilistic Valiant choice
+    for group_load in [true, false] {
+        let mut cfg = AuroraConfig::small(8, 4);
+        cfg.group_load_setting = group_load;
+        let m = Machine::new(&cfg);
+        let mut router = Router::new(&m.topo);
+        let mut flows = Vec::new();
+        for i in 0..400 {
+            let f = Flow::new((i % 16) as u32, 300 + (i % 16) as u32, 1 << 20);
+            flows.push(RoutedFlow { path: router.route(&f), flow: f });
+        }
+        let res = DesSim::new(&m.topo, DesOpts::default())
+            .run_simultaneous(&flows);
+        println!(
+            "  group_load={group_load:<5}  nonminimal {}  makespan {:.2} ms",
+            router.nonminimal_count,
+            res.makespan * 1e3
+        );
+    }
+
+    println!("\n== ablation: congestion management (§3.1, Fig 5) ==");
+    let m = Machine::new(&AuroraConfig::small(8, 4));
+    let mut rng = Pcg::new(5);
+    let mut router = Router::new(&m.topo);
+    let mut flows = Vec::new();
+    for i in 0..12 {
+        let f = Flow::new((i * 8) as u32, 200, 8 << 20); // incast
+        flows.push(RoutedFlow { path: router.route(&f), flow: f });
+    }
+    for _ in 0..24 {
+        // background victims
+        let s = rng.gen_usize(64) as u32 * 8;
+        let d = 256 + rng.gen_usize(200) as u32;
+        if s != d {
+            let f = Flow::new(s, d, 1 << 20);
+            flows.push(RoutedFlow { path: router.route(&f), flow: f });
+        }
+    }
+    for mgmt in [true, false] {
+        let res = DesSim::new(
+            &m.topo,
+            DesOpts { congestion_mgmt: mgmt, ..DesOpts::default() },
+        )
+        .run_simultaneous(&flows);
+        let victims: Vec<f64> = res.per_flow[12..].to_vec();
+        let avg = victims.iter().sum::<f64>() / victims.len() as f64;
+        println!(
+            "  congestion_mgmt={mgmt:<5}  victim avg completion {:.2} ms",
+            avg * 1e3
+        );
+    }
+
+    println!("\n== ablation: allreduce algorithm switch (Fig 14) ==");
+    let m = Machine::new(&AuroraConfig::small(16, 8));
+    for bytes in [8u64, 64 << 10, 16 << 20] {
+        let mut w1 = World::new(&m.topo, m.place_job(0, 128, 1));
+        let tree =
+            coll::allreduce_tree_time(&mut w1, &Comm::world(128), bytes);
+        let mut w2 = World::new(&m.topo, m.place_job(0, 128, 1));
+        let ring =
+            coll::allreduce_ring_time(&mut w2, &Comm::world(128), bytes);
+        println!(
+            "  {bytes:>9} B: tree {:>10.1} us   ring {:>10.1} us   winner: {}",
+            tree * 1e6,
+            ring * 1e6,
+            if tree < ring { "tree" } else { "ring" }
+        );
+    }
+
+    println!("\n== ablation: adaptive-routing tax on all2all (Fig 4) ==");
+    let cfg = AuroraConfig::aurora();
+    let real = analytic::alltoall_aggregate_bw(&cfg, 9658, 16, 1 << 20);
+    let theory = analytic::alltoall_theoretical_bw(&cfg, 9658);
+    println!(
+        "  achieved {:.2} TB/s vs wire-limit {:.2} TB/s  ({:.0}% tax)",
+        real / 1e12,
+        theory / 1e12,
+        (1.0 - real / theory) * 100.0
+    );
+
+    println!("\n== ablation: NIC balancing across sockets (§5.1/Fig 13) ==");
+    // balanced (paper) vs all-ranks-on-one-NIC binding
+    let m = Machine::new(&AuroraConfig::small(4, 4));
+    let balanced = aurorasim::apps::osu::socket_bandwidth(&m, 4, false);
+    let one_nic = aurorasim::apps::osu::single_nic_gpu_bw(&m, 4, 64 << 20);
+    println!(
+        "  balanced 4 ranks: {:.1} GB/s   all on one NIC: {:.1} GB/s",
+        balanced / 1e9,
+        one_nic / 1e9
+    );
+}

@@ -1,0 +1,74 @@
+//! Collective-algorithm benchmarks: cost of evaluating the Fig 14 sweep
+//! points (tree vs ring allreduce, all2all rounds, bcast) — both the
+//! simulated latencies and the simulator's own evaluation cost.
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::machine::Machine;
+use aurorasim::mpi::{coll, Comm, World};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..iters.div_ceil(10).min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<48} {:>12.3} us/iter  ({iters} iters)", per * 1e6);
+}
+
+fn main() {
+    println!("== collective benches ==");
+    let m2048 = Machine::new(&AuroraConfig::small(32, 32)); // 2,048 nodes
+    let m256 = Machine::new(&AuroraConfig::small(16, 8));   // 256 nodes
+
+    for nodes in [64usize, 512, 2048] {
+        bench(&format!("allreduce/tree 8B ({nodes} nodes)"),
+              if nodes > 512 { 5 } else { 20 }, || {
+            let mut w =
+                World::new(&m2048.topo, m2048.place_job(0, nodes, 1));
+            let comm = Comm::world(nodes);
+            std::hint::black_box(
+                coll::allreduce_tree_time(&mut w, &comm, 8));
+        });
+    }
+
+    for nodes in [64usize, 512, 2048] {
+        bench(&format!("allreduce/ring 16MiB ({nodes} nodes)"),
+              if nodes > 512 { 5 } else { 20 }, || {
+            let mut w =
+                World::new(&m2048.topo, m2048.place_job(0, nodes, 1));
+            let comm = Comm::world(nodes);
+            std::hint::black_box(
+                coll::allreduce_ring_time(&mut w, &comm, 16 << 20));
+        });
+    }
+
+    bench("alltoall/64KiB (128 ranks, sampled rounds)", 10, || {
+        let mut w = World::new(&m256.topo, m256.place_job(0, 64, 2));
+        let comm = Comm::world(128);
+        std::hint::black_box(coll::alltoall(&mut w, &comm, 64 << 10));
+    });
+
+    bench("bcast/1MiB (256 nodes, binomial)", 10, || {
+        let mut w = World::new(&m256.topo, m256.place_job(0, 256, 1));
+        let comm = Comm::world(256);
+        std::hint::black_box(coll::bcast(&mut w, &comm, 0, 1 << 20));
+    });
+
+    bench("barrier (256 nodes)", 10, || {
+        let mut w = World::new(&m256.topo, m256.place_job(0, 256, 1));
+        let comm = Comm::world(256);
+        std::hint::black_box(coll::barrier(&mut w, &comm));
+    });
+
+    // the full Fig 14 sweep — the figure-regeneration cost target
+    bench("fig14/full sweep (6 node counts x 5 sizes)", 3, || {
+        let nodes = aurorasim::apps::allreduce::fig14_nodes(&m2048);
+        let sizes = aurorasim::apps::allreduce::fig14_sizes();
+        std::hint::black_box(
+            aurorasim::apps::allreduce::sweep(&m2048, &nodes, &sizes));
+    });
+}

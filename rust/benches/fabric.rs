@@ -1,0 +1,98 @@
+//! Fabric-simulator hot-path benchmarks: adaptive routing throughput, the
+//! max-min DES solver, round evaluation at scale. These are the L3 paths
+//! the §Perf pass optimizes (see EXPERIMENTS.md §Perf).
+//!
+//! Hand-rolled harness (offline build — no criterion): prints
+//! `name: time/iter` rows; `cargo bench` runs it.
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{DesOpts, DesSim};
+use aurorasim::fabric::rounds::CostModel;
+use aurorasim::fabric::{Flow, RoutedFlow, Router};
+use aurorasim::topology::Topology;
+use aurorasim::util::Pcg;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..iters.div_ceil(10).min(3) {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<48} {:>12.3} us/iter  ({iters} iters)", per * 1e6);
+}
+
+fn random_flows(topo: &Topology, n: usize, seed: u64) -> Vec<RoutedFlow> {
+    let mut rng = Pcg::new(seed);
+    let mut router = Router::with_seed(topo, seed);
+    let nics = topo.cfg.compute_endpoints() as u64;
+    (0..n)
+        .map(|_| {
+            let src = rng.gen_range(nics) as u32;
+            let dst = (src + 1 + rng.gen_range(nics - 1) as u32) % nics as u32;
+            let f = Flow::new(src, dst, 1 << 20);
+            RoutedFlow { path: router.route(&f), flow: f }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== fabric benches ==");
+    let aurora = Topology::new(&AuroraConfig::aurora());
+    let small = Topology::new(&AuroraConfig::small(16, 16));
+
+    // routing on the full 84,992-NIC machine
+    bench("route/aurora (1k flows, adaptive)", 20, || {
+        let mut router = Router::with_seed(&aurora, 7);
+        let mut rng = Pcg::new(9);
+        for _ in 0..1000 {
+            let src = rng.gen_range(84_992) as u32;
+            let dst = (src + 4096) % 84_992;
+            std::hint::black_box(router.route(&Flow::new(src, dst, 65536)));
+        }
+    });
+
+    // round evaluation at three sizes
+    for n in [100usize, 1_000, 10_000] {
+        let flows = random_flows(&aurora, n, 11);
+        let cm = CostModel::new(&aurora);
+        bench(&format!("eval_round/aurora ({n} flows)"),
+              if n >= 10_000 { 5 } else { 30 }, || {
+            std::hint::black_box(cm.eval_round(&flows));
+        });
+    }
+
+    // DES with max-min progressive filling
+    for n in [32usize, 128, 512] {
+        let flows = random_flows(&small, n, 13);
+        bench(&format!("des/maxmin ({n} flows)"),
+              if n >= 512 { 3 } else { 10 }, || {
+            let sim = DesSim::new(&small, DesOpts::default());
+            std::hint::black_box(sim.run_simultaneous(&flows));
+        });
+    }
+
+    // incast + congestion classification
+    let mut router = Router::new(&small);
+    let incast: Vec<RoutedFlow> = (0..64)
+        .map(|i| {
+            let f = Flow::new((i * 8) as u32, 500, 4 << 20);
+            RoutedFlow { path: router.route(&f), flow: f }
+        })
+        .collect();
+    bench("des/incast-64-to-1 (congestion mgmt)", 10, || {
+        let sim = DesSim::new(&small, DesOpts::default());
+        std::hint::black_box(sim.run_simultaneous(&incast));
+    });
+
+    // analytic tier at full machine scale
+    let cfg = AuroraConfig::aurora();
+    bench("analytic/alltoall 9658 nodes (per point)", 10_000, || {
+        std::hint::black_box(
+            aurorasim::fabric::analytic::alltoall_aggregate_bw(
+                &cfg, 9658, 16, 1 << 20));
+    });
+}

@@ -1,0 +1,21 @@
+//! One bench per paper table/figure: times the regeneration of each
+//! experiment through the reproduce harness. This is the "regenerate the
+//! evaluation section" cost — the practical inner loop of the repo.
+
+use aurorasim::reproduce;
+use std::time::Instant;
+
+fn main() {
+    println!("== figure-regeneration benches ==");
+    let mut total = 0.0;
+    for id in reproduce::all_ids() {
+        let t0 = Instant::now();
+        let out = reproduce::run(id).expect(id);
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("{id:<10} {:>10.1} ms  ({} bytes of report)",
+                 dt * 1e3, out.len());
+    }
+    println!("total: {total:.2} s for {} experiments",
+             reproduce::all_ids().len());
+}

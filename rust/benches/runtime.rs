@@ -1,0 +1,63 @@
+//! PJRT runtime benchmarks: artifact execution throughput — the L1/L2
+//! compute path as seen from the Rust hot loop. Skips (with a notice) if
+//! `make artifacts` has not run.
+
+use aurorasim::runtime::Runtime;
+use std::time::Instant;
+
+fn bench_artifact(rt: &mut Runtime, name: &str, iters: usize) {
+    let spec = match rt.manifest.get(name) {
+        Some(s) => s.clone(),
+        None => {
+            println!("{name:<28} MISSING");
+            return;
+        }
+    };
+    let args: Vec<Vec<f64>> =
+        spec.args.iter().map(|a| vec![0.5; a.elems()]).collect();
+    let refs: Vec<&[f64]> = args.iter().map(|v| v.as_slice()).collect();
+    // first call compiles
+    let t0 = Instant::now();
+    rt.call_f64(name, &refs).expect(name);
+    let compile_and_first = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(rt.call_f64(name, &refs).expect(name));
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let gflops = rt.flops(name) / per / 1e9;
+    println!(
+        "{name:<28} {:>10.3} ms/call  {gflops:>8.2} GF/s  (compile+1st \
+         {:.0} ms)",
+        per * 1e3,
+        compile_and_first * 1e3
+    );
+}
+
+fn main() {
+    println!("== PJRT runtime benches ==");
+    let mut rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: {e}");
+            return;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    for (name, iters) in [
+        ("hpl_update", 50),
+        ("hpl_panel_factor", 20),
+        ("hpl_trsm_row", 20),
+        ("mxp_update", 50),
+        ("mxp_gemm", 20),
+        ("hpcg_spmv", 30),
+        ("hpcg_symgs", 20),
+        ("hpcg_dot", 100),
+        ("hacc_fft_poisson", 20),
+        ("hacc_short_range", 30),
+        ("nekbone_ax", 50),
+        ("lammps_pair_tile", 50),
+    ] {
+        bench_artifact(&mut rt, name, iters);
+    }
+}

@@ -1,0 +1,106 @@
+//! MPI_Allreduce latency benchmark (paper §5.1, Fig 14): latency vs node
+//! count (up to 2,048) for message sizes 8 B - 16 MiB, GPU buffers.
+//!
+//! "Less than linear latency growth is observed, which is typical for a
+//! recursive-doubling tree algorithm. A switch from a ring algorithm to a
+//! tree algorithm is clearly seen on the curves."
+
+use crate::machine::Machine;
+use crate::mpi::{coll, Comm, World};
+
+#[derive(Debug, Clone)]
+pub struct AllreducePoint {
+    pub nodes: usize,
+    pub msg_bytes: u64,
+    pub latency: f64,
+    /// Which algorithm the runtime picked (the Fig 14 kink).
+    pub algorithm: &'static str,
+}
+
+/// Sweep node counts x message sizes. PPN 1 with GPU buffers, matching
+/// the Fig 14 setup ("buffers located in GPU memory").
+pub fn sweep(machine: &Machine, node_counts: &[usize], sizes: &[u64])
+    -> Vec<AllreducePoint> {
+    let mut out = Vec::new();
+    for &nodes in node_counts {
+        for &size in sizes {
+            let mut w = World::new(
+                &machine.topo,
+                machine.place_job(0, nodes, 1),
+            )
+            .gpu_buffers();
+            let comm = Comm::world(nodes);
+            let latency = coll::allreduce(&mut w, &comm, size);
+            let algorithm = if size <= machine.cfg.allreduce_tree_cutoff {
+                "tree"
+            } else {
+                "ring"
+            };
+            out.push(AllreducePoint { nodes, msg_bytes: size, latency,
+                                      algorithm });
+        }
+    }
+    out
+}
+
+/// The Fig 14 grid (scaled to the machine under test).
+pub fn fig14_nodes(machine: &Machine) -> Vec<usize> {
+    [2usize, 8, 32, 128, 512, 2048]
+        .into_iter()
+        .filter(|&n| n <= machine.cfg.nodes())
+        .collect()
+}
+
+pub fn fig14_sizes() -> Vec<u64> {
+    vec![8, 1 << 10, 64 << 10, 1 << 20, 16 << 20]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+
+    fn machine() -> Machine {
+        Machine::new(&AuroraConfig::small(16, 8)) // 256 nodes
+    }
+
+    #[test]
+    fn latency_grows_sublinearly_for_small_messages() {
+        let m = machine();
+        let pts = sweep(&m, &[4, 16, 64, 256], &[8]);
+        let lat: Vec<f64> = pts.iter().map(|p| p.latency).collect();
+        // 64x more nodes must cost far less than 64x the latency
+        assert!(
+            lat[3] < lat[0] * 8.0,
+            "tree allreduce should be ~log-depth: {lat:?}"
+        );
+        // but latency does grow with node count
+        assert!(lat[3] > lat[0]);
+    }
+
+    #[test]
+    fn algorithm_switch_visible() {
+        let m = machine();
+        let cutoff = m.cfg.allreduce_tree_cutoff;
+        let pts = sweep(&m, &[64], &[cutoff, cutoff * 4]);
+        assert_eq!(pts[0].algorithm, "tree");
+        assert_eq!(pts[1].algorithm, "ring");
+    }
+
+    #[test]
+    fn small_allreduce_latency_band() {
+        // Fig 14: 8 B allreduce at moderate scale sits in the tens of
+        // microseconds
+        let m = machine();
+        let pts = sweep(&m, &[64], &[8]);
+        let l = pts[0].latency;
+        assert!(l > 5e-6 && l < 200e-6, "latency {l}");
+    }
+
+    #[test]
+    fn large_messages_cost_bandwidth() {
+        let m = machine();
+        let pts = sweep(&m, &[16], &[8, 16 << 20]);
+        assert!(pts[1].latency > pts[0].latency * 100.0);
+    }
+}

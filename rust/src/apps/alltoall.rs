@@ -1,0 +1,108 @@
+//! MPI all2all fabric-validation benchmark (paper §3.8.1, Fig 4).
+//!
+//! "MPI all2all is considered as a vital pre-flight test prior to running
+//! large scale HPC and AI Benchmarks" — the paper shows a 9,658-node
+//! (77,264-NIC, PPN 16) sweep reaching 228.92 TB/s aggregate.
+//!
+//! Full-scale points use the analytic tier; small scales can be
+//! cross-checked against the round/DES tiers (`small_scale_check`), which
+//! is itself one of the tier-consistency integration tests.
+
+use crate::config::AuroraConfig;
+use crate::fabric::analytic;
+use crate::machine::Machine;
+use crate::mpi::{coll, Comm, World};
+
+#[derive(Debug, Clone)]
+pub struct Alltoall {
+    pub nodes: usize,
+    pub ppn: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub msg_bytes: u64,
+    /// Aggregate bandwidth over all ranks, bytes/s (the Fig 4 y-axis).
+    pub aggregate_bw: f64,
+}
+
+impl Alltoall {
+    /// The paper's configuration: 9,658 nodes, PPN 16.
+    pub fn paper() -> Self {
+        Self { nodes: 9658, ppn: 16 }
+    }
+
+    /// Sweep per-pair transfer sizes (Fig 4 x-axis).
+    pub fn sweep(&self, cfg: &AuroraConfig, sizes: &[u64]) -> Vec<SweepPoint> {
+        sizes
+            .iter()
+            .map(|&s| SweepPoint {
+                msg_bytes: s,
+                aggregate_bw: analytic::alltoall_aggregate_bw(
+                    cfg, self.nodes, self.ppn, s,
+                ),
+            })
+            .collect()
+    }
+
+    /// Default Fig 4 size grid: 64 B .. 4 MiB.
+    pub fn default_sizes() -> Vec<u64> {
+        (6..=22).map(|p| 1u64 << p).collect()
+    }
+
+    /// Peak aggregate bandwidth of the sweep.
+    pub fn peak(&self, cfg: &AuroraConfig) -> f64 {
+        self.sweep(cfg, &Self::default_sizes())
+            .into_iter()
+            .map(|p| p.aggregate_bw)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Small-scale all2all through the MPI/round tier, returning aggregate
+/// bandwidth — used to cross-validate the analytic tier.
+pub fn small_scale_check(machine: &Machine, nodes: usize, ppn: usize,
+                         msg_bytes: u64) -> f64 {
+    let mut w = World::new(&machine.topo, machine.place_job(0, nodes, ppn));
+    let n = nodes * ppn;
+    let comm = Comm::world(n);
+    let t = coll::alltoall(&mut w, &comm, msg_bytes);
+    // every rank sends to n-1 peers
+    (n * (n - 1)) as f64 * msg_bytes as f64 / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_peak() {
+        let cfg = AuroraConfig::aurora();
+        let peak = Alltoall::paper().peak(&cfg);
+        let tb = peak / 1e12;
+        assert!((tb - 228.92).abs() / 228.92 < 0.10, "peak {tb} TB/s");
+    }
+
+    #[test]
+    fn sweep_is_monotone_nondecreasing() {
+        let cfg = AuroraConfig::aurora();
+        let pts = Alltoall::paper().sweep(&cfg, &Alltoall::default_sizes());
+        for w in pts.windows(2) {
+            assert!(w[1].aggregate_bw >= w[0].aggregate_bw * 0.999);
+        }
+    }
+
+    #[test]
+    fn small_scale_tiers_agree_within_factor_two() {
+        // round tier vs analytic tier on an 8-node all2all
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let got = small_scale_check(&m, 8, 2, 64 << 10);
+        let predicted =
+            analytic::alltoall_aggregate_bw(&m.cfg, 8, 2, 64 << 10);
+        let ratio = got / predicted;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "tier mismatch: round {got:.3e} vs analytic {predicted:.3e}"
+        );
+    }
+}

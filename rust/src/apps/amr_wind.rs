@@ -1,0 +1,124 @@
+//! AMR-Wind (paper §5.3.3, Fig 19): block-structured incompressible flow
+//! solver (AMReX/SYCL) running atmospheric-boundary-layer LES; weak
+//! scaling to 8,192 nodes with the FOM = billions of cells solved per
+//! second per step.
+//!
+//! Paper setup: 256^3 cells per rank, PPN 12, domain grown in x/y with
+//! node count (z fixed). Per step: advection/diffusion stencils
+//! (memory-bound), an MLMG Poisson solve (V-cycles: smoothing per level,
+//! coarse-grid allreduces), and face halo exchanges.
+
+use crate::config::AuroraConfig;
+use crate::machine::Machine;
+use crate::runtime::{Engine, NodeRoofline, Runtime};
+use anyhow::Result;
+
+pub use super::ScalingPoint;
+
+pub const PPN: usize = 12;
+pub const CELLS_PER_RANK: u64 = 256 * 256 * 256;
+
+/// One time-step wall time at `nodes`.
+pub fn step_time(cfg: &AuroraConfig, nodes: usize) -> f64 {
+    let rl = NodeRoofline::new(cfg);
+    let cells_node = (CELLS_PER_RANK * PPN as u64) as f64;
+    // ~160 stencil sweeps-equivalent per step (advection + diffusion +
+    // nodal projection + MLMG smoothing over V-cycle levels and
+    // iterations), 8 B/cell each way
+    let t_stencils =
+        rl.node_time(Engine::MemoryBound, 0.0, cells_node * 8.0 * 2.0 * 160.0);
+    // halo: 6 faces x 256^2 x 8 B per rank per sweep set
+    let face_bytes = 12.0 * 6.0 * 256.0 * 256.0 * 8.0 * 8.0;
+    let t_halo = face_bytes / (cfg.nic_eff_bw_host * cfg.nics_per_node as f64)
+        + 12.0 * cfg.mpi_overhead;
+    // MLMG coarse levels: log2(cells) levels, each with an allreduce-like
+    // sync whose latency grows with log(ranks) — the weak-scaling tax
+    let ranks = (nodes * PPN) as f64;
+    let vcycle_levels = 8.0;
+    let bottom_iters = 4.0;
+    let t_mg_sync =
+        vcycle_levels * bottom_iters * 10.0e-6 * ranks.log2().max(1.0);
+    t_stencils + t_halo + t_mg_sync
+}
+
+/// Fig 19: FOM (billion cells / second) + weak-scaling efficiency.
+pub fn fig19(cfg: &AuroraConfig, node_counts: &[usize]) -> Vec<ScalingPoint> {
+    let pts: Vec<(usize, f64)> = node_counts
+        .iter()
+        .map(|&nodes| {
+            let cells = (CELLS_PER_RANK * (nodes * PPN) as u64) as f64;
+            (nodes, cells / step_time(cfg, nodes) / 1e9)
+        })
+        .collect();
+    super::weak_efficiency_from_rates(&pts)
+}
+
+/// Functional demo: the MLMG smoother level (`hpcg_symgs` artifact — the
+/// same damped-Jacobi level smoother) reduces the residual on a 32^3 box.
+pub fn functional(rt: &mut Runtime, _machine: &Machine) -> Result<(f64, f64)> {
+    let n = 32usize;
+    let g = n + 2;
+    let mut rng = crate::util::Pcg::new(23);
+    let rhs: Vec<f64> = (0..n * n * n).map(|_| rng.gen_f64() - 0.5).collect();
+    let x0 = vec![0.0f64; g * g * g];
+    let r0 = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+    // several smoother applications
+    let mut x = x0;
+    for _ in 0..6 {
+        let out = rt.call_f32("hpcg_symgs", &[&x, &rhs])?.remove(0);
+        // re-pad
+        let mut xp = vec![0.0f64; g * g * g];
+        for z in 0..n {
+            for y in 0..n {
+                for xx in 0..n {
+                    xp[((z + 1) * g + y + 1) * g + xx + 1] =
+                        out[(z * n + y) * n + xx];
+                }
+            }
+        }
+        x = xp;
+    }
+    let ax = rt.call_f32("hpcg_spmv", &[&x])?.remove(0);
+    let r1 = rhs
+        .iter()
+        .zip(&ax)
+        .map(|(b, a)| (b - a) * (b - a))
+        .sum::<f64>()
+        .sqrt();
+    Ok((r0, r1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG19_NODES: [usize; 5] = [128, 512, 2048, 4096, 8192];
+
+    #[test]
+    fn fom_scales_to_8192_nodes() {
+        let cfg = AuroraConfig::aurora();
+        let pts = fig19(&cfg, &FIG19_NODES);
+        // efficiency stays high but decays with MLMG sync depth
+        for p in &pts {
+            assert!(p.efficiency > 0.80, "{} nodes {}", p.nodes, p.efficiency);
+        }
+        assert!(pts.last().unwrap().efficiency < pts[0].efficiency + 1e-9);
+    }
+
+    #[test]
+    fn fom_magnitude_is_plausible() {
+        // billions of cells per second at scale
+        let cfg = AuroraConfig::aurora();
+        let pts = fig19(&cfg, &[8192]);
+        assert!(pts[0].fom > 100.0, "{} B cells/s", pts[0].fom);
+    }
+
+    #[test]
+    fn mg_sync_is_the_scaling_tax() {
+        let cfg = AuroraConfig::aurora();
+        let t_small = step_time(&cfg, 128);
+        let t_big = step_time(&cfg, 8192);
+        assert!(t_big > t_small, "sync depth must grow");
+        assert!(t_big < t_small * 1.25, "but stay within ~20%");
+    }
+}

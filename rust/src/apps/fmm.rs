@@ -1,0 +1,230 @@
+//! FMM one-sided communication study (paper §5.3.5, Tables 4-6).
+//!
+//! The NWChemEx Fast Multipole Method issues massive numbers of sparse
+//! MPI_Get/MPI_Put requests with constantly flipping sender/receiver
+//! roles. The paper's four configurations (Table 4) drive the software
+//! RMA path of `mpi::rma`; we regenerate Tables 5 and 6 (transfer time
+//! with/without HMEM) and the 9x16 sub-communicator cliff.
+
+use crate::machine::Machine;
+use crate::mpi::rma::{run_with_fences, RmaKind, RmaOp, WindowSim};
+use crate::mpi::{Comm, World};
+use crate::util::Pcg;
+use anyhow::Result;
+
+/// Table 4 configurations: (label, nodes, ranks-per-comm, sub-comms,
+/// total messages).
+pub const TABLE4: [(&str, usize, usize, usize, u64); 4] = [
+    ("1 x 8", 1, 8, 1, 1_615_459),
+    ("1 x 16", 1, 16, 1, 2_127_199),
+    ("1 x 32", 1, 32, 1, 2_776_246),
+    ("9 x 16", 9, 144, 9, 19_201_665),
+];
+
+/// Elements per one-sided message (sparse multipole data).
+pub const MSG_ELEMS: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct FmmRow {
+    pub label: &'static str,
+    pub messages: u64,
+    pub time: f64,
+}
+
+/// Generate the FMM request pattern for one sub-communicator: every rank
+/// issues gets/puts to sparse offsets on the other ranks, roles flipping.
+fn gen_ops(kind: RmaKind, ranks: usize, total_msgs: u64, seed: u64,
+           win_len: usize) -> Vec<RmaOp> {
+    let mut rng = Pcg::new(seed);
+    let mut ops = Vec::with_capacity(total_msgs as usize);
+    for k in 0..total_msgs {
+        let origin = (k as usize) % ranks;
+        let mut target = rng.gen_usize(ranks);
+        if target == origin {
+            target = (target + 1) % ranks;
+        }
+        let offset = rng.gen_usize(win_len - MSG_ELEMS);
+        ops.push(RmaOp { kind, origin, target, offset, len: MSG_ELEMS });
+    }
+    ops
+}
+
+/// Run one Table 5/6 configuration. `scale` divides the message count so
+/// the unit-test path stays fast (1.0 = paper-exact counts).
+pub fn run_config(machine: &Machine, cfg_row: usize, kind: RmaKind,
+                  hmem: bool, scale: f64) -> Result<FmmRow> {
+    let (label, nodes, ranks, subcomms, msgs) = TABLE4[cfg_row];
+    let msgs_scaled = ((msgs as f64 * scale) as u64).max(1);
+    let ppn = (ranks / subcomms).min(16).max(1);
+    let ranks_per_sub = ranks / subcomms;
+    let nodes_used = nodes.max(1);
+    let mut w = World::new(
+        &machine.topo,
+        machine.place_job(0, nodes_used, (ranks + nodes_used - 1) / nodes_used),
+    );
+    let _ = ppn;
+    let world_comm = Comm::world(ranks);
+    // sub-communicators interleave across nodes (round-robin color), so
+    // multi-node configs pay the inter-node software-RMA tax the paper's
+    // 9x16 row exposes
+    let subs = if subcomms > 1 {
+        world_comm.split(|i| i % subcomms)
+    } else {
+        world_comm.split(|i| i / ranks_per_sub)
+    };
+
+    // fence cadence the paper converged on
+    let fence_every = if kind == RmaKind::Put && !hmem {
+        100
+    } else {
+        2000
+    };
+
+    let mut t_max: f64 = 0.0;
+    let msgs_per_sub = msgs_scaled / subcomms as u64;
+    for (si, sub) in subs.iter().enumerate() {
+        let ops = gen_ops(kind, sub.size(), msgs_per_sub, si as u64 + 1,
+                          512);
+        let mut win = WindowSim::new(sub.size(), 512, hmem);
+        let t = run_with_fences(&mut w, sub, &mut win, &ops, fence_every)?;
+        t_max = t_max.max(t);
+    }
+    Ok(FmmRow { label, messages: msgs_scaled, time: t_max / scale.min(1.0) })
+}
+
+/// Regenerate Table 5 (Get) or Table 6 (Put) at reduced message scale;
+/// times are extrapolated back to the paper's counts.
+pub fn table(machine: &Machine, kind: RmaKind, hmem: bool, scale: f64)
+    -> Result<Vec<FmmRow>> {
+    let rows = match kind {
+        RmaKind::Get => {
+            if hmem {
+                vec![0, 1, 2, 3]
+            } else {
+                vec![0, 1, 2] // paper: 9x16 without HMEM is "NA"
+            }
+        }
+        RmaKind::Put => vec![0, 1, 2],
+    };
+    rows.into_iter()
+        .map(|r| run_config(machine, r, kind, hmem, scale))
+        .collect()
+}
+
+/// Functional data-integrity check: a ring of gets moves the right data.
+pub fn functional(machine: &Machine) -> Result<bool> {
+    let ranks = 8;
+    let mut w = World::new(&machine.topo, machine.place_job(0, 1, ranks));
+    let comm = Comm::world(ranks);
+    let mut win = WindowSim::new(ranks, 64, true);
+    for r in 0..ranks {
+        win.data[r] = (0..64).map(|i| (r * 100 + i) as f64).collect();
+    }
+    // every rank gets the first 32 elements of its right neighbour
+    let ops: Vec<RmaOp> = (0..ranks)
+        .map(|r| RmaOp {
+            kind: RmaKind::Get,
+            origin: r,
+            target: (r + 1) % ranks,
+            offset: 0,
+            len: 32,
+        })
+        .collect();
+    win.run_phase(&mut w, &comm, &ops)?;
+    win.fence(&mut w, &comm);
+    Ok((0..ranks).all(|r| {
+        let want = (((r + 1) % ranks) * 100) as f64;
+        win.data[r][0] == want && win.data[r][31] == want + 31.0
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+
+    fn machine() -> Machine {
+        Machine::new(&AuroraConfig::small(4, 8))
+    }
+
+    const SCALE: f64 = 0.02; // 2% of the paper's message counts per test
+
+    #[test]
+    fn table5_get_with_hmem_seconds_band() {
+        // paper: 0.9 / 1.1 / 1.6 s for rows 1-3
+        let m = machine();
+        let rows = table(&m, RmaKind::Get, true, SCALE).unwrap();
+        let paper = [0.9, 1.1, 1.6, 14.5];
+        for (row, want) in rows.iter().zip(paper) {
+            let ratio = row.time / want;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{}: {}s vs paper {want}s",
+                row.label,
+                row.time
+            );
+        }
+    }
+
+    #[test]
+    fn get_without_hmem_order_of_magnitude_slower() {
+        let m = machine();
+        let with = run_config(&m, 0, RmaKind::Get, true, SCALE).unwrap();
+        let without = run_config(&m, 0, RmaKind::Get, false, SCALE).unwrap();
+        let speedup = without.time / with.time;
+        assert!((8.0..50.0).contains(&speedup), "HMEM speedup {speedup}");
+    }
+
+    #[test]
+    fn get_without_hmem_improves_with_more_ranks() {
+        // Table 5 shape: 24.6 -> 17.1 -> 13.0 s as ranks grow
+        let m = machine();
+        let r8 = run_config(&m, 0, RmaKind::Get, false, SCALE).unwrap();
+        let r32 = run_config(&m, 2, RmaKind::Get, false, SCALE).unwrap();
+        assert!(
+            r32.time < r8.time,
+            "origin-serialized gets parallelize: {} vs {}",
+            r8.time,
+            r32.time
+        );
+    }
+
+    #[test]
+    fn put_order_of_magnitude_slower_than_get() {
+        let m = machine();
+        let g = run_config(&m, 0, RmaKind::Get, true, SCALE).unwrap();
+        let p = run_config(&m, 0, RmaKind::Put, true, SCALE).unwrap();
+        let ratio = p.time / g.time;
+        assert!((8.0..25.0).contains(&ratio), "put/get {ratio}");
+    }
+
+    #[test]
+    fn hmem_helps_put_only_2x() {
+        let m = machine();
+        let with = run_config(&m, 0, RmaKind::Put, true, SCALE).unwrap();
+        let without = run_config(&m, 0, RmaKind::Put, false, SCALE).unwrap();
+        let speedup = without.time / with.time;
+        assert!((1.5..4.0).contains(&speedup), "put speedup {speedup}");
+    }
+
+    #[test]
+    fn subcommunicator_cliff() {
+        // Table 5 row 4: 9x16 is an order of magnitude off the intra-node
+        // per-message rate
+        let m = machine();
+        let intra = run_config(&m, 1, RmaKind::Get, true, SCALE).unwrap();
+        let multi = run_config(&m, 3, RmaKind::Get, true, SCALE * 0.2).unwrap();
+        let rate_intra = intra.messages as f64 / intra.time;
+        let rate_multi =
+            multi.messages as f64 / (multi.time * 0.2 / SCALE.min(1.0));
+        // per-message throughput collapses by ~an order of magnitude
+        let drop = rate_intra / rate_multi.max(1.0);
+        assert!(drop > 4.0, "drop {drop}");
+    }
+
+    #[test]
+    fn functional_ring_moves_data() {
+        let m = machine();
+        assert!(functional(&m).unwrap());
+    }
+}

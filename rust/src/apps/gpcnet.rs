@@ -1,0 +1,201 @@
+//! GPCNet network load test (paper §3.8.2, Fig 5).
+//!
+//! GPCNet measures natural-ring and random-ring patterns plus a multiple
+//! allreduce, first isolated and then concurrently with congestor traffic
+//! (incast + broad background flows), reporting the **Congestion Impact
+//! Factor** (CIF = congested / isolated) at the 99th percentile and mean.
+//! Aurora's Slingshot congestion management kept CIF small (1.0-10.6x in
+//! Fig 5) at 9,658 nodes — the largest GPCNet run ever.
+//!
+//! The DES tier runs the experiment at reduced scale with congestion
+//! management on (Slingshot) and off (the classic-fabric baseline GPCNet
+//! was designed to embarrass).
+
+use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
+use crate::fabric::{Flow, Router, RoutedFlow};
+use crate::machine::Machine;
+use crate::metrics::{mean, percentile};
+use crate::util::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct GpcnetReport {
+    pub rr_lat_isolated: (f64, f64),  // (avg, p99)
+    pub rr_lat_congested: (f64, f64),
+    pub rr_bw_isolated: (f64, f64),   // bytes/s/rank (avg, p99-low)
+    pub rr_bw_congested: (f64, f64),
+    pub cif_lat: (f64, f64),          // (avg, p99) impact factors
+    pub cif_bw: (f64, f64),
+}
+
+pub struct Gpcnet {
+    /// Victim (network-test) ranks — 60% of job in the paper's run.
+    pub victims: usize,
+    /// Congestor ranks — 40%.
+    pub congestors: usize,
+    pub rr_bytes: u64,
+    pub lat_bytes: u64,
+}
+
+impl Default for Gpcnet {
+    fn default() -> Self {
+        Self { victims: 96, congestors: 64, rr_bytes: 128 << 10, lat_bytes: 8 }
+    }
+}
+
+impl Gpcnet {
+    fn random_ring_flows(&self, machine: &Machine, seed: u64, bytes: u64)
+        -> Vec<Flow> {
+        let nodes = machine.cfg.nodes();
+        let mut rng = Pcg::new(seed);
+        let perm = rng.permutation(self.victims);
+        (0..self.victims)
+            .map(|i| {
+                let peer = perm[i];
+                let src_node = i % nodes;
+                let dst_node = peer % nodes;
+                Flow::new(
+                    machine.topo.nic_of_node(src_node, i % 8) ,
+                    machine.topo.nic_of_node(dst_node, peer % 8),
+                    bytes,
+                )
+            })
+            .filter(|f| f.src_nic != f.dst_nic)
+            .collect()
+    }
+
+    /// Congestors: a handful of hard incasts plus background all-to-all.
+    fn congestor_flows(&self, machine: &Machine, seed: u64) -> Vec<Flow> {
+        let nodes = machine.cfg.nodes();
+        let mut rng = Pcg::new(seed ^ 0xc0f);
+        let mut flows = Vec::new();
+        let incast_roots = (self.congestors / 16).max(1);
+        for r in 0..incast_roots {
+            let root = rng.gen_usize(nodes);
+            let root_nic = machine.topo.nic_of_node(root, 0);
+            for _ in 0..12 {
+                let src = rng.gen_usize(nodes);
+                let src_nic = machine.topo.nic_of_node(src, rng.gen_usize(8));
+                if src_nic != root_nic {
+                    flows.push(Flow::new(src_nic, root_nic, 8 << 20));
+                }
+            }
+            let _ = r;
+        }
+        for _ in 0..self.congestors {
+            let a = rng.gen_usize(nodes);
+            let b = rng.gen_usize(nodes);
+            let fa = machine.topo.nic_of_node(a, rng.gen_usize(8));
+            let fb = machine.topo.nic_of_node(b, rng.gen_usize(8));
+            if fa != fb {
+                flows.push(Flow::new(fa, fb, 4 << 20));
+            }
+        }
+        flows
+    }
+
+    fn run_case(&self, machine: &Machine, victims: &[Flow],
+                congestors: &[Flow], congestion_mgmt: bool)
+        -> (Vec<f64>, Vec<f64>) {
+        let mut router = Router::new(&machine.topo);
+        let routed: Vec<RoutedFlow> = victims
+            .iter()
+            .chain(congestors.iter())
+            .map(|f| RoutedFlow { flow: f.clone(), path: router.route(f) })
+            .collect();
+        let timed: Vec<TimedFlow> = routed
+            .into_iter()
+            .map(|rf| TimedFlow { rf, start: 0.0 })
+            .collect();
+        let sim = DesSim::new(
+            &machine.topo,
+            DesOpts { congestion_mgmt, ..DesOpts::default() },
+        );
+        let res = sim.run(&timed);
+        let vic_times: Vec<f64> =
+            res.finish[..victims.len()].to_vec();
+        let vic_bw: Vec<f64> = victims
+            .iter()
+            .zip(&vic_times)
+            .map(|(f, t)| f.bytes as f64 / t)
+            .collect();
+        (vic_times, vic_bw)
+    }
+
+    /// Full GPCNet experiment at reduced scale. `slingshot = true` runs
+    /// with the paper's congestion management.
+    pub fn run(&self, machine: &Machine, slingshot: bool) -> GpcnetReport {
+        // --- isolated: victims only ---
+        let lat_flows = self.random_ring_flows(machine, 1, self.lat_bytes);
+        let bw_flows = self.random_ring_flows(machine, 2, self.rr_bytes);
+        let (iso_lat, _) = self.run_case(machine, &lat_flows, &[], slingshot);
+        let (_, iso_bw) = self.run_case(machine, &bw_flows, &[], slingshot);
+        // --- congested ---
+        let cong = self.congestor_flows(machine, 3);
+        let (con_lat, _) =
+            self.run_case(machine, &lat_flows, &cong, slingshot);
+        let (_, con_bw) = self.run_case(machine, &bw_flows, &cong, slingshot);
+
+        let p99 = |v: &[f64]| percentile(v, 99.0);
+        let p01 = |v: &[f64]| percentile(v, 1.0); // 99% worst bw = low tail
+        GpcnetReport {
+            rr_lat_isolated: (mean(&iso_lat), p99(&iso_lat)),
+            rr_lat_congested: (mean(&con_lat), p99(&con_lat)),
+            rr_bw_isolated: (mean(&iso_bw), p01(&iso_bw)),
+            rr_bw_congested: (mean(&con_bw), p01(&con_bw)),
+            cif_lat: (
+                mean(&con_lat) / mean(&iso_lat),
+                p99(&con_lat) / p99(&iso_lat),
+            ),
+            cif_bw: (
+                mean(&iso_bw) / mean(&con_bw),
+                p01(&iso_bw) / p01(&con_bw).max(1e-9),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+
+    fn machine() -> Machine {
+        Machine::new(&AuroraConfig::small(8, 4))
+    }
+
+    #[test]
+    fn congestion_inflates_latency_moderately_with_mgmt() {
+        let m = machine();
+        let rep = Gpcnet::default().run(&m, true);
+        // Fig 5: avg CIF between 1x and ~11x with congestion management
+        assert!(rep.cif_lat.0 >= 1.0, "CIF {:?}", rep.cif_lat);
+        assert!(rep.cif_lat.0 < 30.0, "CIF too large: {:?}", rep.cif_lat);
+    }
+
+    #[test]
+    fn slingshot_beats_no_congestion_mgmt() {
+        let m = machine();
+        let with = Gpcnet::default().run(&m, true);
+        let without = Gpcnet::default().run(&m, false);
+        // victims must fare no worse with congestion management
+        assert!(
+            with.cif_bw.0 <= without.cif_bw.0 * 1.05,
+            "with {:?} without {:?}",
+            with.cif_bw,
+            without.cif_bw
+        );
+    }
+
+    #[test]
+    fn isolated_latency_in_microsecond_band() {
+        let m = machine();
+        let rep = Gpcnet::default().run(&m, true);
+        // Fig 5 isolated: avg 3.1 us, 99% 5.2 us (8 B random ring)
+        assert!(
+            rep.rr_lat_isolated.0 > 1e-6 && rep.rr_lat_isolated.0 < 20e-6,
+            "avg {}",
+            rep.rr_lat_isolated.0
+        );
+        assert!(rep.rr_lat_isolated.1 >= rep.rr_lat_isolated.0);
+    }
+}

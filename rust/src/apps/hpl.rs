@@ -1,0 +1,386 @@
+//! HPL (paper §5.2.1, Fig 15, Table 2): 1.012 EF/s on 9,234 nodes at
+//! 78.84% scaling efficiency, P x Q = 162 x 342, 4h21m54s.
+//!
+//! Two modes:
+//! * [`performance`] — right-looking blocked-LU cost model over the
+//!   machine: per-block-column iteration costs (panel factor, row/column
+//!   broadcasts, swap, trailing DGEMM update on the roofline), overlap
+//!   factor for comm/compute; regenerates the Fig 15 GF/s-vs-time curve
+//!   and the Table 2 scaling rows.
+//! * [`functional`] — a real 2x2-process-grid blocked LU at N=256 where
+//!   every tile operation executes the AOT PJRT artifacts
+//!   (`hpl_panel_factor`, `hpl_trsm_row/col`, `hpl_update`) over the
+//!   simulated MPI world, validated by the HPL scaled residual.
+
+use crate::config::AuroraConfig;
+use crate::machine::Machine;
+use crate::mpi::{coll, Comm, World};
+use crate::runtime::{NodeRoofline, Runtime};
+use anyhow::Result;
+
+/// One Fig 15 sample: elapsed seconds -> instantaneous flop rate.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub t: f64,
+    pub rate: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HplRun {
+    pub nodes: usize,
+    pub n: u64,
+    pub p: usize,
+    pub q: usize,
+    pub time: f64,
+    /// Sustained flops/s.
+    pub rate: f64,
+    /// rate / (nodes * node_fp64_peak) — the Table 2 "Scaling Efficiency".
+    pub efficiency: f64,
+    pub curve: Vec<CurvePoint>,
+}
+
+/// Pick the process grid like the paper: P*Q = 6 ranks/node with
+/// Q/P ~ 2.1 (HPL favours wide grids; the paper used 162 x 342 at 9,234
+/// nodes, ratio 2.11).
+pub fn process_grid(nodes: usize) -> (usize, usize) {
+    let ranks = nodes * 6; // one rank per GPU
+    let target = 2.11;
+    let mut best = (1, ranks);
+    let mut best_err = f64::INFINITY;
+    let mut p = 1;
+    while p * p <= ranks {
+        if ranks % p == 0 {
+            let q = ranks / p;
+            let err = (q as f64 / p as f64 - target).abs();
+            if err < best_err {
+                best_err = err;
+                best = (p, q);
+            }
+        }
+        p += 1;
+    }
+    best
+}
+
+/// Problem size filling `fill` of the HBM (the paper's N for 9,234 nodes
+/// back-solves to ~80% of 896 GB/node).
+pub fn problem_size(cfg: &AuroraConfig, nodes: usize, fill: f64) -> u64 {
+    let bytes = fill * nodes as f64 * cfg.hbm_per_node_gb * 1e9;
+    ((bytes / 8.0).sqrt() as u64) / 2048 * 2048
+}
+
+/// HPL performance model. `nb` = 2048 (GPU panel width).
+pub fn performance(cfg: &AuroraConfig, nodes: usize) -> HplRun {
+    let (p, q) = process_grid(nodes);
+    let n = problem_size(cfg, nodes, 0.78);
+    let nb: u64 = 2048;
+    let rl = NodeRoofline::new(cfg);
+    let gemm = nodes as f64 * rl.gemm_rate();
+    // communication constants (closed-form; the fabric tiers calibrate
+    // these in the integration tests)
+    let alpha = 12.0e-6; // collective hop latency at scale
+    let beta = cfg.nic_eff_bw_host * cfg.nics_per_node as f64; // per node
+    // fraction of communication hidden behind the update (lookahead);
+    // calibrated so 9,234 nodes land on Table 2's 78.84%
+    let overlap = 0.35;
+    // panel factorization efficiency (memory-bound, narrow)
+    let panel_eff = 0.035;
+
+    let iters = (n / nb) as usize;
+    let mut t = 0.0;
+    let mut flops_done = 0.0;
+    let mut curve = Vec::new();
+    let sample_every = (iters / 160).max(1);
+    for j in 0..iters {
+        let rem = (n - j as u64 * nb) as f64;
+        // trailing update: 2 * nb * rem^2 flops across all nodes
+        let f_update = 2.0 * nb as f64 * rem * rem;
+        let t_update = f_update / gemm;
+        // panel: 2/3 nb^3 + nb^2*rem/P on the column, low efficiency
+        let f_panel = nb as f64 * nb as f64 * (rem / p as f64);
+        let t_panel = f_panel / (rl.gemm_rate() * panel_eff);
+        // row broadcast of the panel (binomial over Q)
+        let panel_bytes = rem / p as f64 * nb as f64 * 8.0;
+        let t_bcast =
+            (q as f64).log2() * (alpha + panel_bytes / beta);
+        // U swap/broadcast along P
+        let row_bytes = rem / q as f64 * nb as f64 * 8.0;
+        let t_swap = (p as f64).log2() * (alpha + row_bytes / beta);
+        let t_comm = (t_panel + t_bcast + t_swap) * (1.0 - overlap);
+        let dt = t_update + t_comm;
+        t += dt;
+        flops_done += f_update + f_panel;
+        if j % sample_every == 0 {
+            curve.push(CurvePoint { t, rate: (f_update + f_panel) / dt });
+        }
+    }
+    // final solve + residual check (the Fig 15 tail)
+    let t_solve = 2.0 * (n as f64) * (n as f64) / gemm * 50.0;
+    t += t_solve;
+    curve.push(CurvePoint { t, rate: 0.2 * gemm });
+    let total_flops = 2.0 / 3.0 * (n as f64).powi(3);
+    let _ = flops_done;
+    let rate = total_flops / t;
+    HplRun {
+        nodes,
+        n,
+        p,
+        q,
+        time: t,
+        rate,
+        efficiency: rate / (nodes as f64 * cfg.node_fp64_peak),
+        curve,
+    }
+}
+
+/// Table 2 node counts from the paper.
+pub const TABLE2_NODES: [usize; 9] =
+    [9234, 8748, 8632, 8109, 8058, 7200, 6888, 6273, 5439];
+
+pub fn table2(cfg: &AuroraConfig) -> Vec<HplRun> {
+    TABLE2_NODES.iter().map(|&n| performance(cfg, n)).collect()
+}
+
+// ---------------------------------------------------------------- functional
+
+/// Distributed functional HPL: N=256, nb=64, 2x2 rank grid with
+/// block-cyclic tiles, every tile op through PJRT artifacts, comm through
+/// the simulated world. Returns (scaled residual, simulated time).
+pub fn functional(rt: &mut Runtime, machine: &Machine) -> Result<(f64, f64)> {
+    const N: usize = 256;
+    const NB: usize = 64;
+    const NT: usize = N / NB; // 4x4 tiles
+    let mut w = World::new(&machine.topo, machine.place_job(0, 4, 1));
+    let comm = Comm::world(4);
+
+    // deterministic diagonally dominant matrix + rhs
+    let mut a = vec![0.0f64; N * N];
+    let mut rng = crate::util::Pcg::new(7);
+    for v in a.iter_mut() {
+        *v = rng.gen_f64() - 0.5;
+    }
+    for i in 0..N {
+        a[i * N + i] += N as f64;
+    }
+    let b: Vec<f64> = (0..N).map(|i| (i % 13) as f64 - 6.0).collect();
+    let a0 = a.clone();
+
+    let owner = |bi: usize, bj: usize| -> usize { (bi % 2) * 2 + (bj % 2) };
+    let tile = |a: &[f64], bi: usize, bj: usize| -> Vec<f64> {
+        let mut t = vec![0.0; NB * NB];
+        for r in 0..NB {
+            for c in 0..NB {
+                t[r * NB + c] = a[(bi * NB + r) * N + bj * NB + c];
+            }
+        }
+        t
+    };
+    let store = |a: &mut [f64], bi: usize, bj: usize, t: &[f64]| {
+        for r in 0..NB {
+            for c in 0..NB {
+                a[(bi * NB + r) * N + bj * NB + c] = t[r * NB + c];
+            }
+        }
+    };
+
+    for k in 0..NT {
+        // 1. panel factor on the diagonal-tile owner
+        let diag_owner = owner(k, k);
+        let lu = rt.call_f64("hpl_panel_factor", &[&tile(&a, k, k)])?
+            .remove(0);
+        w.compute(diag_owner, rt.flops("hpl_panel_factor")
+            / NodeRoofline::new(&machine.cfg).gemm_rate() * 20.0);
+        store(&mut a, k, k, &lu);
+        // 2. broadcast the packed LU tile along row and column
+        let lu_bytes = (NB * NB * 8) as u64;
+        coll::bcast(&mut w, &comm, diag_owner, lu_bytes);
+        // 3. U row strip: solve L X = A[k][j]  (artifact takes 128 cols)
+        for pair in (k + 1..NT).step_by(2) {
+            let cols = (NT - pair).min(2);
+            let mut bbuf = vec![0.0f64; NB * 2 * NB];
+            for (ci, j) in (pair..pair + cols).enumerate() {
+                let t = tile(&a, k, j);
+                for r in 0..NB {
+                    bbuf[r * 2 * NB + ci * NB..r * 2 * NB + ci * NB + NB]
+                        .copy_from_slice(&t[r * NB..r * NB + NB]);
+                }
+            }
+            let x = rt.call_f64("hpl_trsm_row", &[&lu, &bbuf])?.remove(0);
+            for (ci, j) in (pair..pair + cols).enumerate() {
+                let mut t = vec![0.0; NB * NB];
+                for r in 0..NB {
+                    t[r * NB..r * NB + NB].copy_from_slice(
+                        &x[r * 2 * NB + ci * NB..r * 2 * NB + ci * NB + NB],
+                    );
+                }
+                store(&mut a, k, j, &t);
+            }
+        }
+        // 4. L column strip: solve X U = A[i][k]
+        for pair in (k + 1..NT).step_by(2) {
+            let rows = (NT - pair).min(2);
+            let mut abuf = vec![0.0f64; 2 * NB * NB];
+            for (ri, i) in (pair..pair + rows).enumerate() {
+                let t = tile(&a, i, k);
+                abuf[ri * NB * NB..(ri + 1) * NB * NB].copy_from_slice(&t);
+            }
+            let x = rt.call_f64("hpl_trsm_col", &[&lu, &abuf])?.remove(0);
+            for (ri, i) in (pair..pair + rows).enumerate() {
+                store(&mut a, i, k,
+                      &x[ri * NB * NB..(ri + 1) * NB * NB].to_vec());
+            }
+        }
+        // panel exchange along the grid
+        w.exchange(&[(diag_owner, (diag_owner + 1) % 4, lu_bytes),
+                     (diag_owner, (diag_owner + 2) % 4, lu_bytes)]);
+        // 5. trailing update per 128x128 super-tile (2x2 tiles)
+        let mut si = k + 1;
+        while si < NT {
+            let bi_n = (NT - si).min(2);
+            let mut sj = k + 1;
+            while sj < NT {
+                let bj_n = (NT - sj).min(2);
+                // assemble A (128x64), B (64x128), C (128x128) padded
+                let mut abuf = vec![0.0f64; 2 * NB * NB];
+                for ri in 0..bi_n {
+                    let t = tile(&a, si + ri, k);
+                    for r in 0..NB {
+                        abuf[(ri * NB + r) * NB..(ri * NB + r + 1) * NB]
+                            .copy_from_slice(&t[r * NB..(r + 1) * NB]);
+                    }
+                }
+                let mut bbuf = vec![0.0f64; NB * 2 * NB];
+                for ci in 0..bj_n {
+                    let t = tile(&a, k, sj + ci);
+                    for r in 0..NB {
+                        bbuf[r * 2 * NB + ci * NB
+                            ..r * 2 * NB + ci * NB + NB]
+                            .copy_from_slice(&t[r * NB..(r + 1) * NB]);
+                    }
+                }
+                let mut cbuf = vec![0.0f64; 2 * NB * 2 * NB];
+                for ri in 0..bi_n {
+                    for ci in 0..bj_n {
+                        let t = tile(&a, si + ri, sj + ci);
+                        for r in 0..NB {
+                            cbuf[(ri * NB + r) * 2 * NB + ci * NB
+                                ..(ri * NB + r) * 2 * NB + ci * NB + NB]
+                                .copy_from_slice(&t[r * NB..(r + 1) * NB]);
+                        }
+                    }
+                }
+                let out =
+                    rt.call_f64("hpl_update", &[&abuf, &bbuf, &cbuf])?
+                        .remove(0);
+                for ri in 0..bi_n {
+                    for ci in 0..bj_n {
+                        let mut t = vec![0.0; NB * NB];
+                        for r in 0..NB {
+                            t[r * NB..(r + 1) * NB].copy_from_slice(
+                                &out[(ri * NB + r) * 2 * NB + ci * NB
+                                    ..(ri * NB + r) * 2 * NB + ci * NB + NB],
+                            );
+                        }
+                        store(&mut a, si + ri, sj + ci, &t);
+                        w.compute(
+                            owner(si + ri, sj + ci),
+                            rt.flops("hpl_update")
+                                / NodeRoofline::new(&machine.cfg).gemm_rate(),
+                        );
+                    }
+                }
+                sj += 2;
+            }
+            si += 2;
+        }
+        coll::barrier(&mut w, &comm);
+    }
+
+    // triangular solves on the assembled LU (driver-side; the distributed
+    // phase above is what HPL times)
+    let mut y = b.clone();
+    for i in 0..N {
+        for j in 0..i {
+            y[i] -= a[i * N + j] * y[j];
+        }
+    }
+    let mut x = y.clone();
+    for i in (0..N).rev() {
+        for j in i + 1..N {
+            x[i] -= a[i * N + j] * x[j];
+        }
+        x[i] /= a[i * N + i];
+    }
+    let resid = rt.call_f64("hpl_residual", &[&a0, &x, &b])?[0][0];
+    Ok((resid, w.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_for_9234_nodes_matches_paper_shape() {
+        // paper: P=162, Q=342 for 9,234 nodes (55,404 ranks)
+        let (p, q) = process_grid(9234);
+        assert_eq!(p * q, 9234 * 6);
+        assert_eq!((p, q), (162, 342));
+    }
+
+    #[test]
+    fn problem_size_fills_hbm() {
+        let cfg = AuroraConfig::aurora();
+        let n = problem_size(&cfg, 9234, 0.78);
+        let bytes_per_node = (n as f64).powi(2) * 8.0 / 9234.0;
+        assert!(bytes_per_node < 896e9, "must fit in HBM");
+        assert!(bytes_per_node > 0.6 * 896e9, "should use most of HBM");
+    }
+
+    #[test]
+    fn headline_efficiency_band() {
+        // Table 2: 78.84% at 9,234 nodes => 1.012 EF/s
+        let cfg = AuroraConfig::aurora();
+        let run = performance(&cfg, 9234);
+        assert!(
+            (run.efficiency - 0.7884).abs() < 0.03,
+            "efficiency {:.4}",
+            run.efficiency
+        );
+        let ef = run.rate / 1e18;
+        assert!((ef - 1.012).abs() < 0.05, "rate {ef} EF/s");
+    }
+
+    #[test]
+    fn efficiency_stable_across_table2_rows() {
+        // Table 2: efficiencies 77.3% - 80.5% across 5,439..9,234 nodes
+        let cfg = AuroraConfig::aurora();
+        for run in table2(&cfg) {
+            assert!(
+                (0.74..0.84).contains(&run.efficiency),
+                "{} nodes: {:.4}",
+                run.nodes,
+                run.efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn curve_is_smooth_with_tail_dip() {
+        let cfg = AuroraConfig::aurora();
+        let run = performance(&cfg, 5439);
+        assert!(run.curve.len() > 50);
+        // mid-run rate close to sustained rate (Fig 15 smoothness)
+        let mid = run.curve[run.curve.len() / 2].rate;
+        assert!((mid / run.rate - 1.0).abs() < 0.35, "mid {mid} vs {}",
+            run.rate);
+    }
+
+    #[test]
+    fn runtime_hours_scale() {
+        // paper: 4h 21m 54s at 9,234 nodes
+        let cfg = AuroraConfig::aurora();
+        let run = performance(&cfg, 9234);
+        let hours = run.time / 3600.0;
+        assert!((2.0..8.0).contains(&hours), "runtime {hours} h");
+    }
+}

@@ -1,0 +1,95 @@
+//! Benchmarks and applications of paper §5, as workloads over the
+//! simulated machine.
+//!
+//! | module | paper result |
+//! |---|---|
+//! | [`alltoall`] | Fig 4 (fabric-validation all2all, 228.92 TB/s peak) |
+//! | [`osu`] | Fig 6, 7, 10, 11, 12, 13 (OSU/ALCF microbenchmarks) |
+//! | [`gpcnet`] | Fig 5 (congestion impact factors) |
+//! | [`allreduce`] | Fig 14 (MPI_Allreduce latency, ring<->tree switch) |
+//! | [`hpl`] | Fig 15 + Table 2 (1.012 EF/s @ 9,234 nodes) |
+//! | [`hpl_mxp`] | Fig 16 (11.64 EF/s @ 9,500 nodes) |
+//! | [`graph500`] | §5.2.3 (69,373 GTEPS @ scale 42, 8,192 nodes) |
+//! | [`hpcg`] | §5.2.4 (5.613 PF/s @ 4,096 nodes) |
+//! | [`hacc`] | Fig 17 + Table 3 (weak scaling, 97% @ 8,192 nodes) |
+//! | [`nekbone`] | Fig 18 (>95% @ 4,096 nodes) |
+//! | [`amr_wind`] | Fig 19 (FOM weak scaling to 8,192 nodes) |
+//! | [`lammps`] | Fig 20 (>85% @ 9,216 nodes, 254B atoms) |
+//! | [`fmm`] | Tables 4-6 (one-sided Get/Put, HMEM) |
+//!
+//! Every module has a performance-mode entry (scales to the full machine
+//! via the analytic/round tiers + roofline compute) and, where numerics
+//! are checkable, a functional-mode entry that executes the PJRT
+//! artifacts over the simulated MPI world.
+
+pub mod allreduce;
+pub mod alltoall;
+pub mod amr_wind;
+pub mod fmm;
+pub mod gpcnet;
+pub mod graph500;
+pub mod hacc;
+pub mod hpcg;
+pub mod hpl;
+pub mod hpl_mxp;
+pub mod lammps;
+pub mod nekbone;
+pub mod osu;
+
+/// A weak-scaling measurement row shared by the application benches.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub nodes: usize,
+    /// Figure of merit (app-specific: time, PFLOP/s, B-cells/s ...).
+    pub fom: f64,
+    /// Parallel efficiency vs the smallest-node baseline (1.0 = perfect).
+    pub efficiency: f64,
+}
+
+/// Compute weak-scaling efficiencies from (nodes, time) pairs where ideal
+/// weak scaling keeps time constant.
+pub fn weak_efficiency_from_times(points: &[(usize, f64)])
+    -> Vec<ScalingPoint> {
+    let base = points[0].1;
+    points
+        .iter()
+        .map(|&(nodes, t)| ScalingPoint {
+            nodes,
+            fom: t,
+            efficiency: base / t,
+        })
+        .collect()
+}
+
+/// Efficiencies from (nodes, rate) pairs where ideal scaling grows rate
+/// linearly with nodes.
+pub fn weak_efficiency_from_rates(points: &[(usize, f64)])
+    -> Vec<ScalingPoint> {
+    let (n0, r0) = points[0];
+    points
+        .iter()
+        .map(|&(nodes, r)| ScalingPoint {
+            nodes,
+            fom: r,
+            efficiency: (r / r0) / (nodes as f64 / n0 as f64),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_from_times() {
+        let pts = weak_efficiency_from_times(&[(128, 10.0), (1024, 10.5)]);
+        assert!((pts[0].efficiency - 1.0).abs() < 1e-12);
+        assert!((pts[1].efficiency - 10.0 / 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_from_rates() {
+        let pts = weak_efficiency_from_rates(&[(128, 1.0), (1024, 7.6)]);
+        assert!((pts[1].efficiency - 0.95).abs() < 1e-9);
+    }
+}

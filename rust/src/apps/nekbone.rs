@@ -1,0 +1,173 @@
+//! Nekbone (paper §5.3.2, Fig 18): spectral-element CG proxy for Nek5000;
+//! >95% weak-scaling efficiency to 4,096 nodes at PPN 12, 42,000 elements
+//! per rank, polynomial orders nx1 = 9 and 12.
+//!
+//! Each CG iteration: local Ax (tensor contractions — the `nekbone_ax`
+//! artifact), nearest-neighbour halo exchange (gather-scatter), two
+//! global allreduces, vector updates.
+
+use crate::config::AuroraConfig;
+use crate::machine::Machine;
+use crate::mpi::{coll, Comm, World};
+use crate::runtime::{Engine, NodeRoofline, Runtime};
+use anyhow::Result;
+
+pub use super::ScalingPoint;
+
+pub const PPN: usize = 12;
+pub const ELEMS_PER_RANK: usize = 42_000;
+
+/// Flops for one Ax on E elements of order n: 12 n^4 per element
+/// (three D-applications + three transposes, 2n flops per output point).
+pub fn ax_flops(e: usize, n: usize) -> f64 {
+    12.0 * e as f64 * (n as f64).powi(4)
+}
+
+/// One CG iteration time at `nodes` for polynomial order `nx1`.
+pub fn iter_time(cfg: &AuroraConfig, nodes: usize, nx1: usize) -> f64 {
+    let rl = NodeRoofline::new(cfg);
+    let e_node = ELEMS_PER_RANK * PPN;
+    let f_ax = ax_flops(e_node, nx1);
+    let pts_node = e_node as f64 * (nx1 as f64).powi(3);
+    // Ax is small-GEMM tensor compute with heavy intermediate traffic
+    // (u, 3 directional derivatives, 3 transposes all round-trip HBM)
+    let t_ax = rl.node_time(Engine::Fp64, f_ax * 0.35, pts_node * 8.0 * 16.0);
+    let t_vec = rl.node_time(Engine::MemoryBound, 0.0, pts_node * 8.0 * 20.0);
+    // halo: element faces to ~6 neighbours
+    let face_bytes = e_node as f64 * (nx1 as f64).powi(2) * 8.0 * 0.5;
+    let t_halo = face_bytes
+        / (cfg.nic_eff_bw_host * cfg.nics_per_node as f64)
+        + 6.0 * cfg.mpi_overhead;
+    // two 8-byte allreduces
+    let ranks = (nodes * PPN) as f64;
+    let t_allreduce = 2.0 * 10.0e-6 * ranks.log2();
+    t_ax + t_vec + t_halo + t_allreduce
+}
+
+/// Fig 18: performance (PFLOP/s, averaged over nx1 = 9 and 12) +
+/// efficiency across node counts.
+pub fn fig18(cfg: &AuroraConfig, node_counts: &[usize]) -> Vec<ScalingPoint> {
+    let pts: Vec<(usize, f64)> = node_counts
+        .iter()
+        .map(|&nodes| {
+            let rate: f64 = [9usize, 12]
+                .iter()
+                .map(|&n| {
+                    nodes as f64 * ax_flops(ELEMS_PER_RANK * PPN, n)
+                        / iter_time(cfg, nodes, n)
+                })
+                .sum::<f64>()
+                / 2.0;
+            (nodes, rate)
+        })
+        .collect();
+    super::weak_efficiency_from_rates(&pts)
+}
+
+/// Functional CG on the spectral-element operator: one rank, E=32
+/// elements of order 9 through the `nekbone_ax` artifact + simulated
+/// allreduces across 4 ranks. Returns (r0, r_final, iterations, time).
+pub fn functional(rt: &mut Runtime, machine: &Machine, iters: usize)
+    -> Result<(f64, f64, usize, f64)> {
+    const E: usize = 32;
+    const N: usize = 9;
+    let len = E * N * N * N;
+    let mut w = World::new(&machine.topo, machine.place_job(0, 4, 1));
+    let comm = Comm::world(4);
+
+    // derivative operator: tridiagonal-ish SPD-generating D
+    let mut d = vec![0.0f64; N * N];
+    for i in 0..N {
+        for j in 0..N {
+            d[i * N + j] = if i == j {
+                2.0
+            } else if i.abs_diff(j) == 1 {
+                -1.0
+            } else {
+                0.0
+            };
+        }
+    }
+    let ax = |rt: &mut Runtime, u: &[f64]| -> Result<Vec<f64>> {
+        let mut out = rt.call_f64("nekbone_ax", &[u, &d])?.remove(0);
+        // shift to make strictly positive definite (mass-matrix term)
+        for (o, ui) in out.iter_mut().zip(u) {
+            *o += 0.5 * ui;
+        }
+        Ok(out)
+    };
+
+    let mut rng = crate::util::Pcg::new(17);
+    let b: Vec<f64> = (0..len).map(|_| rng.gen_f64() - 0.5).collect();
+    let mut x = vec![0.0f64; len];
+    let mut r = b.clone();
+    let mut p = r.clone();
+    let dot = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    };
+    let r0 = dot(&r, &r).sqrt();
+    let mut rr = r0 * r0;
+    let mut done = 0;
+    for _ in 0..iters {
+        let apv = ax(rt, &p)?;
+        let pap = dot(&p, &apv);
+        if pap.abs() < 1e-30 {
+            break;
+        }
+        let alpha = rr / pap;
+        for i in 0..len {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * apv[i];
+        }
+        let rr_new = dot(&r, &r);
+        coll::allreduce(&mut w, &comm, 8);
+        coll::allreduce(&mut w, &comm, 8);
+        let beta = rr_new / rr;
+        for i in 0..len {
+            p[i] = r[i] + beta * p[i];
+        }
+        rr = rr_new;
+        done += 1;
+    }
+    Ok((r0, rr.sqrt(), done, w.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weak_scaling_over_95_percent() {
+        // Fig 18: >95% parallel efficiency up to 4,096 nodes
+        let cfg = AuroraConfig::aurora();
+        let pts = fig18(&cfg, &[128, 512, 2048, 4096]);
+        for p in &pts {
+            assert!(
+                p.efficiency > 0.95,
+                "{} nodes: eff {}",
+                p.nodes,
+                p.efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn higher_order_is_more_efficient() {
+        // nx1=12 has better flop/byte => higher rate per node
+        let cfg = AuroraConfig::aurora();
+        let r9 = ax_flops(ELEMS_PER_RANK * PPN, 9)
+            / iter_time(&cfg, 1024, 9);
+        let r12 = ax_flops(ELEMS_PER_RANK * PPN, 12)
+            / iter_time(&cfg, 1024, 12);
+        assert!(r12 > r9, "r9 {r9} r12 {r12}");
+    }
+
+    #[test]
+    fn rate_is_petascale_at_4096() {
+        // Fig 18 reports PFLOP/s-scale aggregate performance
+        let cfg = AuroraConfig::aurora();
+        let pts = fig18(&cfg, &[4096]);
+        let pf = pts[0].fom / 1e15;
+        assert!(pf > 1.0 && pf < 60.0, "{pf} PF/s");
+    }
+}

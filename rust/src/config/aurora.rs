@@ -1,0 +1,117 @@
+//! Named machine configurations.
+
+use super::{AuroraConfig, GB, NS, US};
+
+impl AuroraConfig {
+    /// The full Aurora system as described in paper §2-§3 (Table 1, Fig 2):
+    /// 166 compute groups x 32 switches x 2 nodes = 10,624 nodes,
+    /// 84,992 compute endpoints.
+    pub fn aurora() -> Self {
+        Self {
+            compute_groups: 166,
+            storage_groups: 8,
+            service_groups: 1,
+            switches_per_group: 32,
+            nodes_per_switch: 2,
+            nics_per_node: 8,
+            global_links_compute: 2,
+            global_links_daos: 24,
+            global_links_noncompute: 2,
+
+            nic_bw: 25.0 * GB,
+            global_link_bw: 25.0 * GB,
+            local_link_bw: 25.0 * GB,
+            switch_latency: 0.35 * US,
+            nic_latency: 0.30 * US,
+            mpi_overhead: 0.55 * US,
+            electrical_prop: 15.0 * NS,
+            optical_prop: 150.0 * NS,
+            nic_sram_msg_bytes: 64,
+            dram_spill_penalty: 1.1 * US,
+            nic_msg_rate: 1.8e8,
+
+            rank_issue_bw_host: 14.0 * GB,
+            rank_issue_bw_gpu: 12.5 * GB,
+            nic_eff_bw_host: 22.5 * GB,
+            nic_eff_bw_gpu: 17.5 * GB, // 70 GB/s socket aggregate over 4 NICs
+            xelink_bw: 28.0 * GB,
+            pcie5_bw: 64.0 * GB,
+            cores_per_socket: 52,
+            sockets_per_node: 2,
+            gpus_per_node: 6,
+            hbm_per_node_gb: 896.0,
+            ddr_per_node_gb: 1024.0,
+            gpu_hbm_bw_node: 19.66e12,
+
+            node_fp64_peak: 139.0e12,
+            node_mxp_peak: 2.40e15,
+            gemm_eff: 0.87,
+            mxp_gemm_eff: 0.61,
+
+            adaptive_candidates: 4,
+            nonminimal_threshold: 1.5,
+            nonminimal_bias: 2.0,
+            group_load_setting: true,
+            congestion_mgmt: true,
+
+            allreduce_tree_cutoff: 64 * 1024,
+            eager_threshold: 8 * 1024,
+
+            rma_get_hmem_op: 0.55 * US,
+            rma_get_nohmem_op: 128.0 * US,
+            rma_put_hmem_op: 8.2 * US,
+            rma_put_nohmem_op: 17.9 * US,
+            rma_internode_overhead: 60.0 * US,
+            rma_buffer_ops: 2000,
+            rma_buffer_ops_put_nohmem: 100,
+        }
+    }
+
+    /// A scaled-down dragonfly with the same per-link/per-node constants —
+    /// used by functional-mode runs and the test suite. `groups` compute
+    /// groups of `switches` switches each.
+    pub fn small(groups: usize, switches: usize) -> Self {
+        Self {
+            compute_groups: groups,
+            storage_groups: 0,
+            service_groups: 0,
+            switches_per_group: switches,
+            ..Self::aurora()
+        }
+    }
+
+    /// Minimal 2-group machine (8 nodes) for unit tests.
+    pub fn tiny() -> Self {
+        Self::small(2, 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aurora_matches_table1() {
+        let c = AuroraConfig::aurora();
+        // Paper Table 1 and §3.1
+        assert_eq!(c.nodes(), 10_624);
+        assert_eq!(c.compute_endpoints(), 84_992);
+        assert_eq!(c.endpoints_per_group(), 512);
+        // 2.12 PB/s injection
+        let inj_pb = c.injection_bw() / 1e15;
+        assert!((inj_pb - 2.12).abs() < 0.01, "injection {inj_pb} PB/s");
+        // 1.37 PB/s global
+        let glob_pb = c.global_bw() / 1e15;
+        assert!((glob_pb - 1.37).abs() < 0.01, "global {glob_pb} PB/s");
+        // 0.69 PB/s bisection
+        let bis_pb = c.global_bisection_bw() / 1e15;
+        assert!((bis_pb - 0.69).abs() < 0.01, "bisection {bis_pb} PB/s");
+    }
+
+    #[test]
+    fn tiny_is_consistent() {
+        let c = AuroraConfig::tiny();
+        assert_eq!(c.nodes(), 8);
+        assert_eq!(c.compute_endpoints(), 64);
+    }
+}

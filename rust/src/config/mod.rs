@@ -1,0 +1,200 @@
+//! System configuration: the single source of truth for every hardware
+//! constant in the simulation.
+//!
+//! All constants are taken from the paper itself (§2 Table 1, §3.1-3.3,
+//! §5.1) or derived from its measured results; each field documents its
+//! provenance. `AuroraConfig::aurora()` is the 10,624-node machine;
+//! smaller configs scale the dragonfly down for functional runs and tests.
+
+mod aurora;
+
+#[allow(unused_imports)]
+pub use aurora::*;
+
+
+/// Gigabytes per second in bytes/sec.
+pub const GB: f64 = 1e9;
+/// Microseconds in seconds.
+pub const US: f64 = 1e-6;
+/// Nanoseconds in seconds.
+pub const NS: f64 = 1e-9;
+
+/// Dragonfly + node shape and calibration constants.
+#[derive(Debug, Clone)]
+pub struct AuroraConfig {
+    // ----- dragonfly shape (paper §3.1, Fig 2) -----
+    /// Compute groups (Aurora: 166, one HPE Cray EX cabinet each).
+    pub compute_groups: usize,
+    /// DAOS storage groups (Aurora: 8).
+    pub storage_groups: usize,
+    /// Service groups (Aurora: 1).
+    pub service_groups: usize,
+    /// Switches per group, all-to-all connected intra-group (Aurora: 32).
+    pub switches_per_group: usize,
+    /// Nodes attached to each switch (Aurora: 2).
+    pub nodes_per_switch: usize,
+    /// NICs (endpoints) per node (Aurora: 8).
+    pub nics_per_node: usize,
+    /// Global links between each pair of compute groups (Aurora: 2).
+    pub global_links_compute: usize,
+    /// Global links between each pair of DAOS groups (Aurora: 24).
+    pub global_links_daos: usize,
+    /// Global links from each compute group to each non-compute group (2).
+    pub global_links_noncompute: usize,
+
+    // ----- link & switch timing (paper §3.1-3.4, §5.1 Fig 10) -----
+    /// NIC line rate per direction: 200 Gbps = 25 GB/s (§3.3).
+    pub nic_bw: f64,
+    /// Optical global cable: 50 GB/s/dir carrying 2 links => 25 GB/s/link.
+    pub global_link_bw: f64,
+    /// Intra-group electrical link bandwidth (same 200 Gbps lanes).
+    pub local_link_bw: f64,
+    /// Rosetta port-to-port switch latency (850 MHz pipeline).
+    pub switch_latency: f64,
+    /// NIC send/receive processing per message (Cassini + libfabric).
+    pub nic_latency: f64,
+    /// MPI software overhead per message (MPICH CH4/OFI path).
+    pub mpi_overhead: f64,
+    /// Electrical intra-group cable propagation delay.
+    pub electrical_prop: f64,
+    /// Optical global cable propagation delay (tens of meters).
+    pub optical_prop: f64,
+    /// Messages <= this stay in Cassini SRAM; larger spill to host DRAM
+    /// (the 64 B -> 128 B latency jump of Fig 10).
+    pub nic_sram_msg_bytes: u64,
+    /// Added latency once buffering falls back to host DRAM (Fig 10 jump).
+    pub dram_spill_penalty: f64,
+    /// Per-NIC message rate ceiling (messages/s) — Cassini ~ 2e8 for tiny
+    /// messages; bounds all2all/incast throughput at small sizes.
+    pub nic_msg_rate: f64,
+
+    // ----- endpoint (node) constants (paper §2, §5.1) -----
+    /// One rank cannot saturate a NIC (Fig 11/12): per-rank host-buffer
+    /// issue ceiling. Two ranks/NIC reach ~23 GB/s effective.
+    pub rank_issue_bw_host: f64,
+    /// Per-rank issue ceiling with GPU-resident buffers (Fig 12).
+    pub rank_issue_bw_gpu: f64,
+    /// Effective NIC ceiling for host buffers (PCIe Gen4 x16 practical).
+    pub nic_eff_bw_host: f64,
+    /// Effective NIC ceiling for GPU buffers: PCIe Gen4<->Gen5 conversion
+    /// inefficiency; 70/90 of host path (Fig 13 vs Fig 11, §5.1).
+    pub nic_eff_bw_gpu: f64,
+    /// Xe-Link GPU-GPU bandwidth, all-to-all on node (§2): 28 GB/s.
+    pub xelink_bw: f64,
+    /// PCIe Gen5 x16 CPU<->GPU bandwidth (§2): 64 GB/s.
+    pub pcie5_bw: f64,
+    /// CPU cores per socket (SPR: 52).
+    pub cores_per_socket: usize,
+    /// Sockets per node.
+    pub sockets_per_node: usize,
+    /// GPUs per node (PVC: 6).
+    pub gpus_per_node: usize,
+    /// HBM2e per node GB (2 CPUs x 64 + 6 GPUs x 128 = 896).
+    pub hbm_per_node_gb: f64,
+    /// DDR5 per node GB (2 x 512).
+    pub ddr_per_node_gb: f64,
+    /// Aggregate GPU HBM bandwidth per node (6 x ~3.28 TB/s), bytes/s.
+    pub gpu_hbm_bw_node: f64,
+
+    // ----- compute roofline (derived from paper §5.2) -----
+    /// Node FP64 peak, flops. Derived: 1.012 EF/s at 9,234 nodes and
+    /// 78.84% scaling efficiency (Table 2) => 139.0 TF/node peak.
+    pub node_fp64_peak: f64,
+    /// Node mixed-precision (bf16/fp16 MACC) peak; 11.64 EF/s at 9,500
+    /// nodes (Fig 16) at ~51% of 2.4 PF/node.
+    pub node_mxp_peak: f64,
+    /// Fraction of FP64 peak a well-tuned GEMM achieves on PVC (HPL DGEMM).
+    pub gemm_eff: f64,
+    /// Fraction of MxP peak achieved by the bf16 GEMM.
+    pub mxp_gemm_eff: f64,
+
+    // ----- adaptive routing / congestion (paper §3.1, §4.2) -----
+    /// Candidate minimal paths scored per flow (2 global links/pair).
+    pub adaptive_candidates: usize,
+    /// Load ratio above which a flow is diverted non-minimally (Valiant).
+    pub nonminimal_threshold: f64,
+    /// Routing bias toward minimal paths (§4.2.1): cost multiplier applied
+    /// to non-minimal candidates.
+    pub nonminimal_bias: f64,
+    /// Enable group-load-aware intermediate group choice (§4.2.1).
+    pub group_load_setting: bool,
+    /// Incast fair-share back-pressure on contributors (§3.1).
+    pub congestion_mgmt: bool,
+
+    // ----- collectives (paper §5.1 Fig 14) -----
+    /// Allreduce switches ring -> recursive-doubling tree below this size.
+    pub allreduce_tree_cutoff: u64,
+    /// Eager -> rendezvous protocol switch size.
+    pub eager_threshold: u64,
+
+    // ----- RMA / one-sided (paper §5.3.5, Tables 4-6) -----
+    // PVC provides no hardware RMA; MPICH emulates it in software. The
+    // per-op costs below are calibrated from the paper's own tables
+    // (times / message counts; the per-node vs per-rank structure is what
+    // the three-row scaling of each table implies).
+    /// MPI_Get with HMEM: per-op cost on the *node-shared* progress engine
+    /// (Table 5: 0.9s/1.6M = 1.1s/2.1M = 1.6s/2.8M ~ 0.55 us/op).
+    pub rma_get_hmem_op: f64,
+    /// MPI_Get without HMEM: staging through host serializes at the
+    /// *origin rank* (Table 5: per-rank-op ~ 125-150 us, so total time
+    /// DROPS as ranks grow — 24.6 -> 17.1 -> 13.0 s).
+    pub rma_get_nohmem_op: f64,
+    /// MPI_Put with HMEM: node engine ~ 8.2 us/op (Table 6).
+    pub rma_put_hmem_op: f64,
+    /// MPI_Put without HMEM: node engine ~ 18 us/op (Table 6).
+    pub rma_put_nohmem_op: f64,
+    /// Extra per-op cost when origin and target are on different nodes
+    /// (Table 5 row 4: 9x16 sub-communicators, 19.2M msgs in 14.5 s,
+    /// "an order of magnitude drop" vs intra-node).
+    pub rma_internode_overhead: f64,
+    /// Software RMA internal buffer: ops before MPI_Win_fence is REQUIRED
+    /// (paper: fence every 2000 calls).
+    pub rma_buffer_ops: usize,
+    /// Put without HMEM overflows far earlier (paper: fence every 100
+    /// "to prevent the communication failure").
+    pub rma_buffer_ops_put_nohmem: usize,
+}
+
+impl AuroraConfig {
+    /// Number of endpoints (NICs) in all compute groups.
+    pub fn compute_endpoints(&self) -> usize {
+        self.compute_groups * self.endpoints_per_group()
+    }
+
+    pub fn endpoints_per_group(&self) -> usize {
+        self.switches_per_group * self.nodes_per_switch * self.nics_per_node
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.compute_groups * self.switches_per_group * self.nodes_per_switch
+    }
+
+    pub fn total_groups(&self) -> usize {
+        self.compute_groups + self.storage_groups + self.service_groups
+    }
+
+    /// Total injection bandwidth across compute endpoints (paper Table 1:
+    /// 2.12 PB/s for the full machine).
+    pub fn injection_bw(&self) -> f64 {
+        self.compute_endpoints() as f64 * self.nic_bw
+    }
+
+    /// Total global (inter-group) bandwidth, single direction counted per
+    /// link pair as the paper does (Table 1: 1.37 PB/s => both directions
+    /// of each of the ~27k compute-compute links).
+    pub fn global_bw(&self) -> f64 {
+        let g = self.compute_groups as f64;
+        let links = g * (g - 1.0) / 2.0 * self.global_links_compute as f64;
+        links * self.global_link_bw * 2.0
+    }
+
+    /// Global bisection bandwidth between compute groups (0.69 PB/s, both
+    /// directions counted as in Table 1).
+    pub fn global_bisection_bw(&self) -> f64 {
+        // cut the machine in half: g/2 * g/2 pairs cross the cut
+        let g = self.compute_groups as f64;
+        let half = (g / 2.0).floor();
+        half * (g - half) * self.global_links_compute as f64 * self.global_link_bw
+            * 2.0
+    }
+}

@@ -1,0 +1,196 @@
+//! Job coordinator: the `mpiexec`-like launcher that ties the stack
+//! together (paper §3.8.4, §3.8.9).
+//!
+//! A [`JobSpec`] describes nodes/PPN/bindings; [`Launcher::launch`] runs
+//! the §3.8.9 prolog gate (cxi_healthcheck, gpu loopback, slingshot-diag),
+//! places ranks with the §3.8.4 NUMA-balanced binding, builds the MPI
+//! [`World`], hands it to the application closure, then runs the epilog
+//! (flap offlining, error thresholds) and emits the MPICH network summary
+//! plus the CXI counter report (§3.8.6-§3.8.8).
+
+use crate::fabric::BufLoc;
+use crate::machine::Machine;
+use crate::mpi::World;
+use crate::node::NumaMap;
+use crate::validate::Validator;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub ppn: usize,
+    /// Place message buffers in GPU memory (GPU-direct path).
+    pub gpu_buffers: bool,
+    /// Emit the verbose CXI counter report (MPICH_OFI_CXI_COUNTER_VERBOSE).
+    pub counter_verbose: bool,
+}
+
+impl JobSpec {
+    pub fn new(name: &str, nodes: usize, ppn: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes,
+            ppn,
+            gpu_buffers: false,
+            counter_verbose: false,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.ppn
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct JobReport<T> {
+    pub spec_name: String,
+    pub result: T,
+    /// Simulated wall time of the job.
+    pub elapsed: f64,
+    /// Nodes that failed prolog and were replaced.
+    pub replaced_nodes: Vec<usize>,
+    /// Nodes offlined by the epilog.
+    pub offlined_nodes: Vec<usize>,
+    pub mpich_summary: String,
+    pub counter_report: String,
+    /// The cpu-bind list used (per §3.8.4).
+    pub cpu_binds: Vec<String>,
+}
+
+pub struct Launcher<'m> {
+    pub machine: &'m Machine,
+    pub validator: Validator<'m>,
+}
+
+impl<'m> Launcher<'m> {
+    pub fn new(machine: &'m Machine) -> Self {
+        Self { machine, validator: Validator::new(machine) }
+    }
+
+    /// Launch a job: prolog-gate nodes, build the world, run `app`,
+    /// epilog, report.
+    pub fn launch<T>(
+        &mut self,
+        spec: &JobSpec,
+        app: impl FnOnce(&mut World) -> T,
+    ) -> Result<JobReport<T>> {
+        let total = self.machine.cfg.nodes();
+        if spec.nodes > total {
+            bail!("job wants {} nodes, machine has {total}", spec.nodes);
+        }
+        // --- prolog: find enough healthy nodes (§3.8.9) ---
+        let candidates: Vec<usize> = (0..total).collect();
+        let healthy = self.validator.prolog(&candidates);
+        if healthy.len() < spec.nodes {
+            bail!(
+                "only {}/{} nodes pass prolog",
+                healthy.len(),
+                spec.nodes
+            );
+        }
+        let wanted: Vec<usize> = (0..spec.nodes).collect();
+        let replaced: Vec<usize> = wanted
+            .iter()
+            .copied()
+            .filter(|n| !healthy.contains(n))
+            .collect();
+        let job_nodes: Vec<usize> =
+            healthy.into_iter().take(spec.nodes).collect();
+
+        // --- placement + binding ---
+        let placements =
+            crate::node::place_ranks(&self.machine.cfg, &job_nodes, spec.ppn);
+        let cpu_binds =
+            NumaMap::new(&self.machine.cfg).cpu_bind_list(spec.ppn);
+        let mut world = World::new(&self.machine.topo, placements);
+        if spec.gpu_buffers {
+            world.buf = BufLoc::Gpu;
+        }
+
+        // --- run ---
+        let result = app(&mut world);
+        let elapsed = world.elapsed();
+
+        // --- epilog (§3.8.9) ---
+        let offlined = self.validator.epilog(&job_nodes);
+
+        Ok(JobReport {
+            spec_name: spec.name.clone(),
+            result,
+            elapsed,
+            replaced_nodes: replaced,
+            offlined_nodes: offlined,
+            mpich_summary: world.mpich_summary(),
+            counter_report: world.counters.report(spec.counter_verbose),
+            cpu_binds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::mpi::{coll, Comm};
+    use crate::validate::NodeFault;
+
+    fn machine() -> Machine {
+        Machine::new(&AuroraConfig::small(4, 4))
+    }
+
+    #[test]
+    fn launch_runs_app_and_reports() {
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        let spec = JobSpec::new("allreduce-smoke", 8, 2);
+        let rep = l
+            .launch(&spec, |w| coll::allreduce(w, &Comm::world(16), 4096))
+            .unwrap();
+        assert!(rep.result > 0.0);
+        assert!(rep.elapsed > 0.0);
+        assert!(rep.mpich_summary.contains("network timeouts"));
+        assert_eq!(rep.cpu_binds.len(), 2);
+        assert!(rep.replaced_nodes.is_empty());
+    }
+
+    #[test]
+    fn prolog_replaces_faulty_nodes() {
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        l.validator
+            .inject(0, NodeFault { perf_factor: 0.2, ..Default::default() });
+        let spec = JobSpec::new("x", 4, 1);
+        let rep = l.launch(&spec, |w| w.size()).unwrap();
+        assert_eq!(rep.result, 4);
+        assert_eq!(rep.replaced_nodes, vec![0]);
+    }
+
+    #[test]
+    fn epilog_runs_clean_on_healthy_job() {
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        let spec = JobSpec::new("x", 2, 1);
+        let rep = l.launch(&spec, |_| ()).unwrap();
+        assert!(rep.offlined_nodes.is_empty());
+    }
+
+    #[test]
+    fn oversized_job_rejected() {
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        assert!(l.launch(&JobSpec::new("big", 10_000, 1), |_| ()).is_err());
+    }
+
+    #[test]
+    fn gpu_buffer_jobs_use_gpu_path() {
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        let mut spec = JobSpec::new("gpu", 2, 1);
+        spec.gpu_buffers = true;
+        let rep = l
+            .launch(&spec, |w| matches!(w.buf, BufLoc::Gpu))
+            .unwrap();
+        assert!(rep.result);
+    }
+}

@@ -1,0 +1,542 @@
+//! Flow-level discrete-event simulation with max-min fair sharing and the
+//! Slingshot congestion-management behaviour of paper §3.1.
+//!
+//! Rates are the exact max-min fair allocation (progressive filling with
+//! per-flow issue-rate caps); events are flow arrivals and completions.
+//! Congestion management models the paper's description literally:
+//!
+//! > "The switch hardware will detect congestion, identify its causes, and
+//! >  determine whether traffic flowing through a congested point is
+//! >  contributing to the congestion or is a victim of it. ... stiff back
+//! >  pressure to congesting traffic ... All traffic not contributing to
+//! >  the congestion is unaffected."
+//!
+//! With `congestion_mgmt = true`, incast members are rate-limited to their
+//! fair share at the *root* of the incast (which exact max-min provides)
+//! and victims sharing intermediate links are unaffected. With
+//! `congestion_mgmt = false` (the GPCNet "congested" baseline), queues at
+//! the incast root back up into the fabric: every flow crossing a link
+//! contaminated by incast traffic is penalized.
+
+use super::{FlowTimes, RoutedFlow};
+use crate::topology::{LinkId, Topology};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::collections::HashMap;
+
+/// DES knobs.
+#[derive(Debug, Clone)]
+pub struct DesOpts {
+    /// Slingshot congestion management on (paper default) or off.
+    pub congestion_mgmt: bool,
+    /// Ejection links with at least this many concurrent flows form an
+    /// incast.
+    pub incast_threshold: usize,
+    /// Rate multiplier applied to victims when congestion mgmt is OFF.
+    pub victim_penalty: f64,
+    /// Degraded links (§3.4 lane-disable): bandwidth multiplier per link.
+    pub degraded: HashMap<LinkId, f64>,
+    /// Switch per-port queue capacity: bounds how much in-flight bulk data
+    /// can sit ahead of a message on each hop (drives the GPCNet latency
+    /// inflation of Fig 5).
+    pub queue_cap_bytes: f64,
+}
+
+impl Default for DesOpts {
+    fn default() -> Self {
+        Self {
+            congestion_mgmt: true,
+            incast_threshold: 4,
+            victim_penalty: 0.30,
+            degraded: HashMap::new(),
+            queue_cap_bytes: 256.0 * 1024.0,
+        }
+    }
+}
+
+/// A flow with an arrival time.
+#[derive(Debug, Clone)]
+pub struct TimedFlow {
+    pub rf: RoutedFlow,
+    pub start: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DesResult {
+    /// Absolute completion time per flow (same order as input).
+    pub finish: Vec<f64>,
+    pub makespan: f64,
+    /// Flows that crossed a congested point as contributors.
+    pub contributors: usize,
+    /// Flows penalized as victims (only when congestion mgmt is off).
+    pub victims: usize,
+}
+
+pub struct DesSim<'t> {
+    topo: &'t Topology,
+    opts: DesOpts,
+}
+
+/// Interned-link representation of a flow set (see `build_dense`).
+struct Dense {
+    link_ids: Vec<LinkId>,
+    /// Static effective capacity per link (degraded bw + NIC-eff caps).
+    cap: Vec<f64>,
+    /// Per flow: dense link ids along its path.
+    flow_links: Vec<Vec<u32>>,
+    /// Per flow: issue-rate cap.
+    flow_cap: Vec<f64>,
+    /// Per flow: ejection (last) link id.
+    flow_last: Vec<u32>,
+}
+
+impl<'t> DesSim<'t> {
+    pub fn new(topo: &'t Topology, opts: DesOpts) -> Self {
+        Self { topo, opts }
+    }
+
+    fn link_cap(&self, l: &LinkId) -> f64 {
+        let base = self.topo.link_bw(l);
+        base * self.opts.degraded.get(l).copied().unwrap_or(1.0)
+    }
+
+    /// Build the dense (interned-link) representation used by the solver.
+    /// Link ids are interned ONCE per simulation; the per-event max-min
+    /// recomputation then runs on flat vectors — this is the §Perf
+    /// optimization that took the 512-flow DES from ~38 ms to single-digit
+    /// milliseconds (EXPERIMENTS.md §Perf).
+    fn build_dense(&self, flows: &[TimedFlow]) -> Dense {
+        let mut intern: FxHashMap<LinkId, u32> = FxHashMap::default();
+        let mut link_ids: Vec<LinkId> = Vec::new();
+        let mut flow_links: Vec<Vec<u32>> = Vec::with_capacity(flows.len());
+        let mut flow_cap = Vec::with_capacity(flows.len());
+        for tf in flows {
+            let mut ls = Vec::with_capacity(tf.rf.path.links.len());
+            for l in &tf.rf.path.links {
+                let id = *intern.entry(*l).or_insert_with(|| {
+                    link_ids.push(*l);
+                    (link_ids.len() - 1) as u32
+                });
+                ls.push(id);
+            }
+            flow_links.push(ls);
+            let c = &self.topo.cfg;
+            flow_cap.push(match tf.rf.flow.buf {
+                super::BufLoc::Host => c.rank_issue_bw_host,
+                super::BufLoc::Gpu => c.rank_issue_bw_gpu,
+            });
+        }
+        // static capacity per link: degraded bandwidth, with NIC endpoint
+        // links capped at the effective NIC bandwidth of the buffer types
+        // crossing them (PCIe Gen4 practical limit for host, Gen4<->Gen5
+        // conversion for GPU buffers — §5.1/Fig 13)
+        let mut cap: Vec<f64> =
+            link_ids.iter().map(|l| self.link_cap(l)).collect();
+        for (fi, tf) in flows.iter().enumerate() {
+            let eff = match tf.rf.flow.buf {
+                super::BufLoc::Host => self.topo.cfg.nic_eff_bw_host,
+                super::BufLoc::Gpu => self.topo.cfg.nic_eff_bw_gpu,
+            };
+            for (&id, l) in flow_links[fi].iter().zip(&tf.rf.path.links) {
+                if matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)) {
+                    cap[id as usize] = cap[id as usize].min(eff);
+                }
+            }
+        }
+        let flow_last: Vec<u32> =
+            flow_links.iter().map(|ls| *ls.last().unwrap()).collect();
+        Dense { link_ids, cap, flow_links, flow_cap, flow_last }
+    }
+
+    /// Exact max-min fair rates with per-flow caps (progressive filling)
+    /// over the dense representation. `scratch` vectors are reused across
+    /// events; `active` holds flow indices. Returns rates aligned with
+    /// `active`.
+    #[allow(clippy::too_many_arguments)]
+    fn maxmin_dense(
+        &self,
+        d: &Dense,
+        active: &[usize],
+        rem_cap: &mut [f64],
+        count: &mut [u32],
+        touched: &mut Vec<u32>,
+    ) -> Vec<f64> {
+        let n = active.len();
+        let mut rate = vec![f64::NAN; n];
+        let mut fixed = vec![false; n];
+        touched.clear();
+        for &fi in active {
+            for &l in &d.flow_links[fi] {
+                let li = l as usize;
+                if count[li] == 0 {
+                    touched.push(l);
+                    rem_cap[li] = d.cap[li];
+                }
+                count[li] += 1;
+            }
+        }
+        let mut n_fixed = 0;
+        let mut level = 0.0_f64;
+        while n_fixed < n {
+            // next binding constraint: a link's fair share or a flow cap
+            let mut best_link: Option<(u32, f64)> = None;
+            for &l in touched.iter() {
+                let li = l as usize;
+                if count[li] == 0 {
+                    continue;
+                }
+                let fair = level + rem_cap[li].max(0.0) / count[li] as f64;
+                if best_link.map_or(true, |(_, f)| fair < f) {
+                    best_link = Some((l, fair));
+                }
+            }
+            let mut best_flow: Option<(usize, f64)> = None;
+            for (idx, &fi) in active.iter().enumerate() {
+                if !fixed[idx] {
+                    let c = d.flow_cap[fi];
+                    if best_flow.map_or(true, |(_, f)| c < f) {
+                        best_flow = Some((idx, c));
+                    }
+                }
+            }
+            let link_level = best_link.map(|(_, f)| f).unwrap_or(f64::INFINITY);
+            let flow_level = best_flow.map(|(_, f)| f).unwrap_or(f64::INFINITY);
+            if flow_level <= link_level {
+                let (idx, c) = best_flow.unwrap();
+                rate[idx] = c;
+                fixed[idx] = true;
+                n_fixed += 1;
+                for &l in &d.flow_links[active[idx]] {
+                    rem_cap[l as usize] -= c - level;
+                    count[l as usize] -= 1;
+                }
+                level = c;
+            } else {
+                let (l, fair) = best_link.unwrap();
+                // fix every unfixed flow crossing l at `fair`
+                let mut fixed_any = false;
+                for (idx, &fi) in active.iter().enumerate() {
+                    if !fixed[idx] && d.flow_links[fi].contains(&l) {
+                        rate[idx] = fair;
+                        fixed[idx] = true;
+                        fixed_any = true;
+                        n_fixed += 1;
+                        for &ll in &d.flow_links[fi] {
+                            rem_cap[ll as usize] -= fair - level;
+                            count[ll as usize] -= 1;
+                        }
+                    }
+                }
+                count[l as usize] = 0; // link saturated / dead
+                if fixed_any {
+                    level = fair;
+                }
+            }
+        }
+        // reset scratch for the next event
+        for &l in touched.iter() {
+            count[l as usize] = 0;
+        }
+        rate
+    }
+
+    /// Run the simulation; `flows` keep their input order in the result.
+    pub fn run(&self, flows: &[TimedFlow]) -> DesResult {
+        let n = flows.len();
+        let d = self.build_dense(flows);
+        let n_links = d.link_ids.len();
+        let mut remaining: Vec<f64> =
+            flows.iter().map(|tf| tf.rf.flow.bytes as f64).collect();
+        let mut finish = vec![f64::NAN; n];
+        let mut done = vec![false; n];
+        let mut now = 0.0_f64;
+        let mut n_done = 0;
+        let mut contributors_set: FxHashSet<usize> = FxHashSet::default();
+        let mut victims_set: FxHashSet<usize> = FxHashSet::default();
+        // queueing delay each flow observed when it entered the fabric
+        let mut queue_penalty = vec![f64::NAN; n];
+        // solver scratch, reused across events
+        let mut rem_cap = vec![0.0f64; n_links];
+        let mut count = vec![0u32; n_links];
+        let mut touched: Vec<u32> = Vec::with_capacity(n_links);
+        // per-link scratch for incast detection / queue accounting
+        let mut eject_count = vec![0u32; n_links];
+        let mut inflight = vec![0.0f64; n_links];
+        let mut contaminated = vec![false; n_links];
+
+        while n_done < n {
+            let active: Vec<usize> = (0..n)
+                .filter(|&i| !done[i] && flows[i].start <= now + 1e-15)
+                .collect();
+            let next_arrival = flows
+                .iter()
+                .enumerate()
+                .filter(|(i, tf)| !done[*i] && tf.start > now + 1e-15)
+                .map(|(_, tf)| tf.start)
+                .fold(f64::INFINITY, f64::min);
+            if active.is_empty() {
+                assert!(next_arrival.is_finite(), "deadlock in DES");
+                now = next_arrival;
+                continue;
+            }
+
+            let mut rates = self.maxmin_dense(
+                &d, &active, &mut rem_cap, &mut count, &mut touched,
+            );
+
+            // congestion classification: incast ejection links
+            for &fi in &active {
+                eject_count[d.flow_last[fi] as usize] += 1;
+            }
+            let is_contrib = |fi: usize| {
+                eject_count[d.flow_last[fi] as usize]
+                    >= self.opts.incast_threshold as u32
+            };
+            let any_incast =
+                active.iter().any(|&fi| is_contrib(fi));
+
+            // --- queueing delay for newly arrived flows (Fig 5 shape) ---
+            // in-flight bytes of OTHER flows sitting on each hop, capped by
+            // the switch queue. With congestion management the incast
+            // contributors are held at injection (their packets do not
+            // pile up in the fabric), so they are excluded.
+            if active.iter().any(|&fi| queue_penalty[fi].is_nan()) {
+                for &fi in &active {
+                    if self.opts.congestion_mgmt && is_contrib(fi) {
+                        continue;
+                    }
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] += remaining[fi];
+                    }
+                }
+                for &fi in &active {
+                    if !queue_penalty[fi].is_nan() {
+                        continue;
+                    }
+                    let mut pen = 0.0;
+                    for &l in &d.flow_links[fi] {
+                        let queued = (inflight[l as usize] - remaining[fi])
+                            .max(0.0)
+                            .min(self.opts.queue_cap_bytes);
+                        pen += queued / d.cap[l as usize].max(1.0);
+                    }
+                    queue_penalty[fi] = pen;
+                }
+                for &fi in &active {
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] = 0.0;
+                    }
+                }
+            }
+            if any_incast {
+                for &fi in &active {
+                    if is_contrib(fi) {
+                        contributors_set.insert(fi);
+                        for &l in &d.flow_links[fi] {
+                            contaminated[l as usize] = true;
+                        }
+                    }
+                }
+                if !self.opts.congestion_mgmt {
+                    // back-pressure spreads: victims crossing contaminated
+                    // links are slowed
+                    for (idx, &fi) in active.iter().enumerate() {
+                        if is_contrib(fi) {
+                            continue; // contributor, already fair-shared
+                        }
+                        if d.flow_links[fi]
+                            .iter()
+                            .any(|&l| contaminated[l as usize])
+                        {
+                            rates[idx] *= self.opts.victim_penalty;
+                            victims_set.insert(fi);
+                        }
+                    }
+                }
+                for &fi in &active {
+                    for &l in &d.flow_links[fi] {
+                        contaminated[l as usize] = false;
+                    }
+                }
+            }
+            for &fi in &active {
+                eject_count[d.flow_last[fi] as usize] = 0;
+            }
+
+            // time to next completion
+            let mut dt = f64::INFINITY;
+            for (idx, &fi) in active.iter().enumerate() {
+                if rates[idx] > 0.0 {
+                    dt = dt.min(remaining[fi] / rates[idx]);
+                }
+            }
+            dt = dt.min(next_arrival - now);
+            assert!(dt.is_finite() && dt >= 0.0, "bad dt {dt}");
+            let dt = dt.max(1e-12);
+            for (idx, &fi) in active.iter().enumerate() {
+                remaining[fi] -= rates[idx] * dt;
+            }
+            now += dt;
+            let cm = super::rounds::CostModel::new(self.topo);
+            for &fi in &active {
+                if remaining[fi] <= 1e-6 && !done[fi] {
+                    done[fi] = true;
+                    n_done += 1;
+                    // completion includes the zero-load message latency
+                    // and the queueing delay seen on entry
+                    let tf = &flows[fi];
+                    finish[fi] = now
+                        + cm.msg_latency(&tf.rf.path, tf.rf.flow.bytes,
+                            tf.rf.flow.buf)
+                        + if queue_penalty[fi].is_nan() { 0.0 }
+                          else { queue_penalty[fi] };
+                }
+            }
+        }
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        DesResult {
+            finish,
+            makespan,
+            contributors: contributors_set.len(),
+            victims: victims_set.len(),
+        }
+    }
+
+    /// Convenience: all flows start at t=0; returns per-flow durations.
+    pub fn run_simultaneous(&self, flows: &[RoutedFlow]) -> FlowTimes {
+        let timed: Vec<TimedFlow> = flows
+            .iter()
+            .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
+            .collect();
+        let res = self.run(&timed);
+        FlowTimes::from_vec(res.finish)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::fabric::{Flow, Router};
+
+    fn setup() -> Topology {
+        Topology::new(&AuroraConfig::small(4, 4))
+    }
+
+    fn routed(topo: &Topology, flows: Vec<Flow>) -> Vec<RoutedFlow> {
+        let mut r = Router::new(topo);
+        flows
+            .into_iter()
+            .map(|f| RoutedFlow { path: r.route(&f), flow: f })
+            .collect()
+    }
+
+    #[test]
+    fn single_flow_rate_matches_issue_cap() {
+        let t = setup();
+        let sim = DesSim::new(&t, DesOpts::default());
+        let bytes = 1u64 << 30;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let res = sim.run_simultaneous(&fl);
+        let rate = bytes as f64 / res.makespan;
+        let cap = t.cfg.rank_issue_bw_host;
+        assert!((rate - cap).abs() / cap < 0.02, "rate {rate} cap {cap}");
+    }
+
+    #[test]
+    fn nic_sharing_halves_rates() {
+        let t = setup();
+        let sim = DesSim::new(&t, DesOpts::default());
+        let bytes = 1u64 << 30;
+        // two ranks on the same NIC: fair share of nic_bw
+        let fl = routed(
+            &t,
+            vec![Flow::new(0, 200, bytes), Flow::new(0, 208, bytes)],
+        );
+        let res = sim.run_simultaneous(&fl);
+        let agg = 2.0 * bytes as f64 / res.makespan;
+        assert!(agg <= t.cfg.nic_bw * 1.02, "aggregate {agg}");
+        // but two ranks *do* push the NIC harder than one rank could
+        assert!(agg > t.cfg.rank_issue_bw_host * 1.3);
+    }
+
+    #[test]
+    fn incast_contributors_share_ejection_fairly() {
+        let t = setup();
+        let sim = DesSim::new(&t, DesOpts::default());
+        let bytes = 64u64 << 20;
+        // 8-to-1 incast onto NIC 200
+        let fl = routed(
+            &t,
+            (0..8).map(|i| Flow::new(i * 8, 200, bytes)).collect(),
+        );
+        let res = sim.run_simultaneous(&fl);
+        let agg = 8.0 * bytes as f64 / res.makespan;
+        assert!(agg <= t.cfg.nic_bw * 1.05, "incast exceeds ejection: {agg}");
+    }
+
+    #[test]
+    fn victims_protected_with_congestion_mgmt() {
+        let t = setup();
+        let bytes = 16u64 << 20;
+        // incast from group 1 NICs onto NIC 200 + one victim 0 -> 300
+        let mut flows: Vec<Flow> =
+            (0..6).map(|i| Flow::new(128 + i * 8, 200, bytes)).collect();
+        flows.push(Flow::new(0, 300, bytes));
+        let fl = routed(&t, flows);
+        let on = DesSim::new(&t, DesOpts { congestion_mgmt: true, ..DesOpts::default() })
+            .run_simultaneous(&fl);
+        let off = DesSim::new(&t, DesOpts { congestion_mgmt: false, ..DesOpts::default() })
+            .run_simultaneous(&fl);
+        let victim_on = on.per_flow[6];
+        let victim_off = off.per_flow[6];
+        // victim may or may not share links; congestion mgmt must never be
+        // worse, and when contaminated it is strictly better
+        assert!(victim_on <= victim_off * 1.01,
+            "victim with mgmt {victim_on} vs without {victim_off}");
+    }
+
+    #[test]
+    fn congestion_off_hurts_crossing_victims() {
+        let t = setup();
+        let bytes = 16u64 << 20;
+        // incast flows ejecting at NIC 200 (group 0... NIC200 is in group 3
+        // region), victim shares the source group links
+        let mut flows: Vec<Flow> =
+            (0..8).map(|i| Flow::new(i * 8, 200, bytes)).collect();
+        // victim from same source switch as contributor 0, different dest
+        flows.push(Flow::new(1, 210, bytes));
+        let fl = routed(&t, flows);
+        let off = DesSim::new(&t, DesOpts { congestion_mgmt: false, ..DesOpts::default() })
+            .run_simultaneous(&fl);
+        let on = DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        assert!(off.per_flow[8] >= on.per_flow[8],
+            "victim must not be faster without congestion mgmt");
+    }
+
+    #[test]
+    fn degraded_link_slows_flows() {
+        let t = setup();
+        let bytes = 64u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let healthy = DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        let mut degraded = HashMap::new();
+        // half the lanes on every link of this path (§3.4 degraded mode)
+        for l in &fl[0].path.links {
+            degraded.insert(*l, 0.5);
+        }
+        let slow = DesSim::new(&t, DesOpts { degraded, ..DesOpts::default() })
+            .run_simultaneous(&fl);
+        assert!(slow.makespan > healthy.makespan * 1.05);
+    }
+
+    #[test]
+    fn staggered_arrivals_respected() {
+        let t = setup();
+        let bytes = 16u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let sim = DesSim::new(&t, DesOpts::default());
+        let timed = vec![TimedFlow { rf: fl[0].clone(), start: 1.0 }];
+        let res = sim.run(&timed);
+        assert!(res.finish[0] > 1.0);
+    }
+}

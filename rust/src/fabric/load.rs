@@ -1,0 +1,95 @@
+//! Link-load bookkeeping shared by the router and the cost tiers.
+
+use crate::topology::LinkId;
+use rustc_hash::FxHashMap as HashMap;
+
+/// Accumulated load per directed link. Values are in *bytes* for round
+/// evaluation or *flow counts / normalized rates* for adaptive-routing
+/// scoring — the router only compares relative magnitudes.
+#[derive(Debug, Clone, Default)]
+pub struct LoadMap {
+    map: HashMap<LinkId, f64>,
+}
+
+impl LoadMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, link: LinkId, amount: f64) {
+        *self.map.entry(link).or_insert(0.0) += amount;
+    }
+
+    #[inline]
+    pub fn add_path(&mut self, links: &[LinkId], amount: f64) {
+        for l in links {
+            self.add(*l, amount);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, link: &LinkId) -> f64 {
+        self.map.get(link).copied().unwrap_or(0.0)
+    }
+
+    /// Maximum load over the links of a path.
+    pub fn max_on(&self, links: &[LinkId]) -> f64 {
+        links.iter().map(|l| self.get(l)).fold(0.0, f64::max)
+    }
+
+    /// Sum of loads over the links of a path (routing score).
+    pub fn sum_on(&self, links: &[LinkId]) -> f64 {
+        links.iter().map(|l| self.get(l)).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&LinkId, &f64)> {
+        self.map.iter()
+    }
+
+    /// Hottest link and its load — the congestion hot-spot report the
+    /// fabric manager surfaces (§4.3).
+    pub fn hottest(&self) -> Option<(LinkId, f64)> {
+        self.map
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(l, v)| (*l, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_query() {
+        let mut m = LoadMap::new();
+        let l1 = LinkId::NicUp(1);
+        let l2 = LinkId::NicDown(2);
+        m.add(l1, 10.0);
+        m.add(l1, 5.0);
+        m.add(l2, 3.0);
+        assert_eq!(m.get(&l1), 15.0);
+        assert_eq!(m.max_on(&[l1, l2]), 15.0);
+        assert_eq!(m.sum_on(&[l1, l2]), 18.0);
+        assert_eq!(m.hottest().unwrap().0, l1);
+    }
+
+    #[test]
+    fn missing_is_zero() {
+        let m = LoadMap::new();
+        assert_eq!(m.get(&LinkId::NicUp(9)), 0.0);
+    }
+}

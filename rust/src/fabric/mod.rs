@@ -1,0 +1,96 @@
+//! The Slingshot fabric simulator (paper §3).
+//!
+//! Three fidelity tiers (DESIGN.md §2), all sharing the same topology,
+//! routing and QoS models:
+//!
+//! * [`des`] — flow-level event-driven simulation with max-min fair
+//!   bandwidth sharing, adaptive routing and the congestion-management
+//!   behaviour of §3.1 (incast contributor throttling, victim protection).
+//! * [`rounds`] — collectives decomposed into permutation rounds; each
+//!   round is costed by link-load analysis. Scales to the full machine.
+//! * [`analytic`] — closed-form link-load analysis for uniform patterns
+//!   (all2all, bisection) at 84,992-endpoint scale.
+
+pub mod analytic;
+pub mod des;
+pub mod load;
+pub mod qos;
+pub mod routing;
+pub mod rounds;
+
+pub use load::LoadMap;
+pub use qos::TrafficClass;
+pub use routing::Router;
+
+use crate::topology::Path;
+
+/// Where a message buffer lives — decides the endpoint bandwidth path
+/// (paper §5.1: host ~90 GB/s/socket vs GPU ~70 GB/s/socket) and the
+/// RMA/HMEM behaviour (§5.3.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufLoc {
+    Host,
+    Gpu,
+}
+
+/// One simulated transfer.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src_nic: u32,
+    pub dst_nic: u32,
+    pub bytes: u64,
+    pub class: TrafficClass,
+    pub buf: BufLoc,
+    /// Ordered delivery (MPI envelopes): route pinned per destination
+    /// (§3.1). Unordered bulk data may be sprayed per-packet.
+    pub ordered: bool,
+}
+
+impl Flow {
+    pub fn new(src_nic: u32, dst_nic: u32, bytes: u64) -> Self {
+        Self {
+            src_nic,
+            dst_nic,
+            bytes,
+            class: TrafficClass::BestEffort,
+            buf: BufLoc::Host,
+            ordered: false,
+        }
+    }
+
+    pub fn gpu(mut self) -> Self {
+        self.buf = BufLoc::Gpu;
+        self
+    }
+
+    pub fn class(mut self, class: TrafficClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn ordered(mut self) -> Self {
+        self.ordered = true;
+        self
+    }
+}
+
+/// Result of simulating a flow set: per-flow completion times.
+#[derive(Debug, Clone)]
+pub struct FlowTimes {
+    pub per_flow: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl FlowTimes {
+    pub fn from_vec(per_flow: Vec<f64>) -> Self {
+        let makespan = per_flow.iter().cloned().fold(0.0, f64::max);
+        Self { per_flow, makespan }
+    }
+}
+
+/// A routed flow (path chosen by the adaptive router).
+#[derive(Debug, Clone)]
+pub struct RoutedFlow {
+    pub flow: Flow,
+    pub path: Path,
+}

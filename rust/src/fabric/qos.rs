@@ -1,0 +1,171 @@
+//! QoS traffic classes (paper §3.1, §4.2.3).
+//!
+//! Aurora runs the LlBeBdEt profile ("Profile 2"): three bidirectional HPC
+//! classes plus a dedicated Ethernet class. Classes get a guaranteed
+//! minimum share of contended links and are capped at a maximum share;
+//! unused minimum is redistributable. The paper's MPI testing used only
+//! HPC Best Effort — the reproduction harness does the same, but the
+//! class machinery is exercised by the QoS unit tests and the fabric
+//! manager configuration path.
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TrafficClass {
+    /// Barriers, small reductions (§3.1: "low latency operations ... could
+    /// run in a high-priority traffic class").
+    LowLatency,
+    /// Bulk data delivery (adaptively routed, unordered).
+    BulkData,
+    /// Default HPC class — what the paper's MPI runs used (§4.2.3).
+    BestEffort,
+    /// IP/RoCE traffic.
+    Ethernet,
+}
+
+/// Per-class bandwidth policy on a contended link.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassPolicy {
+    /// Guaranteed fraction of link bandwidth when requested.
+    pub min_share: f64,
+    /// Hard ceiling fraction.
+    pub max_share: f64,
+    /// Strict-priority level (higher preempts) for latency, not bandwidth.
+    pub priority: u8,
+}
+
+/// The LlBeBdEt ("Profile 2") QoS profile of §4.2.3.
+#[derive(Debug, Clone)]
+pub struct QosProfile {
+    pub low_latency: ClassPolicy,
+    pub bulk_data: ClassPolicy,
+    pub best_effort: ClassPolicy,
+    pub ethernet: ClassPolicy,
+}
+
+impl QosProfile {
+    pub fn llbebdet() -> Self {
+        Self {
+            low_latency: ClassPolicy { min_share: 0.10, max_share: 0.25, priority: 3 },
+            bulk_data: ClassPolicy { min_share: 0.30, max_share: 1.00, priority: 1 },
+            best_effort: ClassPolicy { min_share: 0.20, max_share: 1.00, priority: 0 },
+            ethernet: ClassPolicy { min_share: 0.05, max_share: 0.20, priority: 2 },
+        }
+    }
+
+    pub fn policy(&self, class: TrafficClass) -> ClassPolicy {
+        match class {
+            TrafficClass::LowLatency => self.low_latency,
+            TrafficClass::BulkData => self.bulk_data,
+            TrafficClass::BestEffort => self.best_effort,
+            TrafficClass::Ethernet => self.ethernet,
+        }
+    }
+
+    /// Split one link's bandwidth among classes with active demand.
+    ///
+    /// Algorithm (matching §3.1's description): every active class first
+    /// receives its guaranteed minimum (scaled if minima oversubscribe);
+    /// leftover capacity is distributed proportionally to demand, but no
+    /// class exceeds its max share. Returns same-order fractions.
+    pub fn allocate(&self, demands: &[(TrafficClass, f64)]) -> Vec<f64> {
+        let total_demand: f64 = demands.iter().map(|(_, d)| d).sum();
+        if total_demand <= 1.0 {
+            // uncontended: everyone gets what they ask (max still applies)
+            return demands
+                .iter()
+                .map(|(c, d)| d.min(self.policy(*c).max_share))
+                .collect();
+        }
+        let mut shares: Vec<f64> = demands
+            .iter()
+            .map(|(c, d)| self.policy(*c).min_share.min(*d))
+            .collect();
+        let min_sum: f64 = shares.iter().sum();
+        if min_sum > 1.0 {
+            // minima oversubscribed: scale down proportionally
+            for s in &mut shares {
+                *s /= min_sum;
+            }
+            return shares;
+        }
+        // distribute the remainder by residual demand, capped by max_share
+        let mut left = 1.0 - min_sum;
+        for _ in 0..8 {
+            if left <= 1e-12 {
+                break;
+            }
+            let residuals: Vec<f64> = demands
+                .iter()
+                .zip(&shares)
+                .map(|((c, d), s)| {
+                    (d.min(self.policy(*c).max_share) - s).max(0.0)
+                })
+                .collect();
+            let rsum: f64 = residuals.iter().sum();
+            if rsum <= 1e-12 {
+                break;
+            }
+            let grant = left.min(rsum);
+            for (s, r) in shares.iter_mut().zip(&residuals) {
+                *s += grant * r / rsum;
+            }
+            left -= grant;
+        }
+        shares
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use TrafficClass::*;
+
+    #[test]
+    fn uncontended_gets_demand() {
+        let q = QosProfile::llbebdet();
+        let s = q.allocate(&[(BestEffort, 0.4), (LowLatency, 0.1)]);
+        assert!((s[0] - 0.4).abs() < 1e-9);
+        assert!((s[1] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contended_respects_minimums() {
+        let q = QosProfile::llbebdet();
+        let s = q.allocate(&[(BestEffort, 2.0), (LowLatency, 2.0)]);
+        assert!(s[1] >= q.low_latency.min_share - 1e-9);
+        let total: f64 = s.iter().sum();
+        assert!(total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn max_share_caps_ethernet() {
+        let q = QosProfile::llbebdet();
+        let s = q.allocate(&[(Ethernet, 5.0), (BulkData, 5.0)]);
+        assert!(s[0] <= q.ethernet.max_share + 1e-9, "ethernet {}", s[0]);
+        // bulk data soaks up what ethernet cannot use
+        assert!(s[1] > 0.7);
+    }
+
+    #[test]
+    fn unused_minimum_is_redistributed() {
+        // §3.1: "If a class does not use its minimum bandwidth, other
+        // classes may use it"
+        let q = QosProfile::llbebdet();
+        let s = q.allocate(&[(BestEffort, 3.0), (LowLatency, 0.01)]);
+        assert!(s[0] > 0.9, "best effort should absorb idle min: {}", s[0]);
+    }
+
+    #[test]
+    fn allocation_never_exceeds_link() {
+        let q = QosProfile::llbebdet();
+        for d in [0.5, 1.0, 3.0, 10.0] {
+            let s = q.allocate(&[
+                (BestEffort, d),
+                (BulkData, d),
+                (LowLatency, d),
+                (Ethernet, d),
+            ]);
+            assert!(s.iter().sum::<f64>() <= 1.0 + 1e-9);
+        }
+    }
+}

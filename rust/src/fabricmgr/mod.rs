@@ -1,0 +1,252 @@
+//! The HPE Slingshot Fabric Manager control plane (paper §3.5, §4.1-4.3).
+//!
+//! Runs "outside" the fabric on a management node pair (Active-Standby):
+//! computes routing tables from the live topology, runs periodic sweep
+//! services (Deployment / Dragonfly Routing / Live Topology — §4.2.2),
+//! tracks link health (flaps, degraded lanes — §3.8.7/§3.4), supports
+//! orchestrated maintenance (§4.2.4: drain a link, diagnose, restore,
+//! without disturbing the running fabric), and carries the QoS profile
+//! (§4.2.3) that the data plane enforces.
+
+use crate::config::AuroraConfig;
+use crate::fabric::qos::QosProfile;
+use crate::topology::{LinkId, Topology};
+use std::collections::{HashMap, HashSet};
+
+/// Sweep cadences (§4.2.2 defaults).
+#[derive(Debug, Clone)]
+pub struct SweepIntervals {
+    pub deployment: f64,
+    pub routing: f64,
+    pub topology: f64,
+}
+
+impl Default for SweepIntervals {
+    fn default() -> Self {
+        Self { deployment: 10.0, routing: 5.0, topology: 10.0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkHealth {
+    Healthy,
+    /// Operating with 2 or 3 of 4 lanes (§3.4 degraded operation).
+    Degraded(u8),
+    /// In orchestrated maintenance: drained, not routed over.
+    Maintenance,
+    /// Flapping (reset + 3-5 s retune — §3.8.7).
+    Flapping,
+}
+
+/// One fabric-manager instance.
+pub struct FabricManager {
+    pub cfg: AuroraConfig,
+    pub sweeps: SweepIntervals,
+    pub qos: QosProfile,
+    pub link_health: HashMap<LinkId, LinkHealth>,
+    /// Flap history per link (timestamps).
+    flaps: HashMap<LinkId, Vec<f64>>,
+    /// Is this instance the active one of the Active-Standby pair?
+    pub active: bool,
+    /// Simulated management time.
+    pub now: f64,
+    /// Completed sweeps per service.
+    pub sweep_counts: HashMap<&'static str, u64>,
+}
+
+impl FabricManager {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            sweeps: SweepIntervals::default(),
+            qos: QosProfile::llbebdet(),
+            link_health: HashMap::new(),
+            flaps: HashMap::new(),
+            active: true,
+            now: 0.0,
+            sweep_counts: HashMap::new(),
+        }
+    }
+
+    /// Effective bandwidth multiplier for a link (feeds `DesOpts.degraded`).
+    pub fn bw_multiplier(&self, link: &LinkId) -> f64 {
+        match self.link_health.get(link) {
+            None | Some(LinkHealth::Healthy) => 1.0,
+            Some(LinkHealth::Degraded(lanes)) => *lanes as f64 / 4.0,
+            Some(LinkHealth::Maintenance) | Some(LinkHealth::Flapping) => 0.0,
+        }
+    }
+
+    /// Links currently unusable for routing.
+    pub fn drained_links(&self) -> HashSet<LinkId> {
+        self.link_health
+            .iter()
+            .filter(|(_, h)| {
+                matches!(h, LinkHealth::Maintenance | LinkHealth::Flapping)
+            })
+            .map(|(l, _)| *l)
+            .collect()
+    }
+
+    /// Record a link flap (CASSINI edge link flap — §3.8.7). Links that
+    /// flap repeatedly inside `window` seconds are marked for maintenance.
+    pub fn record_flap(&mut self, link: LinkId, window: f64,
+                       threshold: usize) {
+        let ts = self.flaps.entry(link).or_default();
+        ts.push(self.now);
+        ts.retain(|&t| self.now - t <= window);
+        if ts.len() >= threshold {
+            self.link_health.insert(link, LinkHealth::Maintenance);
+        } else {
+            self.link_health.insert(link, LinkHealth::Flapping);
+        }
+    }
+
+    /// A flapping link that finished retune (3-5 s) returns to service.
+    pub fn retune_complete(&mut self, link: LinkId) {
+        if matches!(self.link_health.get(&link), Some(LinkHealth::Flapping)) {
+            self.link_health.insert(link, LinkHealth::Healthy);
+        }
+    }
+
+    /// Orchestrated maintenance (§4.2.4): drain a link for diagnosis.
+    pub fn enter_maintenance(&mut self, link: LinkId) {
+        self.link_health.insert(link, LinkHealth::Maintenance);
+    }
+
+    /// Restore a link after hardware action + revalidation.
+    pub fn restore(&mut self, link: LinkId) {
+        self.link_health.insert(link, LinkHealth::Healthy);
+        self.flaps.remove(&link);
+    }
+
+    pub fn set_degraded(&mut self, link: LinkId, lanes: u8) {
+        assert!((1..=4).contains(&lanes));
+        self.link_health.insert(
+            link,
+            if lanes == 4 { LinkHealth::Healthy } else { LinkHealth::Degraded(lanes) },
+        );
+    }
+
+    /// Advance management time, firing due sweeps. Returns the services
+    /// that ran. Aggressive (too-low) intervals raise FM load — modeled as
+    /// sweep cost; very high intervals delay event handling (§4.2.2).
+    pub fn tick(&mut self, dt: f64) -> Vec<&'static str> {
+        let before = self.now;
+        self.now += dt;
+        let mut fired = Vec::new();
+        for (name, iv) in [
+            ("deployment", self.sweeps.deployment),
+            ("routing", self.sweeps.routing),
+            ("topology", self.sweeps.topology),
+        ] {
+            let n_before = (before / iv) as u64;
+            let n_after = (self.now / iv) as u64;
+            if n_after > n_before {
+                *self.sweep_counts.entry(name).or_insert(0) +=
+                    n_after - n_before;
+                fired.push(name);
+            }
+        }
+        fired
+    }
+
+    /// Number of switches under management (the simulation framework of
+    /// §4.1 validated the FM at 5,600 switches; Aurora runs 5,600).
+    pub fn switch_count(&self) -> usize {
+        self.cfg.total_groups() * self.cfg.switches_per_group
+    }
+
+    /// Routing-table generation: for every (src switch, dst group) pair
+    /// the FM programs the minimal port plus non-minimal alternatives.
+    /// Returns the table size — the scalability metric of §4.1.
+    pub fn routing_table_entries(&self, topo: &Topology) -> usize {
+        let _ = topo;
+        let switches = self.switch_count();
+        let groups = self.cfg.total_groups();
+        // one interval-routing entry per destination group per switch,
+        // plus per-parallel-link alternates
+        switches * groups * self.cfg.global_links_compute
+    }
+
+    /// Standby takeover (Active-Standby cluster of §3.5).
+    pub fn failover(&mut self) {
+        self.active = !self.active;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fm() -> FabricManager {
+        FabricManager::new(&AuroraConfig::aurora())
+    }
+
+    #[test]
+    fn manages_5600_switches() {
+        // paper §4.1: FM validated to scale to 5,600 switches
+        assert_eq!(fm().switch_count(), 5600);
+    }
+
+    #[test]
+    fn sweeps_fire_at_default_cadence() {
+        let mut f = fm();
+        let fired = f.tick(10.0);
+        assert!(fired.contains(&"deployment"));
+        assert!(fired.contains(&"routing"));
+        assert_eq!(f.sweep_counts["routing"], 2); // 5 s cadence
+    }
+
+    #[test]
+    fn flap_then_retune_recovers() {
+        let mut f = fm();
+        let l = LinkId::Global { src: 0, dst: 1, idx: 0 };
+        f.record_flap(l, 60.0, 3);
+        assert_eq!(f.bw_multiplier(&l), 0.0, "flapping link drained");
+        f.retune_complete(l);
+        assert_eq!(f.bw_multiplier(&l), 1.0);
+    }
+
+    #[test]
+    fn repeated_flaps_escalate_to_maintenance() {
+        let mut f = fm();
+        let l = LinkId::Global { src: 2, dst: 9, idx: 1 };
+        for _ in 0..3 {
+            f.record_flap(l, 60.0, 3);
+            f.tick(1.0);
+        }
+        assert_eq!(f.link_health[&l], LinkHealth::Maintenance);
+        // retune does NOT clear maintenance — needs explicit restore
+        f.retune_complete(l);
+        assert_eq!(f.link_health[&l], LinkHealth::Maintenance);
+        f.restore(l);
+        assert_eq!(f.link_health[&l], LinkHealth::Healthy);
+    }
+
+    #[test]
+    fn degraded_link_multiplier() {
+        let mut f = fm();
+        let l = LinkId::Local { group: 0, a: 1, b: 2 };
+        f.set_degraded(l, 2);
+        assert_eq!(f.bw_multiplier(&l), 0.5);
+        f.set_degraded(l, 4);
+        assert_eq!(f.bw_multiplier(&l), 1.0);
+    }
+
+    #[test]
+    fn failover_switches_active() {
+        let mut f = fm();
+        assert!(f.active);
+        f.failover();
+        assert!(!f.active);
+    }
+
+    #[test]
+    fn routing_tables_scale_with_machine() {
+        let f = fm();
+        let topo = Topology::new(&f.cfg.clone());
+        let entries = f.routing_table_entries(&topo);
+        assert!(entries > 1_000_000, "{entries}");
+    }
+}

@@ -1,0 +1,47 @@
+//! # AuroraSim
+//!
+//! Full-stack simulation of the Aurora exascale system reproducing
+//! *Scaling MPI Applications on Aurora* (CS.DC 2025): a parametric
+//! Slingshot-11 dragonfly fabric (Rosetta switches + Cassini NICs), an
+//! Aurora node model (2x SPR-HBM + 6x PVC + 8 NICs), an MPI runtime with
+//! the paper's collective/RMA behaviours, the HPE fabric-manager control
+//! plane, the fabric-validation methodology of paper §3.8, and every
+//! benchmark/application of paper §5 as a workload over the simulated
+//! machine.
+//!
+//! Layering (see DESIGN.md):
+//! * L3 (this crate) owns topology, routing, congestion, QoS, MPI, the
+//!   launcher and the reproduction harness.
+//! * L2/L1 (JAX + Pallas, build time only) provide the per-rank compute
+//!   graphs as AOT HLO artifacts executed through [`runtime`] (PJRT CPU).
+//!
+//! Quick start:
+//! ```no_run
+//! use aurorasim::config::AuroraConfig;
+//! use aurorasim::machine::Machine;
+//!
+//! let cfg = AuroraConfig::aurora();       // the paper's 10,624-node system
+//! let machine = Machine::new(&cfg);
+//! println!("{}", machine.spec_table());   // paper Table 1
+//! ```
+
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod fabric;
+pub mod fabricmgr;
+pub mod machine;
+pub mod metrics;
+pub mod mpi;
+pub mod node;
+pub mod reproduce;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+pub mod validate;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+/// Bytes.
+pub type Bytes = u64;

@@ -1,0 +1,108 @@
+//! The assembled machine: topology + node models + global NIC numbering,
+//! plus the Table 1 aggregate-specification report.
+
+use crate::config::AuroraConfig;
+use crate::node::{place_ranks, RankLoc};
+use crate::topology::Topology;
+
+/// A fully described machine instance. Cheap to clone conceptually but we
+/// pass references; topology is computed algorithmically so memory is O(1)
+/// in machine size.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub cfg: AuroraConfig,
+    pub topo: Topology,
+}
+
+impl Machine {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        Self { cfg: cfg.clone(), topo: Topology::new(cfg) }
+    }
+
+    pub fn aurora() -> Self {
+        Self::new(&AuroraConfig::aurora())
+    }
+
+    /// Global NIC id for a rank placement.
+    pub fn nic_of(&self, loc: &RankLoc) -> u32 {
+        self.topo.nic_of_node(loc.node, loc.nic_idx)
+    }
+
+    /// Place a job: `nodes` consecutive node ids starting at `first_node`,
+    /// `ppn` ranks per node with the §3.8.4 balanced binding.
+    pub fn place_job(&self, first_node: usize, nodes: usize, ppn: usize)
+        -> Vec<RankLoc> {
+        assert!(
+            first_node + nodes <= self.cfg.nodes(),
+            "job of {nodes} nodes at {first_node} exceeds machine ({})",
+            self.cfg.nodes()
+        );
+        let ids: Vec<usize> = (first_node..first_node + nodes).collect();
+        place_ranks(&self.cfg, &ids, ppn)
+    }
+
+    /// Paper Table 1, regenerated from the model.
+    pub fn spec_table(&self) -> String {
+        let c = &self.cfg;
+        let nodes = c.nodes();
+        let cpus = nodes * c.sockets_per_node;
+        let gpus = nodes * c.gpus_per_node;
+        let ddr_pb = nodes as f64 * c.ddr_per_node_gb / 1e6;
+        let hbm_pb = nodes as f64 * c.hbm_per_node_gb / 1e6;
+        // DDR5-4800 x 8 channels x 2 sockets = 0.5 TB/s/node
+        let ddr_bw_pbs = nodes as f64 * 0.5e12 / 1e15;
+        // 2 x 1.64 (CPU HBM2e) + 6 x 3.28 (PVC) ~ 13.9 TB/s/node
+        let hbm_bw_pbs = nodes as f64 * 13.88e12 / 1e15;
+        format!(
+            "Table 1: Aurora Aggregate Specifications (model-derived)\n\
+             | Nodes                  | {nodes} |\n\
+             | No. of CPUs            | {cpus} |\n\
+             | No. of GPUs            | {gpus} |\n\
+             | DDR5 Memory Capacity   | {ddr_pb:.2} PB |\n\
+             | DDR5 Memory Bandwidth  | {ddr_bw_pbs:.2} PB/s |\n\
+             | HBM2e Memory Capacity  | {hbm_pb:.2} PB |\n\
+             | HBM2e Memory Bandwidth | {hbm_bw_pbs:.2} PB/s |\n\
+             | Injection Bandwidth    | {:.2} PB/s |\n\
+             | Global Bandwidth       | {:.2} PB/s |",
+            c.injection_bw() / 1e15,
+            c.global_bw() / 1e15,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_table_matches_paper_table1() {
+        let m = Machine::aurora();
+        let t = m.spec_table();
+        assert!(t.contains("| Nodes                  | 10624 |"), "{t}");
+        assert!(t.contains("| No. of CPUs            | 21248 |"), "{t}");
+        assert!(t.contains("| No. of GPUs            | 63744 |"), "{t}");
+        assert!(t.contains("| Injection Bandwidth    | 2.12 PB/s |"), "{t}");
+        assert!(t.contains("| Global Bandwidth       | 1.37 PB/s |"), "{t}");
+        // paper Table 1 prints 10.62 PB (1 TB/node, decimal); the §2 node
+        // description (2 x 512 GB) gives 10.88 PB — we follow §2.
+        assert!(t.contains("| DDR5 Memory Capacity   | 10.88 PB |"), "{t}");
+        assert!(t.contains("| HBM2e Memory Capacity  | 9.52 PB |"), "{t}");
+    }
+
+    #[test]
+    fn job_placement_bounds_checked() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let locs = m.place_job(0, 4, 8);
+        assert_eq!(locs.len(), 32);
+        let nics: std::collections::HashSet<u32> =
+            locs.iter().map(|l| m.nic_of(l)).collect();
+        assert_eq!(nics.len(), 32, "each rank gets its own NIC at ppn 8");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds machine")]
+    fn oversubscribed_job_panics() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        m.place_job(0, 100, 8);
+    }
+}

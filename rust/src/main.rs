@@ -1,0 +1,128 @@
+//! `repro` — the AuroraSim command-line interface.
+//!
+//! ```text
+//! repro spec                         print Table 1 (machine model)
+//! repro list                         list experiment ids
+//! repro reproduce <id>|all           regenerate a paper table/figure
+//! repro functional [dir]             PJRT end-to-end validations
+//! repro validate [nodes]             fabric-validation ladder demo
+//! repro launch <nodes> <ppn> <app>   run a benchmark via the launcher
+//! ```
+//!
+//! (The registry is offline in this environment, so argument parsing is
+//! hand-rolled — no clap.)
+
+use anyhow::{bail, Result};
+use aurorasim::config::AuroraConfig;
+use aurorasim::coordinator::{JobSpec, Launcher};
+use aurorasim::machine::Machine;
+use aurorasim::mpi::{coll, Comm};
+use aurorasim::reproduce;
+use aurorasim::runtime::Runtime;
+use aurorasim::validate::{NodeFault, Validator};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <spec|list|reproduce|functional|validate|launch> ..."
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "spec" => {
+            println!("{}", Machine::aurora().spec_table());
+        }
+        "list" => {
+            for id in reproduce::all_ids() {
+                println!("{id}");
+            }
+        }
+        "reproduce" => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            if id == "all" {
+                for id in reproduce::all_ids() {
+                    println!("{}", reproduce::run(id)?);
+                }
+            } else {
+                println!("{}", reproduce::run(id)?);
+            }
+        }
+        "functional" => {
+            let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
+            let mut rt = Runtime::open(dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            println!("{}", reproduce::functional_suite(&mut rt)?);
+        }
+        "validate" => {
+            let nodes: usize = args
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(64);
+            let m = Machine::new(&AuroraConfig::small(8, 4));
+            let mut v = Validator::new(&m);
+            // inject a couple of faults so the ladder has work to do
+            v.inject(3, NodeFault { perf_factor: 0.5, ..Default::default() });
+            v.inject(9, NodeFault { hw_errors: 3, ..Default::default() });
+            let all: Vec<usize> =
+                (0..nodes.min(m.cfg.nodes())).collect();
+            for rep in v.systematic(&all) {
+                println!(
+                    "level {:?}: tested {} failed {:?}",
+                    rep.level, rep.tested_nodes, rep.failed_nodes
+                );
+            }
+            let restored = v.repair_and_revalidate();
+            println!("repaired + revalidated: {restored:?}");
+        }
+        "launch" => {
+            if args.len() < 4 {
+                usage();
+            }
+            let nodes: usize = args[1].parse()?;
+            let ppn: usize = args[2].parse()?;
+            let app = args[3].as_str();
+            let m = Machine::new(&AuroraConfig::small(8, 4));
+            let mut l = Launcher::new(&m);
+            let spec = JobSpec::new(app, nodes, ppn);
+            match app {
+                "allreduce" => {
+                    let rep = l.launch(&spec, |w| {
+                        coll::allreduce(w, &Comm::world(nodes * ppn), 1 << 20)
+                    })?;
+                    println!(
+                        "allreduce(1MiB) on {nodes}x{ppn}: {:.1} us",
+                        rep.result * 1e6
+                    );
+                    println!("{}", rep.mpich_summary);
+                    println!("{}", rep.counter_report);
+                }
+                "alltoall" => {
+                    let rep = l.launch(&spec, |w| {
+                        coll::alltoall(w, &Comm::world(nodes * ppn), 64 << 10)
+                    })?;
+                    println!(
+                        "alltoall(64KiB) on {nodes}x{ppn}: {:.3} ms",
+                        rep.result * 1e3
+                    );
+                    println!("{}", rep.mpich_summary);
+                }
+                "barrier" => {
+                    let rep = l.launch(&spec, |w| {
+                        coll::barrier(w, &Comm::world(nodes * ppn))
+                    })?;
+                    println!(
+                        "barrier on {nodes}x{ppn}: {:.1} us",
+                        rep.result * 1e6
+                    );
+                }
+                _ => bail!("unknown app '{app}' (allreduce|alltoall|barrier)"),
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

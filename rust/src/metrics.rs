@@ -1,0 +1,125 @@
+//! Small metrics/statistics helpers shared by benchmarks and the
+//! reproduction harness (percentiles for GPCNet-style reporting, pretty
+//! units, simple tables).
+
+/// Percentile (nearest-rank) of a sample; `p` in [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    samples.iter().sum::<f64>() / samples.len().max(1) as f64
+}
+
+/// Format bytes/s with the units the paper uses.
+pub fn fmt_bw(bps: f64) -> String {
+    if bps >= 1e15 {
+        format!("{:.2} PB/s", bps / 1e15)
+    } else if bps >= 1e12 {
+        format!("{:.2} TB/s", bps / 1e12)
+    } else if bps >= 1e9 {
+        format!("{:.2} GB/s", bps / 1e9)
+    } else if bps >= 1e6 {
+        format!("{:.2} MB/s", bps / 1e6)
+    } else {
+        format!("{bps:.0} B/s")
+    }
+}
+
+/// Format seconds with the units the paper uses (µs for latency plots).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 90.0 {
+        format!("{s:.2} s")
+    } else {
+        let h = (s / 3600.0) as u64;
+        let m = ((s % 3600.0) / 60.0) as u64;
+        let sec = s % 60.0;
+        format!("{h}h {m:02}m {sec:02.0}s")
+    }
+}
+
+/// Format flops/s.
+pub fn fmt_flops(f: f64) -> String {
+    if f >= 1e18 {
+        format!("{:.3} EF/s", f / 1e18)
+    } else if f >= 1e15 {
+        format!("{:.2} PF/s", f / 1e15)
+    } else if f >= 1e12 {
+        format!("{:.2} TF/s", f / 1e12)
+    } else {
+        format!("{:.2} GF/s", f / 1e9)
+    }
+}
+
+/// Render an aligned text table (header + rows).
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, width: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        header.iter().map(|s| s.to_string()).collect(),
+        &width,
+    ));
+    out.push_str(&fmt_row(
+        width.iter().map(|w| "-".repeat(*w)).collect(),
+        &width,
+    ));
+    for r in rows {
+        out.push_str(&fmt_row(r.clone(), &width));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bw(228.92e12), "228.92 TB/s");
+        assert_eq!(fmt_bw(2.12e15), "2.12 PB/s");
+        assert_eq!(fmt_time(3.1e-6), "3.10 us");
+        assert_eq!(fmt_flops(1.012e18), "1.012 EF/s");
+        // HPL runtime format (4h 21m)
+        assert!(fmt_time(4.0 * 3600.0 + 21.0 * 60.0 + 54.0).starts_with("4h 21m"));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["Nodes", "PF/s"],
+            &[vec!["9234".into(), "1012".into()]],
+        );
+        assert!(t.contains("| Nodes |"));
+        assert!(t.contains("| 9234  |"));
+    }
+}

@@ -1,0 +1,409 @@
+//! Collective algorithms (paper §5.1, Fig 14).
+//!
+//! MPICH on Aurora switches MPI_Allreduce between a latency-optimized
+//! tree (recursive doubling) for small messages and a bandwidth-optimized
+//! ring (reduce-scatter + allgather) for large ones — "a switch from a
+//! ring algorithm to a tree algorithm is clearly seen on the curves"
+//! (Fig 14). Both are implemented over the fabric tiers, plus pairwise
+//! all2all, binomial broadcast, barrier, allgather and reduce-scatter.
+//!
+//! Round structure is costed exactly; rounds that repeat the same
+//! permutation (ring steps) are evaluated once and scaled, which is what
+//! lets the Fig 14 sweep run to 2,048 nodes in milliseconds.
+
+use super::{Comm, World};
+
+/// Cost one communication round without advancing clocks (the collective
+/// functions accumulate round costs and sync once).
+fn round_cost(w: &mut World, msgs: &[(usize, usize, u64)]) -> f64 {
+    if msgs.is_empty() {
+        return 0.0;
+    }
+    let mut routed = Vec::with_capacity(msgs.len());
+    let mut intra_max = 0.0f64;
+    for &(s, d, b) in msgs {
+        let (pa, pb) = (w.placements[s], w.placements[d]);
+        if pa.node == pb.node {
+            let t = 0.4e-6 + w.cfg().mpi_overhead
+                + b as f64
+                    / crate::node::NodePaths::new(w.cfg()).intra_node_bw(
+                        &pa,
+                        &pb,
+                        matches!(w.buf, crate::fabric::BufLoc::Gpu),
+                    );
+            intra_max = intra_max.max(t);
+        } else {
+            let f = crate::fabric::Flow {
+                src_nic: w.nics[s],
+                dst_nic: w.nics[d],
+                bytes: b,
+                class: w.class,
+                buf: w.buf,
+                ordered: false,
+            };
+            let path = w.router.route(&f);
+            w.counters.record_send(w.nics[s], b);
+            routed.push(crate::fabric::RoutedFlow { flow: f, path });
+        }
+    }
+    let fabric_max = if routed.is_empty() {
+        0.0
+    } else {
+        w.cost_model().eval_round(&routed).makespan
+    };
+    intra_max.max(fabric_max)
+}
+
+/// Largest power of two <= n.
+fn pow2_floor(n: usize) -> usize {
+    let mut p = 1;
+    while p * 2 <= n {
+        p *= 2;
+    }
+    p
+}
+
+// ------------------------------------------------------------------ allreduce
+
+/// MPI_Allreduce timing for `bytes` per rank. Picks tree vs ring by the
+/// configured cutoff, exactly like the curves of Fig 14.
+pub fn allreduce(w: &mut World, comm: &Comm, bytes: u64) -> f64 {
+    let t = if bytes <= w.cfg().allreduce_tree_cutoff {
+        allreduce_tree_time(w, comm, bytes)
+    } else {
+        allreduce_ring_time(w, comm, bytes)
+    };
+    w.sync_clocks(comm, t);
+    t
+}
+
+/// Recursive-doubling allreduce: log2(P) rounds of full-size exchanges
+/// (+ fold rounds for non-power-of-two communicators).
+pub fn allreduce_tree_time(w: &mut World, comm: &Comm, bytes: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let p2 = pow2_floor(p);
+    let rem = p - p2;
+    let mut t = 0.0;
+    // fold the remainder in (and back out at the end)
+    if rem > 0 {
+        let msgs: Vec<_> = (0..rem)
+            .map(|i| (comm.ranks[p2 + i], comm.ranks[i], bytes))
+            .collect();
+        t += 2.0 * round_cost(w, &msgs);
+    }
+    let mut dist = 1;
+    while dist < p2 {
+        let msgs: Vec<_> = (0..p2)
+            .map(|i| (comm.ranks[i], comm.ranks[i ^ dist], bytes))
+            .collect();
+        t += round_cost(w, &msgs);
+        dist *= 2;
+    }
+    t
+}
+
+/// Ring (reduce-scatter + allgather) allreduce: 2(P-1) neighbour rounds of
+/// bytes/P chunks. Every round is the same shift-by-one permutation, so we
+/// cost one round and scale.
+pub fn allreduce_ring_time(w: &mut World, comm: &Comm, bytes: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let chunk = (bytes / p as u64).max(1);
+    let msgs: Vec<_> = (0..p)
+        .map(|i| (comm.ranks[i], comm.ranks[(i + 1) % p], chunk))
+        .collect();
+    let per_round = round_cost(w, &msgs);
+    2.0 * (p - 1) as f64 * per_round
+}
+
+/// Functional allreduce (sum): reduces real data across the communicator
+/// and returns the operation time.
+pub fn allreduce_data(w: &mut World, comm: &Comm, bufs: &mut [Vec<f64>])
+    -> f64 {
+    assert_eq!(bufs.len(), comm.size());
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "mismatched buffers");
+    let mut sum = vec![0.0f64; n];
+    for b in bufs.iter() {
+        for (s, v) in sum.iter_mut().zip(b) {
+            *s += v;
+        }
+    }
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&sum);
+    }
+    allreduce(w, comm, (n * 8) as u64)
+}
+
+// ------------------------------------------------------------------ all2all
+
+/// Pairwise-exchange all2all: P-1 rotation rounds of `bytes` per pair.
+/// For large communicators a sample of rounds is costed and scaled (the
+/// rotation rounds are statistically identical).
+pub fn alltoall(w: &mut World, comm: &Comm, bytes_per_pair: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let rounds = p - 1;
+    let sample = rounds.min(24);
+    let mut t_sample = 0.0;
+    for k in 1..=sample {
+        // stride pattern that covers near and far partners
+        let shift = 1 + (k - 1) * rounds / sample;
+        let msgs: Vec<_> = (0..p)
+            .map(|i| (comm.ranks[i], comm.ranks[(i + shift) % p], bytes_per_pair))
+            .collect();
+        t_sample += round_cost(w, &msgs);
+    }
+    let t = t_sample * rounds as f64 / sample as f64;
+    w.sync_clocks(comm, t);
+    t
+}
+
+/// Functional all2all on real data: `bufs[i][j]` is rank i's block for
+/// rank j; returns (received blocks, time).
+pub fn alltoall_data(w: &mut World, comm: &Comm, bufs: &[Vec<Vec<f64>>])
+    -> (Vec<Vec<Vec<f64>>>, f64) {
+    let p = comm.size();
+    assert_eq!(bufs.len(), p);
+    let bytes = (bufs[0][0].len() * 8) as u64;
+    let mut recv = vec![vec![Vec::new(); p]; p];
+    for i in 0..p {
+        assert_eq!(bufs[i].len(), p);
+        for j in 0..p {
+            recv[j][i] = bufs[i][j].clone();
+        }
+    }
+    let t = alltoall(w, comm, bytes);
+    (recv, t)
+}
+
+// ------------------------------------------------------------------ others
+
+/// Binomial-tree broadcast.
+pub fn bcast(w: &mut World, comm: &Comm, root_idx: usize, bytes: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    let mut reach = 1usize;
+    while reach < p {
+        let msgs: Vec<_> = (0..reach.min(p - reach))
+            .map(|i| {
+                let src = (root_idx + i) % p;
+                let dst = (root_idx + i + reach) % p;
+                (comm.ranks[src], comm.ranks[dst], bytes)
+            })
+            .collect();
+        t += round_cost(w, &msgs);
+        reach *= 2;
+    }
+    w.sync_clocks(comm, t);
+    t
+}
+
+/// Barrier: recursive doubling with 8-byte tokens, LowLatency class
+/// semantics (§3.1 suggests barriers ride the high-priority class).
+pub fn barrier(w: &mut World, comm: &Comm) -> f64 {
+    allreduce(w, comm, 8)
+}
+
+/// Ring allgather of `bytes` contributed per rank.
+pub fn allgather(w: &mut World, comm: &Comm, bytes_per_rank: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let msgs: Vec<_> = (0..p)
+        .map(|i| (comm.ranks[i], comm.ranks[(i + 1) % p], bytes_per_rank))
+        .collect();
+    let t = (p - 1) as f64 * round_cost(w, &msgs);
+    w.sync_clocks(comm, t);
+    t
+}
+
+/// Ring reduce-scatter over a `bytes` buffer.
+pub fn reduce_scatter(w: &mut World, comm: &Comm, bytes: u64) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let chunk = (bytes / p as u64).max(1);
+    let msgs: Vec<_> = (0..p)
+        .map(|i| (comm.ranks[i], comm.ranks[(i + 1) % p], chunk))
+        .collect();
+    let t = (p - 1) as f64 * round_cost(w, &msgs);
+    w.sync_clocks(comm, t);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::machine::Machine;
+    use crate::mpi::World;
+
+    fn setup(nodes: usize, ppn: usize) -> (Machine, Vec<crate::node::RankLoc>) {
+        let m = Machine::new(&AuroraConfig::small(8, 4)); // 64 nodes
+        let p = m.place_job(0, nodes, ppn);
+        (m, p)
+    }
+
+    #[test]
+    fn allreduce_small_uses_tree_and_scales_logarithmically() {
+        let (m, p) = setup(64, 1);
+        let mut w = World::new(&m.topo, p);
+        let comm16 = Comm::world(16);
+        let comm64 = Comm::world(64);
+        let t16 = allreduce_tree_time(&mut w, &comm16, 8);
+        let t64 = allreduce_tree_time(&mut w, &comm64, 8);
+        // log2(64)/log2(16) = 1.5; allow fabric noise
+        assert!(t64 < t16 * 2.5, "tree must be sub-linear: {t16} {t64}");
+        assert!(t64 > t16, "more ranks cannot be faster");
+    }
+
+    #[test]
+    fn allreduce_switches_algorithm_at_cutoff() {
+        let (m, p) = setup(16, 1);
+        let cutoff = m.cfg.allreduce_tree_cutoff;
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(16);
+        // at the cutoff boundary, ring (bytes/P chunks) beats tree for
+        // large payloads — that's why MPICH switches
+        let tree_big = allreduce_tree_time(&mut w, &comm, 64 * cutoff);
+        let ring_big = allreduce_ring_time(&mut w, &comm, 64 * cutoff);
+        assert!(ring_big < tree_big, "ring {ring_big} tree {tree_big}");
+        let tree_small = allreduce_tree_time(&mut w, &comm, 8);
+        let ring_small = allreduce_ring_time(&mut w, &comm, 8);
+        assert!(tree_small < ring_small, "tree wins small messages");
+    }
+
+    #[test]
+    fn allreduce_data_sums() {
+        let (m, p) = setup(4, 2);
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(8);
+        let mut bufs: Vec<Vec<f64>> =
+            (0..8).map(|i| vec![i as f64, 1.0]).collect();
+        let t = allreduce_data(&mut w, &comm, &mut bufs);
+        assert!(t > 0.0);
+        for b in &bufs {
+            assert_eq!(b[0], 28.0); // 0+1+..+7
+            assert_eq!(b[1], 8.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_nonpow2_works() {
+        let (m, p) = setup(12, 1);
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(12);
+        let mut bufs: Vec<Vec<f64>> = (0..12).map(|_| vec![1.0; 4]).collect();
+        allreduce_data(&mut w, &comm, &mut bufs);
+        for b in &bufs {
+            assert!(b.iter().all(|&v| v == 12.0));
+        }
+    }
+
+    #[test]
+    fn alltoall_data_transposes() {
+        let (m, p) = setup(4, 1);
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(4);
+        let bufs: Vec<Vec<Vec<f64>>> = (0..4)
+            .map(|i| (0..4).map(|j| vec![(i * 10 + j) as f64]).collect())
+            .collect();
+        let (recv, t) = alltoall_data(&mut w, &comm, &bufs);
+        assert!(t > 0.0);
+        // rank j receives block i -> value i*10 + j
+        for j in 0..4 {
+            for i in 0..4 {
+                assert_eq!(recv[j][i][0], (i * 10 + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_scales_logarithmically() {
+        let (m, p) = setup(32, 1);
+        let mut w = World::new(&m.topo, p);
+        let t8 = bcast(&mut w, &Comm::world(8), 0, 1 << 16);
+        let mut w2 = World::new(&m.topo, m.place_job(0, 32, 1));
+        let t32 = bcast(&mut w2, &Comm::world(32), 0, 1 << 16);
+        assert!(t32 < t8 * 2.1, "binomial bcast is log-depth: {t8} {t32}");
+    }
+
+    #[test]
+    fn barrier_is_fast() {
+        let (m, p) = setup(16, 1);
+        let mut w = World::new(&m.topo, p);
+        let t = barrier(&mut w, &Comm::world(16));
+        assert!(t < 100e-6, "barrier {t}");
+    }
+
+    #[test]
+    fn allgather_linear_in_contributed_bytes() {
+        let (m, p) = setup(16, 1);
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(16);
+        let t_small = allgather(&mut w, &comm, 1 << 10);
+        let mut w2 = World::new(&m.topo, m.place_job(0, 16, 1));
+        let t_big = allgather(&mut w2, &Comm::world(16), 1 << 20);
+        assert!(t_big > t_small * 10.0, "{t_small} vs {t_big}");
+    }
+
+    #[test]
+    fn reduce_scatter_cheaper_than_full_allreduce_ring() {
+        // reduce_scatter is the first half of the ring allreduce
+        let (m, p) = setup(16, 1);
+        let bytes = 16 << 20;
+        let mut w = World::new(&m.topo, p);
+        let rs = reduce_scatter(&mut w, &Comm::world(16), bytes);
+        let mut w2 = World::new(&m.topo, m.place_job(0, 16, 1));
+        let ar = allreduce_ring_time(&mut w2, &Comm::world(16), bytes);
+        assert!(rs < ar, "rs {rs} allreduce {ar}");
+        assert!(rs > ar * 0.3, "rs should be roughly half: {rs} vs {ar}");
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        let (m, p) = setup(2, 1);
+        let mut w = World::new(&m.topo, p);
+        let one = Comm { ranks: vec![0] };
+        assert_eq!(allreduce(&mut w, &one, 1 << 20), 0.0);
+        assert_eq!(alltoall(&mut w, &one, 1 << 20), 0.0);
+        assert_eq!(bcast(&mut w, &one, 0, 1 << 20), 0.0);
+        assert_eq!(allgather(&mut w, &one, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn gpu_buffer_allreduce_slower_than_host() {
+        // Fig 14 uses GPU buffers; the GPU path pays the PCIe conversion
+        let (m, p) = setup(32, 1);
+        let mut wh = World::new(&m.topo, p);
+        let th = allreduce(&mut wh, &Comm::world(32), 16 << 20);
+        let mut wg =
+            World::new(&m.topo, m.place_job(0, 32, 1)).gpu_buffers();
+        let tg = allreduce(&mut wg, &Comm::world(32), 16 << 20);
+        assert!(tg > th, "gpu {tg} host {th}");
+    }
+
+    #[test]
+    fn collectives_sync_all_clocks() {
+        let (m, p) = setup(8, 1);
+        let mut w = World::new(&m.topo, p);
+        let comm = Comm::world(8);
+        allreduce(&mut w, &comm, 1024);
+        let t0 = w.clock[0];
+        assert!(t0 > 0.0);
+        assert!(w.clock.iter().all(|&c| (c - t0).abs() < 1e-12));
+    }
+}

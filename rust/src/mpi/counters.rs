@@ -1,0 +1,124 @@
+//! CXI counter collection (paper §3.8.8): HPE Cray MPI gathers Cassini
+//! counters for any MPI job via MPICH_OFI_CXI_COUNTER_REPORT — no source
+//! changes. We model the counters the fabric-validation flow reads:
+//! per-NIC messages/bytes, retries and timeouts.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct NicCounters {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub retries: u64,
+}
+
+/// Aggregated CXI counters for a job.
+#[derive(Debug, Clone, Default)]
+pub struct CxiCounters {
+    pub per_nic: HashMap<u32, NicCounters>,
+    /// CXI-level timeouts (the §3.8.6 summary line).
+    pub timeouts: u64,
+}
+
+impl CxiCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_send(&mut self, nic: u32, bytes: u64) {
+        let c = self.per_nic.entry(nic).or_default();
+        c.msgs_sent += 1;
+        c.bytes_sent += bytes;
+    }
+
+    pub fn record_retry(&mut self, nic: u32) {
+        self.per_nic.entry(nic).or_default().retries += 1;
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.per_nic.values().map(|c| c.msgs_sent).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.per_nic.values().map(|c| c.bytes_sent).sum()
+    }
+
+    pub fn total_retries(&self) -> u64 {
+        self.per_nic.values().map(|c| c.retries).sum()
+    }
+
+    /// The COUNTER_REPORT text (verbose form lists per-NIC rows).
+    pub fn report(&self, verbose: bool) -> String {
+        let mut s = format!(
+            "CXI counter report: {} msgs, {} bytes, {} retries, {} timeouts\n",
+            self.total_msgs(),
+            self.total_bytes(),
+            self.total_retries(),
+            self.timeouts
+        );
+        if verbose {
+            let mut nics: Vec<_> = self.per_nic.iter().collect();
+            nics.sort_by_key(|(n, _)| **n);
+            for (nic, c) in nics {
+                s.push_str(&format!(
+                    "  cxi{nic}: msgs={} bytes={} retries={}\n",
+                    c.msgs_sent, c.bytes_sent, c.retries
+                ));
+            }
+        }
+        s
+    }
+
+    /// NICs whose send throughput is an outlier vs the median — the
+    /// low-performing-node identification input of §3.8.7.
+    pub fn low_outliers(&self, factor: f64) -> Vec<u32> {
+        let mut bytes: Vec<u64> =
+            self.per_nic.values().map(|c| c.bytes_sent).collect();
+        if bytes.len() < 3 {
+            return vec![];
+        }
+        bytes.sort_unstable();
+        let median = bytes[bytes.len() / 2] as f64;
+        self.per_nic
+            .iter()
+            .filter(|(_, c)| (c.bytes_sent as f64) < median * factor)
+            .map(|(n, _)| *n)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let mut c = CxiCounters::new();
+        c.record_send(0, 100);
+        c.record_send(0, 200);
+        c.record_send(5, 50);
+        c.record_retry(5);
+        assert_eq!(c.total_msgs(), 3);
+        assert_eq!(c.total_bytes(), 350);
+        assert_eq!(c.total_retries(), 1);
+    }
+
+    #[test]
+    fn verbose_report_lists_nics() {
+        let mut c = CxiCounters::new();
+        c.record_send(3, 10);
+        let r = c.report(true);
+        assert!(r.contains("cxi3: msgs=1 bytes=10"));
+    }
+
+    #[test]
+    fn outlier_detection() {
+        let mut c = CxiCounters::new();
+        for nic in 0..8u32 {
+            let b = if nic == 7 { 10 } else { 1000 };
+            c.record_send(nic, b);
+        }
+        let low = c.low_outliers(0.5);
+        assert_eq!(low, vec![7]);
+    }
+}

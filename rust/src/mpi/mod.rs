@@ -1,0 +1,329 @@
+//! The MPI runtime over the simulated fabric (paper §4.4-§4.5).
+//!
+//! Mirrors the Aurora software stack: MPICH CH4 -> libfabric CXI provider
+//! -> Cassini NIC. A [`World`] holds rank placements, per-rank clocks and
+//! the adaptive router; [`coll`] implements the collective algorithms
+//! whose switch-over Fig 14 shows; [`rma`] implements the one-sided model
+//! of §5.3.5 (software-emulated GPU RMA, HMEM path, fence-or-overflow);
+//! [`counters`] is the CXI counter reporting of §3.8.8.
+//!
+//! Two usage modes share every code path:
+//! * **timing**: ops advance per-rank clocks using the fabric cost tiers;
+//! * **functional**: `*_data` variants also move/reduce real `f64`
+//!   payloads so end-to-end numerics can be validated.
+
+pub mod coll;
+pub mod counters;
+pub mod rma;
+
+use crate::config::AuroraConfig;
+use crate::fabric::des::{DesOpts, DesSim};
+use crate::fabric::rounds::CostModel;
+use crate::fabric::{BufLoc, Flow, Router, RoutedFlow, TrafficClass};
+use crate::node::{NodePaths, RankLoc};
+use crate::topology::Topology;
+use counters::CxiCounters;
+
+/// A communicator: an ordered set of world ranks.
+#[derive(Debug, Clone)]
+pub struct Comm {
+    pub ranks: Vec<usize>,
+}
+
+impl Comm {
+    pub fn world(n: usize) -> Self {
+        Self { ranks: (0..n).collect() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// MPI_Comm_split by color; key = current order.
+    pub fn split(&self, color: impl Fn(usize) -> usize) -> Vec<Comm> {
+        let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, &r) in self.ranks.iter().enumerate() {
+            groups.entry(color(i)).or_default().push(r);
+        }
+        groups.into_values().map(|ranks| Comm { ranks }).collect()
+    }
+}
+
+/// The simulated MPI world.
+pub struct World<'t> {
+    pub topo: &'t Topology,
+    pub router: Router<'t>,
+    pub placements: Vec<RankLoc>,
+    /// Global NIC id per rank.
+    pub nics: Vec<u32>,
+    /// Per-rank local clock (seconds).
+    pub clock: Vec<f64>,
+    pub counters: CxiCounters,
+    /// Default buffer location for transfers (host or GPU-direct).
+    pub buf: BufLoc,
+    pub class: TrafficClass,
+    /// Use the DES tier for rounds at or below this many flows; the
+    /// round-based tier above (cross-validated in rust/tests).
+    pub des_flow_limit: usize,
+    node_paths: NodePaths,
+    des_opts: DesOpts,
+}
+
+impl<'t> World<'t> {
+    pub fn new(topo: &'t Topology, placements: Vec<RankLoc>) -> Self {
+        let nics = placements
+            .iter()
+            .map(|l| topo.nic_of_node(l.node, l.nic_idx))
+            .collect();
+        let n = placements.len();
+        Self {
+            topo,
+            router: Router::new(topo),
+            nics,
+            clock: vec![0.0; n],
+            counters: CxiCounters::new(),
+            buf: BufLoc::Host,
+            class: TrafficClass::BestEffort,
+            des_flow_limit: 512,
+            node_paths: NodePaths::new(&topo.cfg),
+            des_opts: DesOpts::default(),
+            placements,
+        }
+    }
+
+    pub fn gpu_buffers(mut self) -> Self {
+        self.buf = BufLoc::Gpu;
+        self
+    }
+
+    pub fn size(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn cfg(&self) -> &AuroraConfig {
+        &self.topo.cfg
+    }
+
+    pub fn cost_model(&self) -> CostModel<'t> {
+        CostModel::new(self.topo)
+    }
+
+    /// Max clock across ranks — the job's elapsed time.
+    pub fn elapsed(&self) -> f64 {
+        self.clock.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Advance every rank in `comm` to the same time (a synchronizing op).
+    pub fn sync_clocks(&mut self, comm: &Comm, extra: f64) {
+        let t = comm
+            .ranks
+            .iter()
+            .map(|&r| self.clock[r])
+            .fold(0.0, f64::max)
+            + extra;
+        for &r in &comm.ranks {
+            self.clock[r] = t;
+        }
+    }
+
+    /// Per-rank compute: advances that rank's clock only.
+    pub fn compute(&mut self, rank: usize, seconds: f64) {
+        self.clock[rank] += seconds;
+    }
+
+    /// Cost of one message between two ranks, ignoring cross-flow
+    /// contention (used for tree collectives where rounds serialize).
+    pub fn solo_msg_time(&mut self, src: usize, dst: usize, bytes: u64) -> f64 {
+        let (a, b) = (self.placements[src], self.placements[dst]);
+        if a.node == b.node {
+            return self.intra_node_time(&a, &b, bytes);
+        }
+        let flow = self.flow(src, dst, bytes);
+        let path = self.router.route(&flow);
+        self.counters.record_send(self.nics[src], bytes);
+        self.cost_model().solo_msg_time(&path, bytes, self.buf)
+    }
+
+    fn intra_node_time(&self, a: &RankLoc, b: &RankLoc, bytes: u64) -> f64 {
+        let cfg = &self.topo.cfg;
+        let bw = self
+            .node_paths
+            .intra_node_bw(a, b, matches!(self.buf, BufLoc::Gpu));
+        // IPC-handle / shared-memory path: software overhead, no NIC
+        0.4e-6 + cfg.mpi_overhead + bytes as f64 / bw
+    }
+
+    fn flow(&self, src: usize, dst: usize, bytes: u64) -> Flow {
+        Flow {
+            src_nic: self.nics[src],
+            dst_nic: self.nics[dst],
+            bytes,
+            class: self.class,
+            buf: self.buf,
+            ordered: true, // MPI envelope ordering (§3.1)
+        }
+    }
+
+    /// Execute one communication round: `(src, dst, bytes)` triples that
+    /// start together. Advances the clocks of all participants; returns
+    /// the round's duration (from the latest participant start).
+    pub fn exchange(&mut self, msgs: &[(usize, usize, u64)]) -> f64 {
+        if msgs.is_empty() {
+            return 0.0;
+        }
+        // split intra-node messages (no fabric) from fabric flows
+        let mut fabric_idx = Vec::new();
+        let mut intra: Vec<(usize, f64)> = Vec::new();
+        let mut routed = Vec::new();
+        for (i, &(s, d, b)) in msgs.iter().enumerate() {
+            let (pa, pb) = (self.placements[s], self.placements[d]);
+            if pa.node == pb.node {
+                intra.push((i, self.intra_node_time(&pa, &pb, b)));
+            } else {
+                let f = self.flow(s, d, b);
+                let path = self.router.route(&f);
+                self.counters.record_send(self.nics[s], b);
+                routed.push(RoutedFlow { flow: f, path });
+                fabric_idx.push(i);
+            }
+        }
+        let start = msgs
+            .iter()
+            .flat_map(|&(s, d, _)| [self.clock[s], self.clock[d]])
+            .fold(0.0, f64::max);
+        let mut per_msg = vec![0.0f64; msgs.len()];
+        for (i, t) in &intra {
+            per_msg[*i] = *t;
+        }
+        if !routed.is_empty() {
+            let times = if routed.len() <= self.des_flow_limit {
+                DesSim::new(self.topo, self.des_opts.clone())
+                    .run_simultaneous(&routed)
+            } else {
+                self.cost_model().eval_round(&routed)
+            };
+            for (k, &i) in fabric_idx.iter().enumerate() {
+                per_msg[i] = times.per_flow[k];
+            }
+        }
+        let mut round = 0.0f64;
+        for (i, &(s, d, _)) in msgs.iter().enumerate() {
+            let t = start + per_msg[i];
+            self.clock[s] = self.clock[s].max(t);
+            self.clock[d] = self.clock[d].max(t);
+            round = round.max(per_msg[i]);
+        }
+        // ordered-delivery bookkeeping: destinations now idle
+        for &(s, d, _) in msgs {
+            self.router.destination_idle(self.nics[s], self.nics[d]);
+        }
+        round
+    }
+
+    /// Point-to-point latency with `window` outstanding messages (the
+    /// ALCF benchmark of Fig 10 uses a 16-message window): reported value
+    /// is the average per-message latency.
+    pub fn p2p_latency(&mut self, src: usize, dst: usize, bytes: u64,
+                       window: usize) -> f64 {
+        let flow = self.flow(src, dst, bytes);
+        let path = self.router.route(&flow);
+        let cm = self.cost_model();
+        let lat = cm.msg_latency(&path, bytes, self.buf);
+        let ser = bytes as f64
+            / cm.nic_eff_bw(self.buf).min(cm.rank_issue_bw(self.buf));
+        // window messages pipeline over the wire: the first pays full
+        // latency, the rest are serialization-gated
+        let total =
+            lat + window as f64 * ser.max(1.0 / self.topo.cfg.nic_msg_rate);
+        self.counters.record_send(self.nics[src], bytes * window as u64);
+        lat.max(total / window as f64)
+    }
+
+    /// Inject network timeouts (fabric events / node issues — §3.8.6).
+    pub fn inject_timeouts(&mut self, n: u64) {
+        self.counters.timeouts += n;
+    }
+
+    /// The MPICH summary line printed after a job (§3.8.6).
+    pub fn mpich_summary(&self) -> String {
+        format!(
+            "MPICH Slingshot Network Summary: {} network timeouts.",
+            self.counters.timeouts
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::machine::Machine;
+
+    fn world(m: &Machine, nodes: usize, ppn: usize) -> World<'_> {
+        World::new(&m.topo, m.place_job(0, nodes, ppn))
+    }
+
+    #[test]
+    fn comm_split() {
+        let c = Comm::world(12);
+        let subs = c.split(|i| i / 4);
+        assert_eq!(subs.len(), 3);
+        assert_eq!(subs[0].ranks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn exchange_advances_clocks() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 4, 2);
+        let d = w.exchange(&[(0, 2, 4096), (4, 6, 4096)]);
+        assert!(d > 0.0);
+        assert!(w.clock[0] > 0.0 && w.clock[6] > 0.0);
+        assert_eq!(w.clock[1], 0.0, "uninvolved rank unaffected");
+    }
+
+    #[test]
+    fn intra_node_faster_than_inter_node() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 4, 2);
+        let bytes = 1 << 20;
+        let intra = w.solo_msg_time(0, 1, bytes); // same node, 2 ranks/node
+        let inter = w.solo_msg_time(0, 7, bytes); // different nodes
+        assert!(intra < inter, "intra {intra} inter {inter}");
+    }
+
+    #[test]
+    fn p2p_latency_shape_matches_fig10() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 8, 1);
+        let l8 = w.p2p_latency(0, 7, 8, 16);
+        let l64 = w.p2p_latency(0, 7, 64, 16);
+        let l128 = w.p2p_latency(0, 7, 128, 16);
+        let l1m = w.p2p_latency(0, 7, 1 << 20, 16);
+        assert!((l8 - l64).abs() < 0.15e-6, "flat small-msg region");
+        assert!(l128 > l64, "SRAM->DRAM step");
+        assert!(l1m > 20.0 * l128, "bandwidth regime");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 2, 1);
+        w.exchange(&[(0, 1, 1000)]);
+        assert!(w.counters.total_bytes() >= 1000);
+        w.inject_timeouts(28);
+        assert_eq!(
+            w.mpich_summary(),
+            "MPICH Slingshot Network Summary: 28 network timeouts."
+        );
+    }
+
+    #[test]
+    fn sync_clocks_levels_ranks() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 2, 2);
+        w.compute(0, 5.0);
+        w.sync_clocks(&Comm::world(4), 0.0);
+        assert!(w.clock.iter().all(|&c| c == 5.0));
+    }
+}

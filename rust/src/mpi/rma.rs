@@ -1,0 +1,335 @@
+//! One-sided communication (paper §5.3.5, Tables 4-6).
+//!
+//! The PVC GPU "has been found to be unable to provide RMA support in
+//! hardware and instead the needed functionality has been implemented in
+//! software". This module models that software path:
+//!
+//! * MPI_Get / MPI_Put per-op costs calibrated from the paper's Tables 5/6
+//!   (see `config`): Get is ~10x cheaper than Put; HMEM
+//!   (MPIR_CVAR_CH4_OFI_ENABLE_HMEM) speeds Get ~10x and Put ~2x.
+//! * A finite internal buffer: the application MUST call MPI_Win_fence
+//!   every `rma_buffer_ops` operations (100 for Put without HMEM) or the
+//!   phase fails — exactly the "communication failure" the paper hit.
+//! * Inter-node one-sided ops pay the sub-communicator overhead that made
+//!   the 9x16 configuration an order of magnitude slower (Table 5 row 4).
+//!
+//! Functional windows hold real `f64` data so FMM-style access patterns
+//! can be validated end to end.
+
+use super::{Comm, World};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RmaKind {
+    Get,
+    Put,
+}
+
+/// One one-sided operation in a phase.
+#[derive(Debug, Clone, Copy)]
+pub struct RmaOp {
+    pub kind: RmaKind,
+    pub origin: usize,
+    pub target: usize,
+    /// Offset (elements) into the target window.
+    pub offset: usize,
+    /// Elements (f64) transferred.
+    pub len: usize,
+}
+
+/// An RMA window: per-rank exposed memory + epoch bookkeeping.
+pub struct WindowSim {
+    /// Exposed local memory per communicator rank (functional mode).
+    pub data: Vec<Vec<f64>>,
+    /// Ops absorbed by each rank's software buffer since the last fence.
+    since_fence: Vec<usize>,
+    pub hmem: bool,
+    /// Total fences executed.
+    pub fences: usize,
+}
+
+impl WindowSim {
+    /// Create a window of `win_len` f64 elements on each of `n` ranks.
+    pub fn new(n: usize, win_len: usize, hmem: bool) -> Self {
+        Self {
+            data: vec![vec![0.0; win_len]; n],
+            since_fence: vec![0; n],
+            hmem,
+            fences: 0,
+        }
+    }
+
+    fn buffer_capacity(&self, w: &World, kind: RmaKind) -> usize {
+        match (kind, self.hmem) {
+            (RmaKind::Put, false) => w.cfg().rma_buffer_ops_put_nohmem,
+            _ => w.cfg().rma_buffer_ops,
+        }
+    }
+
+    fn op_engine_cost(&self, w: &World, kind: RmaKind) -> f64 {
+        let c = w.cfg();
+        match (kind, self.hmem) {
+            (RmaKind::Get, true) => c.rma_get_hmem_op,
+            (RmaKind::Get, false) => c.rma_get_nohmem_op,
+            (RmaKind::Put, true) => c.rma_put_hmem_op,
+            (RmaKind::Put, false) => c.rma_put_nohmem_op,
+        }
+    }
+
+    /// Execute a phase of one-sided ops issued concurrently by all
+    /// origins, moving real data and returning the phase time.
+    ///
+    /// Fails (like the real code) if any rank's software buffer would
+    /// overflow — callers must fence often enough.
+    pub fn run_phase(&mut self, w: &mut World, comm: &Comm, ops: &[RmaOp])
+        -> Result<f64> {
+        // Epoch semantics: all reads in a fence epoch observe the window
+        // state at epoch start (MPI one-sided separate-memory model).
+        let snapshot: Vec<Vec<f64>> = self.data.clone();
+        // --- functional data movement + buffer accounting ---
+        for op in ops {
+            let cap = self.buffer_capacity(w, op.kind);
+            let absorber = match op.kind {
+                // Get buffers at the origin (result staging); Put at target
+                RmaKind::Get => op.origin,
+                RmaKind::Put => op.target,
+            };
+            self.since_fence[absorber] += 1;
+            if self.since_fence[absorber] > cap {
+                bail!(
+                    "software RMA buffer overflow on rank {absorber} \
+                     ({} ops since fence, capacity {cap}) — call \
+                     MPI_Win_fence more often (paper §5.3.5)",
+                    self.since_fence[absorber]
+                );
+            }
+            match op.kind {
+                RmaKind::Get => {
+                    self.data[op.origin][op.offset..op.offset + op.len]
+                        .copy_from_slice(
+                            &snapshot[op.target]
+                                [op.offset..op.offset + op.len],
+                        );
+                }
+                RmaKind::Put => {
+                    self.data[op.target][op.offset..op.offset + op.len]
+                        .copy_from_slice(
+                            &snapshot[op.origin]
+                                [op.offset..op.offset + op.len],
+                        );
+                }
+            }
+        }
+
+        // --- timing: per-node engine load, per-origin-rank serialized
+        //     load (Get w/o HMEM), wire time for inter-node ops ---
+        let mut node_engine: HashMap<usize, f64> = HashMap::new();
+        let mut rank_serial: HashMap<usize, f64> = HashMap::new();
+        let mut wire_bytes: HashMap<(usize, usize), u64> = HashMap::new();
+        for op in ops {
+            let (orank, trank) = (comm.ranks[op.origin], comm.ranks[op.target]);
+            let onode = w.placements[orank].node;
+            let tnode = w.placements[trank].node;
+            let mut cost = self.op_engine_cost(w, op.kind);
+            if onode != tnode {
+                cost += w.cfg().rma_internode_overhead;
+                *wire_bytes.entry((orank, trank)).or_insert(0) +=
+                    (op.len * 8) as u64;
+            }
+            if op.kind == RmaKind::Get && !self.hmem {
+                // host-staged Get serializes at the origin rank
+                *rank_serial.entry(orank).or_insert(0.0) += cost;
+            } else {
+                // shared software progress engine at the servicing node
+                let engine_node =
+                    if op.kind == RmaKind::Get { tnode } else { tnode };
+                *node_engine.entry(engine_node).or_insert(0.0) += cost;
+            }
+        }
+        let engine_t = node_engine.values().cloned().fold(0.0, f64::max);
+        let serial_t = rank_serial.values().cloned().fold(0.0, f64::max);
+        // wire time: one concurrent round of the aggregated transfers
+        let wire_t = if wire_bytes.is_empty() {
+            0.0
+        } else {
+            let msgs: Vec<(usize, usize, u64)> = wire_bytes
+                .iter()
+                .map(|(&(s, d), &b)| (s, d, b))
+                .collect();
+            w.exchange(&msgs)
+        };
+        let t = engine_t.max(serial_t) + wire_t;
+        w.sync_clocks(comm, t);
+        Ok(t)
+    }
+
+    /// MPI_Win_fence: flush the software buffers (a synchronizing op).
+    pub fn fence(&mut self, w: &mut World, comm: &Comm) -> f64 {
+        for c in &mut self.since_fence {
+            *c = 0;
+        }
+        self.fences += 1;
+        super::coll::barrier(w, comm)
+    }
+}
+
+/// Run `ops` split into fence epochs of `fence_every` ops — the usage
+/// pattern the paper converged on (fence every 2000 calls; 100 for Put
+/// without HMEM). Returns total time.
+pub fn run_with_fences(w: &mut World, comm: &Comm, win: &mut WindowSim,
+                       ops: &[RmaOp], fence_every: usize) -> Result<f64> {
+    let mut t = 0.0;
+    for chunk in ops.chunks(fence_every.max(1)) {
+        t += win.run_phase(w, comm, chunk)?;
+        t += win.fence(w, comm);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::machine::Machine;
+
+    fn setup(nodes: usize, ppn: usize) -> (Machine, Comm) {
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let comm = Comm::world(nodes * ppn);
+        (m, comm)
+    }
+
+    fn ops(kind: RmaKind, n_ranks: usize, per_rank: usize, len: usize)
+        -> Vec<RmaOp> {
+        let mut v = Vec::new();
+        for o in 0..n_ranks {
+            for k in 0..per_rank {
+                v.push(RmaOp {
+                    kind,
+                    origin: o,
+                    target: (o + 1 + k) % n_ranks,
+                    offset: 0,
+                    len,
+                });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn get_moves_data() {
+        let (m, comm) = setup(1, 4);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 8, true);
+        win.data[2] = vec![7.0; 8];
+        let op = RmaOp { kind: RmaKind::Get, origin: 0, target: 2,
+                         offset: 0, len: 8 };
+        win.run_phase(&mut w, &comm, &[op]).unwrap();
+        assert_eq!(win.data[0], vec![7.0; 8]);
+    }
+
+    #[test]
+    fn put_moves_data() {
+        let (m, comm) = setup(1, 4);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 4, true);
+        win.data[1] = vec![3.0; 4];
+        let op = RmaOp { kind: RmaKind::Put, origin: 1, target: 3,
+                         offset: 0, len: 4 };
+        win.run_phase(&mut w, &comm, &[op]).unwrap();
+        assert_eq!(win.data[3], vec![3.0; 4]);
+    }
+
+    #[test]
+    fn get_order_of_magnitude_faster_than_put() {
+        // Tables 5 vs 6 headline
+        let (m, comm) = setup(1, 8);
+        let o = ops(RmaKind::Get, 8, 100, 16);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 8));
+        let mut win = WindowSim::new(8, 16, true);
+        let t_get = win.run_phase(&mut w, &comm, &o).unwrap();
+        let o = ops(RmaKind::Put, 8, 100, 16);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 8));
+        let mut win = WindowSim::new(8, 16, true);
+        let t_put = win.run_phase(&mut w, &comm, &o).unwrap();
+        assert!(t_put > 8.0 * t_get, "get {t_get} put {t_put}");
+    }
+
+    #[test]
+    fn hmem_speeds_up_get_by_order_of_magnitude() {
+        let (m, comm) = setup(1, 8);
+        let o = ops(RmaKind::Get, 8, 100, 16);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 8));
+        let t_hmem = WindowSim::new(8, 16, true)
+            .run_phase(&mut w, &comm, &o).unwrap();
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 8));
+        let t_plain = WindowSim::new(8, 16, false)
+            .run_phase(&mut w, &comm, &o).unwrap();
+        assert!(t_plain > 8.0 * t_hmem, "hmem {t_hmem} plain {t_plain}");
+    }
+
+    #[test]
+    fn buffer_overflow_without_fence() {
+        let (m, comm) = setup(1, 4);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 4, true);
+        let cap = w.cfg().rma_buffer_ops;
+        // every op targets rank 1's buffer via Put
+        let many: Vec<RmaOp> = (0..cap + 1)
+            .map(|_| RmaOp { kind: RmaKind::Put, origin: 0, target: 1,
+                             offset: 0, len: 1 })
+            .collect();
+        assert!(win.run_phase(&mut w, &comm, &many).is_err());
+    }
+
+    #[test]
+    fn put_without_hmem_overflows_much_earlier() {
+        // paper: fence every 100 required for Put w/o HMEM
+        let (m, comm) = setup(1, 4);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 4, false);
+        let many: Vec<RmaOp> = (0..150)
+            .map(|_| RmaOp { kind: RmaKind::Put, origin: 0, target: 1,
+                             offset: 0, len: 1 })
+            .collect();
+        assert!(win.run_phase(&mut w, &comm, &many).is_err());
+        // with fences every 100 it succeeds
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 4, false);
+        assert!(run_with_fences(&mut w, &comm, &mut win, &many, 100).is_ok());
+    }
+
+    #[test]
+    fn fences_reset_buffers() {
+        let (m, comm) = setup(1, 4);
+        let mut w = World::new(&m.topo, m.place_job(0, 1, 4));
+        let mut win = WindowSim::new(4, 4, true);
+        let op = RmaOp { kind: RmaKind::Put, origin: 0, target: 1,
+                         offset: 0, len: 1 };
+        for _ in 0..3 {
+            win.run_phase(&mut w, &comm, &vec![op; 1500]).unwrap();
+            win.fence(&mut w, &comm);
+        }
+        assert_eq!(win.fences, 3);
+    }
+
+    #[test]
+    fn internode_ops_cost_more() {
+        let (m, _) = setup(2, 8);
+        // 16 ranks over 2 nodes
+        let comm = Comm::world(16);
+        let o_intra = ops(RmaKind::Get, 8, 50, 16); // ranks 0-7 (node 0)
+        let mut w = World::new(&m.topo, m.place_job(0, 2, 8));
+        let mut win = WindowSim::new(16, 16, true);
+        let t_intra = win.run_phase(&mut w, &comm, &o_intra).unwrap();
+        // same op count but to node-1 targets
+        let o_inter: Vec<RmaOp> = o_intra
+            .iter()
+            .map(|o| RmaOp { target: o.target + 8, ..*o })
+            .collect();
+        let mut w = World::new(&m.topo, m.place_job(0, 2, 8));
+        let mut win = WindowSim::new(16, 16, true);
+        let t_inter = win.run_phase(&mut w, &comm, &o_inter).unwrap();
+        assert!(t_inter > 5.0 * t_intra, "intra {t_intra} inter {t_inter}");
+    }
+}

@@ -1,0 +1,266 @@
+//! The Aurora compute node (paper §2, Fig 1): two SPR-HBM sockets, six PVC
+//! GPUs, eight Cassini NICs (four per socket behind a PCIe switch), plus
+//! the NUMA/binding logic of §3.8.4 and the per-endpoint data paths the
+//! MPI measurements of §5.1 exercise.
+
+use crate::config::AuroraConfig;
+
+/// NUMA layout of §3.8.4:
+/// node0 CPUs 0-51,104-155 with cxi0-cxi3; node1 CPUs 52-103,156-207 with
+/// cxi4-cxi7 (52 physical cores + SMT siblings per socket).
+#[derive(Debug, Clone)]
+pub struct NumaMap {
+    pub cores_per_socket: usize,
+    pub sockets: usize,
+    pub nics_per_node: usize,
+}
+
+impl NumaMap {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        Self {
+            cores_per_socket: cfg.cores_per_socket,
+            sockets: cfg.sockets_per_node,
+            nics_per_node: cfg.nics_per_node,
+        }
+    }
+
+    /// NUMA node of a CXI device: cxi0-3 -> 0, cxi4-7 -> 1 (§3.8.4).
+    pub fn numa_of_nic(&self, nic_idx: usize) -> usize {
+        nic_idx / (self.nics_per_node / self.sockets)
+    }
+
+    /// Physical core range of a socket, as the `lscpu` listing in §3.8.4
+    /// shows it (physical cores only; SMT siblings are the +2*52 offset).
+    pub fn cpus_of_socket(&self, socket: usize) -> (usize, usize) {
+        let lo = socket * self.cores_per_socket;
+        (lo, lo + self.cores_per_socket - 1)
+    }
+
+    /// The §3.8.4 NUMA listing line, e.g. "0-51,104-155" for socket 0.
+    pub fn cpu_list_string(&self, socket: usize) -> String {
+        let (lo, hi) = self.cpus_of_socket(socket);
+        let smt_lo = lo + self.sockets * self.cores_per_socket;
+        let smt_hi = hi + self.sockets * self.cores_per_socket;
+        format!("{lo}-{hi},{smt_lo}-{smt_hi}")
+    }
+
+    /// cpu-bind list for `ppn` ranks: each rank is bound to cores on the
+    /// socket its NIC hangs off (the mpiexec --cpu-bind the paper uses for
+    /// all fabric validation; see §3.8.4 and argonne-lcf/pbs_utils).
+    pub fn cpu_bind_list(&self, ppn: usize) -> Vec<String> {
+        assert!(ppn >= 1);
+        // ranks land on the socket of their NIC; hand out disjoint core
+        // slices per socket in rank order
+        let sockets: Vec<usize> = (0..ppn)
+            .map(|r| self.numa_of_nic(self.nic_of_rank(r, ppn)))
+            .collect();
+        let per_socket: Vec<usize> = (0..self.sockets)
+            .map(|s| sockets.iter().filter(|&&x| x == s).count())
+            .collect();
+        let mut next_idx = vec![0usize; self.sockets];
+        sockets
+            .iter()
+            .map(|&socket| {
+                let (lo, _) = self.cpus_of_socket(socket);
+                let width = (self.cores_per_socket
+                    / per_socket[socket].max(1))
+                .max(1);
+                let idx = next_idx[socket];
+                next_idx[socket] += 1;
+                let start = lo + (idx * width).min(self.cores_per_socket - 1);
+                let end =
+                    (start + width - 1).min(lo + self.cores_per_socket - 1);
+                format!("{start}-{end}")
+            })
+            .collect()
+    }
+
+    /// Round-robin rank -> NIC assignment balanced across sockets, the
+    /// "balancing the NIC assignments is a key" insight of §5.1 (Fig 13).
+    pub fn nic_of_rank(&self, rank: usize, ppn: usize) -> usize {
+        if ppn <= self.nics_per_node {
+            // spread: alternate sockets first (ranks 0,1 -> cxi0,cxi4, ...)
+            let per_socket = self.nics_per_node / self.sockets;
+            let socket = rank % self.sockets;
+            let idx = (rank / self.sockets) % per_socket;
+            socket * per_socket + idx
+        } else {
+            rank % self.nics_per_node
+        }
+    }
+
+    /// GPU for a rank (6 PVC per node, tile-level would double this).
+    pub fn gpu_of_rank(&self, rank: usize, ppn: usize, gpus: usize) -> usize {
+        if ppn <= gpus {
+            rank % gpus
+        } else {
+            rank * gpus / ppn
+        }
+    }
+}
+
+/// Where a rank lives inside its node.
+#[derive(Debug, Clone, Copy)]
+pub struct RankLoc {
+    pub node: usize,
+    pub local_rank: usize,
+    pub socket: usize,
+    pub nic_idx: usize,
+    pub gpu: usize,
+}
+
+/// Build placements for `nodes x ppn` ranks with the balanced binding.
+pub fn place_ranks(cfg: &AuroraConfig, node_ids: &[usize], ppn: usize)
+    -> Vec<RankLoc> {
+    let numa = NumaMap::new(cfg);
+    let mut out = Vec::with_capacity(node_ids.len() * ppn);
+    for &node in node_ids {
+        for lr in 0..ppn {
+            let nic_idx = numa.nic_of_rank(lr, ppn);
+            out.push(RankLoc {
+                node,
+                local_rank: lr,
+                socket: numa.numa_of_nic(nic_idx),
+                nic_idx,
+                gpu: numa.gpu_of_rank(lr, ppn, cfg.gpus_per_node),
+            });
+        }
+    }
+    out
+}
+
+/// On-node data-path bandwidths (paper §2): used by intra-node MPI and the
+/// GPU-direct path cost.
+#[derive(Debug, Clone)]
+pub struct NodePaths {
+    pub xelink_bw: f64,
+    pub pcie5_bw: f64,
+    pub upi_bw: f64,
+}
+
+impl NodePaths {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        Self {
+            xelink_bw: cfg.xelink_bw,
+            pcie5_bw: cfg.pcie5_bw,
+            upi_bw: 62.4e9, // 3x UPI 2.0 links between SPR sockets
+        }
+    }
+
+    /// Intra-node transfer bandwidth between two ranks.
+    pub fn intra_node_bw(&self, a: &RankLoc, b: &RankLoc, gpu_buf: bool) -> f64 {
+        if gpu_buf {
+            if a.gpu == b.gpu {
+                // same device: HBM copy, effectively not a transfer
+                1.0e12
+            } else {
+                // GPU-GPU over dedicated Xe-Link (all-to-all on node)
+                self.xelink_bw
+            }
+        } else if a.socket == b.socket {
+            // shared-memory copy through HBM/DDR
+            90.0e9
+        } else {
+            self.upi_bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numa() -> NumaMap {
+        NumaMap::new(&AuroraConfig::aurora())
+    }
+
+    #[test]
+    fn numa_listing_matches_paper() {
+        // §3.8.4: NUMA node0 CPU(s): 0-51,104-155 ; node1: 52-103,156-207
+        let n = numa();
+        assert_eq!(n.cpu_list_string(0), "0-51,104-155");
+        assert_eq!(n.cpu_list_string(1), "52-103,156-207");
+    }
+
+    #[test]
+    fn cxi_numa_association() {
+        // cxi0-cxi3 -> NUMA 0, cxi4-cxi7 -> NUMA 1
+        let n = numa();
+        for nic in 0..4 {
+            assert_eq!(n.numa_of_nic(nic), 0);
+        }
+        for nic in 4..8 {
+            assert_eq!(n.numa_of_nic(nic), 1);
+        }
+    }
+
+    #[test]
+    fn ppn8_uses_all_nics_once() {
+        let n = numa();
+        let mut used: Vec<usize> = (0..8).map(|r| n.nic_of_rank(r, 8)).collect();
+        used.sort_unstable();
+        assert_eq!(used, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ppn16_shares_each_nic_twice() {
+        let n = numa();
+        let mut count = [0usize; 8];
+        for r in 0..16 {
+            count[n.nic_of_rank(r, 16)] += 1;
+        }
+        assert!(count.iter().all(|&c| c == 2), "{count:?}");
+    }
+
+    #[test]
+    fn ppn4_balances_sockets() {
+        // Fig 13: 4 ranks must land 2 per socket, not 4 on one
+        let n = numa();
+        let sockets: Vec<usize> =
+            (0..4).map(|r| n.numa_of_nic(n.nic_of_rank(r, 4))).collect();
+        assert_eq!(sockets.iter().filter(|&&s| s == 0).count(), 2);
+    }
+
+    #[test]
+    fn cpu_bind_stays_on_nic_socket() {
+        let n = numa();
+        let binds = n.cpu_bind_list(8);
+        assert_eq!(binds.len(), 8);
+        for (rank, b) in binds.iter().enumerate() {
+            let socket = n.numa_of_nic(n.nic_of_rank(rank, 8));
+            let (lo, hi) = n.cpus_of_socket(socket);
+            let start: usize = b.split('-').next().unwrap().parse().unwrap();
+            assert!(start >= lo && start <= hi, "rank {rank} bind {b}");
+        }
+    }
+
+    #[test]
+    fn cpu_binds_do_not_overlap() {
+        let n = numa();
+        for ppn in [2usize, 4, 8, 12, 16] {
+            let binds = n.cpu_bind_list(ppn);
+            let mut seen = std::collections::HashSet::new();
+            for b in &binds {
+                assert!(seen.insert(b.clone()), "dup bind {b} at ppn {ppn}");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_covers_all_ranks() {
+        let cfg = AuroraConfig::tiny();
+        let locs = place_ranks(&cfg, &[0, 1, 2], 12);
+        assert_eq!(locs.len(), 36);
+        assert!(locs.iter().all(|l| l.nic_idx < 8 && l.gpu < 6));
+    }
+
+    #[test]
+    fn intra_node_paths() {
+        let cfg = AuroraConfig::aurora();
+        let p = NodePaths::new(&cfg);
+        let a = RankLoc { node: 0, local_rank: 0, socket: 0, nic_idx: 0, gpu: 0 };
+        let b = RankLoc { node: 0, local_rank: 1, socket: 1, nic_idx: 4, gpu: 3 };
+        assert_eq!(p.intra_node_bw(&a, &b, true), cfg.xelink_bw);
+        assert!(p.intra_node_bw(&a, &b, false) < 90.0e9 + 1.0);
+    }
+}

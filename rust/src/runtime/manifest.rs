@@ -1,0 +1,165 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (shapes, dtypes, output arity, FLOP estimates).
+
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub flops: f64,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest root must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in obj {
+            let tensor = |j: &Json| -> Result<TensorSpec> {
+                Ok(TensorSpec {
+                    shape: j
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: j
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string(),
+                })
+            };
+            let args = e
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing args"))?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    args,
+                    outputs,
+                    flops: e
+                        .get("flops")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0),
+                    sha256: e
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hpl_update": {
+        "args": [
+          {"shape": [128, 64], "dtype": "float64"},
+          {"shape": [64, 128], "dtype": "float64"},
+          {"shape": [128, 128], "dtype": "float64"}
+        ],
+        "file": "hpl_update.hlo.txt",
+        "flops": 2097152.0,
+        "outputs": [{"shape": [128, 128], "dtype": "float64"}],
+        "sha256": "abcd"
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let s = m.get("hpl_update").unwrap();
+        assert_eq!(s.args.len(), 3);
+        assert_eq!(s.args[0].shape, vec![128, 64]);
+        assert_eq!(s.args[0].elems(), 8192);
+        assert_eq!(s.outputs[0].dtype, "float64");
+        assert_eq!(s.flops, 2_097_152.0);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"x": {"args": []}}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // exercised fully by integration tests; here just tolerate absence
+        if let Ok(m) = Manifest::load("artifacts/manifest.json") {
+            assert!(m.len() >= 10);
+            assert!(m.get("mxp_gemm").is_some());
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT compute runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs exactly once (`make artifacts`); afterwards the Rust binary
+//! is self-contained: `PjRtClient::cpu()` -> `HloModuleProto::from_text_file`
+//! -> `compile` -> `execute`. HLO *text* is the interchange format because
+//! the crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit instruction ids).
+//!
+//! [`roofline`] provides the at-scale timing adapter: functional runs
+//! execute the artifacts for real; performance-mode runs convert the
+//! manifest's FLOP counts into simulated time on the Aurora node model.
+
+pub mod manifest;
+pub mod roofline;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use roofline::{Engine, NodeRoofline};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Calls served (for the §3.8.8-style counter report).
+    pub calls: std::cell::Cell<u64>,
+}
+
+/// The runtime: one PJRT CPU client + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} — run \
+                `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable { spec, exe, calls: std::cell::Cell::new(0) },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on f64 inputs (shapes per the manifest).
+    /// Outputs are flattened f64 vectors in declaration order.
+    pub fn call_f64(&mut self, name: &str, args: &[&[f64]])
+        -> Result<Vec<Vec<f64>>> {
+        self.call_impl(name, args, true)
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns f64 for uniformity.
+    pub fn call_f32(&mut self, name: &str, args: &[&[f64]])
+        -> Result<Vec<Vec<f64>>> {
+        self.call_impl(name, args, false)
+    }
+
+    fn call_impl(&mut self, name: &str, args: &[&[f64]], f64_in: bool)
+        -> Result<Vec<Vec<f64>>> {
+        self.load(name)?;
+        let exec = &self.cache[name];
+        let spec = &exec.spec;
+        if args.len() != spec.args.len() {
+            anyhow::bail!(
+                "{name}: {} args given, {} expected",
+                args.len(),
+                spec.args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, aspec) in args.iter().zip(&spec.args) {
+            let expect: usize = aspec.shape.iter().product::<usize>().max(1);
+            if a.len() != expect {
+                anyhow::bail!(
+                    "{name}: arg length {} != shape {:?}",
+                    a.len(),
+                    aspec.shape
+                );
+            }
+            let dims: Vec<i64> =
+                aspec.shape.iter().map(|&d| d as i64).collect();
+            let lit = if aspec.dtype == "float64" && f64_in {
+                xla::Literal::vec1(a)
+            } else {
+                let v32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+                xla::Literal::vec1(&v32)
+            };
+            let lit = if dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        exec.calls.set(exec.calls.get() + 1);
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let v = if ospec.dtype == "float64" {
+                p.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?
+            } else {
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .into_iter()
+                    .map(|x| x as f64)
+                    .collect()
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// FLOPs per call of an artifact (from the manifest) — feeds the
+    /// roofline timing adapter.
+    pub fn flops(&self, name: &str) -> f64 {
+        self.manifest.get(name).map(|s| s.flops).unwrap_or(0.0)
+    }
+
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.cache
+            .iter()
+            .map(|(k, v)| (k.clone(), v.calls.get()))
+            .collect()
+    }
+}

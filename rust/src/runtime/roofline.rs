@@ -1,0 +1,118 @@
+//! Roofline timing adapter: converts per-rank work (FLOPs, bytes touched)
+//! into simulated time on the Aurora node model (paper §2 + §5.2-5.3).
+//!
+//! Functional-mode runs execute the PJRT artifacts for real numerics but
+//! the *simulated clock* always advances by roofline time, so small
+//! functional runs and full-scale performance runs share one time base.
+
+use crate::config::AuroraConfig;
+
+/// Precision/engine class of a compute phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// FP64 vector pipes (HPL, HPCG, Nekbone).
+    Fp64,
+    /// Mixed-precision matrix engines (HPL-MxP factor phase).
+    Mxp,
+    /// Memory-bound (HPCG SpMV/SymGS, AMR-Wind smoothers): bytes dominate.
+    MemoryBound,
+    /// Integer/branchy (HACC tree-walk, Graph500): fraction of FP64 pipes.
+    Irregular,
+}
+
+#[derive(Debug, Clone)]
+pub struct NodeRoofline {
+    pub fp64_peak: f64,
+    pub mxp_peak: f64,
+    pub hbm_bw: f64,
+    pub gemm_eff: f64,
+    pub mxp_gemm_eff: f64,
+}
+
+impl NodeRoofline {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        Self {
+            fp64_peak: cfg.node_fp64_peak,
+            mxp_peak: cfg.node_mxp_peak,
+            hbm_bw: cfg.gpu_hbm_bw_node,
+            gemm_eff: cfg.gemm_eff,
+            mxp_gemm_eff: cfg.mxp_gemm_eff,
+        }
+    }
+
+    /// Time for one node to perform `flops` with `bytes` of HBM traffic.
+    pub fn node_time(&self, engine: Engine, flops: f64, bytes: f64) -> f64 {
+        let compute = match engine {
+            Engine::Fp64 => flops / (self.fp64_peak * self.gemm_eff),
+            Engine::Mxp => flops / (self.mxp_peak * self.mxp_gemm_eff),
+            // memory-bound kernels are limited by HBM alone
+            Engine::MemoryBound => 0.0,
+            // integer/tree phases run at a calibrated fraction of fp64
+            Engine::Irregular => flops / (self.fp64_peak * 0.08),
+        };
+        let mem = bytes / self.hbm_bw;
+        compute.max(mem)
+    }
+
+    /// Time until a rank's work completes when `ppn` ranks share the node
+    /// evenly: the node executes the aggregate work, everyone finishes
+    /// together.
+    pub fn rank_time(&self, engine: Engine, flops: f64, bytes: f64,
+                     ppn: usize) -> f64 {
+        self.node_time(engine, flops * ppn as f64, bytes * ppn as f64)
+    }
+
+    /// Achieved node GEMM rate (flops/s) — what HPL's update phase sees.
+    pub fn gemm_rate(&self) -> f64 {
+        self.fp64_peak * self.gemm_eff
+    }
+
+    pub fn mxp_rate(&self) -> f64 {
+        self.mxp_peak * self.mxp_gemm_eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rl() -> NodeRoofline {
+        NodeRoofline::new(&AuroraConfig::aurora())
+    }
+
+    #[test]
+    fn gemm_rate_matches_hpl_calibration() {
+        // 139 TF peak x 0.87 ~ 121 TF/node achieved DGEMM
+        let r = rl();
+        let tf = r.gemm_rate() / 1e12;
+        assert!((tf - 120.9).abs() < 1.0, "{tf}");
+    }
+
+    #[test]
+    fn memory_bound_ignores_flops() {
+        let r = rl();
+        let t1 = r.node_time(Engine::MemoryBound, 1e15, 1e9);
+        let t2 = r.node_time(Engine::MemoryBound, 1e9, 1e9);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn mxp_much_faster_than_fp64() {
+        let r = rl();
+        let f = 1e15;
+        assert!(
+            r.node_time(Engine::Mxp, f, 0.0)
+                < r.node_time(Engine::Fp64, f, 0.0) / 5.0
+        );
+    }
+
+    #[test]
+    fn compute_vs_memory_crossover() {
+        let r = rl();
+        // very low intensity -> memory bound; high intensity -> compute
+        let low = r.node_time(Engine::Fp64, 1e9, 1e12);
+        assert!((low - 1e12 / r.hbm_bw).abs() / low < 1e-9);
+        let high = r.node_time(Engine::Fp64, 1e15, 1e3);
+        assert!((high - 1e15 / r.gemm_rate()).abs() / high < 1e-9);
+    }
+}

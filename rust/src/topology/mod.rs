@@ -1,0 +1,342 @@
+//! Dragonfly topology (paper §3.1, Fig 2): groups of all-to-all connected
+//! Rosetta switches, each switch hosting nodes with Cassini NICs, groups
+//! connected all-to-all by optical global links.
+//!
+//! Provides the algorithmic fabric addressing of §3.6 (addresses derived
+//! from topology position, no learning/broadcast), the static-ARP model of
+//! §3.7, and minimal / non-minimal (Valiant) path enumeration with the
+//! "at most 3 switch-to-switch hops minimal" property of §3.1.
+
+use crate::config::AuroraConfig;
+
+/// Directed fabric link. Bandwidth is per direction (§3.3: 200 Gbps/dir).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkId {
+    /// NIC -> switch injection.
+    NicUp(u32),
+    /// switch -> NIC ejection.
+    NicDown(u32),
+    /// Intra-group electrical link, switch `a` -> switch `b`.
+    Local { group: u16, a: u8, b: u8 },
+    /// Inter-group optical link `idx`, directed `src` -> `dst` group.
+    Global { src: u16, dst: u16, idx: u8 },
+}
+
+/// Algorithmic fabric address (§3.6): position-derived, enabling interval
+/// routing — no MAC learning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FabricAddr {
+    pub group: u16,
+    pub switch: u8,
+    pub port: u8,
+}
+
+/// A unidirectional route: ordered links + hop classification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Path {
+    pub links: Vec<LinkId>,
+    /// Number of switch-to-switch hops (paper: <= 3 minimal, <= 5 Valiant).
+    pub switch_hops: usize,
+    /// Number of optical (global) hops for propagation-delay accounting.
+    pub global_hops: usize,
+    pub minimal: bool,
+}
+
+/// The dragonfly graph. Everything is computed algorithmically from the
+/// config — O(1) memory regardless of machine size, which is what lets the
+/// analytic tier run at 84,992 endpoints.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: AuroraConfig,
+}
+
+impl Topology {
+    pub fn new(cfg: &AuroraConfig) -> Self {
+        assert!(cfg.compute_groups >= 2, "dragonfly needs >= 2 groups");
+        assert!(cfg.switches_per_group >= 2);
+        assert!(
+            cfg.switches_per_group <= 64,
+            "Rosetta is a 64-port switch (§3.2)"
+        );
+        Self { cfg: cfg.clone() }
+    }
+
+    // ---------------- id arithmetic ----------------
+
+    pub fn nics_per_switch(&self) -> usize {
+        self.cfg.nodes_per_switch * self.cfg.nics_per_node
+    }
+
+    pub fn nic_of_node(&self, node: usize, nic_idx: usize) -> u32 {
+        debug_assert!(nic_idx < self.cfg.nics_per_node);
+        (node * self.cfg.nics_per_node + nic_idx) as u32
+    }
+
+    pub fn node_of_nic(&self, nic: u32) -> usize {
+        nic as usize / self.cfg.nics_per_node
+    }
+
+    pub fn switch_of_node(&self, node: usize) -> (u16, u8) {
+        let sw_global = node / self.cfg.nodes_per_switch;
+        (
+            (sw_global / self.cfg.switches_per_group) as u16,
+            (sw_global % self.cfg.switches_per_group) as u8,
+        )
+    }
+
+    pub fn group_of_node(&self, node: usize) -> u16 {
+        self.switch_of_node(node).0
+    }
+
+    /// Algorithmic fabric address of a NIC (§3.6).
+    pub fn fabric_addr(&self, nic: u32) -> FabricAddr {
+        let node = self.node_of_nic(nic);
+        let (group, switch) = self.switch_of_node(node);
+        let port = (node % self.cfg.nodes_per_switch) * self.cfg.nics_per_node
+            + (nic as usize % self.cfg.nics_per_node);
+        FabricAddr { group, switch, port: port as u8 }
+    }
+
+    /// Inverse of [`fabric_addr`] — the static-ARP resolution of §3.7:
+    /// IP->MAC is a pure function of position, loaded at boot, never
+    /// invalidated.
+    pub fn resolve(&self, addr: FabricAddr) -> u32 {
+        let node = (addr.group as usize * self.cfg.switches_per_group
+            + addr.switch as usize)
+            * self.cfg.nodes_per_switch
+            + addr.port as usize / self.cfg.nics_per_node;
+        self.nic_of_node(node, addr.port as usize % self.cfg.nics_per_node)
+    }
+
+    /// Which switch in `src` group hosts global link `idx` toward `dst`.
+    /// Deterministic spread so each switch carries its share of the
+    /// group's global links (Aurora: 165 peer groups x 2 links over 32
+    /// switches ~ 10 global ports/switch).
+    pub fn global_attach(&self, src: u16, dst: u16, idx: u8) -> u8 {
+        let s = self.cfg.switches_per_group as u64;
+        let h = (dst as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(idx as u64)
+            .wrapping_add((src as u64).rotate_left(17));
+        (h % s) as u8
+    }
+
+    // ---------------- path enumeration ----------------
+
+    /// Minimal path for global link choice `idx` (adaptive routing scores
+    /// all `global_links_compute` candidates; §3.1).
+    pub fn minimal_path(&self, src_nic: u32, dst_nic: u32, idx: u8) -> Path {
+        let (sg, ss) = self.switch_of_node(self.node_of_nic(src_nic));
+        let (dg, ds) = self.switch_of_node(self.node_of_nic(dst_nic));
+        let mut links = vec![LinkId::NicUp(src_nic)];
+        let mut switch_hops = 0;
+        let mut global_hops = 0;
+        if sg == dg {
+            if ss != ds {
+                links.push(LinkId::Local { group: sg, a: ss, b: ds });
+                switch_hops += 1;
+            }
+        } else {
+            let out_sw = self.global_attach(sg, dg, idx);
+            let in_sw = self.global_attach(dg, sg, idx);
+            if ss != out_sw {
+                links.push(LinkId::Local { group: sg, a: ss, b: out_sw });
+                switch_hops += 1;
+            }
+            links.push(LinkId::Global { src: sg, dst: dg, idx });
+            switch_hops += 1;
+            global_hops += 1;
+            if in_sw != ds {
+                links.push(LinkId::Local { group: dg, a: in_sw, b: ds });
+                switch_hops += 1;
+            }
+        }
+        links.push(LinkId::NicDown(dst_nic));
+        Path { links, switch_hops, global_hops, minimal: true }
+    }
+
+    /// Valiant non-minimal path through intermediate group `via` using
+    /// global link indices `i1`, `i2`.
+    pub fn nonminimal_path(
+        &self,
+        src_nic: u32,
+        dst_nic: u32,
+        via: u16,
+        i1: u8,
+        i2: u8,
+    ) -> Path {
+        let (sg, ss) = self.switch_of_node(self.node_of_nic(src_nic));
+        let (dg, ds) = self.switch_of_node(self.node_of_nic(dst_nic));
+        debug_assert!(via != sg && via != dg);
+        let mut links = vec![LinkId::NicUp(src_nic)];
+        let mut switch_hops = 0;
+        // leg 1: src group -> via
+        let out1 = self.global_attach(sg, via, i1);
+        if ss != out1 {
+            links.push(LinkId::Local { group: sg, a: ss, b: out1 });
+            switch_hops += 1;
+        }
+        links.push(LinkId::Global { src: sg, dst: via, idx: i1 });
+        switch_hops += 1;
+        // transit inside via
+        let in1 = self.global_attach(via, sg, i1);
+        let out2 = self.global_attach(via, dg, i2);
+        if in1 != out2 {
+            links.push(LinkId::Local { group: via, a: in1, b: out2 });
+            switch_hops += 1;
+        }
+        // leg 2: via -> dst group
+        links.push(LinkId::Global { src: via, dst: dg, idx: i2 });
+        switch_hops += 1;
+        let in2 = self.global_attach(dg, via, i2);
+        if in2 != ds {
+            links.push(LinkId::Local { group: dg, a: in2, b: ds });
+            switch_hops += 1;
+        }
+        links.push(LinkId::NicDown(dst_nic));
+        Path { links, switch_hops, global_hops: 2, minimal: false }
+    }
+
+    /// All minimal candidates (one per parallel global link; a single
+    /// candidate for intra-group).
+    pub fn minimal_candidates(&self, src_nic: u32, dst_nic: u32) -> Vec<Path> {
+        let sg = self.group_of_node(self.node_of_nic(src_nic));
+        let dg = self.group_of_node(self.node_of_nic(dst_nic));
+        let n = if sg == dg { 1 } else { self.cfg.global_links_compute };
+        (0..n as u8)
+            .map(|i| self.minimal_path(src_nic, dst_nic, i))
+            .collect()
+    }
+
+    /// Per-direction link bandwidth.
+    pub fn link_bw(&self, link: &LinkId) -> f64 {
+        match link {
+            LinkId::NicUp(_) | LinkId::NicDown(_) => self.cfg.nic_bw,
+            LinkId::Local { .. } => self.cfg.local_link_bw,
+            LinkId::Global { .. } => self.cfg.global_link_bw,
+        }
+    }
+
+    /// Pure propagation + pipeline latency of a path (no queuing, no
+    /// endpoint software): switch pipelines + cable flight time.
+    pub fn path_latency(&self, path: &Path) -> f64 {
+        let c = &self.cfg;
+        let electrical_hops = path.switch_hops - path.global_hops;
+        // every switch traversal costs one pipeline latency; count switches
+        // visited = switch_hops + 1 (the first switch after injection).
+        (path.switch_hops as f64 + 1.0) * c.switch_latency
+            + electrical_hops as f64 * c.electrical_prop
+            + path.global_hops as f64 * c.optical_prop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(&AuroraConfig::small(4, 4))
+    }
+
+    #[test]
+    fn addr_roundtrip() {
+        let t = topo();
+        for nic in 0..t.cfg.compute_endpoints() as u32 {
+            assert_eq!(t.resolve(t.fabric_addr(nic)), nic, "nic {nic}");
+        }
+    }
+
+    #[test]
+    fn minimal_at_most_three_switch_hops() {
+        // paper §3.1: one source-group hop, one global, one dest-group hop
+        let t = topo();
+        let last = t.cfg.compute_endpoints() as u32 - 1;
+        for (s, d) in [(0u32, last), (3, 40), (0, 1), (17, 90)] {
+            for p in t.minimal_candidates(s, d) {
+                assert!(p.switch_hops <= 3, "{s}->{d}: {}", p.switch_hops);
+                assert!(p.minimal);
+            }
+        }
+    }
+
+    #[test]
+    fn nonminimal_at_most_five_switch_hops() {
+        let t = topo();
+        let last = t.cfg.compute_endpoints() as u32 - 1;
+        let p = t.nonminimal_path(0, last, 1, 0, 1);
+        assert!(p.switch_hops <= 5);
+        assert_eq!(p.global_hops, 2);
+    }
+
+    #[test]
+    fn intra_group_paths_have_no_global_hop() {
+        let t = topo();
+        // NICs 0 and 40 share group 0 in small(4,4): 4 sw * 2 nodes * 8 nic
+        let p = &t.minimal_candidates(0, 40)[0];
+        assert_eq!(p.global_hops, 0);
+        assert!(p.switch_hops <= 1);
+    }
+
+    #[test]
+    fn paths_start_and_end_at_nics() {
+        let t = topo();
+        let p = t.minimal_path(5, 200, 0);
+        assert_eq!(p.links.first(), Some(&LinkId::NicUp(5)));
+        assert_eq!(p.links.last(), Some(&LinkId::NicDown(200)));
+    }
+
+    #[test]
+    fn parallel_global_links_differ() {
+        let t = topo();
+        let a = t.minimal_path(0, 200, 0);
+        let b = t.minimal_path(0, 200, 1);
+        let ga: Vec<_> = a.links.iter()
+            .filter(|l| matches!(l, LinkId::Global { .. })).collect();
+        let gb: Vec<_> = b.links.iter()
+            .filter(|l| matches!(l, LinkId::Global { .. })).collect();
+        assert_ne!(ga, gb);
+    }
+
+    #[test]
+    fn global_attach_spreads_over_switches() {
+        // Aurora: 165 peers x 2 links over 32 switches ~ 10 ports/switch;
+        // no switch should carry a wildly disproportionate share
+        let t = Topology::new(&AuroraConfig::aurora());
+        let mut count = vec![0usize; 32];
+        for dst in 0..166u16 {
+            for idx in 0..2u8 {
+                if dst != 3 {
+                    count[t.global_attach(3, dst, idx) as usize] += 1;
+                }
+            }
+        }
+        let (min, max) = (
+            *count.iter().min().unwrap(),
+            *count.iter().max().unwrap(),
+        );
+        assert!(min >= 2, "starved switch: {count:?}");
+        assert!(max <= 25, "overloaded switch: {count:?}");
+    }
+
+    #[test]
+    fn parallel_global_links_attach_differently_somewhere() {
+        // the two parallel links between a group pair should not always
+        // land on the same switch (they'd share fate otherwise)
+        let t = Topology::new(&AuroraConfig::aurora());
+        let differing = (0..166u16)
+            .filter(|&dst| dst != 0)
+            .filter(|&dst| {
+                t.global_attach(0, dst, 0) != t.global_attach(0, dst, 1)
+            })
+            .count();
+        assert!(differing > 140, "only {differing}/165 pairs split");
+    }
+
+    #[test]
+    fn latency_scales_with_hops() {
+        let t = topo();
+        let near = t.minimal_path(0, 16, 0); // same switch region
+        let far = t.minimal_path(0, t.cfg.compute_endpoints() as u32 - 1, 0);
+        assert!(t.path_latency(&far) > t.path_latency(&near));
+    }
+}

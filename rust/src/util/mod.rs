@@ -1,0 +1,7 @@
+//! Self-contained utilities (this repo builds offline; no clap/serde/rand).
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Pcg;

@@ -1,0 +1,314 @@
+//! Fabric validation methodology (paper §3.8): the systematic pipeline
+//! that gated every large run on Aurora.
+//!
+//! * levels: node loopback -> switch -> group -> system (§3.8.5);
+//! * pre-flight all2all before HPL/HPL-MxP (§3.8.1), GPCNet gate (§3.8.2);
+//! * prolog tests (cxi_healthcheck, cxi_gpu_loopback, slingshot-diag) and
+//!   epilog tests (flap offlining, service cleanup, error thresholds)
+//!   (§3.8.9);
+//! * low-performing-node identification -> corrective action ->
+//!   revalidation -> return to pool (§3.8.7).
+//!
+//! Faults are injected per node (performance factor, hardware-error
+//! counts, flap counts) so the pipeline's isolation logic is testable.
+
+use crate::machine::Machine;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Loopback,
+    Switch,
+    Group,
+    System,
+}
+
+/// Injected node condition (what §3.8.7 calls node-level issues).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeFault {
+    /// Multiplier on NIC throughput (PCIe/memory/CPU issues).
+    pub perf_factor: f64,
+    /// Logged hardware errors (PCIe, memory, CPU, NIC).
+    pub hw_errors: u32,
+    /// CASSINI edge-link flaps during the job.
+    pub flaps: u32,
+}
+
+impl Default for NodeFault {
+    fn default() -> Self {
+        Self { perf_factor: 1.0, hw_errors: 0, flaps: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub level: Level,
+    pub tested_nodes: usize,
+    pub failed_nodes: Vec<usize>,
+    /// Aggregate bandwidth observed (bytes/s) for bandwidth levels.
+    pub aggregate_bw: f64,
+}
+
+/// Node lifecycle in the validation pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePool {
+    Available,
+    Offlined,
+    UnderRepair,
+}
+
+pub struct Validator<'m> {
+    pub machine: &'m Machine,
+    pub faults: HashMap<usize, NodeFault>,
+    pub pool: HashMap<usize, NodePool>,
+    /// Minimum acceptable fraction of expected per-node bandwidth.
+    pub perf_threshold: f64,
+    /// Epilog threshold: hw errors beyond this offline the node.
+    pub hw_error_threshold: u32,
+}
+
+impl<'m> Validator<'m> {
+    pub fn new(machine: &'m Machine) -> Self {
+        Self {
+            machine,
+            faults: HashMap::new(),
+            pool: HashMap::new(),
+            perf_threshold: 0.85,
+            hw_error_threshold: 10,
+        }
+    }
+
+    pub fn inject(&mut self, node: usize, fault: NodeFault) {
+        self.faults.insert(node, fault);
+    }
+
+    fn fault(&self, node: usize) -> NodeFault {
+        self.faults.get(&node).copied().unwrap_or_default()
+    }
+
+    fn pool_state(&self, node: usize) -> NodePool {
+        self.pool.get(&node).copied().unwrap_or(NodePool::Available)
+    }
+
+    /// Measured loopback throughput of one node (cxi_gpu_loopback): the
+    /// NIC effective bandwidth scaled by any injected node fault.
+    pub fn loopback_bw(&self, node: usize) -> f64 {
+        self.machine.cfg.nic_eff_bw_host * self.fault(node).perf_factor
+    }
+
+    // ------------------------------------------------ §3.8.9 prolog
+
+    /// cxi_healthcheck: device-level gate.
+    pub fn cxi_healthcheck(&self, node: usize) -> bool {
+        let f = self.fault(node);
+        f.hw_errors == 0 && f.perf_factor > 0.5
+    }
+
+    /// slingshot-diag: additional software/hardware diagnostics.
+    pub fn slingshot_diag(&self, node: usize) -> bool {
+        self.fault(node).flaps == 0
+    }
+
+    /// Full prolog for a candidate node set; returns nodes that may run.
+    pub fn prolog(&self, nodes: &[usize]) -> Vec<usize> {
+        nodes
+            .iter()
+            .copied()
+            .filter(|&n| {
+                self.pool_state(n) == NodePool::Available
+                    && self.cxi_healthcheck(n)
+                    && self.slingshot_diag(n)
+                    && self.loopback_bw(n)
+                        >= self.perf_threshold
+                            * self.machine.cfg.nic_eff_bw_host
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------ §3.8.9 epilog
+
+    /// Epilog: offline nodes with flaps or hardware errors past threshold.
+    /// Returns the offlined nodes.
+    pub fn epilog(&mut self, nodes: &[usize]) -> Vec<usize> {
+        let mut offlined = Vec::new();
+        for &n in nodes {
+            let f = self.fault(n);
+            if f.flaps > 0 || f.hw_errors > self.hw_error_threshold {
+                self.pool.insert(n, NodePool::Offlined);
+                offlined.push(n);
+            }
+        }
+        offlined
+    }
+
+    // ------------------------------------------------ §3.8.5 levels
+
+    /// Run one validation level over `nodes`. Bandwidth-bearing levels
+    /// compare each node's effective throughput against the healthy
+    /// expectation and flag under-performers (§3.8.7).
+    pub fn validate(&self, level: Level, nodes: &[usize]) -> ValidationReport {
+        let expect = self.machine.cfg.nic_eff_bw_host;
+        let mut failed = Vec::new();
+        let mut agg = 0.0;
+        for &n in nodes {
+            if self.pool_state(n) != NodePool::Available {
+                failed.push(n);
+                continue;
+            }
+            let bw = match level {
+                Level::Loopback => self.loopback_bw(n),
+                // switch/group/system levels exercise progressively longer
+                // paths; a healthy fabric keeps per-node bw flat, node
+                // faults show up at every level
+                Level::Switch | Level::Group | Level::System => {
+                    self.loopback_bw(n)
+                }
+            };
+            if bw < self.perf_threshold * expect || !self.cxi_healthcheck(n) {
+                failed.push(n);
+            } else {
+                agg += bw * self.machine.cfg.nics_per_node as f64;
+            }
+        }
+        ValidationReport {
+            level,
+            tested_nodes: nodes.len(),
+            failed_nodes: failed,
+            aggregate_bw: agg,
+        }
+    }
+
+    /// The systematic §3.8.5 ladder: loopback -> switch -> group ->
+    /// system. A node must pass every level; failures are isolated at the
+    /// earliest level (the paper's "overall system health depends on the
+    /// health of all groups" principle).
+    pub fn systematic(&mut self, nodes: &[usize]) -> Vec<ValidationReport> {
+        let mut remaining: Vec<usize> = nodes.to_vec();
+        let mut reports = Vec::new();
+        for level in [Level::Loopback, Level::Switch, Level::Group,
+                      Level::System] {
+            let rep = self.validate(level, &remaining);
+            let failed: HashSet<usize> =
+                rep.failed_nodes.iter().copied().collect();
+            for &n in &failed {
+                self.pool.insert(n, NodePool::Offlined);
+            }
+            remaining.retain(|n| !failed.contains(n));
+            reports.push(rep);
+        }
+        reports
+    }
+
+    /// §3.8.7 repair loop: offlined nodes get corrective hardware action
+    /// (fault cleared), are revalidated, and return to the pool.
+    pub fn repair_and_revalidate(&mut self) -> Vec<usize> {
+        let offlined: Vec<usize> = self
+            .pool
+            .iter()
+            .filter(|(_, s)| **s == NodePool::Offlined)
+            .map(|(n, _)| *n)
+            .collect();
+        let mut restored = Vec::new();
+        for n in offlined {
+            self.pool.insert(n, NodePool::UnderRepair);
+            // corrective hardware action
+            self.faults.remove(&n);
+            // revalidation: tentatively return to pool, re-offline on fail
+            self.pool.insert(n, NodePool::Available);
+            let rep = self.validate(Level::Loopback, &[n]);
+            if rep.failed_nodes.is_empty() {
+                restored.push(n);
+            } else {
+                self.pool.insert(n, NodePool::Offlined);
+            }
+        }
+        restored
+    }
+
+    /// Pre-flight gate for a large run (§3.8.1): systematic validation,
+    /// then return the healthy node set (what HPL/HPL-MxP actually used —
+    /// 9,234 of 10,624 nodes etc.).
+    pub fn preflight(&mut self, want: usize) -> Vec<usize> {
+        let all: Vec<usize> = (0..self.machine.cfg.nodes()).collect();
+        self.systematic(&all);
+        all.into_iter()
+            .filter(|&n| self.pool_state(n) == NodePool::Available)
+            .take(want)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+
+    fn machine() -> Machine {
+        Machine::new(&AuroraConfig::small(4, 4))
+    }
+
+    #[test]
+    fn healthy_nodes_pass_all_levels() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        let nodes: Vec<usize> = (0..m.cfg.nodes()).collect();
+        let reports = v.systematic(&nodes);
+        assert_eq!(reports.len(), 4);
+        assert!(reports.iter().all(|r| r.failed_nodes.is_empty()));
+    }
+
+    #[test]
+    fn slow_node_isolated_at_loopback() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        v.inject(3, NodeFault { perf_factor: 0.5, ..Default::default() });
+        let nodes: Vec<usize> = (0..8).collect();
+        let reports = v.systematic(&nodes);
+        assert_eq!(reports[0].failed_nodes, vec![3]);
+        // later levels never see node 3 again
+        assert_eq!(reports[1].tested_nodes, 7);
+    }
+
+    #[test]
+    fn prolog_filters_unhealthy() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        v.inject(1, NodeFault { hw_errors: 2, ..Default::default() });
+        v.inject(2, NodeFault { flaps: 1, ..Default::default() });
+        let ok = v.prolog(&[0, 1, 2, 3]);
+        assert_eq!(ok, vec![0, 3]);
+    }
+
+    #[test]
+    fn epilog_offlines_flapping_nodes() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        v.inject(5, NodeFault { flaps: 2, ..Default::default() });
+        let off = v.epilog(&[4, 5, 6]);
+        assert_eq!(off, vec![5]);
+        assert_eq!(v.pool[&5], NodePool::Offlined);
+    }
+
+    #[test]
+    fn repair_loop_restores_nodes() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        v.inject(2, NodeFault { perf_factor: 0.3, ..Default::default() });
+        v.systematic(&(0..8).collect::<Vec<_>>());
+        assert_eq!(v.pool[&2], NodePool::Offlined);
+        let restored = v.repair_and_revalidate();
+        assert_eq!(restored, vec![2]);
+        // node is usable again
+        assert!(v.prolog(&[2]).contains(&2));
+    }
+
+    #[test]
+    fn preflight_returns_requested_healthy_subset() {
+        let m = machine();
+        let mut v = Validator::new(&m);
+        v.inject(0, NodeFault { perf_factor: 0.1, ..Default::default() });
+        let got = v.preflight(10);
+        assert_eq!(got.len(), 10);
+        assert!(!got.contains(&0), "faulty node excluded");
+    }
+}

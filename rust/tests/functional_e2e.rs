@@ -1,0 +1,108 @@
+//! End-to-end functional validation through the PJRT artifacts: requires
+//! `make artifacts` (skipped with a notice otherwise so `cargo test`
+//! stays runnable from a clean checkout).
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::coordinator::{JobSpec, Launcher};
+use aurorasim::machine::Machine;
+use aurorasim::mpi::{coll, Comm};
+use aurorasim::reproduce;
+use aurorasim::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts — run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn full_functional_suite_passes() {
+    let Some(mut rt) = runtime() else { return };
+    let report = reproduce::functional_suite(&mut rt).expect("suite");
+    assert!(report.contains("PASS < 16"), "HPL residual: {report}");
+    assert!(report.contains("validation PASS"), "BFS: {report}");
+    assert!(report.contains("data integrity PASS"), "FMM: {report}");
+}
+
+#[test]
+fn artifacts_manifest_complete() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "hpl_panel_factor", "hpl_trsm_row", "hpl_trsm_col", "hpl_update",
+        "hpl_residual", "mxp_update", "mxp_ir_step", "mxp_gemm",
+        "hpcg_spmv", "hpcg_symgs", "hpcg_dot", "hpcg_waxpby",
+        "hacc_fft_poisson", "hacc_short_range", "nekbone_ax",
+        "lammps_pair_tile",
+    ] {
+        assert!(rt.manifest.get(name).is_some(), "missing artifact {name}");
+        assert!(rt.flops(name) > 0.0, "{name} has no flop estimate");
+    }
+}
+
+#[test]
+fn every_artifact_compiles_and_executes() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> =
+        rt.manifest.names().map(str::to_string).collect();
+    for name in names {
+        let spec = rt.manifest.get(&name).unwrap().clone();
+        let args: Vec<Vec<f64>> = spec
+            .args
+            .iter()
+            .map(|a| {
+                let mut v = vec![0.5; a.elems()];
+                // square matrices get diagonal dominance so LU/solve
+                // artifacts stay non-singular on this generic probe
+                if a.shape.len() == 2 && a.shape[0] == a.shape[1] {
+                    let n = a.shape[0];
+                    for i in 0..n {
+                        v[i * n + i] += n as f64;
+                    }
+                }
+                v
+            })
+            .collect();
+        let refs: Vec<&[f64]> = args.iter().map(|v| v.as_slice()).collect();
+        let out = rt
+            .call_f64(&name, &refs)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), spec.outputs.len(), "{name} output arity");
+        for (o, os) in out.iter().zip(&spec.outputs) {
+            assert_eq!(o.len(), os.elems(), "{name} output length");
+            assert!(
+                o.iter().all(|v| v.is_finite()),
+                "{name} produced non-finite values"
+            );
+        }
+    }
+}
+
+#[test]
+fn launcher_end_to_end_with_compute() {
+    let Some(mut rt) = runtime() else { return };
+    let m = Machine::new(&AuroraConfig::small(4, 4));
+    let mut l = Launcher::new(&m);
+    let spec = JobSpec::new("stencil+allreduce", 8, 1);
+    let rep = l
+        .launch(&spec, |w| {
+            // one SpMV per rank through PJRT + a reduction through the
+            // fabric — the minimal all-layers round trip
+            let padded = vec![1.0f64; 34 * 34 * 34];
+            let mut acc = 0.0;
+            for _ in 0..w.size() {
+                let out = rt.call_f32("hpcg_spmv", &[&padded]).unwrap();
+                acc += out[0][0];
+            }
+            coll::allreduce(w, &Comm::world(8), 8);
+            acc
+        })
+        .unwrap();
+    // interior of a constant-1 field: 26 - 26 = 0; corner sees fewer
+    // neighbours => value > 0. Just check determinism & finiteness:
+    assert!(rep.result.is_finite());
+    assert!(rep.elapsed > 0.0);
+}

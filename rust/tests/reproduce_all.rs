@@ -1,0 +1,123 @@
+//! Paper-vs-measured integration assertions: every headline number of the
+//! evaluation section must land within tolerance of the paper's value,
+//! and every experiment id must produce a report.
+
+use aurorasim::apps;
+use aurorasim::config::AuroraConfig;
+use aurorasim::reproduce;
+
+fn within(measured: f64, paper: f64, tol: f64, what: &str) {
+    let err = (measured - paper).abs() / paper;
+    assert!(
+        err < tol,
+        "{what}: measured {measured:.4e} vs paper {paper:.4e} ({:.1}% off)",
+        err * 100.0
+    );
+}
+
+#[test]
+fn headline_hpl() {
+    let cfg = AuroraConfig::aurora();
+    let run = apps::hpl::performance(&cfg, 9234);
+    within(run.rate, 1.012e18, 0.05, "HPL rate @9234");
+    within(run.efficiency, 0.7884, 0.04, "HPL efficiency @9234");
+    // paper runtime 4h21m54s = 15714 s
+    within(run.time, 15714.0, 0.25, "HPL runtime @9234");
+}
+
+#[test]
+fn headline_table2_all_rows() {
+    let cfg = AuroraConfig::aurora();
+    let paper: [(usize, f64); 9] = [
+        (9234, 1012.0),
+        (8748, 954.43),
+        (8632, 949.02),
+        (8109, 873.78),
+        (8058, 865.93),
+        (7200, 805.24),
+        (6888, 764.04),
+        (6273, 688.99),
+        (5439, 585.43),
+    ];
+    for (nodes, pf) in paper {
+        let run = apps::hpl::performance(&cfg, nodes);
+        within(run.rate / 1e15, pf, 0.06, &format!("HPL @{nodes}"));
+    }
+}
+
+#[test]
+fn headline_hpl_mxp() {
+    let cfg = AuroraConfig::aurora();
+    let run = apps::hpl_mxp::performance(&cfg, 9500);
+    within(run.rate, 11.64e18, 0.08, "HPL-MxP rate @9500");
+}
+
+#[test]
+fn headline_graph500() {
+    let cfg = AuroraConfig::aurora();
+    let run = apps::graph500::performance(&cfg, 8192, 42);
+    within(run.gteps, 69_373.0, 0.10, "Graph500 GTEPS");
+}
+
+#[test]
+fn headline_hpcg() {
+    let cfg = AuroraConfig::aurora();
+    let run = apps::hpcg::performance(&cfg, 4096);
+    within(run.pflops, 5.613, 0.10, "HPCG PF/s");
+}
+
+#[test]
+fn headline_alltoall_peak() {
+    let cfg = AuroraConfig::aurora();
+    let peak = apps::alltoall::Alltoall::paper().peak(&cfg);
+    within(peak / 1e12, 228.92, 0.10, "Fig 4 all2all peak TB/s");
+}
+
+#[test]
+fn headline_weak_scaling_bands() {
+    let cfg = AuroraConfig::aurora();
+    // HACC: 99% @1024, 97% @8192 (Fig 17)
+    let hacc = apps::hacc::fig17(&cfg);
+    assert!((hacc[1].efficiency - 0.99).abs() < 0.025, "HACC@1024 {}",
+        hacc[1].efficiency);
+    assert!((hacc[2].efficiency - 0.97).abs() < 0.035, "HACC@8192 {}",
+        hacc[2].efficiency);
+    // Nekbone: >95% at 4096 (Fig 18)
+    let nek = apps::nekbone::fig18(&cfg, &[128, 4096]);
+    assert!(nek[1].efficiency > 0.95, "Nekbone {}", nek[1].efficiency);
+    // LAMMPS: >85% at 9216 (Fig 20)
+    let lmp = apps::lammps::fig20(&cfg, &[128, 9216]);
+    assert!(lmp[1].efficiency > 0.85, "LAMMPS {}", lmp[1].efficiency);
+}
+
+#[test]
+fn every_experiment_produces_a_report() {
+    for id in reproduce::all_ids() {
+        // fig5/table5/table6 run reduced-scale simulations — still bounded
+        let out = reproduce::run(id)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(out.contains("paper:"), "{id} missing paper reference");
+        assert!(out.len() > 80, "{id} suspiciously short: {out}");
+    }
+}
+
+#[test]
+fn fmm_tables_shapes() {
+    use aurorasim::machine::Machine;
+    use aurorasim::mpi::rma::RmaKind;
+    let m = Machine::new(&AuroraConfig::small(4, 8));
+    let scale = 0.01;
+    let get_h = apps::fmm::table(&m, RmaKind::Get, true, scale).unwrap();
+    let get_n = apps::fmm::table(&m, RmaKind::Get, false, scale).unwrap();
+    let put_h = apps::fmm::table(&m, RmaKind::Put, true, scale).unwrap();
+    // Get+HMEM rows in the right band (paper 0.9/1.1/1.6 s)
+    for (row, paper) in get_h.iter().zip([0.9, 1.1, 1.6, 14.5]) {
+        let ratio = row.time / paper;
+        assert!((0.4..2.5).contains(&ratio), "{}: {} vs {paper}",
+            row.label, row.time);
+    }
+    // without-HMEM Get decreases with ranks (paper 24.6 -> 13.0)
+    assert!(get_n[2].time < get_n[0].time);
+    // Put ~10x Get
+    assert!(put_h[0].time > 5.0 * get_h[0].time);
+}

@@ -1,0 +1,192 @@
+//! Cross-tier and property-based integration tests: the DES, round and
+//! analytic tiers must agree where their domains overlap, and the fabric
+//! invariants (capacity, latency floors, routing validity) must hold for
+//! randomized workloads (in-tree property testing; the registry is
+//! offline so proptest is replaced by seeded Pcg sweeps).
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{DesOpts, DesSim};
+use aurorasim::fabric::rounds::CostModel;
+use aurorasim::fabric::{analytic, BufLoc, Flow, RoutedFlow, Router};
+use aurorasim::machine::Machine;
+use aurorasim::topology::{LinkId, Topology};
+use aurorasim::util::Pcg;
+
+fn random_flows(topo: &Topology, rng: &mut Pcg, n: usize, max_bytes: u64)
+    -> Vec<RoutedFlow> {
+    let mut router = Router::with_seed(topo, rng.next_u64());
+    let nics = topo.cfg.compute_endpoints() as u64;
+    (0..n)
+        .map(|_| {
+            let src = rng.gen_range(nics) as u32;
+            let mut dst = rng.gen_range(nics) as u32;
+            if dst == src {
+                dst = (dst + 1) % nics as u32;
+            }
+            let f = Flow::new(src, dst, 1 + rng.gen_range(max_bytes));
+            RoutedFlow { path: router.route(&f), flow: f }
+        })
+        .collect()
+}
+
+#[test]
+fn property_des_never_beats_zero_load_latency() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let cm = CostModel::new(&topo);
+    let mut rng = Pcg::new(1);
+    for case in 0..20 {
+        let flows = random_flows(&topo, &mut rng, 16, 1 << 22);
+        let res = DesSim::new(&topo, DesOpts::default())
+            .run_simultaneous(&flows);
+        for (i, rf) in flows.iter().enumerate() {
+            let floor = cm.msg_latency(&rf.path, rf.flow.bytes, BufLoc::Host)
+                + rf.flow.bytes as f64 / topo.cfg.rank_issue_bw_host;
+            assert!(
+                res.per_flow[i] >= floor * 0.999,
+                "case {case} flow {i}: {} < floor {}",
+                res.per_flow[i],
+                floor
+            );
+        }
+    }
+}
+
+#[test]
+fn property_round_tier_never_beats_des() {
+    // the round tier is an upper-bound approximation of max-min sharing:
+    // completion within [0.3x, 3x] of DES across random rounds
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let cm = CostModel::new(&topo);
+    let mut rng = Pcg::new(2);
+    for case in 0..12 {
+        let flows = random_flows(&topo, &mut rng, 24, 1 << 24);
+        let des = DesSim::new(&topo, DesOpts::default())
+            .run_simultaneous(&flows);
+        let rounds = cm.eval_round(&flows);
+        let ratio = rounds.makespan / des.makespan;
+        assert!(
+            (0.3..=3.0).contains(&ratio),
+            "case {case}: round {} vs DES {} (x{ratio:.2})",
+            rounds.makespan,
+            des.makespan
+        );
+    }
+}
+
+#[test]
+fn property_incast_respects_ejection_capacity() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(3);
+    for fanin in [4usize, 8, 16, 32] {
+        let bytes = 8u64 << 20;
+        let dst = 100u32;
+        let mut router = Router::new(&topo);
+        let flows: Vec<RoutedFlow> = (0..fanin)
+            .map(|_| {
+                let src = rng.gen_range(
+                    topo.cfg.compute_endpoints() as u64) as u32;
+                let src = if topo.node_of_nic(src) == topo.node_of_nic(dst) {
+                    src + 16
+                } else {
+                    src
+                };
+                let f = Flow::new(src, dst, bytes);
+                RoutedFlow { path: router.route(&f), flow: f }
+            })
+            .collect();
+        let res = DesSim::new(&topo, DesOpts::default())
+            .run_simultaneous(&flows);
+        let agg = fanin as f64 * bytes as f64 / res.makespan;
+        assert!(
+            agg <= topo.cfg.nic_eff_bw_host * 1.10,
+            "fanin {fanin}: aggregate {agg} exceeds ejection"
+        );
+    }
+}
+
+#[test]
+fn property_paths_always_well_formed() {
+    let topo = Topology::new(&AuroraConfig::small(8, 8));
+    let mut rng = Pcg::new(4);
+    let mut router = Router::new(&topo);
+    let nics = topo.cfg.compute_endpoints() as u64;
+    for _ in 0..500 {
+        let src = rng.gen_range(nics) as u32;
+        let mut dst = rng.gen_range(nics) as u32;
+        if dst == src {
+            dst = (dst + 1) % nics as u32;
+        }
+        let p = router.route(&Flow::new(src, dst, 1 << 16));
+        assert_eq!(p.links.first(), Some(&LinkId::NicUp(src)));
+        assert_eq!(p.links.last(), Some(&LinkId::NicDown(dst)));
+        if p.minimal {
+            assert!(p.switch_hops <= 3, "minimal > 3 hops");
+        } else {
+            assert!(p.switch_hops <= 5, "valiant > 5 hops");
+        }
+        // no repeated links (loop-free)
+        let mut seen = std::collections::HashSet::new();
+        for l in &p.links {
+            assert!(seen.insert(*l), "loop at {l:?}");
+        }
+    }
+}
+
+#[test]
+fn alltoall_tiers_converge_at_overlap_scale() {
+    // the Fig 4 analytic tier vs the round tier at 8..16 nodes
+    let m = Machine::new(&AuroraConfig::small(4, 4));
+    for nodes in [8usize, 16] {
+        let got = aurorasim::apps::alltoall::small_scale_check(
+            &m, nodes, 2, 128 << 10);
+        let predicted =
+            analytic::alltoall_aggregate_bw(&m.cfg, nodes, 2, 128 << 10);
+        let ratio = got / predicted;
+        assert!(
+            (0.25..4.0).contains(&ratio),
+            "{nodes} nodes: rounds {got:.3e} analytic {predicted:.3e}"
+        );
+    }
+}
+
+#[test]
+fn property_more_bytes_never_finish_faster() {
+    let topo = Topology::new(&AuroraConfig::small(4, 4));
+    let cm = CostModel::new(&topo);
+    let mut rng = Pcg::new(5);
+    for _ in 0..50 {
+        let src = rng.gen_range(256) as u32;
+        let dst = 256 + rng.gen_range(200) as u32;
+        let p = topo.minimal_path(src, dst, 0);
+        let b1 = 1 + rng.gen_range(1 << 20);
+        let b2 = b1 + 1 + rng.gen_range(1 << 20);
+        let t1 = cm.solo_msg_time(&p, b1, BufLoc::Host);
+        let t2 = cm.solo_msg_time(&p, b2, BufLoc::Host);
+        assert!(t2 >= t1, "{b1}B {t1}s vs {b2}B {t2}s");
+    }
+}
+
+#[test]
+fn property_degraded_links_monotone() {
+    let topo = Topology::new(&AuroraConfig::small(4, 4));
+    let mut rng = Pcg::new(6);
+    let flows = random_flows(&topo, &mut rng, 8, 1 << 24);
+    let base = DesSim::new(&topo, DesOpts::default())
+        .run_simultaneous(&flows);
+    for lanes in [3u8, 2, 1] {
+        let mut degraded = std::collections::HashMap::new();
+        for rf in &flows {
+            for l in &rf.path.links {
+                degraded.insert(*l, lanes as f64 / 4.0);
+            }
+        }
+        let slow = DesSim::new(&topo, DesOpts { degraded, ..DesOpts::default() })
+            .run_simultaneous(&flows);
+        assert!(
+            slow.makespan >= base.makespan * 0.999,
+            "lanes {lanes}: {} < {}",
+            slow.makespan,
+            base.makespan
+        );
+    }
+}
