@@ -1,0 +1,95 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The build environment is offline, so `hypothesis` may be missing. This
+module implements the tiny subset the kernel tests use — `given`,
+`settings` and `strategies.integers` — by enumerating a fixed, seeded
+sample of each strategy instead of searching. Coverage is weaker than real
+hypothesis (no shrinking, no adaptive generation) but the tests stay
+meaningful: every run executes the same ~20 pseudo-random shape
+combinations per property.
+
+The wrapper deliberately exposes a parameterless signature (bar `self`):
+pytest inspects test signatures for fixtures, and the strategy-drawn
+arguments must not look like fixture requests.
+
+When hypothesis IS available the tests import it directly and this module
+is unused.
+"""
+
+import inspect
+import random
+import zlib
+
+
+class _IntRange:
+    def __init__(self, lo, hi):
+        self.lo = lo
+        self.hi = hi
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _IntRange(min_value, max_value)
+
+
+# keep the `from ... import strategies as st` idiom working
+st = strategies
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    """Decorator factory: records max_examples for a later @given."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the wrapped test over a deterministic sample of the strategies."""
+
+    def deco(fn):
+        def run_cases(call):
+            # @settings may sit above @given (setting the attribute on
+            # `runner`) or below it (setting it on `fn`) — honor both
+            n = getattr(
+                runner,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 20),
+            )
+            # crc32, not hash(): str hashing is salted per process, and
+            # the cases must be identical on every run
+            rng = random.Random(0xA0A0 ^ zlib.crc32(fn.__name__.encode()))
+            for case in range(n):
+                drawn = {
+                    name: strat.draw(rng)
+                    for name, strat in sorted(strats.items())
+                }
+                try:
+                    call(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"fallback-hypothesis case {case} {drawn}: {e}"
+                    ) from e
+
+        params = list(inspect.signature(fn).parameters)
+        if params and params[0] == "self":
+
+            def runner(self):
+                run_cases(lambda **kw: fn(self, **kw))
+
+        else:
+
+            def runner():
+                run_cases(fn)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

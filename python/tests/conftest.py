@@ -1,0 +1,12 @@
+"""Test bootstrap: make `compile.*` importable regardless of invocation dir.
+
+The suite is run both as `pytest python/tests` from the repo root (CI, the
+tier-1 driver) and as `pytest tests` from python/. The kernels package
+lives at python/compile, which is only importable in the second case, so
+pin the python/ directory onto sys.path here.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # offline environments may not ship hypothesis — degrade, don't skip
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
 
 jax.config.update("jax_enable_x64", True)
 

@@ -103,4 +103,67 @@ fn main() {
         balanced / 1e9,
         one_nic / 1e9
     );
+
+    println!("\n== ablation: DES solver — incremental vs dense oracle ==");
+    // what the incremental component re-solve buys on the mixed pattern
+    // the campaign engine leans on (EXPERIMENTS.md §Perf)
+    let topo = Machine::new(&AuroraConfig::small(16, 16)).topo.clone();
+    let mut router = Router::with_seed(&topo, 17);
+    let mut rng2 = Pcg::new(23);
+    let nics = topo.cfg.compute_endpoints() as u64;
+    for n in [512usize, 2048] {
+        let mut flows = Vec::with_capacity(n);
+        // 1/4 incast traffic onto 8 roots, 3/4 uniform background
+        for i in 0..n {
+            let f = if i % 4 == 0 {
+                let root = ((i / 4) % 8) as u32 * 64 + 5;
+                Flow::new(rng2.gen_range(nics) as u32, root, 2 << 20)
+            } else {
+                let s = rng2.gen_range(nics) as u32;
+                let d = ((s as u64 + 1 + rng2.gen_range(nics - 1)) % nics)
+                    as u32;
+                Flow::new(s, d, 1 << 20)
+            };
+            flows.push(RoutedFlow { path: router.route(&f), flow: f });
+        }
+        let sim = DesSim::new(&topo, DesOpts::default());
+        let t0 = std::time::Instant::now();
+        let inc = sim.run_simultaneous(&flows);
+        let t_inc = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let ora = sim.run_simultaneous_oracle(&flows);
+        let t_ora = t0.elapsed().as_secs_f64();
+        println!(
+            "  {n:>5} flows: incremental {:>9.2} ms  oracle {:>9.2} ms  \
+             ({:.1}x)  makespan delta {:+.2e}",
+            t_inc * 1e3,
+            t_ora * 1e3,
+            t_ora / t_inc.max(1e-12),
+            inc.makespan - ora.makespan
+        );
+    }
+
+    println!("\n== ablation: campaign engine — serial vs parallel ==");
+    let cfg = AuroraConfig::small(8, 4);
+    let campaign = aurorasim::campaign::Campaign::standard(
+        &cfg,
+        aurorasim::reproduce::CAMPAIGN_SEED,
+    );
+    let t0 = std::time::Instant::now();
+    let serial = campaign.run_serial();
+    let t_ser = t0.elapsed().as_secs_f64();
+    let threads = aurorasim::campaign::pool::default_threads();
+    let t0 = std::time::Instant::now();
+    let parallel = campaign.run(threads);
+    let t_par = t0.elapsed().as_secs_f64();
+    println!(
+        "  {} scenarios: serial {:.2} ms   {} threads {:.2} ms ({:.1}x)   \
+         byte-identical: {}",
+        serial.results.len(),
+        t_ser * 1e3,
+        threads,
+        t_par * 1e3,
+        t_ser / t_par.max(1e-12),
+        serial.to_json().dump() == parallel.to_json().dump()
+    );
 }

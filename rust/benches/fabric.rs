@@ -13,7 +13,12 @@ use aurorasim::topology::Topology;
 use aurorasim::util::Pcg;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
+    timed(name, iters, f);
+}
+
+/// Like `bench` but returns seconds/iter so callers can report ratios.
+fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     for _ in 0..iters.div_ceil(10).min(3) {
         f(); // warmup
     }
@@ -23,6 +28,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("{name:<48} {:>12.3} us/iter  ({iters} iters)", per * 1e6);
+    per
 }
 
 fn random_flows(topo: &Topology, n: usize, seed: u64) -> Vec<RoutedFlow> {
@@ -65,14 +71,34 @@ fn main() {
         });
     }
 
-    // DES with max-min progressive filling
-    for n in [32usize, 128, 512] {
+    // DES: incremental component solver vs the dense full-recompute
+    // oracle (EXPERIMENTS.md §Perf; acceptance: >= 5x at 2048 flows).
+    // The oracle is skipped at 8192 unless BENCH_ORACLE_8192=1 — it is
+    // O(events x flows x links) and takes minutes there.
+    for n in [32usize, 128, 512, 2048, 8192] {
         let flows = random_flows(&small, n, 13);
-        bench(&format!("des/maxmin ({n} flows)"),
-              if n >= 512 { 3 } else { 10 }, || {
+        let iters = match n {
+            0..=128 => 10,
+            129..=512 => 3,
+            _ => 1,
+        };
+        let inc = timed(&format!("des/incremental ({n} flows)"), iters, || {
             let sim = DesSim::new(&small, DesOpts::default());
             std::hint::black_box(sim.run_simultaneous(&flows));
         });
+        let run_oracle =
+            n < 8192 || std::env::var_os("BENCH_ORACLE_8192").is_some();
+        if run_oracle {
+            let ora = timed(&format!("des/oracle      ({n} flows)"), iters,
+                || {
+                    let sim = DesSim::new(&small, DesOpts::default());
+                    std::hint::black_box(sim.run_simultaneous_oracle(&flows));
+                });
+            println!(
+                "des/speedup     ({n} flows)                      {:>10.1}x",
+                ora / inc
+            );
+        }
     }
 
     // incast + congestion classification

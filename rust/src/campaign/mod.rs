@@ -1,0 +1,246 @@
+//! Multi-scenario campaign engine: run many named fabric scenarios in
+//! parallel, deterministically, and emit a machine-readable JSON report.
+//!
+//! The paper validates Aurora's fabric by sweeping many workloads —
+//! GPCNet isolated/congested (§3.8.2), incast fan-ins (§3.1), degraded
+//! lanes (§3.4), collective rounds (§5.1) — over many configurations.
+//! [`Campaign`] packages such a sweep: each [`Scenario`] is self-
+//! contained (own topology, router, DES, name-derived seed), so the
+//! engine can fan scenarios out over a [`pool::par_map`] worker pool and
+//! still produce byte-identical reports in serial and parallel runs.
+//!
+//! ```no_run
+//! use aurorasim::campaign::Campaign;
+//! use aurorasim::config::AuroraConfig;
+//!
+//! let c = Campaign::standard(&AuroraConfig::small(8, 4), 0xA112a);
+//! let report = c.run(aurorasim::campaign::pool::default_threads());
+//! println!("{}", report.render_table());
+//! std::fs::write("campaign.json", report.to_json().dump_pretty()).unwrap();
+//! ```
+
+pub mod pool;
+pub mod scenario;
+
+pub use scenario::{Scenario, ScenarioResult, Workload};
+
+use crate::config::AuroraConfig;
+use crate::fabric::des::DesOpts;
+use crate::metrics::table;
+use crate::runtime::manifest::RunInfo;
+use crate::util::Json;
+use anyhow::Result;
+
+/// JSON schema tag stamped onto campaign reports.
+pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v1";
+
+/// A named set of scenarios executed as one unit.
+#[derive(Debug, Clone, Default)]
+pub struct Campaign {
+    pub scenarios: Vec<Scenario>,
+}
+
+impl Campaign {
+    pub fn new() -> Self {
+        Self { scenarios: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: Scenario) {
+        self.scenarios.push(s);
+    }
+
+    /// The standard scenario suite: GPCNet isolated/congested (with and
+    /// without congestion management), incast fan-ins, uniform and
+    /// permutation/ring collective rounds, a degraded-lane sweep and a
+    /// staggered-arrival mix — 10 scenarios on the given config.
+    pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
+        let on = DesOpts::default();
+        let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
+        let mk = |name: &str, opts: &DesOpts, w: Workload| {
+            Scenario::new(name, cfg.clone(), opts.clone(), w, seed)
+        };
+        Self {
+            scenarios: vec![
+                mk("gpcnet_isolated", &on,
+                   Workload::GpcnetMix {
+                       victims: 64, congestors: 0, bytes: 128 << 10,
+                   }),
+                mk("gpcnet_congested", &on,
+                   Workload::GpcnetMix {
+                       victims: 64, congestors: 32, bytes: 128 << 10,
+                   }),
+                mk("gpcnet_congested_nocm", &off,
+                   Workload::GpcnetMix {
+                       victims: 64, congestors: 32, bytes: 128 << 10,
+                   }),
+                mk("incast_8x16", &on,
+                   Workload::Incast { roots: 8, fanin: 16, bytes: 8 << 20 }),
+                mk("incast_8x16_nocm", &off,
+                   Workload::Incast { roots: 8, fanin: 16, bytes: 8 << 20 }),
+                mk("uniform_512", &on,
+                   Workload::UniformRandom { flows: 512, bytes: 1 << 20 }),
+                mk("permutation_256", &on,
+                   Workload::Permutation { pairs: 256, bytes: 4 << 20 }),
+                mk("ring_256", &on,
+                   Workload::Ring { ranks: 256, bytes: 16 << 20 }),
+                mk("degraded_half_bw", &on,
+                   Workload::Degraded {
+                       flows: 256,
+                       bytes: 2 << 20,
+                       bw_multiplier: 0.5,
+                       link_fraction: 0.25,
+                   }),
+                mk("staggered_256", &on,
+                   Workload::Staggered {
+                       flows: 256, bytes: 1 << 20, window_s: 0.05,
+                   }),
+            ],
+        }
+    }
+
+    /// Execute every scenario on up to `threads` workers. Results are in
+    /// scenario order and independent of scheduling, so
+    /// `run(1)` and `run(k)` produce identical reports.
+    pub fn run(&self, threads: usize) -> CampaignReport {
+        let results = pool::par_map(&self.scenarios, threads, Scenario::run);
+        CampaignReport { results }
+    }
+
+    /// Serial convenience (the determinism baseline).
+    pub fn run_serial(&self) -> CampaignReport {
+        self.run(1)
+    }
+}
+
+/// Results of an executed campaign, in scenario order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignReport {
+    pub results: Vec<ScenarioResult>,
+}
+
+impl CampaignReport {
+    /// Deterministic JSON (provenance header + per-scenario metrics).
+    /// Excludes wall-clock anything: equal campaigns serialize to equal
+    /// bytes.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("info", RunInfo::new(CAMPAIGN_SCHEMA).to_json()),
+            (
+                "scenarios",
+                Json::arr(
+                    self.results.iter().map(ScenarioResult::to_json).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the pretty JSON report to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().dump_pretty())?;
+        Ok(())
+    }
+
+    /// Human-readable summary table.
+    pub fn render_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .results
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    r.flows.to_string(),
+                    format!("{:.3}", r.makespan * 1e3),
+                    format!("{:.3}", r.p99_finish * 1e3),
+                    r.contributors.to_string(),
+                    r.victims.to_string(),
+                    format!("{:.3}", r.rounds_upper * 1e3),
+                ]
+            })
+            .collect();
+        table(
+            &[
+                "scenario",
+                "flows",
+                "makespan ms",
+                "p99 ms",
+                "contrib",
+                "victims",
+                "rounds-UB ms",
+            ],
+            &rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_campaign() -> Campaign {
+        let cfg = AuroraConfig::small(4, 4);
+        let mut c = Campaign::new();
+        c.push(Scenario::new(
+            "a",
+            cfg.clone(),
+            DesOpts::default(),
+            Workload::Incast { roots: 1, fanin: 8, bytes: 2 << 20 },
+            9,
+        ));
+        c.push(Scenario::new(
+            "b",
+            cfg.clone(),
+            DesOpts::default(),
+            Workload::UniformRandom { flows: 24, bytes: 1 << 20 },
+            9,
+        ));
+        c.push(Scenario::new(
+            "c",
+            cfg,
+            DesOpts::default(),
+            Workload::Ring { ranks: 32, bytes: 4 << 20 },
+            9,
+        ));
+        c
+    }
+
+    #[test]
+    fn parallel_report_is_byte_identical_to_serial() {
+        let c = tiny_campaign();
+        let serial = c.run_serial().to_json().dump_pretty();
+        let parallel = c.run(3).to_json().dump_pretty();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn standard_suite_has_at_least_eight_scenarios() {
+        let c = Campaign::standard(&AuroraConfig::small(4, 4), 1);
+        assert!(c.scenarios.len() >= 8, "{}", c.scenarios.len());
+        // all names unique (seeds are name-derived)
+        let mut names: Vec<&str> =
+            c.scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), c.scenarios.len());
+    }
+
+    #[test]
+    fn report_json_parses_and_carries_schema() {
+        let c = tiny_campaign();
+        let rep = c.run(2);
+        let j = Json::parse(&rep.to_json().dump_pretty()).unwrap();
+        assert_eq!(
+            j.get("info").and_then(|i| i.get("schema")).and_then(Json::as_str),
+            Some(CAMPAIGN_SCHEMA)
+        );
+        assert_eq!(j.get("scenarios").and_then(Json::as_arr).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn table_lists_every_scenario() {
+        let c = tiny_campaign();
+        let t = c.run(2).render_table();
+        for s in &c.scenarios {
+            assert!(t.contains(&s.name), "{t}");
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Deterministic fork-join map over `std::thread::scope`.
+//!
+//! The build is offline, so rayon is replaced by this ~50-line work-
+//! stealing-free pool: workers pull item indices from an atomic counter
+//! and write results into per-item slots, so the output order — and
+//! therefore every byte of a campaign report — is identical no matter how
+//! the OS schedules the workers. `tests/des_equivalence.rs` asserts
+//! parallel == serial byte-for-byte.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` with up to `threads` workers; results are in
+/// input order. `threads <= 1` runs inline on the caller thread.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().expect("poisoned result slot") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("poisoned result slot")
+                .expect("worker filled every slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, 4, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_equals_parallel() {
+        let items: Vec<u64> = (0..37).collect();
+        let f = |&x: &u64| x.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(7);
+        assert_eq!(par_map(&items, 1, f), par_map(&items, 8, f));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, 4, |&x| x).is_empty());
+        assert_eq!(par_map(&[5u32], 4, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(par_map(&items, 64, |&x| x), vec![1, 2, 3]);
+    }
+}

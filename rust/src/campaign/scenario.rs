@@ -1,0 +1,355 @@
+//! Named scenarios: a config x DES options x workload generator, with a
+//! deterministic per-scenario seed.
+//!
+//! A scenario is fully self-contained — it builds its own topology,
+//! routes its own flows and runs its own DES — so the campaign engine can
+//! execute any number of them concurrently with no shared mutable state,
+//! and the result depends only on the scenario (never on scheduling).
+
+use crate::config::AuroraConfig;
+use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
+use crate::fabric::rounds::CostModel;
+use crate::fabric::{Flow, RoutedFlow, Router};
+use crate::metrics::{mean, percentile};
+use crate::topology::{LinkId, Topology};
+use crate::util::{Json, Pcg};
+use std::collections::BTreeSet;
+
+/// Flow-pattern generator for one scenario. All patterns come from the
+/// paper's evaluation: GPCNet random-ring + congestors (§3.8.2, Fig 5),
+/// incast fan-ins (§3.1), permutation/ring collective rounds (§5.1),
+/// uniform background traffic, lane-degraded links (§3.4) and staggered
+/// arrival mixes.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Uniformly random endpoint pairs, all starting at t=0.
+    UniformRandom { flows: usize, bytes: u64 },
+    /// `roots` simultaneous fan-ins of `fanin` senders each.
+    Incast { roots: usize, fanin: usize, bytes: u64 },
+    /// GPCNet mix: random-ring victims plus (when `congestors > 0`)
+    /// incast and background congestor traffic.
+    GpcnetMix { victims: usize, congestors: usize, bytes: u64 },
+    /// One round of a random permutation (all2all-style collective round).
+    Permutation { pairs: usize, bytes: u64 },
+    /// Ring neighbor exchange (one allreduce ring round).
+    Ring { ranks: usize, bytes: u64 },
+    /// Uniform random traffic with arrivals staggered over `window_s`.
+    Staggered { flows: usize, bytes: u64, window_s: f64 },
+    /// Uniform random traffic over a fabric with `link_fraction` of the
+    /// used links degraded to `bw_multiplier` of nominal bandwidth
+    /// (paper §3.4 lane-disable degraded mode).
+    Degraded {
+        flows: usize,
+        bytes: u64,
+        bw_multiplier: f64,
+        link_fraction: f64,
+    },
+}
+
+/// One named simulation: everything needed to reproduce it bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub cfg: AuroraConfig,
+    pub opts: DesOpts,
+    pub workload: Workload,
+    /// Scenario-local seed, derived from the campaign seed and the
+    /// scenario *name* — independent of position and execution order.
+    pub seed: u64,
+}
+
+/// FNV-1a, used to fold scenario names into seeds.
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Scenario {
+    pub fn new(
+        name: &str,
+        cfg: AuroraConfig,
+        opts: DesOpts,
+        workload: Workload,
+        campaign_seed: u64,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            cfg,
+            opts,
+            workload,
+            seed: fnv1a(name) ^ campaign_seed,
+        }
+    }
+
+    /// Generate the routed, timed flow set plus the (possibly
+    /// degraded-link-augmented) DES options for this scenario.
+    pub fn materialize(&self, topo: &Topology) -> (Vec<TimedFlow>, DesOpts) {
+        let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
+        let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+        let nics = topo.cfg.compute_endpoints() as u64;
+        let mut opts = self.opts.clone();
+        let mut timed: Vec<TimedFlow> = Vec::new();
+        let push = |router: &mut Router,
+                    timed: &mut Vec<TimedFlow>,
+                    f: Flow,
+                    start: f64| {
+            let path = router.route(&f);
+            timed.push(TimedFlow { rf: RoutedFlow { path, flow: f }, start });
+        };
+        let rand_pair = |rng: &mut Pcg| {
+            let src = rng.gen_range(nics) as u32;
+            let dst =
+                ((src as u64 + 1 + rng.gen_range(nics - 1)) % nics) as u32;
+            (src, dst)
+        };
+        match &self.workload {
+            Workload::UniformRandom { flows, bytes } => {
+                for _ in 0..*flows {
+                    let (src, dst) = rand_pair(&mut rng);
+                    push(&mut router, &mut timed,
+                         Flow::new(src, dst, *bytes), 0.0);
+                }
+            }
+            Workload::Incast { roots, fanin, bytes } => {
+                for _ in 0..*roots {
+                    let root = rng.gen_range(nics) as u32;
+                    for _ in 0..*fanin {
+                        let mut src = rng.gen_range(nics) as u32;
+                        if topo.node_of_nic(src) == topo.node_of_nic(root) {
+                            // keep senders off the root's node so the
+                            // fan-in actually crosses the fabric
+                            src = ((src as u64
+                                + topo.nics_per_switch() as u64)
+                                % nics) as u32;
+                        }
+                        push(&mut router, &mut timed,
+                             Flow::new(src, root, *bytes), 0.0);
+                    }
+                }
+            }
+            Workload::GpcnetMix { victims, congestors, bytes } => {
+                let srcs: Vec<u32> = (0..*victims)
+                    .map(|_| rng.gen_range(nics) as u32)
+                    .collect();
+                let perm = rng.permutation(*victims);
+                for i in 0..*victims {
+                    let dst = srcs[perm[i]];
+                    if srcs[i] != dst {
+                        push(&mut router, &mut timed,
+                             Flow::new(srcs[i], dst, *bytes), 0.0);
+                    }
+                }
+                if *congestors > 0 {
+                    let roots = (*congestors / 16).max(1);
+                    for _ in 0..roots {
+                        let root = rng.gen_range(nics) as u32;
+                        for _ in 0..12 {
+                            let src = rng.gen_range(nics) as u32;
+                            if src != root {
+                                push(&mut router, &mut timed,
+                                     Flow::new(src, root, 8 << 20), 0.0);
+                            }
+                        }
+                    }
+                    for _ in 0..*congestors {
+                        let (a, b) = rand_pair(&mut rng);
+                        push(&mut router, &mut timed,
+                             Flow::new(a, b, 4 << 20), 0.0);
+                    }
+                }
+            }
+            Workload::Permutation { pairs, bytes } => {
+                let n = (*pairs as u64).min(nics) as usize;
+                let perm = rng.permutation(n);
+                for (i, &p) in perm.iter().enumerate() {
+                    if i != p {
+                        push(&mut router, &mut timed,
+                             Flow::new(i as u32, p as u32, *bytes), 0.0);
+                    }
+                }
+            }
+            Workload::Ring { ranks, bytes } => {
+                let n = (*ranks as u64).min(nics) as usize;
+                if n >= 2 {
+                    for i in 0..n {
+                        push(&mut router, &mut timed,
+                             Flow::new(i as u32, ((i + 1) % n) as u32,
+                                 *bytes),
+                             0.0);
+                    }
+                }
+            }
+            Workload::Staggered { flows, bytes, window_s } => {
+                for _ in 0..*flows {
+                    let (src, dst) = rand_pair(&mut rng);
+                    let start = rng.gen_f64() * *window_s;
+                    push(&mut router, &mut timed,
+                         Flow::new(src, dst, *bytes), start);
+                }
+            }
+            Workload::Degraded { flows, bytes, bw_multiplier, link_fraction } => {
+                for _ in 0..*flows {
+                    let (src, dst) = rand_pair(&mut rng);
+                    push(&mut router, &mut timed,
+                         Flow::new(src, dst, *bytes), 0.0);
+                }
+                // degrade a deterministic fraction of the links actually
+                // used (BTreeSet -> stable order before the shuffle)
+                let mut links: Vec<LinkId> = timed
+                    .iter()
+                    .flat_map(|tf| tf.rf.path.links.iter().copied())
+                    .collect::<BTreeSet<_>>()
+                    .into_iter()
+                    .collect();
+                rng.shuffle(&mut links);
+                let k = ((links.len() as f64) * link_fraction).ceil() as usize;
+                for l in links.into_iter().take(k) {
+                    opts.degraded.insert(l, *bw_multiplier);
+                }
+            }
+        }
+        (timed, opts)
+    }
+
+    /// Execute the scenario: topology + routing + DES + summary metrics.
+    pub fn run(&self) -> ScenarioResult {
+        let topo = Topology::new(&self.cfg);
+        let (timed, opts) = self.materialize(&topo);
+        let rounds_upper = if timed.is_empty() {
+            0.0
+        } else {
+            CostModel::new(&topo).eval_timed(&timed, &opts.degraded).makespan
+        };
+        let res = DesSim::new(&topo, opts).run(&timed);
+        ScenarioResult {
+            name: self.name.clone(),
+            flows: timed.len(),
+            total_bytes: timed.iter().map(|tf| tf.rf.flow.bytes).sum(),
+            makespan: res.makespan,
+            mean_finish: if res.finish.is_empty() { 0.0 }
+                         else { mean(&res.finish) },
+            p99_finish: if res.finish.is_empty() { 0.0 }
+                        else { percentile(&res.finish, 99.0) },
+            contributors: res.contributors,
+            victims: res.victims,
+            rounds_upper,
+        }
+    }
+}
+
+/// Summary metrics of one executed scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub flows: usize,
+    pub total_bytes: u64,
+    pub makespan: f64,
+    pub mean_finish: f64,
+    pub p99_finish: f64,
+    pub contributors: usize,
+    pub victims: usize,
+    /// Round-tier upper-bound makespan: a cheap cross-tier bracket for
+    /// the DES result (all flows costed as if fully overlapping).
+    pub rounds_upper: f64,
+}
+
+impl ScenarioResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("flows", Json::num(self.flows as f64)),
+            ("total_bytes", Json::num(self.total_bytes as f64)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("mean_finish_s", Json::num(self.mean_finish)),
+            ("p99_finish_s", Json::num(self.p99_finish)),
+            ("contributors", Json::num(self.contributors as f64)),
+            ("victims", Json::num(self.victims as f64)),
+            ("rounds_upper_s", Json::num(self.rounds_upper)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> AuroraConfig {
+        AuroraConfig::small(4, 4)
+    }
+
+    #[test]
+    fn seeds_are_name_derived_and_order_independent() {
+        let a = Scenario::new("x", small(), DesOpts::default(),
+            Workload::Ring { ranks: 8, bytes: 1 << 20 }, 7);
+        let b = Scenario::new("x", small(), DesOpts::default(),
+            Workload::Ring { ranks: 8, bytes: 1 << 20 }, 7);
+        let c = Scenario::new("y", small(), DesOpts::default(),
+            Workload::Ring { ranks: 8, bytes: 1 << 20 }, 7);
+        assert_eq!(a.seed, b.seed);
+        assert_ne!(a.seed, c.seed);
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let s = Scenario::new("det", small(), DesOpts::default(),
+            Workload::UniformRandom { flows: 32, bytes: 1 << 20 }, 42);
+        let topo = Topology::new(&s.cfg);
+        let (a, _) = s.materialize(&topo);
+        let (b, _) = s.materialize(&topo);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.rf.flow.src_nic, y.rf.flow.src_nic);
+            assert_eq!(x.rf.flow.dst_nic, y.rf.flow.dst_nic);
+            assert_eq!(x.rf.path, y.rf.path);
+            assert_eq!(x.start, y.start);
+        }
+    }
+
+    #[test]
+    fn incast_scenario_detects_contributors() {
+        let s = Scenario::new("incast", small(), DesOpts::default(),
+            Workload::Incast { roots: 2, fanin: 8, bytes: 4 << 20 }, 1);
+        let r = s.run();
+        assert_eq!(r.flows, 16);
+        assert!(r.contributors > 0, "{r:?}");
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn degraded_scenario_is_slower() {
+        let base = Scenario::new("deg", small(), DesOpts::default(),
+            Workload::UniformRandom { flows: 24, bytes: 4 << 20 }, 5);
+        let deg = Scenario::new("deg", small(), DesOpts::default(),
+            Workload::Degraded {
+                flows: 24,
+                bytes: 4 << 20,
+                bw_multiplier: 0.25,
+                link_fraction: 1.0,
+            }, 5);
+        // same seed + same name => same flow set; all links degraded
+        let hb = base.run();
+        let hd = deg.run();
+        assert!(
+            hd.makespan >= hb.makespan * 0.999,
+            "degraded {} vs base {}",
+            hd.makespan,
+            hb.makespan
+        );
+    }
+
+    #[test]
+    fn staggered_window_respected() {
+        let s = Scenario::new("stag", small(), DesOpts::default(),
+            Workload::Staggered {
+                flows: 16, bytes: 1 << 20, window_s: 0.5,
+            }, 3);
+        let topo = Topology::new(&s.cfg);
+        let (timed, _) = s.materialize(&topo);
+        assert!(timed.iter().any(|tf| tf.start > 0.0));
+        assert!(timed.iter().all(|tf| (0.0..0.5).contains(&tf.start)));
+    }
+}

@@ -8,6 +8,7 @@
 //! (flap offlining, error thresholds) and emits the MPICH network summary
 //! plus the CXI counter report (§3.8.6-§3.8.8).
 
+use crate::campaign::{Campaign, CampaignReport};
 use crate::fabric::BufLoc;
 use crate::machine::Machine;
 use crate::mpi::World;
@@ -126,6 +127,32 @@ impl<'m> Launcher<'m> {
             cpu_binds,
         })
     }
+
+    /// Launch a scenario campaign through the same operational gates a
+    /// job gets: the §3.8.9 prolog must leave enough healthy nodes to
+    /// host the sweep before any scenario runs, and the epilog runs after
+    /// the campaign completes. Scenarios execute in parallel on up to
+    /// `threads` workers (deterministic output; see [`crate::campaign`]).
+    /// Returns the report plus the nodes the epilog offlined (the
+    /// campaign analogue of [`JobReport::offlined_nodes`]).
+    pub fn launch_campaign(
+        &mut self,
+        campaign: &Campaign,
+        threads: usize,
+    ) -> Result<(CampaignReport, Vec<usize>)> {
+        let total = self.machine.cfg.nodes();
+        let candidates: Vec<usize> = (0..total).collect();
+        let healthy = self.validator.prolog(&candidates);
+        if healthy.len() * 2 < total {
+            bail!(
+                "campaign aborted: only {}/{total} nodes pass prolog",
+                healthy.len()
+            );
+        }
+        let report = campaign.run(threads.max(1));
+        let offlined = self.validator.epilog(&healthy);
+        Ok((report, offlined))
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +207,20 @@ mod tests {
         let m = machine();
         let mut l = Launcher::new(&m);
         assert!(l.launch(&JobSpec::new("big", 10_000, 1), |_| ()).is_err());
+    }
+
+    #[test]
+    fn campaign_launch_gates_and_reports() {
+        use crate::campaign::Campaign;
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        let mut c = Campaign::standard(&m.cfg, 11);
+        c.scenarios.truncate(3); // keep the unit test quick
+        let (rep, offlined) = l.launch_campaign(&c, 2).unwrap();
+        assert_eq!(rep.results.len(), 3);
+        assert!(rep.results.iter().all(|r| r.makespan > 0.0));
+        // a healthy machine offlines nothing
+        assert!(offlined.is_empty(), "{offlined:?}");
     }
 
     #[test]

@@ -18,10 +18,31 @@
 //! the incast root back up into the fabric: every flow crossing a link
 //! contaminated by incast traffic is penalized.
 
+//! Two solvers share the model above:
+//!
+//! * [`DesSim::run`] — the **incremental** solver: per-flow rates are held
+//!   between events and, at each arrival/completion, only the affected
+//!   *component* — flows transitively sharing links with the changed flow —
+//!   is re-solved. Components are link-disjoint, so the max-min allocation
+//!   of every other component is unchanged by construction; completion
+//!   times are projected and kept in an event heap. The component solve is
+//!   progressive filling over a per-link flow index with a lazy min-heap of
+//!   link fair-share levels (levels are monotone non-decreasing during
+//!   filling, so stale heap entries are safely re-inserted).
+//! * [`DesSim::run_oracle`] — the original dense full recompute: exact
+//!   max-min by whole-system progressive filling at every event. Kept as
+//!   the equivalence oracle for `tests/des_equivalence.rs` and the
+//!   baseline for `benches/fabric.rs` (see EXPERIMENTS.md §Perf).
+//!
+//! Both compute the same unique max-min fixpoint, so per-flow finish times
+//! agree to floating-point noise (the equivalence suite asserts 1e-9
+//! relative).
+
 use super::{FlowTimes, RoutedFlow};
 use crate::topology::{LinkId, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// DES knobs.
 #[derive(Debug, Clone)]
@@ -151,6 +172,15 @@ impl<'t> DesSim<'t> {
     /// over the dense representation. `scratch` vectors are reused across
     /// events; `active` holds flow indices. Returns rates aligned with
     /// `active`.
+    ///
+    /// `rem_cap[l]` is the capacity not yet claimed by fixed flows, so a
+    /// link's saturation share is simply `rem_cap / count` — independent
+    /// of any global water level. (The original implementation tracked a
+    /// global `level` and debited `rate - level`, which let allocations
+    /// drift with the fix order and over-commit links shared by flows
+    /// fixed after an unrelated cap-fix; see EXPERIMENTS.md §Perf. The
+    /// fixpoint here is the unique max-min allocation, which is also what
+    /// makes the incremental solver's component-local re-solve exact.)
     #[allow(clippy::too_many_arguments)]
     fn maxmin_dense(
         &self,
@@ -175,7 +205,6 @@ impl<'t> DesSim<'t> {
             }
         }
         let mut n_fixed = 0;
-        let mut level = 0.0_f64;
         while n_fixed < n {
             // next binding constraint: a link's fair share or a flow cap
             let mut best_link: Option<(u32, f64)> = None;
@@ -184,7 +213,7 @@ impl<'t> DesSim<'t> {
                 if count[li] == 0 {
                     continue;
                 }
-                let fair = level + rem_cap[li].max(0.0) / count[li] as f64;
+                let fair = rem_cap[li].max(0.0) / count[li] as f64;
                 if best_link.map_or(true, |(_, f)| fair < f) {
                     best_link = Some((l, fair));
                 }
@@ -206,30 +235,24 @@ impl<'t> DesSim<'t> {
                 fixed[idx] = true;
                 n_fixed += 1;
                 for &l in &d.flow_links[active[idx]] {
-                    rem_cap[l as usize] -= c - level;
+                    rem_cap[l as usize] -= c;
                     count[l as usize] -= 1;
                 }
-                level = c;
             } else {
                 let (l, fair) = best_link.unwrap();
                 // fix every unfixed flow crossing l at `fair`
-                let mut fixed_any = false;
                 for (idx, &fi) in active.iter().enumerate() {
                     if !fixed[idx] && d.flow_links[fi].contains(&l) {
                         rate[idx] = fair;
                         fixed[idx] = true;
-                        fixed_any = true;
                         n_fixed += 1;
                         for &ll in &d.flow_links[fi] {
-                            rem_cap[ll as usize] -= fair - level;
+                            rem_cap[ll as usize] -= fair;
                             count[ll as usize] -= 1;
                         }
                     }
                 }
                 count[l as usize] = 0; // link saturated / dead
-                if fixed_any {
-                    level = fair;
-                }
             }
         }
         // reset scratch for the next event
@@ -239,8 +262,10 @@ impl<'t> DesSim<'t> {
         rate
     }
 
-    /// Run the simulation; `flows` keep their input order in the result.
-    pub fn run(&self, flows: &[TimedFlow]) -> DesResult {
+    /// Dense-oracle run: full max-min recompute over every active flow at
+    /// every event. O(events x flows x links) — correct and simple; the
+    /// reference the incremental solver is validated against.
+    pub fn run_oracle(&self, flows: &[TimedFlow]) -> DesResult {
         let n = flows.len();
         let d = self.build_dense(flows);
         let n_links = d.link_ids.len();
@@ -410,6 +435,477 @@ impl<'t> DesSim<'t> {
         let res = self.run(&timed);
         FlowTimes::from_vec(res.finish)
     }
+
+    /// Oracle variant of [`run_simultaneous`]: dense full recompute at
+    /// every event. Reachable from integration tests and benches.
+    pub fn run_simultaneous_oracle(&self, flows: &[RoutedFlow]) -> FlowTimes {
+        let timed: Vec<TimedFlow> = flows
+            .iter()
+            .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
+            .collect();
+        let res = self.run_oracle(&timed);
+        FlowTimes::from_vec(res.finish)
+    }
+
+    /// Run the simulation with the **incremental** solver; `flows` keep
+    /// their input order in the result.
+    ///
+    /// Per-flow rates persist between events; at each arrival/completion
+    /// only the affected component (flows transitively sharing links with
+    /// the changed flows) is re-solved, transferred bytes are synced
+    /// lazily per flow, and completions are projected into an event heap.
+    /// Components are link-disjoint, so every other flow's max-min rate —
+    /// and therefore its projected completion — is unchanged by
+    /// construction. Produces the same max-min fixpoint as
+    /// [`DesSim::run_oracle`] (unique given caps + capacities), with
+    /// finish times equal to floating-point noise.
+    pub fn run(&self, flows: &[TimedFlow]) -> DesResult {
+        let n = flows.len();
+        if n == 0 {
+            return DesResult {
+                finish: Vec::new(),
+                makespan: 0.0,
+                contributors: 0,
+                victims: 0,
+            };
+        }
+        let d = self.build_dense(flows);
+        let n_links = d.link_ids.len();
+        let cm = super::rounds::CostModel::new(self.topo);
+        let thr = self.opts.incast_threshold as u32;
+
+        // ---- per-flow state ----
+        let mut remaining: Vec<f64> =
+            flows.iter().map(|tf| tf.rf.flow.bytes as f64).collect();
+        let mut rate = vec![0.0f64; n];
+        let mut last_sync = vec![0.0f64; n];
+        let mut finish = vec![f64::NAN; n];
+        let mut queue_penalty = vec![f64::NAN; n];
+        let mut active = vec![false; n];
+        let mut done = vec![false; n];
+        let mut epoch = vec![0u32; n];
+
+        // ---- per-link state: the incremental index both the component
+        // walk and the solver run on ----
+        let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); n_links];
+        let mut eject_count = vec![0u32; n_links];
+
+        // ---- scratch, reused across events ----
+        let mut rem_cap = vec![0.0f64; n_links];
+        let mut count = vec![0u32; n_links];
+        let mut slot = vec![0u32; n];
+        let mut link_seen = vec![0u32; n_links];
+        let mut flow_seen = vec![0u32; n];
+        let mut stamp = 0u32;
+        let mut touched: Vec<u32> = Vec::with_capacity(n_links);
+        let mut inflight = vec![0.0f64; n_links];
+        let mut contaminated = vec![false; n_links];
+
+        let mut contributors_set: FxHashSet<usize> = FxHashSet::default();
+        let mut victims_set: FxHashSet<usize> = FxHashSet::default();
+
+        let mut heap: BinaryHeap<Reverse<Ev>> =
+            BinaryHeap::with_capacity(2 * n);
+        for (i, tf) in flows.iter().enumerate() {
+            heap.push(Reverse(Ev {
+                t: tf.start.max(0.0),
+                kind: EV_ARRIVAL,
+                flow: i as u32,
+                epoch: 0,
+            }));
+        }
+
+        let mut completions: Vec<usize> = Vec::new();
+        let mut arrivals: Vec<usize> = Vec::new();
+        let mut comp: Vec<usize> = Vec::new();
+        let mut lstack: Vec<u32> = Vec::new();
+        let mut n_done = 0usize;
+
+        while n_done < n {
+            let now = match heap.peek() {
+                Some(&Reverse(ev)) => ev.t,
+                None => panic!("deadlock in DES: {} flows stalled", n - n_done),
+            };
+            assert!(now.is_finite(), "deadlock in DES");
+            // batch every event at this exact time: completions are applied
+            // before arrivals, mirroring the oracle loop structure
+            completions.clear();
+            arrivals.clear();
+            while let Some(&Reverse(ev)) = heap.peek() {
+                if ev.t != now {
+                    break;
+                }
+                heap.pop();
+                let fi = ev.flow as usize;
+                if ev.kind == EV_COMPLETION {
+                    // stale completion events are invalidated by epoch bumps
+                    if !done[fi] && active[fi] && ev.epoch == epoch[fi] {
+                        completions.push(fi);
+                    }
+                } else if !done[fi] && !active[fi] {
+                    arrivals.push(fi);
+                }
+            }
+            if completions.is_empty() && arrivals.is_empty() {
+                continue;
+            }
+
+            for &fi in &completions {
+                done[fi] = true;
+                active[fi] = false;
+                n_done += 1;
+                let tf = &flows[fi];
+                finish[fi] = now
+                    + cm.msg_latency(&tf.rf.path, tf.rf.flow.bytes,
+                        tf.rf.flow.buf)
+                    + if queue_penalty[fi].is_nan() { 0.0 }
+                      else { queue_penalty[fi] };
+                for &l in &d.flow_links[fi] {
+                    let lf = &mut link_flows[l as usize];
+                    if let Some(pos) = lf.iter().position(|&x| x == fi as u32)
+                    {
+                        lf.swap_remove(pos);
+                    }
+                }
+                eject_count[d.flow_last[fi] as usize] -= 1;
+            }
+            for &fi in &arrivals {
+                active[fi] = true;
+                last_sync[fi] = now;
+                for &l in &d.flow_links[fi] {
+                    link_flows[l as usize].push(fi as u32);
+                }
+                eject_count[d.flow_last[fi] as usize] += 1;
+            }
+
+            // ---- affected component: walk link <-> flow adjacency from
+            // the changed flows' paths ----
+            stamp = stamp.wrapping_add(1);
+            comp.clear();
+            lstack.clear();
+            for &fi in completions.iter().chain(arrivals.iter()) {
+                for &l in &d.flow_links[fi] {
+                    if link_seen[l as usize] != stamp {
+                        link_seen[l as usize] = stamp;
+                        lstack.push(l);
+                    }
+                }
+            }
+            while let Some(l) = lstack.pop() {
+                for &fu in &link_flows[l as usize] {
+                    let fi = fu as usize;
+                    if flow_seen[fi] != stamp {
+                        flow_seen[fi] = stamp;
+                        comp.push(fi);
+                        for &ll in &d.flow_links[fi] {
+                            if link_seen[ll as usize] != stamp {
+                                link_seen[ll as usize] = stamp;
+                                lstack.push(ll);
+                            }
+                        }
+                    }
+                }
+            }
+            if comp.is_empty() {
+                continue; // isolated completion: nothing shares its links
+            }
+
+            // ---- lazily sync transferred bytes for the component ----
+            for &fi in &comp {
+                remaining[fi] =
+                    (remaining[fi] - rate[fi] * (now - last_sync[fi])).max(0.0);
+                last_sync[fi] = now;
+            }
+
+            // ---- queueing delay seen by newly arrived flows (identical
+            // math to the oracle, restricted to the component — flows in
+            // other components share no links with the arrivals) ----
+            if comp.iter().any(|&fi| queue_penalty[fi].is_nan()) {
+                for &fi in &comp {
+                    if self.opts.congestion_mgmt
+                        && eject_count[d.flow_last[fi] as usize] >= thr
+                    {
+                        continue;
+                    }
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] += remaining[fi];
+                    }
+                }
+                for &fi in &comp {
+                    if !queue_penalty[fi].is_nan() {
+                        continue;
+                    }
+                    let mut pen = 0.0;
+                    for &l in &d.flow_links[fi] {
+                        let queued = (inflight[l as usize] - remaining[fi])
+                            .max(0.0)
+                            .min(self.opts.queue_cap_bytes);
+                        pen += queued / d.cap[l as usize].max(1.0);
+                    }
+                    queue_penalty[fi] = pen;
+                }
+                for &fi in &comp {
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] = 0.0;
+                    }
+                }
+            }
+
+            // ---- exact max-min over the component ----
+            let mut rates = self.maxmin_component(
+                &d, &comp, &link_flows, &mut rem_cap, &mut count, &mut slot,
+                &mut touched,
+            );
+
+            // ---- congestion classification (oracle semantics, component
+            // scope: contributors and their victims always share links) ----
+            let is_contrib =
+                |fi: usize| eject_count[d.flow_last[fi] as usize] >= thr;
+            let any_incast = comp.iter().any(|&fi| is_contrib(fi));
+            if any_incast {
+                for &fi in &comp {
+                    if is_contrib(fi) {
+                        contributors_set.insert(fi);
+                        for &l in &d.flow_links[fi] {
+                            contaminated[l as usize] = true;
+                        }
+                    }
+                }
+                if !self.opts.congestion_mgmt {
+                    for (idx, &fi) in comp.iter().enumerate() {
+                        if is_contrib(fi) {
+                            continue;
+                        }
+                        if d.flow_links[fi]
+                            .iter()
+                            .any(|&l| contaminated[l as usize])
+                        {
+                            rates[idx] *= self.opts.victim_penalty;
+                            victims_set.insert(fi);
+                        }
+                    }
+                }
+                for &fi in &comp {
+                    for &l in &d.flow_links[fi] {
+                        contaminated[l as usize] = false;
+                    }
+                }
+            }
+
+            // ---- commit rates and (re)project completions ----
+            for (idx, &fi) in comp.iter().enumerate() {
+                rate[fi] = rates[idx];
+                epoch[fi] = epoch[fi].wrapping_add(1);
+                let t_fin = if remaining[fi] <= 1e-6 {
+                    now // mirrors the oracle's completion threshold
+                } else if rate[fi] > 0.0 {
+                    now + remaining[fi] / rate[fi]
+                } else {
+                    f64::INFINITY
+                };
+                if t_fin.is_finite() {
+                    heap.push(Reverse(Ev {
+                        t: t_fin,
+                        kind: EV_COMPLETION,
+                        flow: fi as u32,
+                        epoch: epoch[fi],
+                    }));
+                }
+            }
+        }
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        DesResult {
+            finish,
+            makespan,
+            contributors: contributors_set.len(),
+            victims: victims_set.len(),
+        }
+    }
+
+    /// Exact max-min (progressive filling with per-flow caps) restricted
+    /// to one component, driven by the per-link active-flow index instead
+    /// of whole-system scans. Same math as [`DesSim::maxmin_dense`]
+    /// (`fair = rem_cap / count`), so the two solvers reach the same
+    /// unique fixpoint.
+    ///
+    /// Fair shares are monotone non-decreasing during filling (a flow is
+    /// only ever fixed at `c <=` every remaining link's fair share, and
+    /// removing it raises that share: `(rem - c)/(count - 1) >=
+    /// rem/count` when `c <= rem/count`), so the link heap may hold
+    /// stale, smaller keys; entries are re-validated and re-inserted on
+    /// pop. `slot`, `rem_cap`, `count` and `touched` are caller-owned
+    /// scratch, zeroed on return.
+    #[allow(clippy::too_many_arguments)]
+    fn maxmin_component(
+        &self,
+        d: &Dense,
+        comp: &[usize],
+        link_flows: &[Vec<u32>],
+        rem_cap: &mut [f64],
+        count: &mut [u32],
+        slot: &mut [u32],
+        touched: &mut Vec<u32>,
+    ) -> Vec<f64> {
+        let nc = comp.len();
+        let mut rates = vec![f64::NAN; nc];
+        let mut fixed = vec![false; nc];
+        touched.clear();
+        for (idx, &fi) in comp.iter().enumerate() {
+            slot[fi] = idx as u32 + 1;
+            for &l in &d.flow_links[fi] {
+                let li = l as usize;
+                if count[li] == 0 {
+                    touched.push(l);
+                    rem_cap[li] = d.cap[li];
+                }
+                count[li] += 1;
+            }
+        }
+        // flows sorted by issue cap: the "next flow-cap constraint" pointer
+        let mut cap_order: Vec<u32> = (0..nc as u32).collect();
+        cap_order.sort_unstable_by(|&a, &b| {
+            d.flow_cap[comp[a as usize]]
+                .total_cmp(&d.flow_cap[comp[b as usize]])
+        });
+        let mut cap_ptr = 0usize;
+        let mut lheap: BinaryHeap<Reverse<LinkLevel>> = touched
+            .iter()
+            .map(|&l| {
+                let li = l as usize;
+                Reverse(LinkLevel {
+                    fair: rem_cap[li].max(0.0) / count[li] as f64,
+                    link: l,
+                })
+            })
+            .collect();
+        let mut n_fixed = 0usize;
+        while n_fixed < nc {
+            // next binding link constraint (lazy re-validation)
+            let link_cand = loop {
+                match lheap.peek() {
+                    None => break None,
+                    Some(&Reverse(LinkLevel { fair, link })) => {
+                        let li = link as usize;
+                        if count[li] == 0 {
+                            lheap.pop();
+                            continue;
+                        }
+                        let cur = rem_cap[li].max(0.0) / count[li] as f64;
+                        if cur > fair {
+                            lheap.pop();
+                            lheap.push(Reverse(LinkLevel { fair: cur, link }));
+                            continue;
+                        }
+                        break Some((link, cur));
+                    }
+                }
+            };
+            while cap_ptr < nc && fixed[cap_order[cap_ptr] as usize] {
+                cap_ptr += 1;
+            }
+            let flow_cand = if cap_ptr < nc {
+                let s = cap_order[cap_ptr] as usize;
+                Some((s, d.flow_cap[comp[s]]))
+            } else {
+                None
+            };
+            let link_level = link_cand.map_or(f64::INFINITY, |(_, f)| f);
+            let flow_level = flow_cand.map_or(f64::INFINITY, |(_, f)| f);
+            if flow_level <= link_level {
+                let (s, c) =
+                    flow_cand.expect("unfixed flow implies a cap constraint");
+                rates[s] = c;
+                fixed[s] = true;
+                n_fixed += 1;
+                for &l in &d.flow_links[comp[s]] {
+                    rem_cap[l as usize] -= c;
+                    count[l as usize] -= 1;
+                }
+            } else {
+                let (l, fair) = link_cand.expect("link level was finite");
+                for &fu in &link_flows[l as usize] {
+                    debug_assert!(
+                        slot[fu as usize] > 0,
+                        "link member outside component"
+                    );
+                    let s = (slot[fu as usize] - 1) as usize;
+                    if fixed[s] {
+                        continue;
+                    }
+                    rates[s] = fair;
+                    fixed[s] = true;
+                    n_fixed += 1;
+                    for &ll in &d.flow_links[fu as usize] {
+                        rem_cap[ll as usize] -= fair;
+                        count[ll as usize] -= 1;
+                    }
+                }
+                count[l as usize] = 0; // saturated / dead
+            }
+        }
+        for &l in touched.iter() {
+            count[l as usize] = 0;
+        }
+        for &fi in comp {
+            slot[fi] = 0;
+        }
+        rates
+    }
+}
+
+const EV_COMPLETION: u8 = 0;
+const EV_ARRIVAL: u8 = 1;
+
+/// Heap event for the incremental solver (min-heap through `Reverse`):
+/// ordered by time, completions before arrivals at equal times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ev {
+    t: f64,
+    kind: u8,
+    flow: u32,
+    epoch: u32,
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then_with(|| self.kind.cmp(&other.kind))
+            .then_with(|| self.flow.cmp(&other.flow))
+            .then_with(|| self.epoch.cmp(&other.epoch))
+    }
+}
+
+/// Lazy-heap entry for `maxmin_component`: a link's prospective fair-share
+/// water level at the time it was (re)inserted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct LinkLevel {
+    fair: f64,
+    link: u32,
+}
+
+impl Eq for LinkLevel {}
+
+impl PartialOrd for LinkLevel {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for LinkLevel {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.fair
+            .total_cmp(&other.fair)
+            .then_with(|| self.link.cmp(&other.link))
+    }
 }
 
 #[cfg(test)]
@@ -538,5 +1034,74 @@ mod tests {
         let timed = vec![TimedFlow { rf: fl[0].clone(), start: 1.0 }];
         let res = sim.run(&timed);
         assert!(res.finish[0] > 1.0);
+    }
+
+    fn assert_equivalent(opts: DesOpts, topo: &Topology, timed: &[TimedFlow]) {
+        let sim = DesSim::new(topo, opts);
+        let inc = sim.run(timed);
+        let ora = sim.run_oracle(timed);
+        for (i, (a, b)) in inc.finish.iter().zip(&ora.finish).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-30);
+            assert!(rel < 1e-9, "flow {i}: inc {a} vs oracle {b}");
+        }
+        assert_eq!(inc.contributors, ora.contributors, "contributor sets");
+        assert_eq!(inc.victims, ora.victims, "victim sets");
+    }
+
+    #[test]
+    fn incremental_matches_oracle_incast() {
+        let t = setup();
+        let fl = routed(
+            &t,
+            (0..8).map(|i| Flow::new(i * 8, 200, 32u64 << 20)).collect(),
+        );
+        let timed: Vec<TimedFlow> = fl
+            .iter()
+            .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
+            .collect();
+        assert_equivalent(DesOpts::default(), &t, &timed);
+        assert_equivalent(
+            DesOpts { congestion_mgmt: false, ..DesOpts::default() },
+            &t,
+            &timed,
+        );
+    }
+
+    #[test]
+    fn incremental_matches_oracle_staggered() {
+        let t = setup();
+        let fl = routed(
+            &t,
+            (0..12)
+                .map(|i| Flow::new(i * 4, 128 + i * 2, (4u64 + i as u64) << 20))
+                .collect(),
+        );
+        let timed: Vec<TimedFlow> = fl
+            .iter()
+            .enumerate()
+            .map(|(i, rf)| TimedFlow {
+                rf: rf.clone(),
+                start: (i % 4) as f64 * 1e-3,
+            })
+            .collect();
+        assert_equivalent(DesOpts::default(), &t, &timed);
+    }
+
+    #[test]
+    fn incremental_matches_oracle_disjoint_components() {
+        // two flow groups in different dragonfly groups: the incremental
+        // solver must keep them in independent components
+        let t = setup();
+        // group 0 -> group 3 and group 1 -> group 2 (64 NICs per group in
+        // small(4,4)): disjoint NICs, locals and globals
+        let mut flows: Vec<Flow> =
+            (0..4).map(|i| Flow::new(i, 200 + i, 8u64 << 20)).collect();
+        flows.extend((0..4).map(|i| Flow::new(64 + i, 128 + i, 8u64 << 20)));
+        let fl = routed(&t, flows);
+        let timed: Vec<TimedFlow> = fl
+            .iter()
+            .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
+            .collect();
+        assert_equivalent(DesOpts::default(), &t, &timed);
     }
 }

@@ -6,6 +6,10 @@
 //! * [`des`] — flow-level event-driven simulation with max-min fair
 //!   bandwidth sharing, adaptive routing and the congestion-management
 //!   behaviour of §3.1 (incast contributor throttling, victim protection).
+//!   Two solvers: the incremental component re-solver ([`DesSim::run`])
+//!   that scales to campaign-sized flow counts, and the dense
+//!   full-recompute oracle ([`DesSim::run_oracle`]) it is validated
+//!   against (EXPERIMENTS.md §Perf).
 //! * [`rounds`] — collectives decomposed into permutation rounds; each
 //!   round is costed by link-load analysis. Scales to the full machine.
 //! * [`analytic`] — closed-form link-load analysis for uniform patterns
@@ -18,6 +22,7 @@ pub mod qos;
 pub mod routing;
 pub mod rounds;
 
+pub use des::{DesOpts, DesSim, TimedFlow};
 pub use load::LoadMap;
 pub use qos::TrafficClass;
 pub use routing::Router;

@@ -14,6 +14,7 @@
 
 use super::{BufLoc, Flow, FlowTimes, LoadMap, RoutedFlow};
 use crate::topology::{Path, Topology};
+use std::collections::HashMap;
 
 /// Zero-load + contention cost evaluation, shared by all tiers.
 pub struct CostModel<'t> {
@@ -118,6 +119,58 @@ impl<'t> CostModel<'t> {
         FlowTimes::from_vec(per_flow)
     }
 
+    /// Pessimistic completion estimate for *timed* flows: per-flow
+    /// completion = start + zero-load latency + bottleneck service, with
+    /// every flow's load counted on its links regardless of temporal
+    /// overlap, and link bandwidths scaled by the same `degraded`
+    /// multipliers the DES applies (pass `DesOpts::degraded` so the two
+    /// tiers price the same fabric). Nearly always an over-estimate,
+    /// since flows disjoint in time do not actually contend — though not
+    /// a strict bound: when a sharing flow completes and leaves the
+    /// survivor issue-cap-limited, the link runs unsaturated and DES can
+    /// finish marginally later. The campaign engine uses it as a cheap
+    /// cross-tier sanity bracket on each scenario's DES makespan.
+    pub fn eval_timed(
+        &self,
+        flows: &[super::des::TimedFlow],
+        degraded: &HashMap<crate::topology::LinkId, f64>,
+    ) -> FlowTimes {
+        let mut bytes_on = LoadMap::new();
+        let mut msgs_on = LoadMap::new();
+        for tf in flows {
+            bytes_on.add_path(&tf.rf.path.links, tf.rf.flow.bytes as f64);
+            msgs_on.add(tf.rf.path.links[0], 1.0);
+            msgs_on.add(*tf.rf.path.links.last().unwrap(), 1.0);
+        }
+        let per_flow = flows
+            .iter()
+            .map(|tf| {
+                let rf = &tf.rf;
+                let mut service: f64 = rf.flow.bytes as f64
+                    / self.rank_issue_bw(rf.flow.buf);
+                for l in &rf.path.links {
+                    let bw = match l {
+                        crate::topology::LinkId::NicUp(_)
+                        | crate::topology::LinkId::NicDown(_) => {
+                            self.nic_eff_bw(rf.flow.buf)
+                        }
+                        _ => self.topo.link_bw(l),
+                    } * degraded.get(l).copied().unwrap_or(1.0);
+                    let mut t = bytes_on.get(l) / bw;
+                    let m = msgs_on.get(l);
+                    if m > 0.0 {
+                        t = t.max(m / self.topo.cfg.nic_msg_rate);
+                    }
+                    service = service.max(t);
+                }
+                tf.start
+                    + self.msg_latency(&rf.path, rf.flow.bytes, rf.flow.buf)
+                    + service
+            })
+            .collect();
+        FlowTimes::from_vec(per_flow)
+    }
+
     /// Route (adaptively) and evaluate a round in one step.
     pub fn run_round(
         &self,
@@ -217,6 +270,31 @@ mod tests {
         let mut r2 = Router::new(&t);
         let gpu = cm.run_round(&mut r2, &[Flow::new(0, 200, bytes).gpu()]);
         assert!(gpu.makespan > host.makespan);
+    }
+
+    #[test]
+    fn eval_timed_bounds_des_and_shifts_by_start() {
+        use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
+        let t = topo();
+        let cm = CostModel::new(&t);
+        let mut r = Router::new(&t);
+        let flows = [Flow::new(0, 200, 8 << 20), Flow::new(8, 208, 8 << 20)];
+        let timed: Vec<TimedFlow> = flows
+            .iter()
+            .enumerate()
+            .map(|(i, f)| TimedFlow {
+                rf: RoutedFlow { path: r.route(f), flow: f.clone() },
+                start: i as f64 * 0.25,
+            })
+            .collect();
+        let ub = cm.eval_timed(&timed, &HashMap::new());
+        assert!(ub.per_flow[1] >= 0.25, "start must shift the bound");
+        let des = DesSim::new(&t, DesOpts::default()).run(&timed);
+        for (i, (&u, &d)) in
+            ub.per_flow.iter().zip(des.finish.iter()).enumerate()
+        {
+            assert!(u >= d * 0.999, "flow {i}: UB {u} < DES {d}");
+        }
     }
 
     #[test]

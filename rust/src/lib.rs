@@ -24,8 +24,23 @@
 //! let machine = Machine::new(&cfg);
 //! println!("{}", machine.spec_table());   // paper Table 1
 //! ```
+//!
+//! Campaign runner (parallel multi-scenario sweeps with deterministic,
+//! byte-stable JSON reports — see [`campaign`]):
+//! ```no_run
+//! use aurorasim::campaign::{pool, Campaign};
+//! use aurorasim::config::AuroraConfig;
+//!
+//! let c = Campaign::standard(&AuroraConfig::small(8, 4), 0xA112a);
+//! let report = c.run(pool::default_threads());
+//! println!("{}", report.render_table());
+//! report.write("campaign.json").unwrap();
+//! ```
+//! The same suite is reachable as `repro campaign [threads] [out.json]`
+//! from the CLI and as experiment id `campaign` in `repro reproduce`.
 
 pub mod apps;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod fabric;

@@ -7,12 +7,14 @@
 //! repro functional [dir]             PJRT end-to-end validations
 //! repro validate [nodes]             fabric-validation ladder demo
 //! repro launch <nodes> <ppn> <app>   run a benchmark via the launcher
+//! repro campaign [threads] [out]     parallel scenario sweep (JSON report)
 //! ```
 //!
 //! (The registry is offline in this environment, so argument parsing is
 //! hand-rolled — no clap.)
 
 use anyhow::{bail, Result};
+use aurorasim::campaign::{pool, Campaign};
 use aurorasim::config::AuroraConfig;
 use aurorasim::coordinator::{JobSpec, Launcher};
 use aurorasim::machine::Machine;
@@ -23,7 +25,8 @@ use aurorasim::validate::{NodeFault, Validator};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <spec|list|reproduce|functional|validate|launch> ..."
+        "usage: repro \
+         <spec|list|reproduce|functional|validate|launch|campaign> ..."
     );
     std::process::exit(2);
 }
@@ -120,6 +123,28 @@ fn main() -> Result<()> {
                     );
                 }
                 _ => bail!("unknown app '{app}' (allreduce|alltoall|barrier)"),
+            }
+        }
+        "campaign" => {
+            // repro campaign [threads] [out.json] — the standard scenario
+            // sweep through the launcher's prolog/epilog gates
+            let threads: usize = args
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or_else(pool::default_threads);
+            let cfg = AuroraConfig::small(8, 4);
+            let m = Machine::new(&cfg);
+            let mut l = Launcher::new(&m);
+            let c = Campaign::standard(&cfg, aurorasim::reproduce::CAMPAIGN_SEED);
+            let (rep, offlined) = l.launch_campaign(&c, threads)?;
+            println!("{}", rep.render_table());
+            if !offlined.is_empty() {
+                println!("epilog offlined nodes: {offlined:?}");
+            }
+            if let Some(out) = args.get(2) {
+                rep.write(out)?;
+                println!("report written to {out}");
             }
         }
         _ => usage(),

@@ -22,7 +22,9 @@ pub const ALL: [&str; 17] = [
     "fig17", "fig18",
 ];
 /// ...continued (kept in two arrays to document the §5.3 block).
-pub const ALL2: [&str; 4] = ["fig19", "fig20", "table5", "table6"];
+/// `campaign` runs the standard multi-scenario sweep through the
+/// campaign engine (see [`crate::campaign`]).
+pub const ALL2: [&str; 5] = ["fig19", "fig20", "table5", "table6", "campaign"];
 
 pub fn all_ids() -> Vec<&'static str> {
     ALL.iter().chain(ALL2.iter()).copied().collect()
@@ -53,6 +55,7 @@ pub fn run(id: &str) -> Result<String> {
         "fig20" => fig20(&aurora),
         "table5" => fmm_table(RmaKind::Get),
         "table6" => fmm_table(RmaKind::Put),
+        "campaign" => campaign_experiment(),
         _ => bail!("unknown experiment '{id}' (see `repro list`)"),
     })
 }
@@ -469,6 +472,80 @@ fn fmm_table(kind: RmaKind) -> String {
     s
 }
 
+/// Deterministic campaign seed shared by the reproduction harness, the
+/// CLI default and the golden fixtures.
+pub const CAMPAIGN_SEED: u64 = 0xA112a;
+
+fn campaign_experiment() -> String {
+    let cfg = AuroraConfig::small(8, 4);
+    let c = crate::campaign::Campaign::standard(&cfg, CAMPAIGN_SEED);
+    let rep = c.run(crate::campaign::pool::default_threads());
+    let mut s = header(
+        "Campaign — standard fabric scenario sweep (reduced scale)",
+        "§3.8.2 GPCNet isolated/congested, §3.1 incast fan-ins, §3.4 \
+         degraded lanes, §5.1 collective rounds",
+    );
+    s.push_str(&rep.render_table());
+    s
+}
+
+/// Headline scalar per experiment, keyed for the golden regression
+/// fixtures in `rust/tests/golden/` (tests/golden_reproduce.rs). Values
+/// are model outputs, not paper numbers; the golden file pins them so a
+/// perf refactor cannot silently shift what the reproduction reports.
+pub fn key_metrics() -> Vec<(&'static str, f64)> {
+    let cfg = AuroraConfig::aurora();
+    let mut m: Vec<(&'static str, f64)> = Vec::new();
+    let hpl_9234 = apps::hpl::performance(&cfg, 9234);
+    m.push(("hpl_rate_9234", hpl_9234.rate));
+    m.push(("hpl_efficiency_9234", hpl_9234.efficiency));
+    m.push(("hpl_rate_5439", apps::hpl::performance(&cfg, 5439).rate));
+    m.push(("hpl_mxp_rate_9500", apps::hpl_mxp::performance(&cfg, 9500).rate));
+    m.push((
+        "graph500_gteps_8192",
+        apps::graph500::performance(&cfg, 8192, 42).gteps,
+    ));
+    m.push(("hpcg_pflops_4096", apps::hpcg::performance(&cfg, 4096).pflops));
+    m.push((
+        "alltoall_peak_bw",
+        apps::alltoall::Alltoall::paper().peak(&cfg),
+    ));
+    m.push((
+        "mbw_mr_10262x8_1m",
+        apps::osu::mbw_mr(&cfg, 10_262, 8, 1 << 20),
+    ));
+    m.push(("hacc_eff_8192", apps::hacc::fig17(&cfg)[2].efficiency));
+    m.push((
+        "nekbone_eff_4096",
+        apps::nekbone::fig18(&cfg, &[128, 4096])[1].efficiency,
+    ));
+    m.push((
+        "lammps_eff_9216",
+        apps::lammps::fig20(&cfg, &[128, 9216])[1].efficiency,
+    ));
+    // campaign scenarios: pin every makespan of the standard sweep
+    let small = AuroraConfig::small(8, 4);
+    let rep = crate::campaign::Campaign::standard(&small, CAMPAIGN_SEED)
+        .run_serial();
+    const CAMPAIGN_KEYS: [&str; 10] = [
+        "campaign_gpcnet_isolated",
+        "campaign_gpcnet_congested",
+        "campaign_gpcnet_congested_nocm",
+        "campaign_incast_8x16",
+        "campaign_incast_8x16_nocm",
+        "campaign_uniform_512",
+        "campaign_permutation_256",
+        "campaign_ring_256",
+        "campaign_degraded_half_bw",
+        "campaign_staggered_256",
+    ];
+    for (key, r) in CAMPAIGN_KEYS.iter().zip(&rep.results) {
+        debug_assert_eq!(format!("campaign_{}", r.name).as_str(), *key);
+        m.push((*key, r.makespan));
+    }
+    m
+}
+
 // ----------------------------------------------------------- functional
 
 /// End-to-end functional validations through the PJRT artifacts.
@@ -556,6 +633,27 @@ mod tests {
     #[test]
     fn unknown_id_errors() {
         assert!(run("fig99").is_err());
+    }
+
+    #[test]
+    fn campaign_experiment_reports_every_scenario() {
+        let out = run("campaign").unwrap();
+        for name in ["gpcnet_isolated", "incast_8x16", "degraded_half_bw"] {
+            assert!(out.contains(name), "missing {name}: {out}");
+        }
+    }
+
+    #[test]
+    fn key_metrics_are_finite_and_keyed_uniquely() {
+        let m = key_metrics();
+        assert!(m.len() >= 15, "{}", m.len());
+        let mut keys: Vec<&str> = m.iter().map(|(k, _)| *k).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), m.len(), "duplicate metric keys");
+        for (k, v) in &m {
+            assert!(v.is_finite() && *v > 0.0, "{k} = {v}");
+        }
     }
 
     #[test]

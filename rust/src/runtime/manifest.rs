@@ -1,10 +1,52 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust runtime (shapes, dtypes, output arity, FLOP estimates).
+//! Rust runtime (shapes, dtypes, output arity, FLOP estimates) — plus
+//! [`RunInfo`], the provenance header stamped onto every JSON report this
+//! crate writes (campaign runs, golden fixtures), so downstream consumers
+//! can version-check what they are parsing.
 
 use crate::util::Json;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// Provenance header for machine-written JSON reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunInfo {
+    /// Report schema tag, e.g. `aurorasim.campaign/v1`.
+    pub schema: String,
+    /// Generator identity (crate + version).
+    pub generator: String,
+}
+
+impl RunInfo {
+    pub fn new(schema: &str) -> Self {
+        Self {
+            schema: schema.to_string(),
+            generator: format!("aurorasim {}", env!("CARGO_PKG_VERSION")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(self.schema.clone())),
+            ("generator", Json::str(self.generator.clone())),
+        ])
+    }
+
+    /// Validate that a report's `info` header carries `schema`.
+    pub fn check(root: &Json, schema: &str) -> Result<()> {
+        let got = root
+            .get("info")
+            .and_then(|i| i.get("schema"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("report missing info.schema"))?;
+        ensure!(
+            got == schema,
+            "schema mismatch: report is '{got}', expected '{schema}'"
+        );
+        Ok(())
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
@@ -161,5 +203,14 @@ mod tests {
             assert!(m.len() >= 10);
             assert!(m.get("mxp_gemm").is_some());
         }
+    }
+
+    #[test]
+    fn runinfo_roundtrip_and_check() {
+        let info = RunInfo::new("aurorasim.test/v1");
+        let root = Json::obj(vec![("info", info.to_json())]);
+        RunInfo::check(&root, "aurorasim.test/v1").unwrap();
+        assert!(RunInfo::check(&root, "aurorasim.test/v2").is_err());
+        assert!(RunInfo::check(&Json::Null, "aurorasim.test/v1").is_err());
     }
 }

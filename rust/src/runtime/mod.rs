@@ -13,9 +13,15 @@
 
 pub mod manifest;
 pub mod roofline;
+mod xla_stub;
 
 pub use manifest::{ArtifactSpec, Manifest};
 pub use roofline::{Engine, NodeRoofline};
+
+// Offline build: the PJRT bindings are stubbed (see xla_stub.rs). Swap
+// for `use ::xla;` plus an `xla = "0.1"` dependency to execute real
+// artifacts.
+use xla_stub as xla;
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;

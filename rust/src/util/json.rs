@@ -1,6 +1,12 @@
-//! Minimal JSON parser for the artifact manifest (`artifacts/manifest.json`
-//! written by python/compile/aot.py). Supports the full JSON grammar we
-//! emit: objects, arrays, strings (with escapes), numbers, bools, null.
+//! Minimal JSON parser + serializer (the registry is offline; serde is
+//! replaced by this module). Parses the artifact manifest written by
+//! python/compile/aot.py and serializes campaign reports and golden test
+//! fixtures. Supports the full JSON grammar we emit: objects, arrays,
+//! strings (with escapes), numbers, bools, null. Serialization is
+//! deterministic: object keys are `BTreeMap`-ordered and numbers use
+//! Rust's shortest round-trip `f64` formatting, so equal values always
+//! produce byte-identical text (the campaign determinism tests rely on
+//! this).
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -72,6 +78,125 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Compact deterministic serialization (no whitespace).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    /// Pretty deterministic serialization (2-space indent).
+    pub fn dump_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), 0);
+        s.push('\n');
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in, colon) = match indent {
+            Some(w) => (
+                "\n",
+                " ".repeat(w * depth),
+                " ".repeat(w * (depth + 1)),
+                ": ",
+            ),
+            None => ("", String::new(), String::new(), ":"),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                // JSON has no NaN/Inf; emit null (matches python's strict
+                // encoders with allow_nan=False semantics)
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    e.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    write_escaped(out, k);
+                    out.push_str(colon);
+                    v.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+
+    // ---- construction helpers (keep call sites terse) ----
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn arr(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -293,5 +418,40 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse(r#""§3.8 µs — ok""#).unwrap();
         assert_eq!(j.as_str(), Some("§3.8 µs — ok"));
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let j = Json::obj(vec![
+            ("name", Json::str("incast_64")),
+            ("makespan", Json::num(0.0125)),
+            ("flows", Json::arr(vec![Json::num(1.0), Json::num(2.5)])),
+            ("ok", Json::Bool(true)),
+            ("skip", Json::Null),
+        ]);
+        for text in [j.dump(), j.dump_pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), j, "text: {text}");
+        }
+    }
+
+    #[test]
+    fn dump_is_deterministic_and_sorted() {
+        let a = Json::obj(vec![("b", Json::num(2.0)), ("a", Json::num(1.0))]);
+        let b = Json::obj(vec![("a", Json::num(1.0)), ("b", Json::num(2.0))]);
+        assert_eq!(a.dump(), b.dump());
+        assert_eq!(a.dump(), r#"{"a":1,"b":2}"#);
+    }
+
+    #[test]
+    fn dump_escapes_strings() {
+        let j = Json::str("a\"b\\c\nd");
+        let text = j.dump();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(Json::num(f64::NAN).dump(), "null");
+        assert_eq!(Json::num(f64::INFINITY).dump(), "null");
     }
 }

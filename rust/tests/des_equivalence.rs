@@ -1,0 +1,227 @@
+//! Incremental-vs-oracle DES equivalence sweep + campaign determinism.
+//!
+//! The incremental solver (`DesSim::run`) re-solves only the component of
+//! flows affected by each event; the oracle (`DesSim::run_oracle`)
+//! re-solves the whole dense system. Both converge to the same unique
+//! max-min fixpoint, so per-flow finish times must agree to floating-
+//! point noise. This suite sweeps >= 50 seeded mixed workloads (uniform,
+//! incast, degraded links, staggered arrivals, congestion management
+//! on/off) asserting 1e-9 relative agreement, and checks that the
+//! campaign engine's parallel execution is byte-identical to serial.
+
+use aurorasim::campaign::{Campaign, Scenario, Workload};
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{DesOpts, DesSim, TimedFlow};
+use aurorasim::fabric::{Flow, RoutedFlow, Router};
+use aurorasim::topology::Topology;
+use aurorasim::util::Pcg;
+use std::collections::HashMap;
+
+const REL_TOL: f64 = 1e-9;
+
+fn assert_equivalent(
+    topo: &Topology,
+    opts: &DesOpts,
+    timed: &[TimedFlow],
+    what: &str,
+) {
+    let sim = DesSim::new(topo, opts.clone());
+    let inc = sim.run(timed);
+    let ora = sim.run_oracle(timed);
+    assert_eq!(inc.finish.len(), ora.finish.len(), "{what}");
+    for (i, (a, b)) in inc.finish.iter().zip(&ora.finish).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-30);
+        assert!(
+            rel < REL_TOL,
+            "{what} flow {i}: incremental {a:.15e} vs oracle {b:.15e} \
+             (rel {rel:.2e})"
+        );
+    }
+    assert_eq!(inc.contributors, ora.contributors, "{what}: contributors");
+    assert_eq!(inc.victims, ora.victims, "{what}: victims");
+    let rel = (inc.makespan - ora.makespan).abs() / ora.makespan.max(1e-30);
+    assert!(rel < REL_TOL, "{what}: makespan rel {rel:.2e}");
+}
+
+/// One randomized mixed case: uniform background + an incast clique +
+/// optionally degraded links and staggered arrivals.
+fn mixed_case(
+    topo: &Topology,
+    rng: &mut Pcg,
+    n_uniform: usize,
+    incast_fanin: usize,
+    degrade: bool,
+    stagger: bool,
+) -> (Vec<TimedFlow>, DesOpts) {
+    let nics = topo.cfg.compute_endpoints() as u64;
+    let mut router = Router::with_seed(topo, rng.next_u64());
+    let mut timed: Vec<TimedFlow> = Vec::new();
+    let push = |router: &mut Router, f: Flow, start: f64,
+                timed: &mut Vec<TimedFlow>| {
+        let path = router.route(&f);
+        timed.push(TimedFlow { rf: RoutedFlow { path, flow: f }, start });
+    };
+    for i in 0..n_uniform {
+        let src = rng.gen_range(nics) as u32;
+        let dst = ((src as u64 + 1 + rng.gen_range(nics - 1)) % nics) as u32;
+        let bytes = 1 + rng.gen_range(4 << 20);
+        let start = if stagger {
+            // millisecond-granular so arrival batching is well defined
+            (i % 5) as f64 * 1e-3
+        } else {
+            0.0
+        };
+        push(&mut router, Flow::new(src, dst, bytes), start, &mut timed);
+    }
+    if incast_fanin > 0 {
+        let root = rng.gen_range(nics) as u32;
+        for _ in 0..incast_fanin {
+            let mut src = rng.gen_range(nics) as u32;
+            if src == root {
+                src = (src + 9) % nics as u32;
+            }
+            let bytes = 1 + rng.gen_range(8 << 20);
+            push(&mut router, Flow::new(src, root, bytes), 0.0, &mut timed);
+        }
+    }
+    let mut opts = DesOpts::default();
+    if degrade {
+        let mut degraded = HashMap::new();
+        for tf in timed.iter().step_by(3) {
+            for l in &tf.rf.path.links {
+                degraded.insert(*l, 0.25 + 0.5 * rng.gen_f64());
+            }
+        }
+        opts.degraded = degraded;
+    }
+    (timed, opts)
+}
+
+#[test]
+fn sweep_uniform_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE01);
+    for case in 0..14 {
+        let (timed, opts) = mixed_case(&topo, &mut rng, 24, 0, false, false);
+        assert_equivalent(&topo, &opts, &timed, &format!("uniform {case}"));
+    }
+}
+
+#[test]
+fn sweep_incast_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE02);
+    for case in 0..14 {
+        let fanin = 4 + rng.gen_usize(12);
+        let (timed, mut opts) =
+            mixed_case(&topo, &mut rng, 12, fanin, false, false);
+        // alternate congestion management to cover the victim path
+        opts.congestion_mgmt = case % 2 == 0;
+        assert_equivalent(
+            &topo,
+            &opts,
+            &timed,
+            &format!("incast {case} fanin {fanin} cm {}",
+                opts.congestion_mgmt),
+        );
+    }
+}
+
+#[test]
+fn sweep_degraded_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE03);
+    for case in 0..12 {
+        let (timed, opts) = mixed_case(&topo, &mut rng, 20, 6, true, false);
+        assert_equivalent(&topo, &opts, &timed, &format!("degraded {case}"));
+    }
+}
+
+#[test]
+fn sweep_staggered_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE04);
+    for case in 0..12 {
+        let (timed, mut opts) =
+            mixed_case(&topo, &mut rng, 20, 5, case % 3 == 0, true);
+        opts.congestion_mgmt = case % 2 == 1;
+        assert_equivalent(&topo, &opts, &timed, &format!("staggered {case}"));
+    }
+}
+
+#[test]
+fn empty_and_single_flow() {
+    let topo = Topology::new(&AuroraConfig::small(4, 4));
+    let sim = DesSim::new(&topo, DesOpts::default());
+    assert!(sim.run(&[]).finish.is_empty());
+    let mut router = Router::new(&topo);
+    let f = Flow::new(0, 200, 1 << 20);
+    let timed = vec![TimedFlow {
+        rf: RoutedFlow { path: router.route(&f), flow: f },
+        start: 0.5,
+    }];
+    assert_equivalent(&topo, &DesOpts::default(), &timed, "single flow");
+}
+
+// ---------------------------------------------------------------- campaign
+
+#[test]
+fn campaign_parallel_matches_serial_byte_for_byte() {
+    let cfg = AuroraConfig::small(6, 4);
+    let campaign = Campaign::standard(&cfg, 0xC0FFEE);
+    let serial = campaign.run_serial().to_json().dump_pretty();
+    for threads in [2usize, 4, 8] {
+        let parallel = campaign.run(threads).to_json().dump_pretty();
+        assert_eq!(serial, parallel, "threads = {threads}");
+    }
+}
+
+#[test]
+fn campaign_is_seed_stable_across_scenario_order() {
+    // seeds derive from names, so reordering scenarios must not change
+    // any individual result
+    let cfg = AuroraConfig::small(4, 4);
+    let fwd = Campaign::standard(&cfg, 7).run_serial();
+    let mut rev = Campaign::standard(&cfg, 7);
+    rev.scenarios.reverse();
+    let bwd = rev.run_serial();
+    for r in &fwd.results {
+        let other = bwd
+            .results
+            .iter()
+            .find(|o| o.name == r.name)
+            .expect("scenario present in both orders");
+        assert_eq!(r, other, "{}", r.name);
+    }
+}
+
+#[test]
+fn campaign_scenarios_run_under_both_solvers() {
+    // every standard workload, replayed through the oracle: the campaign
+    // engine's results must not depend on which solver is used
+    let cfg = AuroraConfig::small(4, 4);
+    for s in &Campaign::standard(&cfg, 3).scenarios {
+        let topo = Topology::new(&s.cfg);
+        let (timed, opts) = s.materialize(&topo);
+        if timed.is_empty() {
+            continue;
+        }
+        assert_equivalent(&topo, &opts, &timed, &s.name);
+    }
+}
+
+#[test]
+fn custom_scenario_roundtrip() {
+    let cfg = AuroraConfig::small(4, 4);
+    let s = Scenario::new(
+        "custom",
+        cfg,
+        DesOpts::default(),
+        Workload::Staggered { flows: 40, bytes: 2 << 20, window_s: 0.01 },
+        99,
+    );
+    let a = s.run();
+    let b = s.run();
+    assert_eq!(a, b, "scenario execution must be deterministic");
+    assert!(a.makespan > 0.0);
+}

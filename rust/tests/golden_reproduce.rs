@@ -1,0 +1,132 @@
+//! Golden regression fixtures for the reproduction harness.
+//!
+//! `rust/tests/golden/reproduce.json` pins the headline scalar of each
+//! `reproduce::` experiment (JSON snapshot with a per-metric relative
+//! tolerance) so a perf refactor cannot silently shift the numbers the
+//! paper reproduction reports. Regenerate after an intentional model
+//! change with:
+//!
+//! ```bash
+//! UPDATE_GOLDEN=1 cargo test -q --test golden_reproduce
+//! ```
+//!
+//! Metrics computed by `reproduce::key_metrics()` but absent from the
+//! fixture (e.g. newly added scenarios before their first regeneration)
+//! produce a warning, not a failure, so adding metrics never breaks CI;
+//! metrics *in* the fixture must exist and match.
+
+use aurorasim::reproduce;
+use aurorasim::runtime::manifest::RunInfo;
+use aurorasim::util::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const SCHEMA: &str = "aurorasim.golden/v1";
+const DEFAULT_RTOL: f64 = 0.05;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("reproduce.json")
+}
+
+fn load_golden() -> Option<BTreeMap<String, (f64, f64)>> {
+    let text = std::fs::read_to_string(golden_path()).ok()?;
+    let root = Json::parse(&text).expect("golden fixture must be valid JSON");
+    RunInfo::check(&root, SCHEMA).expect("golden fixture schema");
+    let metrics = root
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .expect("golden fixture missing 'metrics'");
+    Some(
+        metrics
+            .iter()
+            .map(|(k, v)| {
+                let value = v
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .unwrap_or_else(|| panic!("{k}: missing value"));
+                let rtol = v
+                    .get("rtol")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(DEFAULT_RTOL);
+                (k.clone(), (value, rtol))
+            })
+            .collect(),
+    )
+}
+
+fn write_golden(
+    computed: &[(&'static str, f64)],
+    old: &BTreeMap<String, (f64, f64)>,
+) {
+    let metrics = Json::Obj(
+        computed
+            .iter()
+            .map(|(k, v)| {
+                let rtol =
+                    old.get(*k).map(|(_, r)| *r).unwrap_or(DEFAULT_RTOL);
+                (
+                    k.to_string(),
+                    Json::obj(vec![
+                        ("value", Json::num(*v)),
+                        ("rtol", Json::num(rtol)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let root = Json::obj(vec![
+        ("info", RunInfo::new(SCHEMA).to_json()),
+        ("metrics", metrics),
+    ]);
+    let path = golden_path();
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(&path, root.dump_pretty()).unwrap();
+    eprintln!("golden fixture regenerated at {}", path.display());
+}
+
+#[test]
+fn reproduce_metrics_match_golden() {
+    let computed = reproduce::key_metrics();
+    let golden = load_golden().unwrap_or_default();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        write_golden(&computed, &golden);
+        return;
+    }
+    assert!(
+        !golden.is_empty(),
+        "missing golden fixture {} — run UPDATE_GOLDEN=1 cargo test \
+         --test golden_reproduce",
+        golden_path().display()
+    );
+    let by_key: BTreeMap<&str, f64> =
+        computed.iter().map(|(k, v)| (*k, *v)).collect();
+    let mut failures = Vec::new();
+    for (key, (want, rtol)) in &golden {
+        match by_key.get(key.as_str()) {
+            None => failures.push(format!(
+                "{key}: in golden fixture but no longer computed"
+            )),
+            Some(got) => {
+                let rel = (got - want).abs() / want.abs().max(1e-30);
+                if rel > *rtol {
+                    failures.push(format!(
+                        "{key}: measured {got:.6e} vs golden {want:.6e} \
+                         (rel {rel:.3} > rtol {rtol})"
+                    ));
+                }
+            }
+        }
+    }
+    for (key, _) in &computed {
+        if !golden.contains_key(*key) {
+            eprintln!(
+                "note: metric '{key}' not pinned yet — regenerate with \
+                 UPDATE_GOLDEN=1 to track it"
+            );
+        }
+    }
+    assert!(failures.is_empty(), "golden drift:\n{}", failures.join("\n"));
+}
