@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Bench regression gate (CI).
+
+Compares a fresh BENCH_fabric.json (written by
+`BENCH_JSON=BENCH_fabric.json cargo bench --bench fabric`) against the
+committed baseline `ci/bench_baseline.json`:
+
+* metrics: fail if current us_per_iter exceeds baseline by more than the
+  threshold (default +25%). Baseline values of null are *unpinned*
+  (bootstrap state): they warn and print the measured value so a
+  maintainer can pin them (or run with --update on a reference machine).
+  Improvements beyond the threshold pass but suggest re-pinning.
+* ratio_floors: machine-independent ratios (e.g. incremental/oracle DES
+  speedup) that must stay above their floor regardless of host speed.
+
+Usage:
+    python3 ci/check_bench.py BENCH_fabric.json [--threshold 0.25]
+                              [--baseline ci/bench_baseline.json]
+                              [--update]
+Exit code 0 = pass, 1 = regression.
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_fabric.json")
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed relative slowdown (0.25 = +25%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="write measured values into the baseline")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    if cur.get("schema") != "aurorasim.bench/v1":
+        print(f"error: unexpected schema {cur.get('schema')!r}")
+        return 1
+
+    cur_metrics = {k: v["us_per_iter"] for k, v in cur["metrics"].items()}
+    cur_ratios = cur.get("ratios", {})
+    failures, notes = [], []
+
+    for key, want in sorted(base.get("metrics", {}).items()):
+        if key.startswith("_"):
+            continue
+        got = cur_metrics.get(key)
+        if got is None:
+            failures.append(f"{key}: in baseline but missing from run")
+            continue
+        if want is None:
+            notes.append(f"{key}: unpinned baseline; measured "
+                         f"{got:.3f} us/iter")
+            continue
+        rel = (got - want) / want
+        if rel > args.threshold:
+            failures.append(
+                f"{key}: {got:.3f} us/iter vs baseline {want:.3f} "
+                f"(+{rel * 100:.0f}% > +{args.threshold * 100:.0f}%)")
+        elif rel < -args.threshold:
+            notes.append(
+                f"{key}: improved {rel * 100:.0f}% "
+                f"({want:.3f} -> {got:.3f} us/iter); consider re-pinning")
+
+    for key, floor in sorted(base.get("ratio_floors", {}).items()):
+        if key.startswith("_"):
+            continue
+        got = cur_ratios.get(key)
+        if got is None:
+            failures.append(f"{key}: ratio floor set but ratio missing")
+        elif got < floor:
+            failures.append(f"{key}: ratio {got:.2f} below floor {floor}")
+        else:
+            notes.append(f"{key}: ratio {got:.2f} (floor {floor}) ok")
+
+    for key in sorted(set(cur_metrics) - set(base.get("metrics", {}))):
+        notes.append(f"{key}: measured {cur_metrics[key]:.3f} us/iter "
+                     f"but not in baseline (add it to track)")
+
+    for n in notes:
+        print(f"note: {n}")
+    for f_ in failures:
+        print(f"FAIL: {f_}")
+
+    if args.update:
+        base.setdefault("metrics", {})
+        for key, val in cur_metrics.items():
+            base["metrics"][key] = round(val, 3)
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+
+    if failures:
+        print(f"{len(failures)} bench regression(s)")
+        return 1
+    print("bench gate: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,34 +1,81 @@
 //! Fabric-simulator hot-path benchmarks: adaptive routing throughput, the
-//! max-min DES solver, round evaluation at scale. These are the L3 paths
-//! the §Perf pass optimizes (see EXPERIMENTS.md §Perf).
+//! max-min DES solver (open- and closed-loop), round evaluation at scale.
+//! These are the L3 paths the §Perf pass optimizes (see EXPERIMENTS.md
+//! §Perf).
 //!
 //! Hand-rolled harness (offline build — no criterion): prints
-//! `name: time/iter` rows; `cargo bench` runs it.
+//! `name: time/iter` rows; `cargo bench --bench fabric` runs it. With
+//! `BENCH_JSON=<path>` set, a machine-readable report is also written —
+//! `{schema, bench, metrics: {key: {us_per_iter}}, ratios: {...}}` — and
+//! compared against `ci/bench_baseline.json` by `ci/check_bench.py` (the
+//! CI bench-regression gate; EXPERIMENTS.md §Bench gate).
 
 use aurorasim::config::AuroraConfig;
 use aurorasim::fabric::des::{DesOpts, DesSim};
 use aurorasim::fabric::rounds::CostModel;
-use aurorasim::fabric::{Flow, RoutedFlow, Router};
+use aurorasim::fabric::{workload, Flow, RoutedFlow, Router};
 use aurorasim::topology::Topology;
-use aurorasim::util::Pcg;
+use aurorasim::util::{Json, Pcg};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
-    timed(name, iters, f);
+/// Collected results: metric key -> seconds/iter, plus derived ratios.
+#[derive(Default)]
+struct Report {
+    metrics: Vec<(String, f64)>,
+    ratios: Vec<(String, f64)>,
 }
 
-/// Like `bench` but returns seconds/iter so callers can report ratios.
-fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    for _ in 0..iters.div_ceil(10).min(3) {
-        f(); // warmup
+impl Report {
+    /// Time `f` and record it under `key` (also printed human-readably).
+    fn timed<F: FnMut()>(
+        &mut self,
+        key: &str,
+        name: &str,
+        iters: usize,
+        mut f: F,
+    ) -> f64 {
+        for _ in 0..iters.div_ceil(10).min(3) {
+            f(); // warmup
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("{name:<48} {:>12.3} us/iter  ({iters} iters)", per * 1e6);
+        self.metrics.push((key.to_string(), per));
+        per
     }
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        f();
+
+    fn ratio(&mut self, key: &str, value: f64) {
+        self.ratios.push((key.to_string(), value));
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
-    println!("{name:<48} {:>12.3} us/iter  ({iters} iters)", per * 1e6);
-    per
+
+    /// Deterministic JSON (BTreeMap key order) for the CI gate.
+    fn to_json(&self) -> Json {
+        let metrics: BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![("us_per_iter", Json::num(v * 1e6))]),
+                )
+            })
+            .collect();
+        let ratios: BTreeMap<String, Json> = self
+            .ratios
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("aurorasim.bench/v1")),
+            ("bench", Json::str("fabric")),
+            ("metrics", Json::Obj(metrics)),
+            ("ratios", Json::Obj(ratios)),
+        ])
+    }
 }
 
 fn random_flows(topo: &Topology, n: usize, seed: u64) -> Vec<RoutedFlow> {
@@ -47,28 +94,35 @@ fn random_flows(topo: &Topology, n: usize, seed: u64) -> Vec<RoutedFlow> {
 
 fn main() {
     println!("== fabric benches ==");
+    let mut rep = Report::default();
     let aurora = Topology::new(&AuroraConfig::aurora());
     let small = Topology::new(&AuroraConfig::small(16, 16));
 
     // routing on the full 84,992-NIC machine
-    bench("route/aurora (1k flows, adaptive)", 20, || {
-        let mut router = Router::with_seed(&aurora, 7);
-        let mut rng = Pcg::new(9);
-        for _ in 0..1000 {
-            let src = rng.gen_range(84_992) as u32;
-            let dst = (src + 4096) % 84_992;
-            std::hint::black_box(router.route(&Flow::new(src, dst, 65536)));
-        }
-    });
+    rep.timed("route_aurora_1k", "route/aurora (1k flows, adaptive)", 20,
+        || {
+            let mut router = Router::with_seed(&aurora, 7);
+            let mut rng = Pcg::new(9);
+            for _ in 0..1000 {
+                let src = rng.gen_range(84_992) as u32;
+                let dst = (src + 4096) % 84_992;
+                std::hint::black_box(
+                    router.route(&Flow::new(src, dst, 65536)));
+            }
+        });
 
     // round evaluation at three sizes
     for n in [100usize, 1_000, 10_000] {
         let flows = random_flows(&aurora, n, 11);
         let cm = CostModel::new(&aurora);
-        bench(&format!("eval_round/aurora ({n} flows)"),
-              if n >= 10_000 { 5 } else { 30 }, || {
-            std::hint::black_box(cm.eval_round(&flows));
-        });
+        rep.timed(
+            &format!("eval_round_aurora_{n}"),
+            &format!("eval_round/aurora ({n} flows)"),
+            if n >= 10_000 { 5 } else { 30 },
+            || {
+                std::hint::black_box(cm.eval_round(&flows));
+            },
+        );
     }
 
     // DES: incremental component solver vs the dense full-recompute
@@ -82,23 +136,62 @@ fn main() {
             129..=512 => 3,
             _ => 1,
         };
-        let inc = timed(&format!("des/incremental ({n} flows)"), iters, || {
-            let sim = DesSim::new(&small, DesOpts::default());
-            std::hint::black_box(sim.run_simultaneous(&flows));
-        });
+        let inc = rep.timed(
+            &format!("des_incremental_{n}"),
+            &format!("des/incremental ({n} flows)"),
+            iters,
+            || {
+                let sim = DesSim::new(&small, DesOpts::default());
+                std::hint::black_box(sim.run_simultaneous(&flows));
+            },
+        );
         let run_oracle =
             n < 8192 || std::env::var_os("BENCH_ORACLE_8192").is_some();
         if run_oracle {
-            let ora = timed(&format!("des/oracle      ({n} flows)"), iters,
+            let ora = rep.timed(
+                &format!("des_oracle_{n}"),
+                &format!("des/oracle      ({n} flows)"),
+                iters,
                 || {
                     let sim = DesSim::new(&small, DesOpts::default());
-                    std::hint::black_box(sim.run_simultaneous_oracle(&flows));
-                });
+                    std::hint::black_box(
+                        sim.run_simultaneous_oracle(&flows));
+                },
+            );
             println!(
                 "des/speedup     ({n} flows)                      {:>10.1}x",
                 ora / inc
             );
+            rep.ratio(&format!("des_speedup_{n}"), ora / inc);
         }
+    }
+
+    // closed-loop DES: dependency-released ring rounds (the PR-2
+    // injection layer), incremental vs full-re-solve oracle
+    {
+        let nics = workload::spread_nics(&small, 32);
+        let mut router = Router::with_seed(&small, 17);
+        let rr = workload::ring_rounds(&nics, 16, 1 << 20);
+        let dag = workload::dag_from_rounds(&mut router, &rr, 0.0);
+        let inc = rep.timed(
+            "des_dag_ring_32x16",
+            "des/dag ring 32 ranks x 16 rounds",
+            5,
+            || {
+                let sim = DesSim::new(&small, DesOpts::default());
+                std::hint::black_box(sim.run_dag(&dag));
+            },
+        );
+        let ora = rep.timed(
+            "des_dag_oracle_ring_32x16",
+            "des/dag-oracle ring 32 ranks x 16 rounds",
+            5,
+            || {
+                let sim = DesSim::new(&small, DesOpts::default());
+                std::hint::black_box(sim.run_dag_oracle(&dag));
+            },
+        );
+        rep.ratio("des_dag_speedup_ring_32x16", ora / inc);
     }
 
     // incast + congestion classification
@@ -109,16 +202,28 @@ fn main() {
             RoutedFlow { path: router.route(&f), flow: f }
         })
         .collect();
-    bench("des/incast-64-to-1 (congestion mgmt)", 10, || {
-        let sim = DesSim::new(&small, DesOpts::default());
-        std::hint::black_box(sim.run_simultaneous(&incast));
-    });
+    rep.timed("des_incast_64", "des/incast-64-to-1 (congestion mgmt)", 10,
+        || {
+            let sim = DesSim::new(&small, DesOpts::default());
+            std::hint::black_box(sim.run_simultaneous(&incast));
+        });
 
     // analytic tier at full machine scale
     let cfg = AuroraConfig::aurora();
-    bench("analytic/alltoall 9658 nodes (per point)", 10_000, || {
-        std::hint::black_box(
-            aurorasim::fabric::analytic::alltoall_aggregate_bw(
-                &cfg, 9658, 16, 1 << 20));
-    });
+    rep.timed(
+        "analytic_alltoall_9658",
+        "analytic/alltoall 9658 nodes (per point)",
+        10_000,
+        || {
+            std::hint::black_box(
+                aurorasim::fabric::analytic::alltoall_aggregate_bw(
+                    &cfg, 9658, 16, 1 << 20));
+        },
+    );
+
+    if let Some(path) = std::env::var_os("BENCH_JSON") {
+        let text = rep.to_json().dump_pretty();
+        std::fs::write(&path, text).expect("write BENCH_JSON");
+        println!("bench report written to {}", path.to_string_lossy());
+    }
 }

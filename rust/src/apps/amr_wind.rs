@@ -9,8 +9,11 @@
 //! coarse-grid allreduces), and face halo exchanges.
 
 use crate::config::AuroraConfig;
+use crate::fabric::workload::{self, DagBuilder, DagWorkload};
+use crate::fabric::Router;
 use crate::machine::Machine;
 use crate::runtime::{Engine, NodeRoofline, Runtime};
+use crate::topology::Topology;
 use anyhow::Result;
 
 pub use super::ScalingPoint;
@@ -39,6 +42,34 @@ pub fn step_time(cfg: &AuroraConfig, nodes: usize) -> f64 {
     let t_mg_sync =
         vcycle_levels * bottom_iters * 10.0e-6 * ranks.log2().max(1.0);
     t_stencils + t_halo + t_mg_sync
+}
+
+/// Closed-loop AMR-Wind step trace (§5.3.3) as a dependency workload:
+/// per V-cycle, a smoothing compute interval, face-halo exchanges (±1
+/// neighbours, `halo_bytes` per face), and the bottom-solve residual
+/// allreduce (recursive-doubling rounds of 8-byte tokens — the
+/// latency-bound MLMG sync tax). Rounds are dependency-released, so
+/// congestion in a halo phase pushes the residual reduction — and every
+/// later V-cycle — out in time.
+pub fn step_dag(
+    topo: &Topology,
+    router: &mut Router,
+    ranks: usize,
+    halo_bytes: u64,
+) -> DagWorkload {
+    let nics = workload::spread_nics(topo, ranks);
+    let mut b = DagBuilder::new();
+    for _vcycle in 0..2 {
+        for &nic in &nics {
+            b.compute(nic, 50e-6); // level smoothing
+        }
+        let mut rounds =
+            vec![workload::neighbor_round(&nics, &[-1, 1], halo_bytes.max(1))];
+        // bottom-solve residual allreduce: latency-bound 8 B tokens
+        rounds.extend(workload::doubling_rounds(&nics, 8));
+        workload::push_rounds(&mut b, router, &rounds, 0.0);
+    }
+    b.finish()
 }
 
 /// Fig 19: FOM (billion cells / second) + weak-scaling efficiency.
@@ -103,6 +134,19 @@ mod tests {
             assert!(p.efficiency > 0.80, "{} nodes {}", p.nodes, p.efficiency);
         }
         assert!(pts.last().unwrap().efficiency < pts[0].efficiency + 1e-9);
+    }
+
+    #[test]
+    fn step_dag_runs_closed_loop() {
+        use crate::fabric::des::{DesOpts, DesSim};
+        let topo = Topology::new(&AuroraConfig::small(4, 4));
+        let mut router = Router::new(&topo);
+        let dag = step_dag(&topo, &mut router, 16, 1 << 20);
+        // per cycle: 16 compute + halo (16 x 2) + 4 doubling rounds x 16
+        assert_eq!(dag.len(), 2 * (16 + 32 + 4 * 16));
+        let res = DesSim::new(&topo, DesOpts::default()).run_dag(&dag);
+        // two smoothing intervals are serialized by the dependency chain
+        assert!(res.makespan > 100e-6, "{}", res.makespan);
     }
 
     #[test]

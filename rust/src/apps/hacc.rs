@@ -10,8 +10,11 @@
 
 use crate::config::AuroraConfig;
 use crate::fabric::analytic;
+use crate::fabric::workload::{self, DagBuilder, DagWorkload};
+use crate::fabric::Router;
 use crate::machine::Machine;
 use crate::runtime::{Engine, NodeRoofline, Runtime};
+use crate::topology::Topology;
 use anyhow::Result;
 
 pub use super::ScalingPoint;
@@ -58,6 +61,40 @@ pub fn step_time(cfg: &AuroraConfig, nodes: usize, ng: u64) -> f64 {
     // scale (the 1%/3% losses of Fig 17)
     let imbalance = 0.005 * (nodes as f64 / 128.0).log2().max(0.0);
     base * (1.0 + imbalance)
+}
+
+/// Closed-loop HACC step trace (§5.3.1) as a dependency workload: a
+/// short-range compute interval per rank, the long-range FFT transpose
+/// (pencil all2all — P-1 pairwise rounds of grid_bytes/P), then the
+/// tree-walk halo exchange (±1/±2/±3 neighbour faces). Each phase is
+/// dependency-released by the previous one, so fabric congestion during
+/// the transpose delays the halo — the coupling the analytic
+/// [`step_time`] model cannot express. Reusable by the campaign engine
+/// (`campaign::Workload::AppPhase`) and the equivalence sweeps.
+pub fn step_dag(
+    topo: &Topology,
+    router: &mut Router,
+    ranks: usize,
+    grid_bytes: u64,
+) -> DagWorkload {
+    let nics = workload::spread_nics(topo, ranks);
+    let mut b = DagBuilder::new();
+    // per-rank short-range kernel: first-round transfers wait for it
+    for &nic in &nics {
+        b.compute(nic, 200e-6);
+    }
+    let mut rounds = Vec::new();
+    // FFT transpose: pairwise all2all of grid_bytes / ranks per pair
+    let chunk = (grid_bytes / ranks.max(1) as u64).max(1);
+    rounds.extend(workload::pairwise_rounds(&nics, chunk));
+    // halo exchange: 6 faces in the 1-D embedding, 1/8 of the grid slab
+    rounds.push(workload::neighbor_round(
+        &nics,
+        &[-3, -2, -1, 1, 2, 3],
+        (grid_bytes / 8).max(1),
+    ));
+    workload::push_rounds(&mut b, router, &rounds, 0.0);
+    b.finish()
 }
 
 /// Fig 17: weak-scaling times + efficiencies for the Table 3 points.
@@ -130,6 +167,19 @@ mod tests {
             assert_eq!(w[1].0, w[0].0 * 8);
             assert_eq!(w[1].1, w[0].1 * 2);
         }
+    }
+
+    #[test]
+    fn step_dag_is_closed_loop_and_runs() {
+        use crate::fabric::des::{DesOpts, DesSim};
+        let topo = Topology::new(&AuroraConfig::small(4, 4));
+        let mut router = Router::new(&topo);
+        let dag = step_dag(&topo, &mut router, 12, 8 << 20);
+        // 12 compute roots + pairwise (11 rounds x 12) + halo (12 x 6)
+        assert_eq!(dag.len(), 12 + 11 * 12 + 12 * 6);
+        let res = DesSim::new(&topo, DesOpts::default()).run_dag(&dag);
+        assert!(res.makespan > 200e-6, "compute phase must gate comm");
+        assert!(res.node_finish.iter().all(|t| t.is_finite()));
     }
 
     #[test]

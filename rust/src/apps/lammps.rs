@@ -9,8 +9,11 @@
 
 use crate::config::AuroraConfig;
 use crate::fabric::analytic;
+use crate::fabric::workload::{self, DagBuilder, DagWorkload};
+use crate::fabric::Router;
 use crate::machine::Machine;
 use crate::runtime::{Engine, NodeRoofline, Runtime};
+use crate::topology::Topology;
 use anyhow::Result;
 
 pub use super::ScalingPoint;
@@ -44,6 +47,33 @@ pub fn step_time(cfg: &AuroraConfig, nodes: usize) -> f64 {
     let ranks = (nodes * PPN) as f64;
     let t_sync = 4.0 * 10.0e-6 * ranks.log2();
     t_pair + t_integrate + t_halo + t_pppm + t_sync
+}
+
+/// Closed-loop LAMMPS MD-step trace (§5.3.4) as a dependency workload:
+/// neighbour-skin halo exchange (±1/±2 in the 1-D embedding), the pair
+/// force + SHAKE compute interval, then the PPPM charge-grid transpose
+/// (pairwise all2all of grid_bytes / ranks). Dependency release couples
+/// the phases: a congested halo delays PPPM, exactly the closed-loop
+/// effect §6 observes at scale.
+pub fn step_dag(
+    topo: &Topology,
+    router: &mut Router,
+    ranks: usize,
+    grid_bytes: u64,
+) -> DagWorkload {
+    let nics = workload::spread_nics(topo, ranks);
+    let mut b = DagBuilder::new();
+    let halo =
+        vec![workload::neighbor_round(&nics, &[-2, -1, 1, 2],
+                                      (grid_bytes / 16).max(1))];
+    workload::push_rounds(&mut b, router, &halo, 0.0);
+    for &nic in &nics {
+        b.compute(nic, 150e-6); // pair forces + SHAKE
+    }
+    let chunk = (grid_bytes / ranks.max(1) as u64).max(1);
+    let pppm = workload::pairwise_rounds(&nics, chunk);
+    workload::push_rounds(&mut b, router, &pppm, 0.0);
+    b.finish()
 }
 
 /// Fig 20: weak-scaling times + efficiencies, 128 -> 9,216 nodes.
@@ -116,6 +146,24 @@ mod tests {
                 pts.iter().map(|p| p.efficiency).collect::<Vec<_>>()
             );
         }
+    }
+
+    #[test]
+    fn step_dag_phases_serialize() {
+        use crate::fabric::des::{DesOpts, DesSim};
+        let topo = Topology::new(&AuroraConfig::small(4, 4));
+        let mut router = Router::new(&topo);
+        let dag = step_dag(&topo, &mut router, 12, 8 << 20);
+        // halo (12 x 4) + 12 compute + pppm (11 rounds x 12)
+        assert_eq!(dag.len(), 48 + 12 + 132);
+        let res = DesSim::new(&topo, DesOpts::default()).run_dag(&dag);
+        assert!(res.makespan > 150e-6, "{}", res.makespan);
+        // the pppm transfers all finish after the compute interval
+        let cp_end = res.node_finish[48..60]
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        assert!(res.makespan > cp_end);
     }
 
     #[test]

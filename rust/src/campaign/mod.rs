@@ -22,7 +22,7 @@
 pub mod pool;
 pub mod scenario;
 
-pub use scenario::{Scenario, ScenarioResult, Workload};
+pub use scenario::{PhaseApp, Scenario, ScenarioResult, Workload};
 
 use crate::config::AuroraConfig;
 use crate::fabric::des::DesOpts;
@@ -52,7 +52,10 @@ impl Campaign {
     /// The standard scenario suite: GPCNet isolated/congested (with and
     /// without congestion management), incast fan-ins, uniform and
     /// permutation/ring collective rounds, a degraded-lane sweep and a
-    /// staggered-arrival mix — 10 scenarios on the given config.
+    /// staggered-arrival mix, plus the closed-loop (dependency-released)
+    /// scenarios — collective-vs-incast interference, phase-staggered
+    /// multi-job, degraded-lane collective, and the HACC / AMR-Wind /
+    /// LAMMPS step traces — 16 scenarios on the given config.
     pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
         let on = DesOpts::default();
         let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
@@ -93,6 +96,43 @@ impl Campaign {
                 mk("staggered_256", &on,
                    Workload::Staggered {
                        flows: 256, bytes: 1 << 20, window_s: 0.05,
+                   }),
+                // ---- closed-loop (dependency-released) scenarios ----
+                mk("coll_vs_incast", &on,
+                   Workload::CollectiveIncast {
+                       ranks: 32,
+                       rounds: 12,
+                       bytes: 1 << 20,
+                       fanin: 12,
+                       congestor_bytes: 8 << 20,
+                   }),
+                mk("phase_staggered_3job", &on,
+                   Workload::PhaseStaggered {
+                       jobs: 3,
+                       ranks: 16,
+                       rounds: 10,
+                       bytes: 2 << 20,
+                       stagger_s: 1e-3,
+                   }),
+                mk("degraded_ring_closed", &on,
+                   Workload::DegradedCollective {
+                       ranks: 32,
+                       rounds: 12,
+                       bytes: 2 << 20,
+                       bw_multiplier: 0.5,
+                       link_fraction: 0.5,
+                   }),
+                mk("hacc_step_closed", &on,
+                   Workload::AppPhase {
+                       app: PhaseApp::Hacc, ranks: 24, bytes: 8 << 20,
+                   }),
+                mk("amr_wind_step_closed", &on,
+                   Workload::AppPhase {
+                       app: PhaseApp::AmrWind, ranks: 24, bytes: 1 << 20,
+                   }),
+                mk("lammps_step_closed", &on,
+                   Workload::AppPhase {
+                       app: PhaseApp::Lammps, ranks: 24, bytes: 8 << 20,
                    }),
             ],
         }

@@ -9,6 +9,7 @@
 use crate::config::AuroraConfig;
 use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
 use crate::fabric::rounds::CostModel;
+use crate::fabric::workload::{self, DagBuilder, DagKind, DagWorkload};
 use crate::fabric::{Flow, RoutedFlow, Router};
 use crate::metrics::{mean, percentile};
 use crate::topology::{LinkId, Topology};
@@ -44,6 +45,50 @@ pub enum Workload {
         bw_multiplier: f64,
         link_fraction: f64,
     },
+    /// **Closed-loop**: `rounds` dependency-released ring-collective
+    /// rounds over `ranks` endpoints, with an open-loop `fanin`-wide
+    /// incast congestor aimed at ring member 0's NIC (collective-vs-
+    /// incast interference; `fanin = 0` is the quiet baseline).
+    CollectiveIncast {
+        ranks: usize,
+        rounds: usize,
+        bytes: u64,
+        fanin: usize,
+        congestor_bytes: u64,
+    },
+    /// **Closed-loop**: `jobs` independent ring jobs of `ranks` endpoints
+    /// each, phase-staggered by `stagger_s` (multi-job phase
+    /// interference).
+    PhaseStaggered {
+        jobs: usize,
+        ranks: usize,
+        rounds: usize,
+        bytes: u64,
+        stagger_s: f64,
+    },
+    /// **Closed-loop**: dependency-released ring rounds over a fabric
+    /// with `link_fraction` of the used links degraded to
+    /// `bw_multiplier` (§3.4 lane-disable under a collective).
+    DegradedCollective {
+        ranks: usize,
+        rounds: usize,
+        bytes: u64,
+        bw_multiplier: f64,
+        link_fraction: f64,
+    },
+    /// **Closed-loop**: one application step phase trace (HACC FFT
+    /// transpose + halo, AMR-Wind halos + residual allreduces, LAMMPS
+    /// halo + PPPM) as a dependency DAG (see `apps::*::step_dag`).
+    AppPhase { app: PhaseApp, ranks: usize, bytes: u64 },
+}
+
+/// Which application's step trace an [`Workload::AppPhase`] scenario
+/// replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseApp {
+    Hacc,
+    AmrWind,
+    Lammps,
 }
 
 /// One named simulation: everything needed to reproduce it bit-for-bit.
@@ -85,8 +130,128 @@ impl Scenario {
         }
     }
 
+    /// Whether this scenario's workload is dependency-released (runs
+    /// through [`DesSim::run_dag`] via [`Scenario::materialize_dag`])
+    /// rather than open-loop timed flows.
+    pub fn is_closed_loop(&self) -> bool {
+        matches!(
+            self.workload,
+            Workload::CollectiveIncast { .. }
+                | Workload::PhaseStaggered { .. }
+                | Workload::DegradedCollective { .. }
+                | Workload::AppPhase { .. }
+        )
+    }
+
+    /// Materialize a closed-loop scenario: the dependency DAG plus the
+    /// (possibly degraded-link-augmented) DES options. Returns `None`
+    /// for open-loop workloads (use [`Scenario::materialize`]).
+    pub fn materialize_dag(
+        &self,
+        topo: &Topology,
+    ) -> Option<(DagWorkload, DesOpts)> {
+        let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
+        let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+        let nics_total = topo.cfg.compute_endpoints() as u64;
+        let mut opts = self.opts.clone();
+        match &self.workload {
+            Workload::CollectiveIncast {
+                ranks,
+                rounds,
+                bytes,
+                fanin,
+                congestor_bytes,
+            } => {
+                let nics = workload::spread_nics(topo, *ranks);
+                let rr = workload::ring_rounds(&nics, *rounds, *bytes);
+                let mut dag = workload::dag_from_rounds(&mut router, &rr, 0.0);
+                // open-loop incast aimed at ring member 0's NIC
+                let root = nics[0];
+                for _ in 0..*fanin {
+                    let mut src = rng.gen_range(nics_total) as u32;
+                    if topo.node_of_nic(src) == topo.node_of_nic(root) {
+                        src = ((src as u64 + topo.nics_per_switch() as u64)
+                            % nics_total) as u32;
+                    }
+                    let f = Flow::new(src, root, *congestor_bytes);
+                    let path = router.route(&f);
+                    dag.xfer_at(RoutedFlow { flow: f, path }, 0.0);
+                }
+                Some((dag, opts))
+            }
+            Workload::PhaseStaggered {
+                jobs,
+                ranks,
+                rounds,
+                bytes,
+                stagger_s,
+            } => {
+                let all = workload::spread_nics(topo, jobs * ranks);
+                let mut b = DagBuilder::new();
+                for j in 0..*jobs {
+                    let nics = &all[j * ranks..(j + 1) * ranks];
+                    let rr = workload::ring_rounds(nics, *rounds, *bytes);
+                    workload::push_rounds(
+                        &mut b,
+                        &mut router,
+                        &rr,
+                        j as f64 * stagger_s,
+                    );
+                }
+                Some((b.finish(), opts))
+            }
+            Workload::DegradedCollective {
+                ranks,
+                rounds,
+                bytes,
+                bw_multiplier,
+                link_fraction,
+            } => {
+                let nics = workload::spread_nics(topo, *ranks);
+                let rr = workload::ring_rounds(&nics, *rounds, *bytes);
+                let dag = workload::dag_from_rounds(&mut router, &rr, 0.0);
+                let mut links: Vec<LinkId> = dag
+                    .nodes
+                    .iter()
+                    .filter_map(|n| match &n.kind {
+                        DagKind::Xfer(rf) => Some(&rf.path.links),
+                        DagKind::Compute(_) => None,
+                    })
+                    .flatten()
+                    .copied()
+                    .collect::<BTreeSet<_>>()
+                    .into_iter()
+                    .collect();
+                rng.shuffle(&mut links);
+                let k =
+                    ((links.len() as f64) * link_fraction).ceil() as usize;
+                for l in links.into_iter().take(k) {
+                    opts.degraded.insert(l, *bw_multiplier);
+                }
+                Some((dag, opts))
+            }
+            Workload::AppPhase { app, ranks, bytes } => {
+                let dag = match app {
+                    PhaseApp::Hacc => crate::apps::hacc::step_dag(
+                        topo, &mut router, *ranks, *bytes,
+                    ),
+                    PhaseApp::AmrWind => crate::apps::amr_wind::step_dag(
+                        topo, &mut router, *ranks, *bytes,
+                    ),
+                    PhaseApp::Lammps => crate::apps::lammps::step_dag(
+                        topo, &mut router, *ranks, *bytes,
+                    ),
+                };
+                Some((dag, opts))
+            }
+            _ => None,
+        }
+    }
+
     /// Generate the routed, timed flow set plus the (possibly
     /// degraded-link-augmented) DES options for this scenario.
+    /// Closed-loop workloads materialize via
+    /// [`Scenario::materialize_dag`] instead and panic here.
     pub fn materialize(&self, topo: &Topology) -> (Vec<TimedFlow>, DesOpts) {
         let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
         let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
@@ -211,13 +376,53 @@ impl Scenario {
                     opts.degraded.insert(l, *bw_multiplier);
                 }
             }
+            Workload::CollectiveIncast { .. }
+            | Workload::PhaseStaggered { .. }
+            | Workload::DegradedCollective { .. }
+            | Workload::AppPhase { .. } => unreachable!(
+                "closed-loop workload '{}' materializes via materialize_dag",
+                self.name
+            ),
         }
         (timed, opts)
     }
 
     /// Execute the scenario: topology + routing + DES + summary metrics.
+    /// Closed-loop scenarios run their dependency DAG through
+    /// [`DesSim::run_dag`]; open-loop scenarios run timed flows through
+    /// [`DesSim::run`].
     pub fn run(&self) -> ScenarioResult {
         let topo = Topology::new(&self.cfg);
+        if let Some((dag, opts)) = self.materialize_dag(&topo) {
+            // contention-free dependency-aware reference: what the
+            // analytic tier predicts without queueing dynamics
+            let cp = dag.critical_path_makespan(&CostModel::new(&topo));
+            let res = DesSim::new(&topo, opts).run_dag(&dag);
+            let finishes: Vec<f64> = dag
+                .xfer_ids()
+                .iter()
+                .map(|&i| res.node_finish[i])
+                .collect();
+            return ScenarioResult {
+                name: self.name.clone(),
+                flows: finishes.len(),
+                total_bytes: dag.total_bytes(),
+                makespan: res.makespan,
+                mean_finish: if finishes.is_empty() {
+                    0.0
+                } else {
+                    mean(&finishes)
+                },
+                p99_finish: if finishes.is_empty() {
+                    0.0
+                } else {
+                    percentile(&finishes, 99.0)
+                },
+                contributors: res.contributors,
+                victims: res.victims,
+                rounds_upper: cp,
+            };
+        }
         let (timed, opts) = self.materialize(&topo);
         let rounds_upper = if timed.is_empty() {
             0.0
@@ -252,8 +457,12 @@ pub struct ScenarioResult {
     pub p99_finish: f64,
     pub contributors: usize,
     pub victims: usize,
-    /// Round-tier upper-bound makespan: a cheap cross-tier bracket for
-    /// the DES result (all flows costed as if fully overlapping).
+    /// Cross-tier analytic reference. Open-loop scenarios: round-tier
+    /// upper-bound makespan (all flows costed as if fully overlapping).
+    /// Closed-loop scenarios: the contention-free dependency critical
+    /// path — what the analytic tier predicts with no queueing, so
+    /// `makespan / rounds_upper` is the congestion-induced round
+    /// slowdown only the closed-loop DES can expose.
     pub rounds_upper: f64,
 }
 
@@ -338,6 +547,135 @@ mod tests {
             "degraded {} vs base {}",
             hd.makespan,
             hb.makespan
+        );
+    }
+
+    #[test]
+    fn closed_loop_congestion_slowdown_beyond_analytic_tier() {
+        // acceptance: an incast congestor delays dependency-released
+        // collective rounds, and the analytic (contention-free critical
+        // path) tier cannot reproduce the slowdown
+        let mk = |fanin| {
+            Scenario::new(
+                "cvi",
+                small(),
+                DesOpts::default(),
+                Workload::CollectiveIncast {
+                    ranks: 16,
+                    rounds: 8,
+                    bytes: 2 << 20,
+                    fanin,
+                    congestor_bytes: 32 << 20,
+                },
+                11,
+            )
+        };
+        let topo = Topology::new(&small());
+        let (dag_q, opts_q) = mk(0).materialize_dag(&topo).unwrap();
+        let (dag_n, opts_n) = mk(12).materialize_dag(&topo).unwrap();
+        let rq = DesSim::new(&topo, opts_q).run_dag(&dag_q);
+        let rn = DesSim::new(&topo, opts_n).run_dag(&dag_n);
+        // the ring nodes are the shared prefix of both DAGs
+        let ring = dag_q.len();
+        let last_q =
+            rq.node_finish[..ring].iter().cloned().fold(0.0, f64::max);
+        let last_n =
+            rn.node_finish[..ring].iter().cloned().fold(0.0, f64::max);
+        assert!(
+            last_n > last_q * 1.3,
+            "congestor must slow the rounds: quiet {last_q} noisy {last_n}"
+        );
+        // the analytic reference is identical for the ring in both cases
+        // and far below the congested closed-loop time
+        let cm = CostModel::new(&topo);
+        let cp_ring = dag_q.critical_path_makespan(&cm);
+        assert!(
+            last_n > cp_ring * 2.0,
+            "analytic critical path {cp_ring} cannot see the congestion \
+             ({last_n})"
+        );
+        assert!(
+            last_q <= cp_ring * 2.0,
+            "quiet run must sit near the analytic path: {last_q} vs \
+             {cp_ring}"
+        );
+    }
+
+    #[test]
+    fn closed_loop_scenarios_run_deterministically() {
+        let cases = vec![
+            Scenario::new(
+                "ps",
+                small(),
+                DesOpts::default(),
+                Workload::PhaseStaggered {
+                    jobs: 2,
+                    ranks: 8,
+                    rounds: 4,
+                    bytes: 1 << 20,
+                    stagger_s: 1e-3,
+                },
+                5,
+            ),
+            Scenario::new(
+                "dc",
+                small(),
+                DesOpts::default(),
+                Workload::DegradedCollective {
+                    ranks: 12,
+                    rounds: 6,
+                    bytes: 2 << 20,
+                    bw_multiplier: 0.5,
+                    link_fraction: 0.5,
+                },
+                5,
+            ),
+            Scenario::new(
+                "ap",
+                small(),
+                DesOpts::default(),
+                Workload::AppPhase {
+                    app: PhaseApp::AmrWind,
+                    ranks: 12,
+                    bytes: 1 << 20,
+                },
+                5,
+            ),
+        ];
+        for s in cases {
+            assert!(s.is_closed_loop());
+            let a = s.run();
+            let b = s.run();
+            assert_eq!(a, b, "{}", s.name);
+            assert!(a.makespan > 0.0 && a.flows > 0, "{a:?}");
+            assert!(a.rounds_upper > 0.0, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn degraded_collective_slower_than_healthy() {
+        let mk = |frac| {
+            Scenario::new(
+                "dcc",
+                small(),
+                DesOpts::default(),
+                Workload::DegradedCollective {
+                    ranks: 12,
+                    rounds: 6,
+                    bytes: 4 << 20,
+                    bw_multiplier: 0.25,
+                    link_fraction: frac,
+                },
+                7,
+            )
+        };
+        let healthy = mk(0.0).run();
+        let degraded = mk(1.0).run();
+        assert!(
+            degraded.makespan > healthy.makespan * 1.05,
+            "degraded {} vs healthy {}",
+            degraded.makespan,
+            healthy.makespan
         );
     }
 

@@ -38,6 +38,7 @@
 //! agree to floating-point noise (the equivalence suite asserts 1e-9
 //! relative).
 
+use super::workload::{DagKind, DagWorkload};
 use super::{FlowTimes, RoutedFlow};
 use crate::topology::{LinkId, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
@@ -85,6 +86,21 @@ pub struct TimedFlow {
 pub struct DesResult {
     /// Absolute completion time per flow (same order as input).
     pub finish: Vec<f64>,
+    pub makespan: f64,
+    /// Flows that crossed a congested point as contributors.
+    pub contributors: usize,
+    /// Flows penalized as victims (only when congestion mgmt is off).
+    pub victims: usize,
+}
+
+/// Result of executing a [`DagWorkload`] (closed-loop simulation).
+#[derive(Debug, Clone)]
+pub struct DagResult {
+    /// Absolute completion time per DAG node (same order as the
+    /// workload's nodes). For transfers this includes the zero-load
+    /// latency and entry queueing delay — the time the *receiver* sees
+    /// the data and dependents are released.
+    pub node_finish: Vec<f64>,
     pub makespan: f64,
     /// Flows that crossed a congested point as contributors.
     pub contributors: usize,
@@ -722,6 +738,400 @@ impl<'t> DesSim<'t> {
         }
     }
 
+    /// Execute a dependency-released workload (see
+    /// [`DagWorkload`]) with the **incremental** solver.
+    ///
+    /// The event heap gains two dynamic event sources: a flow's bulk
+    /// completion schedules its DAG node's completion after the
+    /// latency/queue tail, and a node completion releases its dependents
+    /// — transfers become arrivals at the release instant (so a round's
+    /// completion triggers the next round's arrivals without a full
+    /// re-solve), compute intervals schedule their own completion.
+    /// Everything else — component walk, lazy byte sync, queueing delay,
+    /// max-min, congestion classification — is the arithmetic of
+    /// [`DesSim::run`].
+    pub fn run_dag(&self, wl: &DagWorkload) -> DagResult {
+        self.run_dag_impl(wl, false)
+    }
+
+    /// Oracle variant of [`DesSim::run_dag`]: identical dependency
+    /// semantics, but every event re-solves the *whole* active flow set
+    /// (no component walk, no rate reuse) — the closed-loop analogue of
+    /// [`DesSim::run_oracle`], swept against the incremental solver by
+    /// `tests/des_equivalence.rs`.
+    pub fn run_dag_oracle(&self, wl: &DagWorkload) -> DagResult {
+        self.run_dag_impl(wl, true)
+    }
+
+    fn run_dag_impl(&self, wl: &DagWorkload, full_resolve: bool) -> DagResult {
+        let n_nodes = wl.nodes.len();
+        if n_nodes == 0 {
+            return DagResult {
+                node_finish: Vec::new(),
+                makespan: 0.0,
+                contributors: 0,
+                victims: 0,
+            };
+        }
+        // ---- transfer nodes -> dense flow set ----
+        let mut flow_node: Vec<u32> = Vec::new(); // flow idx -> node idx
+        let mut node_flow: Vec<u32> = vec![u32::MAX; n_nodes];
+        let mut timed: Vec<TimedFlow> = Vec::new();
+        for (ni, node) in wl.nodes.iter().enumerate() {
+            if let DagKind::Xfer(rf) = &node.kind {
+                node_flow[ni] = timed.len() as u32;
+                flow_node.push(ni as u32);
+                // start is irrelevant here: arrivals are event-driven
+                timed.push(TimedFlow { rf: rf.clone(), start: 0.0 });
+            }
+        }
+        let n = timed.len();
+        let d = self.build_dense(&timed);
+        let n_links = d.link_ids.len();
+        let cm = super::rounds::CostModel::new(self.topo);
+        let thr = self.opts.incast_threshold as u32;
+
+        // ---- DAG bookkeeping ----
+        let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+        let mut deps_left: Vec<u32> = vec![0; n_nodes];
+        for (ni, node) in wl.nodes.iter().enumerate() {
+            deps_left[ni] = node.deps.len() as u32;
+            for &dep in &node.deps {
+                succs[dep as usize].push(ni as u32);
+            }
+        }
+        let mut node_finish = vec![f64::NAN; n_nodes];
+        let mut node_done = vec![false; n_nodes];
+        let mut nodes_done = 0usize;
+
+        // ---- per-flow state (mirrors `run`) ----
+        let mut remaining: Vec<f64> =
+            timed.iter().map(|tf| tf.rf.flow.bytes as f64).collect();
+        let mut rate = vec![0.0f64; n];
+        let mut last_sync = vec![0.0f64; n];
+        let mut queue_penalty = vec![f64::NAN; n];
+        let mut active = vec![false; n];
+        let mut done = vec![false; n];
+        let mut epoch = vec![0u32; n];
+        let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); n_links];
+        let mut eject_count = vec![0u32; n_links];
+
+        // ---- scratch, reused across events ----
+        let mut rem_cap = vec![0.0f64; n_links];
+        let mut count = vec![0u32; n_links];
+        let mut slot = vec![0u32; n];
+        let mut link_seen = vec![0u32; n_links];
+        let mut flow_seen = vec![0u32; n];
+        let mut stamp = 0u32;
+        let mut touched: Vec<u32> = Vec::with_capacity(n_links);
+        let mut inflight = vec![0.0f64; n_links];
+        let mut contaminated = vec![false; n_links];
+
+        let mut contributors_set: FxHashSet<usize> = FxHashSet::default();
+        let mut victims_set: FxHashSet<usize> = FxHashSet::default();
+
+        let mut heap: BinaryHeap<Reverse<Ev>> =
+            BinaryHeap::with_capacity(2 * n_nodes);
+        for (ni, node) in wl.nodes.iter().enumerate() {
+            if node.deps.is_empty() {
+                let t0 = node.start.max(0.0);
+                match &node.kind {
+                    DagKind::Xfer(_) => heap.push(Reverse(Ev {
+                        t: t0,
+                        kind: EV_ARRIVAL,
+                        flow: node_flow[ni],
+                        epoch: 0,
+                    })),
+                    DagKind::Compute(dt) => heap.push(Reverse(Ev {
+                        t: t0 + dt.max(0.0),
+                        kind: EV_NODE,
+                        flow: ni as u32,
+                        epoch: 0,
+                    })),
+                }
+            }
+        }
+
+        let mut completions: Vec<usize> = Vec::new();
+        let mut arrivals: Vec<usize> = Vec::new();
+        let mut finished_nodes: Vec<u32> = Vec::new();
+        let mut comp: Vec<usize> = Vec::new();
+        let mut lstack: Vec<u32> = Vec::new();
+
+        while nodes_done < n_nodes {
+            let now = match heap.peek() {
+                Some(&Reverse(ev)) => ev.t,
+                None => panic!(
+                    "deadlock in closed-loop DES: {} of {n_nodes} nodes \
+                     never released",
+                    n_nodes - nodes_done
+                ),
+            };
+            assert!(now.is_finite(), "deadlock in closed-loop DES");
+            completions.clear();
+            arrivals.clear();
+            finished_nodes.clear();
+            while let Some(&Reverse(ev)) = heap.peek() {
+                if ev.t != now {
+                    break;
+                }
+                heap.pop();
+                let fi = ev.flow as usize;
+                match ev.kind {
+                    EV_COMPLETION => {
+                        if !done[fi] && active[fi] && ev.epoch == epoch[fi] {
+                            completions.push(fi);
+                        }
+                    }
+                    EV_ARRIVAL => {
+                        if !done[fi] && !active[fi] {
+                            arrivals.push(fi);
+                        }
+                    }
+                    // EV_NODE: `flow` carries the DAG node id
+                    _ => finished_nodes.push(ev.flow),
+                }
+            }
+
+            // ---- flow completions: the bulk leaves the fabric now; the
+            // DAG node completes after the latency/queue tail ----
+            for &fi in &completions {
+                done[fi] = true;
+                active[fi] = false;
+                let tf = &timed[fi];
+                let tail = cm.msg_latency(
+                    &tf.rf.path,
+                    tf.rf.flow.bytes,
+                    tf.rf.flow.buf,
+                ) + if queue_penalty[fi].is_nan() {
+                    0.0
+                } else {
+                    queue_penalty[fi]
+                };
+                for &l in &d.flow_links[fi] {
+                    let lf = &mut link_flows[l as usize];
+                    if let Some(pos) =
+                        lf.iter().position(|&x| x == fi as u32)
+                    {
+                        lf.swap_remove(pos);
+                    }
+                }
+                eject_count[d.flow_last[fi] as usize] -= 1;
+                heap.push(Reverse(Ev {
+                    t: now + tail,
+                    kind: EV_NODE,
+                    flow: flow_node[fi],
+                    epoch: 0,
+                }));
+            }
+
+            // ---- node completions: release dependents. Zero-length
+            // compute chains collapse within the same instant (the list
+            // grows while we walk it). ----
+            let mut k = 0;
+            while k < finished_nodes.len() {
+                let ni = finished_nodes[k] as usize;
+                k += 1;
+                debug_assert!(!node_done[ni], "node {ni} finished twice");
+                node_done[ni] = true;
+                node_finish[ni] = now;
+                nodes_done += 1;
+                for &su in &succs[ni] {
+                    let s = su as usize;
+                    deps_left[s] -= 1;
+                    if deps_left[s] > 0 {
+                        continue;
+                    }
+                    let rel = wl.nodes[s].start.max(now);
+                    match &wl.nodes[s].kind {
+                        DagKind::Xfer(_) => {
+                            let fi = node_flow[s];
+                            if rel <= now {
+                                arrivals.push(fi as usize);
+                            } else {
+                                heap.push(Reverse(Ev {
+                                    t: rel,
+                                    kind: EV_ARRIVAL,
+                                    flow: fi,
+                                    epoch: 0,
+                                }));
+                            }
+                        }
+                        DagKind::Compute(dt) => {
+                            let t_fin = rel + dt.max(0.0);
+                            if t_fin <= now {
+                                finished_nodes.push(s as u32);
+                            } else {
+                                heap.push(Reverse(Ev {
+                                    t: t_fin,
+                                    kind: EV_NODE,
+                                    flow: s as u32,
+                                    epoch: 0,
+                                }));
+                            }
+                        }
+                    }
+                }
+            }
+
+            for &fi in &arrivals {
+                active[fi] = true;
+                last_sync[fi] = now;
+                for &l in &d.flow_links[fi] {
+                    link_flows[l as usize].push(fi as u32);
+                }
+                eject_count[d.flow_last[fi] as usize] += 1;
+            }
+            if completions.is_empty() && arrivals.is_empty() {
+                continue; // pure node bookkeeping: no rate change
+            }
+
+            // ---- affected component (or, for the oracle, everything) ----
+            comp.clear();
+            if full_resolve {
+                comp.extend((0..n).filter(|&fi| active[fi]));
+            } else {
+                stamp = stamp.wrapping_add(1);
+                lstack.clear();
+                for &fi in completions.iter().chain(arrivals.iter()) {
+                    for &l in &d.flow_links[fi] {
+                        if link_seen[l as usize] != stamp {
+                            link_seen[l as usize] = stamp;
+                            lstack.push(l);
+                        }
+                    }
+                }
+                while let Some(l) = lstack.pop() {
+                    for &fu in &link_flows[l as usize] {
+                        let fi = fu as usize;
+                        if flow_seen[fi] != stamp {
+                            flow_seen[fi] = stamp;
+                            comp.push(fi);
+                            for &ll in &d.flow_links[fi] {
+                                if link_seen[ll as usize] != stamp {
+                                    link_seen[ll as usize] = stamp;
+                                    lstack.push(ll);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if comp.is_empty() {
+                continue; // isolated completion: nothing shares its links
+            }
+
+            // ---- lazily sync transferred bytes ----
+            for &fi in &comp {
+                remaining[fi] = (remaining[fi]
+                    - rate[fi] * (now - last_sync[fi]))
+                    .max(0.0);
+                last_sync[fi] = now;
+            }
+
+            // ---- queueing delay for newly arrived flows (identical
+            // arithmetic to `run`) ----
+            if comp.iter().any(|&fi| queue_penalty[fi].is_nan()) {
+                for &fi in &comp {
+                    if self.opts.congestion_mgmt
+                        && eject_count[d.flow_last[fi] as usize] >= thr
+                    {
+                        continue;
+                    }
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] += remaining[fi];
+                    }
+                }
+                for &fi in &comp {
+                    if !queue_penalty[fi].is_nan() {
+                        continue;
+                    }
+                    let mut pen = 0.0;
+                    for &l in &d.flow_links[fi] {
+                        let queued = (inflight[l as usize] - remaining[fi])
+                            .max(0.0)
+                            .min(self.opts.queue_cap_bytes);
+                        pen += queued / d.cap[l as usize].max(1.0);
+                    }
+                    queue_penalty[fi] = pen;
+                }
+                for &fi in &comp {
+                    for &l in &d.flow_links[fi] {
+                        inflight[l as usize] = 0.0;
+                    }
+                }
+            }
+
+            // ---- exact max-min over the component ----
+            let mut rates = self.maxmin_component(
+                &d, &comp, &link_flows, &mut rem_cap, &mut count, &mut slot,
+                &mut touched,
+            );
+
+            // ---- congestion classification (identical to `run`) ----
+            let is_contrib =
+                |fi: usize| eject_count[d.flow_last[fi] as usize] >= thr;
+            let any_incast = comp.iter().any(|&fi| is_contrib(fi));
+            if any_incast {
+                for &fi in &comp {
+                    if is_contrib(fi) {
+                        contributors_set.insert(fi);
+                        for &l in &d.flow_links[fi] {
+                            contaminated[l as usize] = true;
+                        }
+                    }
+                }
+                if !self.opts.congestion_mgmt {
+                    for (idx, &fi) in comp.iter().enumerate() {
+                        if is_contrib(fi) {
+                            continue;
+                        }
+                        if d.flow_links[fi]
+                            .iter()
+                            .any(|&l| contaminated[l as usize])
+                        {
+                            rates[idx] *= self.opts.victim_penalty;
+                            victims_set.insert(fi);
+                        }
+                    }
+                }
+                for &fi in &comp {
+                    for &l in &d.flow_links[fi] {
+                        contaminated[l as usize] = false;
+                    }
+                }
+            }
+
+            // ---- commit rates and (re)project completions ----
+            for (idx, &fi) in comp.iter().enumerate() {
+                rate[fi] = rates[idx];
+                epoch[fi] = epoch[fi].wrapping_add(1);
+                let t_fin = if remaining[fi] <= 1e-6 {
+                    now
+                } else if rate[fi] > 0.0 {
+                    now + remaining[fi] / rate[fi]
+                } else {
+                    f64::INFINITY
+                };
+                if t_fin.is_finite() {
+                    heap.push(Reverse(Ev {
+                        t: t_fin,
+                        kind: EV_COMPLETION,
+                        flow: fi as u32,
+                        epoch: epoch[fi],
+                    }));
+                }
+            }
+        }
+        let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
+        DagResult {
+            node_finish,
+            makespan,
+            contributors: contributors_set.len(),
+            victims: victims_set.len(),
+        }
+    }
+
     /// Exact max-min (progressive filling with per-flow caps) restricted
     /// to one component, driven by the per-link active-flow index instead
     /// of whole-system scans. Same math as [`DesSim::maxmin_dense`]
@@ -855,6 +1265,9 @@ impl<'t> DesSim<'t> {
 
 const EV_COMPLETION: u8 = 0;
 const EV_ARRIVAL: u8 = 1;
+/// DAG-node completion (closed-loop runs only): `Ev::flow` carries the
+/// workload node id, not a flow index.
+const EV_NODE: u8 = 2;
 
 /// Heap event for the incremental solver (min-heap through `Reverse`):
 /// ordered by time, completions before arrivals at equal times.

@@ -14,6 +14,12 @@
 //!   round is costed by link-load analysis. Scales to the full machine.
 //! * [`analytic`] — closed-form link-load analysis for uniform patterns
 //!   (all2all, bisection) at 84,992-endpoint scale.
+//!
+//! [`workload`] adds the closed-loop injection layer on top of the DES:
+//! dependency DAGs of compute intervals and transfers whose releases are
+//! triggered by predecessor completions ([`DesSim::run_dag`]), so
+//! congestion in one collective round delays every later round — the
+//! dynamics the open-loop tiers cannot express.
 
 pub mod analytic;
 pub mod des;
@@ -21,11 +27,13 @@ pub mod load;
 pub mod qos;
 pub mod routing;
 pub mod rounds;
+pub mod workload;
 
-pub use des::{DesOpts, DesSim, TimedFlow};
+pub use des::{DagResult, DesOpts, DesSim, TimedFlow};
 pub use load::LoadMap;
 pub use qos::TrafficClass;
 pub use routing::Router;
+pub use workload::{DagBuilder, DagKind, DagNode, DagWorkload};
 
 use crate::topology::Path;
 

@@ -191,6 +191,85 @@ mod tests {
     }
 
     #[test]
+    fn pin_is_keyed_per_src_dst_pair() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let f1 = Flow::new(0, 200, 4096).ordered();
+        let p1 = r.route(&f1);
+        // same source, different destination: its own pin, its own
+        // decision — and it must not disturb the (0, 200) pin
+        let f2 = Flow::new(0, 201, 4096).ordered();
+        let p2a = r.route(&f2);
+        for l in &p2a.links {
+            r.loads.add(*l, 1e12);
+        }
+        assert_eq!(r.route(&f2), p2a, "(0,201) keeps its pin");
+        assert_eq!(r.route(&f1), p1, "(0,200) pin unaffected");
+        // idling one destination only clears that destination's pin
+        r.destination_idle(0, 201);
+        assert_eq!(r.route(&f1), p1, "(0,200) still pinned after \
+                    (0,201) idles");
+    }
+
+    #[test]
+    fn pinned_reroutes_do_not_inflate_nonminimal_count() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        // force persistent congestion so the first ordered decision is
+        // (very likely) non-minimal, then replay the pinned route: the
+        // counter must reflect *decisions*, not pinned replays
+        let bulk = Flow::new(0, 200, 1 << 16);
+        for _ in 0..400 {
+            r.route(&bulk.clone());
+        }
+        let before = r.nonminimal_count;
+        let ordered = Flow::new(8, 208, 1 << 16).ordered();
+        let p = r.route(&ordered);
+        let after_first = r.nonminimal_count;
+        assert!(after_first - before <= 1, "one decision, at most one bump");
+        for _ in 0..10 {
+            assert_eq!(r.route(&ordered), p, "pinned while pending");
+        }
+        assert_eq!(
+            r.nonminimal_count, after_first,
+            "pinned replays must not touch nonminimal_count"
+        );
+        assert_eq!(r.total_routed, 400 + 11);
+        // after idle, a fresh decision may bump the counter again — but
+        // only by one per re-decision
+        r.destination_idle(8, 208);
+        let _ = r.route(&ordered);
+        assert!(r.nonminimal_count - after_first <= 1);
+    }
+
+    #[test]
+    fn unordered_flows_never_pin() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let f = Flow::new(0, 200, 1 << 20);
+        let p1 = r.route(&f);
+        // pile load on p1: the next unordered decision is free to move
+        for l in &p1.links {
+            r.loads.add(*l, 1e12);
+        }
+        let p2 = r.route(&f);
+        // no pin entry means destination_idle is a no-op for it
+        r.destination_idle(0, 200);
+        let p3 = r.route(&f);
+        // all three must be valid src->dst paths (possibly distinct)
+        for p in [&p1, &p2, &p3] {
+            assert_eq!(
+                p.links.first(),
+                Some(&crate::topology::LinkId::NicUp(0))
+            );
+            assert_eq!(
+                p.links.last(),
+                Some(&crate::topology::LinkId::NicDown(200))
+            );
+        }
+    }
+
+    #[test]
     fn hotspot_diverts_nonminimally() {
         let t = topo();
         let mut r = Router::new(&t);

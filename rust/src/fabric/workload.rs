@@ -1,0 +1,486 @@
+//! Dependency-driven (closed-loop) workloads for the DES.
+//!
+//! The paper's end-to-end results are *closed-loop*: each communication
+//! round of a collective or application step starts only when its
+//! predecessors finish, so congestion in one round delays every later
+//! round (GPCNet Fig 5, the Fig 14 collective crossover, the §6 app
+//! scaling studies). [`DagWorkload`] captures that structure: a DAG of
+//! per-rank `Compute` intervals and fabric `Xfer`s where a node is
+//! *released* by the completion of its predecessors rather than by a
+//! pre-computed timestamp. Open-loop traffic is the degenerate case — a
+//! root node with a `start` time and no dependencies — so congestor
+//! mixes and multi-job phase interference compose freely with round
+//! DAGs.
+//!
+//! Execution lives in [`DesSim::run_dag`](super::des::DesSim::run_dag)
+//! (incremental component re-solve) and
+//! [`DesSim::run_dag_oracle`](super::des::DesSim::run_dag_oracle) (full
+//! re-solve per event); `tests/des_equivalence.rs` sweeps both over
+//! closed-loop workloads. [`DagWorkload::critical_path`] is the
+//! contention-free reference the closed-loop scenarios are compared
+//! against: the analytic tier's dependency-aware prediction, which by
+//! construction cannot see queueing-induced round slowdowns.
+
+use super::rounds::CostModel;
+use super::{Flow, RoutedFlow, Router};
+use crate::topology::Topology;
+use rustc_hash::FxHashMap;
+
+/// What a DAG node does once released.
+#[derive(Debug, Clone)]
+pub enum DagKind {
+    /// A fixed-duration interval on one rank (compute, intra-node copy).
+    Compute(f64),
+    /// A fabric transfer; completes when the DES finishes the flow
+    /// (including its zero-load latency and entry queueing delay, so
+    /// latency-bound dependency chains are priced correctly).
+    Xfer(RoutedFlow),
+}
+
+/// One node of a dependency workload.
+#[derive(Debug, Clone)]
+pub struct DagNode {
+    pub kind: DagKind,
+    /// Predecessor node ids; the node is released when all are done.
+    pub deps: Vec<u32>,
+    /// Earliest absolute release time (0 for purely dependency-released
+    /// nodes; the arrival time for open-loop roots).
+    pub start: f64,
+}
+
+/// A dependency-released workload: nodes are added in topological order
+/// (every dependency must refer to an already-added node), so the graph
+/// is acyclic by construction.
+#[derive(Debug, Clone, Default)]
+pub struct DagWorkload {
+    pub nodes: Vec<DagNode>,
+}
+
+impl DagWorkload {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node; `deps` must name already-added nodes (acyclicity by
+    /// construction). Returns the new node's id.
+    pub fn push(&mut self, kind: DagKind, deps: Vec<u32>, start: f64) -> u32 {
+        let id = self.nodes.len() as u32;
+        for &d in &deps {
+            assert!(d < id, "dependency {d} of node {id} not yet added");
+        }
+        self.nodes.push(DagNode { kind, deps, start });
+        id
+    }
+
+    /// Dependency-released fabric transfer.
+    pub fn xfer(&mut self, rf: RoutedFlow, deps: Vec<u32>) -> u32 {
+        self.push(DagKind::Xfer(rf), deps, 0.0)
+    }
+
+    /// Open-loop root transfer arriving at absolute time `start`.
+    pub fn xfer_at(&mut self, rf: RoutedFlow, start: f64) -> u32 {
+        self.push(DagKind::Xfer(rf), Vec::new(), start)
+    }
+
+    /// Dependency-released compute interval.
+    pub fn compute(&mut self, dt: f64, deps: Vec<u32>) -> u32 {
+        self.push(DagKind::Compute(dt), deps, 0.0)
+    }
+
+    /// Open-loop equivalent of a [`super::des::TimedFlow`] set: every
+    /// flow is a root released at its start time. `run_dag` on this
+    /// workload reproduces `run` on the original flows.
+    pub fn from_timed(flows: &[super::des::TimedFlow]) -> Self {
+        let mut wl = Self::new();
+        for tf in flows {
+            wl.xfer_at(tf.rf.clone(), tf.start);
+        }
+        wl
+    }
+
+    /// Ids of the transfer nodes, in insertion order (matches the flow
+    /// order the DES result reports).
+    pub fn xfer_ids(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.kind, DagKind::Xfer(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total bytes across all transfer nodes.
+    pub fn total_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match &n.kind {
+                DagKind::Xfer(rf) => rf.flow.bytes,
+                DagKind::Compute(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Contention-free earliest finish per node: each transfer is priced
+    /// at its solo (zero-contention) time, each compute at its duration,
+    /// and release times respect the dependency structure. This is what
+    /// a dependency-aware *analytic* tier predicts — no max-min sharing,
+    /// no incast back-pressure, no entry queueing — so the gap between
+    /// `run_dag().makespan` and `critical_path().max` is exactly the
+    /// congestion-induced slowdown closed-loop execution exposes.
+    pub fn critical_path(&self, cm: &CostModel) -> Vec<f64> {
+        let mut finish = vec![0.0f64; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let released = node
+                .deps
+                .iter()
+                .map(|&d| finish[d as usize])
+                .fold(node.start, f64::max);
+            let dur = match &node.kind {
+                DagKind::Compute(dt) => dt.max(0.0),
+                DagKind::Xfer(rf) => {
+                    cm.solo_msg_time(&rf.path, rf.flow.bytes, rf.flow.buf)
+                }
+            };
+            finish[i] = released + dur;
+        }
+        finish
+    }
+
+    /// Max over [`Self::critical_path`] — the contention-free makespan.
+    pub fn critical_path_makespan(&self, cm: &CostModel) -> f64 {
+        self.critical_path(cm).iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Incrementally builds round-structured DAGs over logical endpoint keys
+/// (raw NIC ids for campaign workloads, rank ids for the MPI layer).
+///
+/// Per-key *frontier* tracking encodes the paper's round semantics: a
+/// message in round k is released once every round-(k-1) node touching
+/// its **source** key is done — the sender must have finished both its
+/// previous send and the receives it folds in — while the destination
+/// key's frontier gains the new node so *its* next-round send waits for
+/// this delivery. Rounds are committed with [`DagBuilder::end_round`];
+/// within a round all messages see the pre-round frontier, so a round's
+/// messages are mutually concurrent.
+#[derive(Debug, Default)]
+pub struct DagBuilder {
+    dag: DagWorkload,
+    frontier: FxHashMap<u32, Vec<u32>>,
+    staged: Vec<(u32, u32)>,
+}
+
+impl DagBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A transfer from key `a` to key `b`, released when `a`'s previous
+    /// round completes. Takes effect on the frontiers at `end_round`.
+    pub fn xfer(&mut self, a: u32, b: u32, rf: RoutedFlow) -> u32 {
+        let deps = self.frontier.get(&a).cloned().unwrap_or_default();
+        let id = self.dag.xfer(rf, deps);
+        self.staged.push((a, id));
+        self.staged.push((b, id));
+        id
+    }
+
+    /// Commit the staged round: every key touched this round replaces its
+    /// frontier with this round's nodes.
+    pub fn end_round(&mut self) {
+        let mut fresh: FxHashMap<u32, Vec<u32>> = FxHashMap::default();
+        for &(k, id) in &self.staged {
+            fresh.entry(k).or_default().push(id);
+        }
+        for (k, ids) in fresh {
+            self.frontier.insert(k, ids);
+        }
+        self.staged.clear();
+    }
+
+    /// A compute interval on key `a`, serialized after everything `a` has
+    /// done so far; `a`'s frontier becomes this node immediately.
+    pub fn compute(&mut self, a: u32, dt: f64) -> u32 {
+        let deps = self.frontier.get(&a).cloned().unwrap_or_default();
+        let id = self.dag.compute(dt, deps);
+        self.frontier.insert(a, vec![id]);
+        id
+    }
+
+    /// A fixed-duration transfer that never touches the fabric (an
+    /// intra-node message between keys `a` and `b`): released when `a`'s
+    /// previous round completes, and — like [`DagBuilder::xfer`] — both
+    /// keys' frontiers gain the node at `end_round`, so it participates
+    /// in round dependency semantics exactly like a fabric message.
+    pub fn compute_staged(&mut self, a: u32, b: u32, dt: f64) -> u32 {
+        let deps = self.frontier.get(&a).cloned().unwrap_or_default();
+        let id = self.dag.compute(dt, deps);
+        self.staged.push((a, id));
+        self.staged.push((b, id));
+        id
+    }
+
+    /// Open-loop background flow (congestor, other-job traffic): a root
+    /// released at absolute `start`, outside every frontier.
+    pub fn open_xfer(&mut self, rf: RoutedFlow, start: f64) -> u32 {
+        self.dag.xfer_at(rf, start)
+    }
+
+    pub fn finish(mut self) -> DagWorkload {
+        self.end_round();
+        self.dag
+    }
+}
+
+// ------------------------------------------------------ round generators
+
+/// Evenly spread `ranks` logical endpoints over the fabric's NICs.
+pub fn spread_nics(topo: &Topology, ranks: usize) -> Vec<u32> {
+    let nics = topo.cfg.compute_endpoints() as u64;
+    let stride = (nics / ranks as u64).max(1);
+    (0..ranks as u64).map(|i| ((i * stride) % nics) as u32).collect()
+}
+
+/// `rounds` ring rounds: in each, endpoint i sends `bytes` to i+1.
+pub fn ring_rounds(
+    nics: &[u32],
+    rounds: usize,
+    bytes: u64,
+) -> Vec<Vec<(u32, u32, u64)>> {
+    let p = nics.len();
+    if p < 2 {
+        return Vec::new();
+    }
+    (0..rounds)
+        .map(|_| {
+            (0..p).map(|i| (nics[i], nics[(i + 1) % p], bytes)).collect()
+        })
+        .collect()
+}
+
+/// Pairwise-exchange all-to-all: p-1 rotation rounds of `bytes` per pair.
+pub fn pairwise_rounds(nics: &[u32], bytes: u64) -> Vec<Vec<(u32, u32, u64)>> {
+    let p = nics.len();
+    if p < 2 {
+        return Vec::new();
+    }
+    (1..p)
+        .map(|shift| {
+            (0..p)
+                .map(|i| (nics[i], nics[(i + shift) % p], bytes))
+                .collect()
+        })
+        .collect()
+}
+
+/// Recursive-doubling rounds over the largest power-of-two prefix.
+pub fn doubling_rounds(nics: &[u32], bytes: u64) -> Vec<Vec<(u32, u32, u64)>> {
+    let mut p2 = 1usize;
+    while p2 * 2 <= nics.len() {
+        p2 *= 2;
+    }
+    let mut rounds = Vec::new();
+    let mut dist = 1usize;
+    while dist < p2 {
+        rounds.push(
+            (0..p2).map(|i| (nics[i], nics[i ^ dist], bytes)).collect(),
+        );
+        dist *= 2;
+    }
+    rounds
+}
+
+/// One halo round: every endpoint sends `bytes` to each signed-offset
+/// neighbour (periodic in the endpoint list) — the 1-D embedding of a
+/// stencil face exchange.
+pub fn neighbor_round(
+    nics: &[u32],
+    offsets: &[i64],
+    bytes: u64,
+) -> Vec<(u32, u32, u64)> {
+    let p = nics.len() as i64;
+    if p < 2 {
+        return Vec::new();
+    }
+    let mut msgs = Vec::new();
+    for (i, &src) in nics.iter().enumerate() {
+        for &off in offsets {
+            let j = (i as i64 + off).rem_euclid(p) as usize;
+            if nics[j] != src {
+                msgs.push((src, nics[j], bytes));
+            }
+        }
+    }
+    msgs
+}
+
+/// Route round triples into `b`: round k is dependency-released by
+/// round k-1 per source endpoint. `start` is the release floor of the
+/// first pushed round (job phase offset).
+pub fn push_rounds(
+    b: &mut DagBuilder,
+    router: &mut Router,
+    rounds: &[Vec<(u32, u32, u64)>],
+    start: f64,
+) {
+    for (k, round) in rounds.iter().enumerate() {
+        for &(s, d, bytes) in round {
+            let f = Flow::new(s, d, bytes);
+            let path = router.route(&f);
+            let id = b.xfer(s, d, RoutedFlow { flow: f, path });
+            if k == 0 && start > 0.0 {
+                b.dag.nodes[id as usize].start = start;
+            }
+        }
+        b.end_round();
+    }
+}
+
+/// Route round triples and assemble the closed-loop DAG (a fresh
+/// [`DagBuilder`] around [`push_rounds`]).
+pub fn dag_from_rounds(
+    router: &mut Router,
+    rounds: &[Vec<(u32, u32, u64)>],
+    start: f64,
+) -> DagWorkload {
+    let mut b = DagBuilder::new();
+    push_rounds(&mut b, router, rounds, start);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
+
+    fn setup() -> Topology {
+        Topology::new(&AuroraConfig::small(4, 4))
+    }
+
+    #[test]
+    fn push_rejects_forward_deps() {
+        let t = setup();
+        let mut r = Router::new(&t);
+        let f = Flow::new(0, 200, 1 << 20);
+        let rf = RoutedFlow { path: r.route(&f), flow: f };
+        let mut wl = DagWorkload::new();
+        let a = wl.xfer(rf.clone(), vec![]);
+        let b = wl.xfer(rf, vec![a]);
+        assert_eq!((a, b), (0, 1));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut wl2 = wl.clone();
+                wl2.compute(1.0, vec![99]);
+            },
+        ));
+        assert!(res.is_err(), "forward dependency must be rejected");
+    }
+
+    #[test]
+    fn chain_serializes_transfers() {
+        // fabric-disjoint flows: chained they serialize (~2x), as
+        // concurrent roots they overlap (~1x)
+        let t = setup();
+        let mut r = Router::new(&t);
+        let mk = |r: &mut Router, src: u32, dst: u32| {
+            let f = Flow::new(src, dst, 16 << 20);
+            RoutedFlow { path: r.route(&f), flow: f }
+        };
+        let mut chain = DagWorkload::new();
+        let a = chain.xfer(mk(&mut r, 0, 200), vec![]);
+        chain.xfer(mk(&mut r, 8, 208), vec![a]);
+        let mut flat = DagWorkload::new();
+        flat.xfer(mk(&mut r, 0, 200), vec![]);
+        flat.xfer(mk(&mut r, 8, 208), vec![]);
+        let sim = DesSim::new(&t, DesOpts::default());
+        let tc = sim.run_dag(&chain).makespan;
+        let tf = sim.run_dag(&flat).makespan;
+        assert!(tc > tf * 1.5, "chain {tc} vs flat {tf}");
+    }
+
+    #[test]
+    fn compute_delays_released_transfer() {
+        let t = setup();
+        let mut r = Router::new(&t);
+        let f = Flow::new(0, 200, 1 << 20);
+        let rf = RoutedFlow { path: r.route(&f), flow: f };
+        let mut wl = DagWorkload::new();
+        let c = wl.compute(0.5, vec![]);
+        wl.xfer(rf, vec![c]);
+        let res = DesSim::new(&t, DesOpts::default()).run_dag(&wl);
+        assert!((res.node_finish[0] - 0.5).abs() < 1e-12);
+        assert!(res.node_finish[1] > 0.5);
+    }
+
+    #[test]
+    fn from_timed_matches_open_loop_run() {
+        let t = setup();
+        let mut r = Router::new(&t);
+        let timed: Vec<TimedFlow> = (0..10)
+            .map(|i| {
+                let f = Flow::new(i * 4, 200 + i, (1 + i as u64) << 20);
+                TimedFlow {
+                    rf: RoutedFlow { path: r.route(&f), flow: f },
+                    start: (i % 3) as f64 * 1e-3,
+                }
+            })
+            .collect();
+        let sim = DesSim::new(&t, DesOpts::default());
+        let open = sim.run(&timed);
+        let dag = sim.run_dag(&DagWorkload::from_timed(&timed));
+        for (i, (a, b)) in
+            open.finish.iter().zip(&dag.node_finish).enumerate()
+        {
+            let rel = (a - b).abs() / b.abs().max(1e-30);
+            assert!(rel < 1e-9, "flow {i}: open {a} vs dag {b}");
+        }
+    }
+
+    #[test]
+    fn critical_path_respects_deps_and_start() {
+        let t = setup();
+        let cm = CostModel::new(&t);
+        let mut r = Router::new(&t);
+        let f = Flow::new(0, 200, 4 << 20);
+        let rf = RoutedFlow { path: r.route(&f), flow: f };
+        let mut wl = DagWorkload::new();
+        let a = wl.xfer_at(rf.clone(), 1.0);
+        let b = wl.compute(0.25, vec![a]);
+        wl.xfer(rf.clone(), vec![b]);
+        let cp = wl.critical_path(&cm);
+        let solo = cm.solo_msg_time(&rf.path, rf.flow.bytes, rf.flow.buf);
+        assert!((cp[0] - (1.0 + solo)).abs() < 1e-12);
+        assert!((cp[1] - (1.0 + solo + 0.25)).abs() < 1e-12);
+        assert!((cp[2] - (1.0 + 2.0 * solo + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_generators_shapes() {
+        let t = setup();
+        let nics = spread_nics(&t, 8);
+        assert_eq!(nics.len(), 8);
+        assert_eq!(ring_rounds(&nics, 3, 1024).len(), 3);
+        assert_eq!(pairwise_rounds(&nics, 1024).len(), 7);
+        assert_eq!(doubling_rounds(&nics, 1024).len(), 3);
+        let halo = neighbor_round(&nics, &[-1, 1, 2], 1024);
+        assert_eq!(halo.len(), 24);
+        // ring DAG: round-k send depends on the sender's round-(k-1) pair
+        let mut r = Router::new(&t);
+        let wl = dag_from_rounds(&mut r, &ring_rounds(&nics, 2, 1024), 0.0);
+        assert_eq!(wl.len(), 16);
+        // node 8 is endpoint 0's round-1 send; deps must be its round-0
+        // send (id 0) and its round-0 receive (id 7, from endpoint 7)
+        let mut deps = wl.nodes[8].deps.clone();
+        deps.sort_unstable();
+        assert_eq!(deps, vec![0, 7]);
+    }
+}

@@ -24,6 +24,21 @@ use crate::node::{NodePaths, RankLoc};
 use crate::topology::Topology;
 use counters::CxiCounters;
 
+/// Which fabric tier prices collective rounds (see [`coll`]).
+///
+/// * `Analytic` (default): each round is costed independently by the
+///   round/DES tier and rounds are summed — fast, but blind to
+///   cross-round queueing dynamics.
+/// * `Des`: collectives emit a dependency DAG of rounds executed
+///   closed-loop on the DES ([`crate::fabric::DesSim::run_dag`]): a
+///   round's completion releases the next round's flows, so congestion
+///   and back-pressure propagate between rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricTier {
+    Analytic,
+    Des,
+}
+
 /// A communicator: an ordered set of world ranks.
 #[derive(Debug, Clone)]
 pub struct Comm {
@@ -66,6 +81,9 @@ pub struct World<'t> {
     /// Use the DES tier for rounds at or below this many flows; the
     /// round-based tier above (cross-validated in rust/tests).
     pub des_flow_limit: usize,
+    /// How collectives are priced: analytic per-round (fast tier) or
+    /// closed-loop dependency DAGs on the DES.
+    pub tier: FabricTier,
     node_paths: NodePaths,
     des_opts: DesOpts,
 }
@@ -86,6 +104,7 @@ impl<'t> World<'t> {
             buf: BufLoc::Host,
             class: TrafficClass::BestEffort,
             des_flow_limit: 512,
+            tier: FabricTier::Analytic,
             node_paths: NodePaths::new(&topo.cfg),
             des_opts: DesOpts::default(),
             placements,
@@ -94,6 +113,12 @@ impl<'t> World<'t> {
 
     pub fn gpu_buffers(mut self) -> Self {
         self.buf = BufLoc::Gpu;
+        self
+    }
+
+    /// Switch collectives onto the closed-loop DES tier.
+    pub fn des_fabric(mut self) -> Self {
+        self.tier = FabricTier::Des;
         self
     }
 

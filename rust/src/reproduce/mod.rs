@@ -483,7 +483,9 @@ fn campaign_experiment() -> String {
     let mut s = header(
         "Campaign — standard fabric scenario sweep (reduced scale)",
         "§3.8.2 GPCNet isolated/congested, §3.1 incast fan-ins, §3.4 \
-         degraded lanes, §5.1 collective rounds",
+         degraded lanes, §5.1 collective rounds, plus closed-loop \
+         dependency-released rounds (collective-vs-incast, multi-job \
+         phase stagger, HACC/AMR-Wind/LAMMPS step traces)",
     );
     s.push_str(&rep.render_table());
     s
@@ -527,7 +529,7 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
     let small = AuroraConfig::small(8, 4);
     let rep = crate::campaign::Campaign::standard(&small, CAMPAIGN_SEED)
         .run_serial();
-    const CAMPAIGN_KEYS: [&str; 10] = [
+    const CAMPAIGN_KEYS: [&str; 16] = [
         "campaign_gpcnet_isolated",
         "campaign_gpcnet_congested",
         "campaign_gpcnet_congested_nocm",
@@ -538,6 +540,12 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
         "campaign_ring_256",
         "campaign_degraded_half_bw",
         "campaign_staggered_256",
+        "campaign_coll_vs_incast",
+        "campaign_phase_staggered_3job",
+        "campaign_degraded_ring_closed",
+        "campaign_hacc_step_closed",
+        "campaign_amr_wind_step_closed",
+        "campaign_lammps_step_closed",
     ];
     for (key, r) in CAMPAIGN_KEYS.iter().zip(&rep.results) {
         debug_assert_eq!(format!("campaign_{}", r.name).as_str(), *key);
@@ -638,7 +646,8 @@ mod tests {
     #[test]
     fn campaign_experiment_reports_every_scenario() {
         let out = run("campaign").unwrap();
-        for name in ["gpcnet_isolated", "incast_8x16", "degraded_half_bw"] {
+        for name in ["gpcnet_isolated", "incast_8x16", "degraded_half_bw",
+                     "coll_vs_incast", "hacc_step_closed"] {
             assert!(out.contains(name), "missing {name}: {out}");
         }
     }

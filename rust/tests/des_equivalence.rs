@@ -8,16 +8,53 @@
 //! incast, degraded links, staggered arrivals, congestion management
 //! on/off) asserting 1e-9 relative agreement, and checks that the
 //! campaign engine's parallel execution is byte-identical to serial.
+//!
+//! Closed-loop extension (EXPERIMENTS.md §Closed-loop): the same
+//! contract for dependency-released workloads — `DesSim::run_dag`
+//! (incremental, event-heap-integrated releases) against
+//! `DesSim::run_dag_oracle` (full re-solve per event) over ring-round
+//! DAGs with congestors, incast interference, degraded links and the
+//! HACC / AMR-Wind / LAMMPS step traces — plus the open-loop
+//! degeneration (`DagWorkload::from_timed` reproduces `run`).
 
 use aurorasim::campaign::{Campaign, Scenario, Workload};
 use aurorasim::config::AuroraConfig;
 use aurorasim::fabric::des::{DesOpts, DesSim, TimedFlow};
+use aurorasim::fabric::workload::{self, DagWorkload};
 use aurorasim::fabric::{Flow, RoutedFlow, Router};
 use aurorasim::topology::Topology;
 use aurorasim::util::Pcg;
 use std::collections::HashMap;
 
 const REL_TOL: f64 = 1e-9;
+
+/// Closed-loop analogue of [`assert_equivalent`]: the incremental
+/// dependency-DAG solver against the full-re-solve oracle.
+fn assert_dag_equivalent(
+    topo: &Topology,
+    opts: &DesOpts,
+    wl: &DagWorkload,
+    what: &str,
+) {
+    let sim = DesSim::new(topo, opts.clone());
+    let inc = sim.run_dag(wl);
+    let ora = sim.run_dag_oracle(wl);
+    assert_eq!(inc.node_finish.len(), ora.node_finish.len(), "{what}");
+    for (i, (a, b)) in
+        inc.node_finish.iter().zip(&ora.node_finish).enumerate()
+    {
+        let rel = (a - b).abs() / b.abs().max(1e-30);
+        assert!(
+            rel < REL_TOL,
+            "{what} node {i}: incremental {a:.15e} vs oracle {b:.15e} \
+             (rel {rel:.2e})"
+        );
+    }
+    assert_eq!(inc.contributors, ora.contributors, "{what}: contributors");
+    assert_eq!(inc.victims, ora.victims, "{what}: victims");
+    let rel = (inc.makespan - ora.makespan).abs() / ora.makespan.max(1e-30);
+    assert!(rel < REL_TOL, "{what}: makespan rel {rel:.2e}");
+}
 
 fn assert_equivalent(
     topo: &Topology,
@@ -163,6 +200,149 @@ fn empty_and_single_flow() {
     assert_equivalent(&topo, &DesOpts::default(), &timed, "single flow");
 }
 
+// ------------------------------------------------------------- closed loop
+
+/// One randomized closed-loop case: dependency-released ring rounds plus
+/// open-loop congestors (uniform + an incast clique), optionally over
+/// degraded links.
+fn closed_loop_case(
+    topo: &Topology,
+    rng: &mut Pcg,
+    ranks: usize,
+    rounds: usize,
+    congestors: usize,
+    incast_fanin: usize,
+    degrade: bool,
+) -> (DagWorkload, DesOpts) {
+    let nics_total = topo.cfg.compute_endpoints() as u64;
+    let mut router = Router::with_seed(topo, rng.next_u64());
+    let nics = workload::spread_nics(topo, ranks);
+    let rr = workload::ring_rounds(&nics, rounds, 1 + rng.gen_range(2 << 20));
+    let mut wl = workload::dag_from_rounds(&mut router, &rr, 0.0);
+    for i in 0..congestors {
+        let src = rng.gen_range(nics_total) as u32;
+        let dst =
+            ((src as u64 + 1 + rng.gen_range(nics_total - 1)) % nics_total)
+                as u32;
+        let f = Flow::new(src, dst, 1 + rng.gen_range(4 << 20));
+        let path = router.route(&f);
+        wl.xfer_at(
+            RoutedFlow { flow: f, path },
+            (i % 3) as f64 * 1e-3,
+        );
+    }
+    if incast_fanin > 0 {
+        let root = rng.gen_range(nics_total) as u32;
+        for _ in 0..incast_fanin {
+            let mut src = rng.gen_range(nics_total) as u32;
+            if src == root {
+                src = (src + 9) % nics_total as u32;
+            }
+            let f = Flow::new(src, root, 1 + rng.gen_range(8 << 20));
+            let path = router.route(&f);
+            wl.xfer_at(RoutedFlow { flow: f, path }, 0.0);
+        }
+    }
+    let mut opts = DesOpts::default();
+    if degrade {
+        let mut degraded = HashMap::new();
+        for node in wl.nodes.iter().step_by(3) {
+            if let aurorasim::fabric::DagKind::Xfer(rf) = &node.kind {
+                for l in &rf.path.links {
+                    degraded.insert(*l, 0.25 + 0.5 * rng.gen_f64());
+                }
+            }
+        }
+        opts.degraded = degraded;
+    }
+    (wl, opts)
+}
+
+#[test]
+fn sweep_closed_loop_ring_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE05);
+    for case in 0..10 {
+        let ranks = 8 + rng.gen_usize(12);
+        let rounds = 3 + rng.gen_usize(6);
+        let (wl, opts) =
+            closed_loop_case(&topo, &mut rng, ranks, rounds, 8, 0, false);
+        assert_dag_equivalent(
+            &topo,
+            &opts,
+            &wl,
+            &format!("closed ring {case} ({ranks}x{rounds})"),
+        );
+    }
+}
+
+#[test]
+fn sweep_closed_loop_incast_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE06);
+    for case in 0..10 {
+        let fanin = 4 + rng.gen_usize(10);
+        let (wl, mut opts) =
+            closed_loop_case(&topo, &mut rng, 10, 4, 4, fanin, false);
+        opts.congestion_mgmt = case % 2 == 0;
+        assert_dag_equivalent(
+            &topo,
+            &opts,
+            &wl,
+            &format!("closed incast {case} fanin {fanin} cm {}",
+                opts.congestion_mgmt),
+        );
+    }
+}
+
+#[test]
+fn sweep_closed_loop_degraded_cases() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE07);
+    for case in 0..8 {
+        let (wl, mut opts) =
+            closed_loop_case(&topo, &mut rng, 12, 5, 6, 5, true);
+        opts.congestion_mgmt = case % 2 == 1;
+        assert_dag_equivalent(&topo, &opts, &wl, &format!("closed deg {case}"));
+    }
+}
+
+#[test]
+fn closed_loop_app_steps_match_oracle() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut r1 = Router::with_seed(&topo, 21);
+    let hacc = aurorasim::apps::hacc::step_dag(&topo, &mut r1, 12, 4 << 20);
+    assert_dag_equivalent(&topo, &DesOpts::default(), &hacc, "hacc step");
+    let mut r2 = Router::with_seed(&topo, 22);
+    let amr =
+        aurorasim::apps::amr_wind::step_dag(&topo, &mut r2, 12, 1 << 20);
+    assert_dag_equivalent(&topo, &DesOpts::default(), &amr, "amr-wind step");
+    let mut r3 = Router::with_seed(&topo, 23);
+    let lammps =
+        aurorasim::apps::lammps::step_dag(&topo, &mut r3, 12, 4 << 20);
+    assert_dag_equivalent(&topo, &DesOpts::default(), &lammps, "lammps step");
+}
+
+#[test]
+fn open_loop_dag_matches_timed_run() {
+    // the DAG runner with no dependencies must agree with the original
+    // open-loop solver on the same flow set
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE08);
+    for case in 0..6 {
+        let (timed, opts) = mixed_case(&topo, &mut rng, 18, 6, false, true);
+        let wl = DagWorkload::from_timed(&timed);
+        let open = DesSim::new(&topo, opts.clone()).run(&timed);
+        let dag = DesSim::new(&topo, opts).run_dag(&wl);
+        for (i, (a, b)) in
+            open.finish.iter().zip(&dag.node_finish).enumerate()
+        {
+            let rel = (a - b).abs() / b.abs().max(1e-30);
+            assert!(rel < REL_TOL, "case {case} flow {i}: {a} vs {b}");
+        }
+    }
+}
+
 // ---------------------------------------------------------------- campaign
 
 #[test]
@@ -198,10 +378,15 @@ fn campaign_is_seed_stable_across_scenario_order() {
 #[test]
 fn campaign_scenarios_run_under_both_solvers() {
     // every standard workload, replayed through the oracle: the campaign
-    // engine's results must not depend on which solver is used
+    // engine's results must not depend on which solver is used.
+    // Closed-loop scenarios go through the DAG solver pair.
     let cfg = AuroraConfig::small(4, 4);
     for s in &Campaign::standard(&cfg, 3).scenarios {
         let topo = Topology::new(&s.cfg);
+        if let Some((wl, opts)) = s.materialize_dag(&topo) {
+            assert_dag_equivalent(&topo, &opts, &wl, &s.name);
+            continue;
+        }
         let (timed, opts) = s.materialize(&topo);
         if timed.is_empty() {
             continue;
