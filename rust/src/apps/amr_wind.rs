@@ -72,6 +72,39 @@ pub fn step_dag(
     b.finish()
 }
 
+/// Drive one AMR-Wind step through the MPI [`World`]: per V-cycle a
+/// smoothing compute interval, the face-halo exchange as a superstep
+/// round, and the bottom-solve residual allreduce — which, on
+/// `FabricTier::Des` with staging active, flushes the halo and the
+/// allreduce's doubling rounds as **one** dependency-released DAG, so a
+/// congested halo pushes the residual reduction (and the next V-cycle)
+/// out in time. Returns the step's elapsed span.
+pub fn step_world(
+    w: &mut crate::mpi::World,
+    ranks: usize,
+    halo_bytes: u64,
+) -> f64 {
+    assert!(w.size() >= ranks, "world too small for {ranks} ranks");
+    let t0 = w.elapsed();
+    let comm = crate::mpi::Comm::world(ranks);
+    w.begin_superstep();
+    for _vcycle in 0..2 {
+        for r in 0..ranks {
+            w.superstep_compute(r, 50e-6); // level smoothing
+        }
+        w.exchange(&super::rank_halo_round(
+            ranks,
+            &[-1, 1],
+            halo_bytes.max(1),
+        ));
+        // bottom-solve residual: a collective flush point — the halo
+        // and the 8-byte allreduce price as one closed-loop DAG
+        crate::mpi::coll::allreduce(w, &comm, 8);
+    }
+    w.end_superstep();
+    w.elapsed() - t0
+}
+
 /// Fig 19: FOM (billion cells / second) + weak-scaling efficiency.
 pub fn fig19(cfg: &AuroraConfig, node_counts: &[usize]) -> Vec<ScalingPoint> {
     let pts: Vec<(usize, f64)> = node_counts
@@ -124,6 +157,22 @@ mod tests {
     use super::*;
 
     const FIG19_NODES: [usize; 5] = [128, 512, 2048, 4096, 8192];
+
+    #[test]
+    fn step_world_couples_halo_and_residual_allreduce() {
+        use crate::machine::Machine;
+        use crate::mpi::World;
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let mut wd = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+        let td = step_world(&mut wd, 12, 1 << 20);
+        // 2 V-cycles, each gated by its 50us smoothing interval
+        assert!(td > 100e-6, "{td}");
+        let mut wd2 = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+        let td2 = step_world(&mut wd2, 12, 1 << 20);
+        assert!((td - td2).abs() < 1e-12, "deterministic: {td} vs {td2}");
+        let mut wa = World::new(&m.topo, m.place_job(0, 12, 1));
+        assert!(step_world(&mut wa, 12, 1 << 20) > 0.0);
+    }
 
     #[test]
     fn fom_scales_to_8192_nodes() {

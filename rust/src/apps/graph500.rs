@@ -86,6 +86,30 @@ pub struct BfsResult {
 /// simulated fabric (all2allv) and synchronizes with an allreduce.
 pub fn functional(machine: &Machine, scale: u32, ranks: usize, root: u32)
     -> BfsResult {
+    functional_impl(machine, scale, ranks, root, false)
+}
+
+/// Closed-loop BFS: the same algorithm on `FabricTier::Des` with
+/// superstep staging — each level's frontier exchange and its
+/// frontier-done allreduce price as one dependency-released DAG, so
+/// exchange congestion delays the level vote (and every later level)
+/// instead of being summed independently.
+pub fn functional_closed_loop(
+    machine: &Machine,
+    scale: u32,
+    ranks: usize,
+    root: u32,
+) -> BfsResult {
+    functional_impl(machine, scale, ranks, root, true)
+}
+
+fn functional_impl(
+    machine: &Machine,
+    scale: u32,
+    ranks: usize,
+    root: u32,
+    closed_loop: bool,
+) -> BfsResult {
     let n = 1u32 << scale;
     let edges = kronecker_edges(scale, 42);
     // adjacency (undirected)
@@ -101,6 +125,10 @@ pub fn functional(machine: &Machine, scale: u32, ranks: usize, root: u32)
         &machine.topo,
         machine.place_job(0, nodes.max(1), ranks.min(8)),
     );
+    if closed_loop {
+        w = w.des_fabric();
+        w.begin_superstep();
+    }
     let comm = Comm::world(ranks);
 
     let owner = |v: u32| (v as usize) % ranks;
@@ -153,6 +181,7 @@ pub fn functional(machine: &Machine, scale: u32, ranks: usize, root: u32)
         coll::allreduce(&mut w, &comm, 8); // frontier-done vote
         frontier = next;
     }
+    w.end_superstep(); // no-op unless closed-loop staging was active
     let traversed: usize =
         edges.iter().filter(|(u, _)| parent[*u as usize] >= 0).count();
     let sim_time = w.elapsed();
@@ -233,6 +262,19 @@ mod tests {
         assert!(res.visited > 512, "kronecker giant component");
         assert!(validate_bfs(10, &res, 1), "BFS tree must validate");
         assert!(res.levels >= 3 && res.levels < 30);
+    }
+
+    #[test]
+    fn closed_loop_bfs_validates_and_prices_levels() {
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let res = functional_closed_loop(&m, 10, 8, 1);
+        assert!(res.visited > 512, "kronecker giant component");
+        assert!(validate_bfs(10, &res, 1), "closed-loop BFS tree validates");
+        assert!(res.sim_time > 0.0, "supersteps must advance clocks");
+        // identical traversal as the open-loop run (only timing differs)
+        let open = functional(&m, 10, 8, 1);
+        assert_eq!(res.parent, open.parent);
+        assert_eq!(res.levels, open.levels);
     }
 
     #[test]

@@ -36,6 +36,42 @@ pub mod lammps;
 pub mod nekbone;
 pub mod osu;
 
+/// One periodic neighbour-halo round over `ranks` world-rank indices —
+/// the rank-keyed analogue of `fabric::workload::neighbor_round`, shared
+/// by the `step_world` superstep drivers. Offsets that alias to the same
+/// partner at small rank counts (e.g. -1/+1 with 2 ranks) are emitted
+/// once per (src, dst) pair.
+pub(crate) fn rank_halo_round(
+    ranks: usize,
+    offsets: &[i64],
+    bytes: u64,
+) -> Vec<(usize, usize, u64)> {
+    let mut msgs = Vec::new();
+    for i in 0..ranks {
+        let mut seen: Vec<usize> = Vec::with_capacity(offsets.len());
+        for &off in offsets {
+            let j = (i as i64 + off).rem_euclid(ranks as i64) as usize;
+            if j != i && !seen.contains(&j) {
+                seen.push(j);
+                msgs.push((i, j, bytes));
+            }
+        }
+    }
+    msgs
+}
+
+/// One pairwise-exchange rotation round (`shift` in `1..ranks`) over
+/// world-rank indices — the rank-keyed analogue of
+/// `fabric::workload::pairwise_rounds`, shared by the `step_world`
+/// superstep drivers.
+pub(crate) fn rank_pairwise_round(
+    ranks: usize,
+    shift: usize,
+    bytes: u64,
+) -> Vec<(usize, usize, u64)> {
+    (0..ranks).map(|i| (i, (i + shift) % ranks, bytes)).collect()
+}
+
 /// A weak-scaling measurement row shared by the application benches.
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
@@ -85,6 +121,19 @@ mod tests {
         let pts = weak_efficiency_from_times(&[(128, 10.0), (1024, 10.5)]);
         assert!((pts[0].efficiency - 1.0).abs() < 1e-12);
         assert!((pts[1].efficiency - 10.0 / 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_rounds_shapes_and_alias_dedup() {
+        let halo = rank_halo_round(8, &[-1, 1, 2], 64);
+        assert_eq!(halo.len(), 24);
+        assert!(halo.iter().all(|&(s, d, b)| s != d && b == 64));
+        // 2 ranks: -1 and +1 alias to the same partner — emitted once
+        let tiny = rank_halo_round(2, &[-1, 1], 8);
+        assert_eq!(tiny.len(), 2, "{tiny:?}");
+        let pw = rank_pairwise_round(6, 2, 128);
+        assert_eq!(pw.len(), 6);
+        assert!(pw.iter().all(|&(s, d, _)| d == (s + 2) % 6));
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub fn socket_bandwidth(machine: &Machine, ranks: usize, gpu: bool) -> f64 {
         let nic_idx = r % nics_per_socket;
         w.nics[r] = machine.topo.nic_of_node(0, nic_idx);
     }
-    let t = w.exchange(&msgs);
+    let t = w.exchange_now(&msgs); // duration consumed: price now
     ranks as f64 * bytes as f64 / t
 }
 
@@ -62,7 +62,7 @@ pub fn single_nic_gpu_bw(machine: &Machine, ranks: usize, msg_bytes: u64)
     }
     let msgs: Vec<(usize, usize, u64)> =
         (0..ranks).map(|r| (r, 8 + r, msg_bytes)).collect();
-    let t = w.exchange(&msgs);
+    let t = w.exchange_now(&msgs); // duration consumed: price now
     ranks as f64 * msg_bytes as f64 / t
 }
 

@@ -31,8 +31,12 @@ use crate::runtime::manifest::RunInfo;
 use crate::util::Json;
 use anyhow::Result;
 
-/// JSON schema tag stamped onto campaign reports.
-pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v1";
+/// JSON schema tag stamped onto campaign reports. v2: closed-loop rows
+/// report their contention-free dependency reference in an explicit
+/// `critical_path_s` field instead of overloading `rounds_upper_s`
+/// (which is now 0 for closed-loop rows and vice versa); see
+/// EXPERIMENTS.md §Campaign schema.
+pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v2";
 
 /// A named set of scenarios executed as one unit.
 #[derive(Debug, Clone, Default)]
@@ -194,6 +198,7 @@ impl CampaignReport {
                     r.contributors.to_string(),
                     r.victims.to_string(),
                     format!("{:.3}", r.rounds_upper * 1e3),
+                    format!("{:.3}", r.critical_path * 1e3),
                 ]
             })
             .collect();
@@ -206,6 +211,7 @@ impl CampaignReport {
                 "contrib",
                 "victims",
                 "rounds-UB ms",
+                "crit-path ms",
             ],
             &rows,
         )

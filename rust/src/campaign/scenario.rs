@@ -396,6 +396,8 @@ impl Scenario {
         if let Some((dag, opts)) = self.materialize_dag(&topo) {
             // contention-free dependency-aware reference: what the
             // analytic tier predicts without queueing dynamics
+            // (schema v2: its own critical_path_s field — v1 overloaded
+            // rounds_upper for closed-loop rows)
             let cp = dag.critical_path_makespan(&CostModel::new(&topo));
             let res = DesSim::new(&topo, opts).run_dag(&dag);
             let finishes: Vec<f64> = dag
@@ -420,7 +422,8 @@ impl Scenario {
                 },
                 contributors: res.contributors,
                 victims: res.victims,
-                rounds_upper: cp,
+                rounds_upper: 0.0,
+                critical_path: cp,
             };
         }
         let (timed, opts) = self.materialize(&topo);
@@ -442,6 +445,7 @@ impl Scenario {
             contributors: res.contributors,
             victims: res.victims,
             rounds_upper,
+            critical_path: 0.0,
         }
     }
 }
@@ -457,13 +461,17 @@ pub struct ScenarioResult {
     pub p99_finish: f64,
     pub contributors: usize,
     pub victims: usize,
-    /// Cross-tier analytic reference. Open-loop scenarios: round-tier
-    /// upper-bound makespan (all flows costed as if fully overlapping).
-    /// Closed-loop scenarios: the contention-free dependency critical
-    /// path — what the analytic tier predicts with no queueing, so
-    /// `makespan / rounds_upper` is the congestion-induced round
-    /// slowdown only the closed-loop DES can expose.
+    /// Open-loop analytic reference: round-tier upper-bound makespan
+    /// (all flows costed as if fully overlapping). 0 for closed-loop
+    /// scenarios — their reference is [`ScenarioResult::critical_path`].
+    /// (Schema v1 overloaded this field for both; v2 splits them.)
     pub rounds_upper: f64,
+    /// Closed-loop analytic reference: the contention-free dependency
+    /// critical path — what a dependency-aware analytic tier predicts
+    /// with no queueing, so `makespan / critical_path` is the
+    /// congestion-induced round slowdown only the closed-loop DES can
+    /// expose. 0 for open-loop scenarios.
+    pub critical_path: f64,
 }
 
 impl ScenarioResult {
@@ -478,6 +486,7 @@ impl ScenarioResult {
             ("contributors", Json::num(self.contributors as f64)),
             ("victims", Json::num(self.victims as f64)),
             ("rounds_upper_s", Json::num(self.rounds_upper)),
+            ("critical_path_s", Json::num(self.critical_path)),
         ])
     }
 }
@@ -648,7 +657,11 @@ mod tests {
             let b = s.run();
             assert_eq!(a, b, "{}", s.name);
             assert!(a.makespan > 0.0 && a.flows > 0, "{a:?}");
-            assert!(a.rounds_upper > 0.0, "{a:?}");
+            assert!(a.critical_path > 0.0, "{a:?}");
+            assert_eq!(
+                a.rounds_upper, 0.0,
+                "closed-loop rows no longer overload rounds_upper: {a:?}"
+            );
         }
     }
 

@@ -38,12 +38,12 @@
 //! agree to floating-point noise (the equivalence suite asserts 1e-9
 //! relative).
 
-use super::workload::{DagKind, DagWorkload};
+use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode};
 use super::{FlowTimes, RoutedFlow};
 use crate::topology::{LinkId, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// DES knobs.
 #[derive(Debug, Clone)]
@@ -108,12 +108,266 @@ pub struct DagResult {
     pub victims: usize,
 }
 
+/// Result of a streaming ([`DesSim::run_stream`]) closed-loop run.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// Last node completion (includes latency/queue tails).
+    pub makespan: f64,
+    /// Non-empty rounds pulled from the source.
+    pub rounds: usize,
+    /// Total DAG nodes materialized over the whole run.
+    pub total_nodes: usize,
+    /// Peak simultaneously live (materialized, unretired) nodes — the
+    /// memory high-water mark the windowed executor bounds; `<<`
+    /// `total_nodes` whenever the workload's dependency skew is small
+    /// relative to its round count.
+    pub peak_live_nodes: usize,
+    /// Flows that crossed a congested point as contributors.
+    pub contributors: usize,
+    /// Flows penalized as victims (only when congestion mgmt is off).
+    pub victims: usize,
+    /// Nodes whose dependencies had all finished before the node was
+    /// materialized (release clamped to the simulation clock). Zero
+    /// means the streamed execution is equivalent to running the fully
+    /// materialized DAG (given the uniform-buffer precondition
+    /// documented on [`DesSim::run_stream`]).
+    pub late_releases: usize,
+}
+
 pub struct DesSim<'t> {
     topo: &'t Topology,
     opts: DesOpts,
 }
 
+/// One live (materialized, unretired) node of the streaming executor.
+struct StreamLive {
+    kind: StreamKind,
+    deps_left: u32,
+    /// Global ids of already-materialized dependents.
+    succs: Vec<u32>,
+    done: bool,
+    finish: f64,
+    /// Release floor accumulated so far: max finish among dependencies
+    /// that were already complete when observed.
+    release: f64,
+    round: u32,
+}
+
+enum StreamKind {
+    Compute(f64),
+    /// Dense flow slot currently bound to this node.
+    Xfer(u32),
+}
+
+/// Windowed node/flow store of [`DesSim::run_stream`]: nodes are created
+/// in round order, held in a deque addressed by `id - base`, and retired
+/// in round order once a prefix round is fully complete and no key's
+/// frontier references it. Flow slots (dense link lists + solver state)
+/// recycle independently through `free_slots`.
+struct StreamExec<'a, 't> {
+    sim: &'a DesSim<'t>,
+    d: Dense,
+    intern: FxHashMap<LinkId, u32>,
+    st: SolveState,
+    nodes: VecDeque<StreamLive>,
+    /// Global id of `nodes[0]`.
+    base: u32,
+    /// Per live round (from `round_base`): unfinished node count.
+    round_pending: VecDeque<u32>,
+    /// Per live round: number of keys whose frontier points at it.
+    round_frontier_refs: VecDeque<u32>,
+    round_base: u32,
+    materialized_rounds: u32,
+    exhausted: bool,
+    /// Key -> (round, node ids) — `DagBuilder` frontier semantics.
+    frontier: FxHashMap<u32, (u32, Vec<u32>)>,
+    /// Flow slot -> global node id of its current occupant.
+    flow_node: Vec<u32>,
+    /// Flow slot -> routed flow (for the latency tail at completion).
+    flow_rf: Vec<RoutedFlow>,
+    free_slots: Vec<u32>,
+    nodes_done: usize,
+    total_nodes: usize,
+    peak_live: usize,
+    late_releases: usize,
+    rounds: usize,
+}
+
+impl StreamExec<'_, '_> {
+    fn node(&self, id: u32) -> &StreamLive {
+        &self.nodes[(id - self.base) as usize]
+    }
+
+    fn node_mut(&mut self, id: u32) -> &mut StreamLive {
+        &mut self.nodes[(id - self.base) as usize]
+    }
+
+    /// Pull and wire one more (non-empty) round from the source.
+    /// Dependency-free nodes — immediately releasable — are pushed onto
+    /// `pending` for the caller to schedule. Returns false once the
+    /// source is exhausted.
+    fn materialize_next_round(
+        &mut self,
+        src: &mut dyn RoundSource,
+        pending: &mut Vec<u32>,
+    ) -> bool {
+        let round = loop {
+            match src.next_round() {
+                None => {
+                    self.exhausted = true;
+                    return false;
+                }
+                Some(r) if r.is_empty() => continue, // empty rounds: no-ops
+                Some(r) => break r,
+            }
+        };
+        let k = self.materialized_rounds;
+        self.materialized_rounds += 1;
+        self.rounds += 1;
+        self.round_pending.push_back(round.len() as u32);
+        self.round_frontier_refs.push_back(0);
+        // within the round, everyone sees the pre-round frontier; the
+        // staged (key, id) pairs commit afterwards (DagBuilder::end_round)
+        let mut staged: Vec<(u32, u32)> = Vec::with_capacity(2 * round.len());
+        for n in round {
+            let id = self.base + self.nodes.len() as u32;
+            let (a, b, kind) = match n {
+                StreamNode::Compute { a, b, dt } => {
+                    (a, b, StreamKind::Compute(dt.max(0.0)))
+                }
+                StreamNode::Xfer { a, b, rf } => {
+                    let bytes = rf.flow.bytes as f64;
+                    let slot = if let Some(s) = self.free_slots.pop() {
+                        let s = s as usize;
+                        self.sim.push_flow(
+                            &mut self.d, &mut self.intern, &rf, Some(s),
+                        );
+                        self.st.recycle_flow(s, bytes);
+                        self.flow_node[s] = id;
+                        self.flow_rf[s] = rf;
+                        s
+                    } else {
+                        let s = self.sim.push_flow(
+                            &mut self.d, &mut self.intern, &rf, None,
+                        );
+                        self.st.push_flow(bytes);
+                        self.flow_node.push(id);
+                        self.flow_rf.push(rf);
+                        s
+                    };
+                    (a, b, StreamKind::Xfer(slot as u32))
+                }
+            };
+            let mut ln = StreamLive {
+                kind,
+                deps_left: 0,
+                succs: Vec::new(),
+                done: false,
+                finish: f64::NAN,
+                release: 0.0,
+                round: k,
+            };
+            if let Some((_, deps)) = self.frontier.get(&a) {
+                for &dep in deps {
+                    let dn = &mut self.nodes[(dep - self.base) as usize];
+                    if dn.done {
+                        ln.release = ln.release.max(dn.finish);
+                    } else {
+                        dn.succs.push(id);
+                        ln.deps_left += 1;
+                    }
+                }
+            }
+            staged.push((a, id));
+            staged.push((b, id));
+            if ln.deps_left == 0 {
+                pending.push(id);
+            }
+            self.nodes.push_back(ln);
+            self.total_nodes += 1;
+        }
+        // commit frontiers: every key touched this round replaces its
+        // entry with this round's nodes
+        let mut fresh: FxHashMap<u32, Vec<u32>> = FxHashMap::default();
+        for &(key, id) in &staged {
+            fresh.entry(key).or_default().push(id);
+        }
+        for (key, ids) in fresh {
+            if let Some((old_round, _)) = self.frontier.get(&key) {
+                self.round_frontier_refs
+                    [(old_round - self.round_base) as usize] -= 1;
+            }
+            self.round_frontier_refs[(k - self.round_base) as usize] += 1;
+            self.frontier.insert(key, (k, ids));
+        }
+        self.peak_live = self.peak_live.max(self.nodes.len());
+        self.st.grow_links(self.d.cap.len());
+        true
+    }
+
+    /// Materialize rounds until `upto` rounds exist (or the source ends).
+    fn ensure_rounds(
+        &mut self,
+        src: &mut dyn RoundSource,
+        upto: u32,
+        pending: &mut Vec<u32>,
+    ) {
+        while !self.exhausted && self.materialized_rounds < upto {
+            if !self.materialize_next_round(src, pending) {
+                break;
+            }
+        }
+    }
+
+    /// Mark node `id` complete; returns its dependents for release
+    /// propagation (the successor list is consumed — no new successors
+    /// can attach once every frontier referencing the node is replaced,
+    /// and until then the node stays live for wiring-time finish reads).
+    fn finish_node(&mut self, id: u32, now: f64) -> Vec<u32> {
+        let base = self.base;
+        let round_base = self.round_base;
+        let n = &mut self.nodes[(id - base) as usize];
+        debug_assert!(!n.done, "node {id} finished twice");
+        n.done = true;
+        n.finish = now;
+        let round = n.round;
+        let succs = std::mem::take(&mut n.succs);
+        self.nodes_done += 1;
+        self.round_pending[(round - round_base) as usize] -= 1;
+        succs
+    }
+
+    /// Retire fully finished prefix rounds that no key's frontier
+    /// references any more: their nodes leave the window. Rounds still
+    /// referenced by a frontier stay live (their finish times seed the
+    /// release floors of future dependents).
+    fn retire(&mut self) {
+        while let (Some(&pend), Some(&refs)) = (
+            self.round_pending.front(),
+            self.round_frontier_refs.front(),
+        ) {
+            if pend != 0 || refs != 0 {
+                break;
+            }
+            while let Some(front) = self.nodes.front() {
+                if front.round != self.round_base {
+                    break;
+                }
+                debug_assert!(front.done);
+                self.nodes.pop_front();
+                self.base += 1;
+            }
+            self.round_pending.pop_front();
+            self.round_frontier_refs.pop_front();
+            self.round_base += 1;
+        }
+    }
+}
+
 /// Interned-link representation of a flow set (see `build_dense`).
+/// Grows incrementally: the streaming executor interns links and flows
+/// as rounds materialize (`DesSim::push_flow`), recycling flow slots
+/// once their transfer completes.
 struct Dense {
     link_ids: Vec<LinkId>,
     /// Static effective capacity per link (degraded bw + NIC-eff caps).
@@ -126,6 +380,175 @@ struct Dense {
     flow_last: Vec<u32>,
 }
 
+impl Dense {
+    fn empty() -> Self {
+        Self {
+            link_ids: Vec::new(),
+            cap: Vec::new(),
+            flow_links: Vec::new(),
+            flow_cap: Vec::new(),
+            flow_last: Vec::new(),
+        }
+    }
+}
+
+/// Mutable solver state shared by every executor: per-flow progress, the
+/// per-link active-flow index, congestion bookkeeping and the scratch
+/// reused across events. [`DesSim::run`], [`DesSim::run_dag`] /
+/// [`DesSim::run_dag_oracle`] and the streaming [`DesSim::run_stream`]
+/// all drive the same per-event solve block ([`DesSim::solve_batch`])
+/// over this state, so the max-min arithmetic, entry-queueing model and
+/// contributor/victim classification exist exactly once.
+struct SolveState {
+    remaining: Vec<f64>,
+    rate: Vec<f64>,
+    last_sync: Vec<f64>,
+    queue_penalty: Vec<f64>,
+    active: Vec<bool>,
+    done: Vec<bool>,
+    epoch: Vec<u32>,
+    /// Per-link list of active flows (the incremental component index).
+    link_flows: Vec<Vec<u32>>,
+    eject_count: Vec<u32>,
+    // ---- scratch, reused across events ----
+    rem_cap: Vec<f64>,
+    count: Vec<u32>,
+    slot: Vec<u32>,
+    link_seen: Vec<u32>,
+    flow_seen: Vec<u32>,
+    stamp: u32,
+    touched: Vec<u32>,
+    inflight: Vec<f64>,
+    contaminated: Vec<bool>,
+    contributors: FxHashSet<usize>,
+    victims: FxHashSet<usize>,
+    /// Classification counts banked when a slot is recycled (streaming):
+    /// the sets are keyed by slot, so a recycled slot's previous
+    /// occupant must be counted out before reuse.
+    banked_contributors: usize,
+    banked_victims: usize,
+    comp: Vec<usize>,
+    lstack: Vec<u32>,
+}
+
+impl SolveState {
+    fn empty() -> Self {
+        Self {
+            remaining: Vec::new(),
+            rate: Vec::new(),
+            last_sync: Vec::new(),
+            queue_penalty: Vec::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            epoch: Vec::new(),
+            link_flows: Vec::new(),
+            eject_count: Vec::new(),
+            rem_cap: Vec::new(),
+            count: Vec::new(),
+            slot: Vec::new(),
+            link_seen: Vec::new(),
+            flow_seen: Vec::new(),
+            stamp: 0,
+            touched: Vec::new(),
+            inflight: Vec::new(),
+            contaminated: Vec::new(),
+            contributors: FxHashSet::default(),
+            victims: FxHashSet::default(),
+            banked_contributors: 0,
+            banked_victims: 0,
+            comp: Vec::new(),
+            lstack: Vec::new(),
+        }
+    }
+
+    /// Unique contributor flows so far (banked recycled slots + live).
+    fn contributor_count(&self) -> usize {
+        self.banked_contributors + self.contributors.len()
+    }
+
+    /// Unique victim flows so far (banked recycled slots + live).
+    fn victim_count(&self) -> usize {
+        self.banked_victims + self.victims.len()
+    }
+
+    fn with_flows(flows: &[TimedFlow], n_links: usize) -> Self {
+        let mut st = Self::empty();
+        st.grow_links(n_links);
+        for tf in flows {
+            st.push_flow(tf.rf.flow.bytes as f64);
+        }
+        st
+    }
+
+    /// Append one flow slot (streaming materialization).
+    fn push_flow(&mut self, bytes: f64) -> usize {
+        let i = self.remaining.len();
+        self.remaining.push(bytes);
+        self.rate.push(0.0);
+        self.last_sync.push(0.0);
+        self.queue_penalty.push(f64::NAN);
+        self.active.push(false);
+        self.done.push(false);
+        self.epoch.push(0);
+        self.slot.push(0);
+        self.flow_seen.push(0);
+        i
+    }
+
+    /// Reset a retired flow slot for a new transfer (streaming). The
+    /// epoch keeps counting upward, so stale heap events scheduled for
+    /// the previous occupant stay invalidated.
+    fn recycle_flow(&mut self, i: usize, bytes: f64) {
+        if self.contributors.remove(&i) {
+            self.banked_contributors += 1;
+        }
+        if self.victims.remove(&i) {
+            self.banked_victims += 1;
+        }
+        self.remaining[i] = bytes;
+        self.rate[i] = 0.0;
+        self.last_sync[i] = 0.0;
+        self.queue_penalty[i] = f64::NAN;
+        self.active[i] = false;
+        self.done[i] = false;
+        self.epoch[i] = self.epoch[i].wrapping_add(1);
+    }
+
+    /// Grow per-link state after new links were interned.
+    fn grow_links(&mut self, n_links: usize) {
+        self.link_flows.resize_with(n_links, Vec::new);
+        self.eject_count.resize(n_links, 0);
+        self.rem_cap.resize(n_links, 0.0);
+        self.count.resize(n_links, 0);
+        self.link_seen.resize(n_links, 0);
+        self.inflight.resize(n_links, 0.0);
+        self.contaminated.resize(n_links, false);
+    }
+
+    /// Flow `fi`'s bulk left the fabric: drop it from the link index.
+    fn complete(&mut self, d: &Dense, fi: usize) {
+        self.done[fi] = true;
+        self.active[fi] = false;
+        for &l in &d.flow_links[fi] {
+            let lf = &mut self.link_flows[l as usize];
+            if let Some(pos) = lf.iter().position(|&x| x == fi as u32) {
+                lf.swap_remove(pos);
+            }
+        }
+        self.eject_count[d.flow_last[fi] as usize] -= 1;
+    }
+
+    /// Flow `fi` enters the fabric now.
+    fn arrive(&mut self, d: &Dense, fi: usize, now: f64) {
+        self.active[fi] = true;
+        self.last_sync[fi] = now;
+        for &l in &d.flow_links[fi] {
+            self.link_flows[l as usize].push(fi as u32);
+        }
+        self.eject_count[d.flow_last[fi] as usize] += 1;
+    }
+}
+
 impl<'t> DesSim<'t> {
     pub fn new(topo: &'t Topology, opts: DesOpts) -> Self {
         Self { topo, opts }
@@ -136,52 +559,251 @@ impl<'t> DesSim<'t> {
         base * self.opts.degraded.get(l).copied().unwrap_or(1.0)
     }
 
+    /// Intern one routed flow into `d`, growing per-link state as new
+    /// links appear. `slot = Some(i)` reuses the freed flow slot `i`
+    /// in place (streaming executor); `None` appends. Capacity rules are
+    /// those of the one-shot build: degraded bandwidth, with NIC
+    /// endpoint links capped at the effective NIC bandwidth of the
+    /// buffer types crossing them (PCIe Gen4 practical limit for host,
+    /// Gen4<->Gen5 conversion for GPU buffers — §5.1/Fig 13). The min is
+    /// applied per flow as it is interned, so the *final* capacities
+    /// equal the two-pass batch computation for any flow order. For the
+    /// batch executors that is the whole story (they solve only after
+    /// every flow is interned); in `run_stream` a NIC link's cap
+    /// mid-run reflects only the flows materialized so far — identical
+    /// to the batch value from t=0 whenever the workload uses one
+    /// `BufLoc` throughout (see the `run_stream` caveat).
+    fn push_flow(
+        &self,
+        d: &mut Dense,
+        intern: &mut FxHashMap<LinkId, u32>,
+        rf: &RoutedFlow,
+        slot: Option<usize>,
+    ) -> usize {
+        let mut ls = Vec::with_capacity(rf.path.links.len());
+        for l in &rf.path.links {
+            let id = *intern.entry(*l).or_insert_with(|| {
+                d.link_ids.push(*l);
+                d.cap.push(self.link_cap(l));
+                (d.link_ids.len() - 1) as u32
+            });
+            ls.push(id);
+        }
+        let c = &self.topo.cfg;
+        let fcap = match rf.flow.buf {
+            super::BufLoc::Host => c.rank_issue_bw_host,
+            super::BufLoc::Gpu => c.rank_issue_bw_gpu,
+        };
+        let eff = match rf.flow.buf {
+            super::BufLoc::Host => c.nic_eff_bw_host,
+            super::BufLoc::Gpu => c.nic_eff_bw_gpu,
+        };
+        for (&id, l) in ls.iter().zip(&rf.path.links) {
+            if matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)) {
+                d.cap[id as usize] = d.cap[id as usize].min(eff);
+            }
+        }
+        let last = *ls.last().expect("flow with an empty path");
+        match slot {
+            Some(i) => {
+                d.flow_links[i] = ls;
+                d.flow_cap[i] = fcap;
+                d.flow_last[i] = last;
+                i
+            }
+            None => {
+                d.flow_links.push(ls);
+                d.flow_cap.push(fcap);
+                d.flow_last.push(last);
+                d.flow_links.len() - 1
+            }
+        }
+    }
+
     /// Build the dense (interned-link) representation used by the solver.
     /// Link ids are interned ONCE per simulation; the per-event max-min
     /// recomputation then runs on flat vectors — this is the §Perf
     /// optimization that took the 512-flow DES from ~38 ms to single-digit
     /// milliseconds (EXPERIMENTS.md §Perf).
     fn build_dense(&self, flows: &[TimedFlow]) -> Dense {
+        let mut d = Dense::empty();
         let mut intern: FxHashMap<LinkId, u32> = FxHashMap::default();
-        let mut link_ids: Vec<LinkId> = Vec::new();
-        let mut flow_links: Vec<Vec<u32>> = Vec::with_capacity(flows.len());
-        let mut flow_cap = Vec::with_capacity(flows.len());
         for tf in flows {
-            let mut ls = Vec::with_capacity(tf.rf.path.links.len());
-            for l in &tf.rf.path.links {
-                let id = *intern.entry(*l).or_insert_with(|| {
-                    link_ids.push(*l);
-                    (link_ids.len() - 1) as u32
-                });
-                ls.push(id);
-            }
-            flow_links.push(ls);
-            let c = &self.topo.cfg;
-            flow_cap.push(match tf.rf.flow.buf {
-                super::BufLoc::Host => c.rank_issue_bw_host,
-                super::BufLoc::Gpu => c.rank_issue_bw_gpu,
-            });
+            self.push_flow(&mut d, &mut intern, &tf.rf, None);
         }
-        // static capacity per link: degraded bandwidth, with NIC endpoint
-        // links capped at the effective NIC bandwidth of the buffer types
-        // crossing them (PCIe Gen4 practical limit for host, Gen4<->Gen5
-        // conversion for GPU buffers — §5.1/Fig 13)
-        let mut cap: Vec<f64> =
-            link_ids.iter().map(|l| self.link_cap(l)).collect();
-        for (fi, tf) in flows.iter().enumerate() {
-            let eff = match tf.rf.flow.buf {
-                super::BufLoc::Host => self.topo.cfg.nic_eff_bw_host,
-                super::BufLoc::Gpu => self.topo.cfg.nic_eff_bw_gpu,
-            };
-            for (&id, l) in flow_links[fi].iter().zip(&tf.rf.path.links) {
-                if matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)) {
-                    cap[id as usize] = cap[id as usize].min(eff);
+        d
+    }
+
+    /// The per-event solve block shared by `run`, `run_dag_impl` and
+    /// `run_stream`: component construction (incremental walk from the
+    /// changed flows, or the full active set when `full_resolve`), lazy
+    /// byte sync, entry-queueing pricing for new arrivals, exact max-min
+    /// over the component, congestion classification, and rate commit
+    /// with completion (re)projection into `heap`. Completion *effects*
+    /// — what a finished flow means (a result row, a DAG node, a
+    /// dependent release) — stay with the caller; this block is only the
+    /// fabric arithmetic, which is why the three executors price traffic
+    /// identically.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_batch(
+        &self,
+        d: &Dense,
+        st: &mut SolveState,
+        heap: &mut BinaryHeap<Reverse<Ev>>,
+        now: f64,
+        completions: &[usize],
+        arrivals: &[usize],
+        full_resolve: bool,
+    ) {
+        let thr = self.opts.incast_threshold as u32;
+        // ---- affected component (or, for the oracle, everything) ----
+        st.comp.clear();
+        if full_resolve {
+            let n = st.active.len();
+            st.comp.extend((0..n).filter(|&fi| st.active[fi]));
+        } else {
+            st.stamp = st.stamp.wrapping_add(1);
+            let stamp = st.stamp;
+            st.lstack.clear();
+            for &fi in completions.iter().chain(arrivals.iter()) {
+                for &l in &d.flow_links[fi] {
+                    if st.link_seen[l as usize] != stamp {
+                        st.link_seen[l as usize] = stamp;
+                        st.lstack.push(l);
+                    }
+                }
+            }
+            while let Some(l) = st.lstack.pop() {
+                for &fu in &st.link_flows[l as usize] {
+                    let fi = fu as usize;
+                    if st.flow_seen[fi] != stamp {
+                        st.flow_seen[fi] = stamp;
+                        st.comp.push(fi);
+                        for &ll in &d.flow_links[fi] {
+                            if st.link_seen[ll as usize] != stamp {
+                                st.link_seen[ll as usize] = stamp;
+                                st.lstack.push(ll);
+                            }
+                        }
+                    }
                 }
             }
         }
-        let flow_last: Vec<u32> =
-            flow_links.iter().map(|ls| *ls.last().unwrap()).collect();
-        Dense { link_ids, cap, flow_links, flow_cap, flow_last }
+        if st.comp.is_empty() {
+            return; // isolated completion: nothing shares its links
+        }
+
+        // ---- lazily sync transferred bytes for the component ----
+        for &fi in &st.comp {
+            st.remaining[fi] = (st.remaining[fi]
+                - st.rate[fi] * (now - st.last_sync[fi]))
+                .max(0.0);
+            st.last_sync[fi] = now;
+        }
+
+        // ---- queueing delay seen by newly arrived flows (Fig 5 shape):
+        // in-flight bytes of OTHER flows on each hop, capped by the
+        // switch queue; with congestion management incast contributors
+        // are held at injection and excluded ----
+        if st.comp.iter().any(|&fi| st.queue_penalty[fi].is_nan()) {
+            for &fi in &st.comp {
+                if self.opts.congestion_mgmt
+                    && st.eject_count[d.flow_last[fi] as usize] >= thr
+                {
+                    continue;
+                }
+                for &l in &d.flow_links[fi] {
+                    st.inflight[l as usize] += st.remaining[fi];
+                }
+            }
+            for &fi in &st.comp {
+                if !st.queue_penalty[fi].is_nan() {
+                    continue;
+                }
+                let mut pen = 0.0;
+                for &l in &d.flow_links[fi] {
+                    let queued = (st.inflight[l as usize] - st.remaining[fi])
+                        .max(0.0)
+                        .min(self.opts.queue_cap_bytes);
+                    pen += queued / d.cap[l as usize].max(1.0);
+                }
+                st.queue_penalty[fi] = pen;
+            }
+            for &fi in &st.comp {
+                for &l in &d.flow_links[fi] {
+                    st.inflight[l as usize] = 0.0;
+                }
+            }
+        }
+
+        // ---- exact max-min over the component ----
+        let mut rates = self.maxmin_component(
+            d,
+            &st.comp,
+            &st.link_flows,
+            &mut st.rem_cap,
+            &mut st.count,
+            &mut st.slot,
+            &mut st.touched,
+        );
+
+        // ---- congestion classification (incast ejection links) ----
+        let any_incast = st
+            .comp
+            .iter()
+            .any(|&fi| st.eject_count[d.flow_last[fi] as usize] >= thr);
+        if any_incast {
+            for &fi in &st.comp {
+                if st.eject_count[d.flow_last[fi] as usize] >= thr {
+                    st.contributors.insert(fi);
+                    for &l in &d.flow_links[fi] {
+                        st.contaminated[l as usize] = true;
+                    }
+                }
+            }
+            if !self.opts.congestion_mgmt {
+                // back-pressure spreads: victims crossing contaminated
+                // links are slowed
+                for (idx, &fi) in st.comp.iter().enumerate() {
+                    if st.eject_count[d.flow_last[fi] as usize] >= thr {
+                        continue; // contributor, already fair-shared
+                    }
+                    if d.flow_links[fi]
+                        .iter()
+                        .any(|&l| st.contaminated[l as usize])
+                    {
+                        rates[idx] *= self.opts.victim_penalty;
+                        st.victims.insert(fi);
+                    }
+                }
+            }
+            for &fi in &st.comp {
+                for &l in &d.flow_links[fi] {
+                    st.contaminated[l as usize] = false;
+                }
+            }
+        }
+
+        // ---- commit rates and (re)project completions ----
+        for (idx, &fi) in st.comp.iter().enumerate() {
+            st.rate[fi] = rates[idx];
+            st.epoch[fi] = st.epoch[fi].wrapping_add(1);
+            let t_fin = if st.remaining[fi] <= 1e-6 {
+                now // mirrors the oracle's completion threshold
+            } else if st.rate[fi] > 0.0 {
+                now + st.remaining[fi] / st.rate[fi]
+            } else {
+                f64::INFINITY
+            };
+            if t_fin.is_finite() {
+                heap.push(Reverse(Ev {
+                    t: t_fin,
+                    kind: EV_COMPLETION,
+                    flow: fi as u32,
+                    epoch: st.epoch[fi],
+                }));
+            }
+        }
     }
 
     /// Exact max-min fair rates with per-flow caps (progressive filling)
@@ -486,39 +1108,9 @@ impl<'t> DesSim<'t> {
             };
         }
         let d = self.build_dense(flows);
-        let n_links = d.link_ids.len();
         let cm = super::rounds::CostModel::new(self.topo);
-        let thr = self.opts.incast_threshold as u32;
-
-        // ---- per-flow state ----
-        let mut remaining: Vec<f64> =
-            flows.iter().map(|tf| tf.rf.flow.bytes as f64).collect();
-        let mut rate = vec![0.0f64; n];
-        let mut last_sync = vec![0.0f64; n];
+        let mut st = SolveState::with_flows(flows, d.link_ids.len());
         let mut finish = vec![f64::NAN; n];
-        let mut queue_penalty = vec![f64::NAN; n];
-        let mut active = vec![false; n];
-        let mut done = vec![false; n];
-        let mut epoch = vec![0u32; n];
-
-        // ---- per-link state: the incremental index both the component
-        // walk and the solver run on ----
-        let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); n_links];
-        let mut eject_count = vec![0u32; n_links];
-
-        // ---- scratch, reused across events ----
-        let mut rem_cap = vec![0.0f64; n_links];
-        let mut count = vec![0u32; n_links];
-        let mut slot = vec![0u32; n];
-        let mut link_seen = vec![0u32; n_links];
-        let mut flow_seen = vec![0u32; n];
-        let mut stamp = 0u32;
-        let mut touched: Vec<u32> = Vec::with_capacity(n_links);
-        let mut inflight = vec![0.0f64; n_links];
-        let mut contaminated = vec![false; n_links];
-
-        let mut contributors_set: FxHashSet<usize> = FxHashSet::default();
-        let mut victims_set: FxHashSet<usize> = FxHashSet::default();
 
         let mut heap: BinaryHeap<Reverse<Ev>> =
             BinaryHeap::with_capacity(2 * n);
@@ -533,8 +1125,6 @@ impl<'t> DesSim<'t> {
 
         let mut completions: Vec<usize> = Vec::new();
         let mut arrivals: Vec<usize> = Vec::new();
-        let mut comp: Vec<usize> = Vec::new();
-        let mut lstack: Vec<u32> = Vec::new();
         let mut n_done = 0usize;
 
         while n_done < n {
@@ -555,10 +1145,11 @@ impl<'t> DesSim<'t> {
                 let fi = ev.flow as usize;
                 if ev.kind == EV_COMPLETION {
                     // stale completion events are invalidated by epoch bumps
-                    if !done[fi] && active[fi] && ev.epoch == epoch[fi] {
+                    if !st.done[fi] && st.active[fi] && ev.epoch == st.epoch[fi]
+                    {
                         completions.push(fi);
                     }
-                } else if !done[fi] && !active[fi] {
+                } else if !st.done[fi] && !st.active[fi] {
                     arrivals.push(fi);
                 }
             }
@@ -566,175 +1157,31 @@ impl<'t> DesSim<'t> {
                 continue;
             }
 
+            // completion hook: record the per-flow result row (bulk
+            // completion + zero-load latency + entry queueing delay)
             for &fi in &completions {
-                done[fi] = true;
-                active[fi] = false;
+                st.complete(&d, fi);
                 n_done += 1;
                 let tf = &flows[fi];
                 finish[fi] = now
                     + cm.msg_latency(&tf.rf.path, tf.rf.flow.bytes,
                         tf.rf.flow.buf)
-                    + if queue_penalty[fi].is_nan() { 0.0 }
-                      else { queue_penalty[fi] };
-                for &l in &d.flow_links[fi] {
-                    let lf = &mut link_flows[l as usize];
-                    if let Some(pos) = lf.iter().position(|&x| x == fi as u32)
-                    {
-                        lf.swap_remove(pos);
-                    }
-                }
-                eject_count[d.flow_last[fi] as usize] -= 1;
+                    + if st.queue_penalty[fi].is_nan() { 0.0 }
+                      else { st.queue_penalty[fi] };
             }
             for &fi in &arrivals {
-                active[fi] = true;
-                last_sync[fi] = now;
-                for &l in &d.flow_links[fi] {
-                    link_flows[l as usize].push(fi as u32);
-                }
-                eject_count[d.flow_last[fi] as usize] += 1;
+                st.arrive(&d, fi, now);
             }
-
-            // ---- affected component: walk link <-> flow adjacency from
-            // the changed flows' paths ----
-            stamp = stamp.wrapping_add(1);
-            comp.clear();
-            lstack.clear();
-            for &fi in completions.iter().chain(arrivals.iter()) {
-                for &l in &d.flow_links[fi] {
-                    if link_seen[l as usize] != stamp {
-                        link_seen[l as usize] = stamp;
-                        lstack.push(l);
-                    }
-                }
-            }
-            while let Some(l) = lstack.pop() {
-                for &fu in &link_flows[l as usize] {
-                    let fi = fu as usize;
-                    if flow_seen[fi] != stamp {
-                        flow_seen[fi] = stamp;
-                        comp.push(fi);
-                        for &ll in &d.flow_links[fi] {
-                            if link_seen[ll as usize] != stamp {
-                                link_seen[ll as usize] = stamp;
-                                lstack.push(ll);
-                            }
-                        }
-                    }
-                }
-            }
-            if comp.is_empty() {
-                continue; // isolated completion: nothing shares its links
-            }
-
-            // ---- lazily sync transferred bytes for the component ----
-            for &fi in &comp {
-                remaining[fi] =
-                    (remaining[fi] - rate[fi] * (now - last_sync[fi])).max(0.0);
-                last_sync[fi] = now;
-            }
-
-            // ---- queueing delay seen by newly arrived flows (identical
-            // math to the oracle, restricted to the component — flows in
-            // other components share no links with the arrivals) ----
-            if comp.iter().any(|&fi| queue_penalty[fi].is_nan()) {
-                for &fi in &comp {
-                    if self.opts.congestion_mgmt
-                        && eject_count[d.flow_last[fi] as usize] >= thr
-                    {
-                        continue;
-                    }
-                    for &l in &d.flow_links[fi] {
-                        inflight[l as usize] += remaining[fi];
-                    }
-                }
-                for &fi in &comp {
-                    if !queue_penalty[fi].is_nan() {
-                        continue;
-                    }
-                    let mut pen = 0.0;
-                    for &l in &d.flow_links[fi] {
-                        let queued = (inflight[l as usize] - remaining[fi])
-                            .max(0.0)
-                            .min(self.opts.queue_cap_bytes);
-                        pen += queued / d.cap[l as usize].max(1.0);
-                    }
-                    queue_penalty[fi] = pen;
-                }
-                for &fi in &comp {
-                    for &l in &d.flow_links[fi] {
-                        inflight[l as usize] = 0.0;
-                    }
-                }
-            }
-
-            // ---- exact max-min over the component ----
-            let mut rates = self.maxmin_component(
-                &d, &comp, &link_flows, &mut rem_cap, &mut count, &mut slot,
-                &mut touched,
+            self.solve_batch(
+                &d, &mut st, &mut heap, now, &completions, &arrivals, false,
             );
-
-            // ---- congestion classification (oracle semantics, component
-            // scope: contributors and their victims always share links) ----
-            let is_contrib =
-                |fi: usize| eject_count[d.flow_last[fi] as usize] >= thr;
-            let any_incast = comp.iter().any(|&fi| is_contrib(fi));
-            if any_incast {
-                for &fi in &comp {
-                    if is_contrib(fi) {
-                        contributors_set.insert(fi);
-                        for &l in &d.flow_links[fi] {
-                            contaminated[l as usize] = true;
-                        }
-                    }
-                }
-                if !self.opts.congestion_mgmt {
-                    for (idx, &fi) in comp.iter().enumerate() {
-                        if is_contrib(fi) {
-                            continue;
-                        }
-                        if d.flow_links[fi]
-                            .iter()
-                            .any(|&l| contaminated[l as usize])
-                        {
-                            rates[idx] *= self.opts.victim_penalty;
-                            victims_set.insert(fi);
-                        }
-                    }
-                }
-                for &fi in &comp {
-                    for &l in &d.flow_links[fi] {
-                        contaminated[l as usize] = false;
-                    }
-                }
-            }
-
-            // ---- commit rates and (re)project completions ----
-            for (idx, &fi) in comp.iter().enumerate() {
-                rate[fi] = rates[idx];
-                epoch[fi] = epoch[fi].wrapping_add(1);
-                let t_fin = if remaining[fi] <= 1e-6 {
-                    now // mirrors the oracle's completion threshold
-                } else if rate[fi] > 0.0 {
-                    now + remaining[fi] / rate[fi]
-                } else {
-                    f64::INFINITY
-                };
-                if t_fin.is_finite() {
-                    heap.push(Reverse(Ev {
-                        t: t_fin,
-                        kind: EV_COMPLETION,
-                        flow: fi as u32,
-                        epoch: epoch[fi],
-                    }));
-                }
-            }
         }
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
         DesResult {
             finish,
             makespan,
-            contributors: contributors_set.len(),
-            victims: victims_set.len(),
+            contributors: st.contributor_count(),
+            victims: st.victim_count(),
         }
     }
 
@@ -785,11 +1232,8 @@ impl<'t> DesSim<'t> {
                 timed.push(TimedFlow { rf: rf.clone(), start: 0.0 });
             }
         }
-        let n = timed.len();
         let d = self.build_dense(&timed);
-        let n_links = d.link_ids.len();
         let cm = super::rounds::CostModel::new(self.topo);
-        let thr = self.opts.incast_threshold as u32;
 
         // ---- DAG bookkeeping ----
         let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
@@ -804,31 +1248,7 @@ impl<'t> DesSim<'t> {
         let mut node_done = vec![false; n_nodes];
         let mut nodes_done = 0usize;
 
-        // ---- per-flow state (mirrors `run`) ----
-        let mut remaining: Vec<f64> =
-            timed.iter().map(|tf| tf.rf.flow.bytes as f64).collect();
-        let mut rate = vec![0.0f64; n];
-        let mut last_sync = vec![0.0f64; n];
-        let mut queue_penalty = vec![f64::NAN; n];
-        let mut active = vec![false; n];
-        let mut done = vec![false; n];
-        let mut epoch = vec![0u32; n];
-        let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); n_links];
-        let mut eject_count = vec![0u32; n_links];
-
-        // ---- scratch, reused across events ----
-        let mut rem_cap = vec![0.0f64; n_links];
-        let mut count = vec![0u32; n_links];
-        let mut slot = vec![0u32; n];
-        let mut link_seen = vec![0u32; n_links];
-        let mut flow_seen = vec![0u32; n];
-        let mut stamp = 0u32;
-        let mut touched: Vec<u32> = Vec::with_capacity(n_links);
-        let mut inflight = vec![0.0f64; n_links];
-        let mut contaminated = vec![false; n_links];
-
-        let mut contributors_set: FxHashSet<usize> = FxHashSet::default();
-        let mut victims_set: FxHashSet<usize> = FxHashSet::default();
+        let mut st = SolveState::with_flows(&timed, d.link_ids.len());
 
         let mut heap: BinaryHeap<Reverse<Ev>> =
             BinaryHeap::with_capacity(2 * n_nodes);
@@ -855,8 +1275,6 @@ impl<'t> DesSim<'t> {
         let mut completions: Vec<usize> = Vec::new();
         let mut arrivals: Vec<usize> = Vec::new();
         let mut finished_nodes: Vec<u32> = Vec::new();
-        let mut comp: Vec<usize> = Vec::new();
-        let mut lstack: Vec<u32> = Vec::new();
 
         while nodes_done < n_nodes {
             let now = match heap.peek() {
@@ -879,12 +1297,15 @@ impl<'t> DesSim<'t> {
                 let fi = ev.flow as usize;
                 match ev.kind {
                     EV_COMPLETION => {
-                        if !done[fi] && active[fi] && ev.epoch == epoch[fi] {
+                        if !st.done[fi]
+                            && st.active[fi]
+                            && ev.epoch == st.epoch[fi]
+                        {
                             completions.push(fi);
                         }
                     }
                     EV_ARRIVAL => {
-                        if !done[fi] && !active[fi] {
+                        if !st.done[fi] && !st.active[fi] {
                             arrivals.push(fi);
                         }
                     }
@@ -893,30 +1314,21 @@ impl<'t> DesSim<'t> {
                 }
             }
 
-            // ---- flow completions: the bulk leaves the fabric now; the
-            // DAG node completes after the latency/queue tail ----
+            // ---- flow completions (the closed-loop completion hook):
+            // the bulk leaves the fabric now; the DAG node completes
+            // after the latency/queue tail ----
             for &fi in &completions {
-                done[fi] = true;
-                active[fi] = false;
+                st.complete(&d, fi);
                 let tf = &timed[fi];
                 let tail = cm.msg_latency(
                     &tf.rf.path,
                     tf.rf.flow.bytes,
                     tf.rf.flow.buf,
-                ) + if queue_penalty[fi].is_nan() {
+                ) + if st.queue_penalty[fi].is_nan() {
                     0.0
                 } else {
-                    queue_penalty[fi]
+                    st.queue_penalty[fi]
                 };
-                for &l in &d.flow_links[fi] {
-                    let lf = &mut link_flows[l as usize];
-                    if let Some(pos) =
-                        lf.iter().position(|&x| x == fi as u32)
-                    {
-                        lf.swap_remove(pos);
-                    }
-                }
-                eject_count[d.flow_last[fi] as usize] -= 1;
                 heap.push(Reverse(Ev {
                     t: now + tail,
                     kind: EV_NODE,
@@ -975,160 +1387,262 @@ impl<'t> DesSim<'t> {
             }
 
             for &fi in &arrivals {
-                active[fi] = true;
-                last_sync[fi] = now;
-                for &l in &d.flow_links[fi] {
-                    link_flows[l as usize].push(fi as u32);
-                }
-                eject_count[d.flow_last[fi] as usize] += 1;
+                st.arrive(&d, fi, now);
             }
             if completions.is_empty() && arrivals.is_empty() {
                 continue; // pure node bookkeeping: no rate change
             }
-
-            // ---- affected component (or, for the oracle, everything) ----
-            comp.clear();
-            if full_resolve {
-                comp.extend((0..n).filter(|&fi| active[fi]));
-            } else {
-                stamp = stamp.wrapping_add(1);
-                lstack.clear();
-                for &fi in completions.iter().chain(arrivals.iter()) {
-                    for &l in &d.flow_links[fi] {
-                        if link_seen[l as usize] != stamp {
-                            link_seen[l as usize] = stamp;
-                            lstack.push(l);
-                        }
-                    }
-                }
-                while let Some(l) = lstack.pop() {
-                    for &fu in &link_flows[l as usize] {
-                        let fi = fu as usize;
-                        if flow_seen[fi] != stamp {
-                            flow_seen[fi] = stamp;
-                            comp.push(fi);
-                            for &ll in &d.flow_links[fi] {
-                                if link_seen[ll as usize] != stamp {
-                                    link_seen[ll as usize] = stamp;
-                                    lstack.push(ll);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            if comp.is_empty() {
-                continue; // isolated completion: nothing shares its links
-            }
-
-            // ---- lazily sync transferred bytes ----
-            for &fi in &comp {
-                remaining[fi] = (remaining[fi]
-                    - rate[fi] * (now - last_sync[fi]))
-                    .max(0.0);
-                last_sync[fi] = now;
-            }
-
-            // ---- queueing delay for newly arrived flows (identical
-            // arithmetic to `run`) ----
-            if comp.iter().any(|&fi| queue_penalty[fi].is_nan()) {
-                for &fi in &comp {
-                    if self.opts.congestion_mgmt
-                        && eject_count[d.flow_last[fi] as usize] >= thr
-                    {
-                        continue;
-                    }
-                    for &l in &d.flow_links[fi] {
-                        inflight[l as usize] += remaining[fi];
-                    }
-                }
-                for &fi in &comp {
-                    if !queue_penalty[fi].is_nan() {
-                        continue;
-                    }
-                    let mut pen = 0.0;
-                    for &l in &d.flow_links[fi] {
-                        let queued = (inflight[l as usize] - remaining[fi])
-                            .max(0.0)
-                            .min(self.opts.queue_cap_bytes);
-                        pen += queued / d.cap[l as usize].max(1.0);
-                    }
-                    queue_penalty[fi] = pen;
-                }
-                for &fi in &comp {
-                    for &l in &d.flow_links[fi] {
-                        inflight[l as usize] = 0.0;
-                    }
-                }
-            }
-
-            // ---- exact max-min over the component ----
-            let mut rates = self.maxmin_component(
-                &d, &comp, &link_flows, &mut rem_cap, &mut count, &mut slot,
-                &mut touched,
+            self.solve_batch(
+                &d, &mut st, &mut heap, now, &completions, &arrivals,
+                full_resolve,
             );
-
-            // ---- congestion classification (identical to `run`) ----
-            let is_contrib =
-                |fi: usize| eject_count[d.flow_last[fi] as usize] >= thr;
-            let any_incast = comp.iter().any(|&fi| is_contrib(fi));
-            if any_incast {
-                for &fi in &comp {
-                    if is_contrib(fi) {
-                        contributors_set.insert(fi);
-                        for &l in &d.flow_links[fi] {
-                            contaminated[l as usize] = true;
-                        }
-                    }
-                }
-                if !self.opts.congestion_mgmt {
-                    for (idx, &fi) in comp.iter().enumerate() {
-                        if is_contrib(fi) {
-                            continue;
-                        }
-                        if d.flow_links[fi]
-                            .iter()
-                            .any(|&l| contaminated[l as usize])
-                        {
-                            rates[idx] *= self.opts.victim_penalty;
-                            victims_set.insert(fi);
-                        }
-                    }
-                }
-                for &fi in &comp {
-                    for &l in &d.flow_links[fi] {
-                        contaminated[l as usize] = false;
-                    }
-                }
-            }
-
-            // ---- commit rates and (re)project completions ----
-            for (idx, &fi) in comp.iter().enumerate() {
-                rate[fi] = rates[idx];
-                epoch[fi] = epoch[fi].wrapping_add(1);
-                let t_fin = if remaining[fi] <= 1e-6 {
-                    now
-                } else if rate[fi] > 0.0 {
-                    now + remaining[fi] / rate[fi]
-                } else {
-                    f64::INFINITY
-                };
-                if t_fin.is_finite() {
-                    heap.push(Reverse(Ev {
-                        t: t_fin,
-                        kind: EV_COMPLETION,
-                        flow: fi as u32,
-                        epoch: epoch[fi],
-                    }));
-                }
-            }
         }
         let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
         DagResult {
             node_finish,
             makespan,
-            contributors: contributors_set.len(),
-            victims: victims_set.len(),
+            contributors: st.contributor_count(),
+            victims: st.victim_count(),
+        }
+    }
+
+    /// Execute a round-structured closed-loop workload **streamed**: the
+    /// windowed executor for Fig 14-scale collectives (2,048+ endpoints)
+    /// whose fully materialized round DAGs are O(P^2) nodes.
+    ///
+    /// Rounds are pulled from `src` lazily and retired once complete, so
+    /// the peak live node count is bounded by the workload's dependency
+    /// skew (how far fast endpoint chains run ahead of slow ones), not
+    /// by `rounds x P`. The materialization window is driven by
+    /// releases: the moment any node of round `k` is released, round
+    /// `k+1` is materialized — a dependent can therefore never have its
+    /// releasing completion arrive before the dependent exists, as long
+    /// as every node's dependencies live in the previous round (true for
+    /// the ring / pairwise / doubling / binomial generators, whose
+    /// sources are touched every round). Workloads that violate that
+    /// (a key silent for many rounds, then sending) still complete, but
+    /// such nodes are released at materialization time instead of their
+    /// true dependency release; [`StreamResult::late_releases`] counts
+    /// them, and it is zero exactly when the streamed execution is
+    /// equivalent (to solver fp noise) to `run_dag` on the fully
+    /// materialized DAG — asserted by `tests/des_equivalence.rs`.
+    ///
+    /// One further precondition on that equivalence (NOT tracked by
+    /// `late_releases`): the workload must use a single [`super::BufLoc`]
+    /// per NIC endpoint link. NIC-eff capacity caps are applied as flows
+    /// materialize, so a mixed-buffer source whose slower buffer type
+    /// appears late would see earlier rounds priced against the not-yet-
+    /// tightened cap, while `run_dag` caps from t=0. Every current
+    /// caller (`coll::stream_rounds`, the workload-level generators)
+    /// streams a uniform buffer class, where the caps are identical from
+    /// the first solve.
+    ///
+    /// Frontier semantics are [`super::workload::DagBuilder`]'s: within
+    /// a round every message sees the pre-round frontier; a message
+    /// depends on every previous-round node touching its *source* key,
+    /// and both endpoints' frontiers gain the node when the round
+    /// commits. Completed flow slots are recycled (dense link/flow state
+    /// reuse), so fabric memory is bounded by peak *concurrency*, not
+    /// total flow count.
+    pub fn run_stream(&self, src: &mut dyn RoundSource) -> StreamResult {
+        let cm = super::rounds::CostModel::new(self.topo);
+        let mut ex = StreamExec {
+            sim: self,
+            d: Dense::empty(),
+            intern: FxHashMap::default(),
+            st: SolveState::empty(),
+            nodes: VecDeque::new(),
+            base: 0,
+            round_pending: VecDeque::new(),
+            round_frontier_refs: VecDeque::new(),
+            round_base: 0,
+            materialized_rounds: 0,
+            exhausted: false,
+            frontier: FxHashMap::default(),
+            flow_node: Vec::new(),
+            flow_rf: Vec::new(),
+            free_slots: Vec::new(),
+            nodes_done: 0,
+            total_nodes: 0,
+            peak_live: 0,
+            late_releases: 0,
+            rounds: 0,
+        };
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        let mut relwork: Vec<u32> = Vec::new();
+
+        // ---- bootstrap: round 0 plus the cascade of rounds reachable
+        // through dependency-free nodes, all released at their floors ----
+        ex.materialize_next_round(src, &mut relwork);
+        while let Some(rid) = relwork.pop() {
+            let round = ex.node(rid).round;
+            ex.ensure_rounds(src, round + 2, &mut relwork);
+            let rel = ex.node(rid).release;
+            match ex.node(rid).kind {
+                StreamKind::Xfer(slot) => heap.push(Reverse(Ev {
+                    t: rel,
+                    kind: EV_ARRIVAL,
+                    flow: slot,
+                    epoch: 0,
+                })),
+                StreamKind::Compute(dt) => heap.push(Reverse(Ev {
+                    t: rel + dt,
+                    kind: EV_NODE,
+                    flow: rid,
+                    epoch: 0,
+                })),
+            }
+        }
+
+        let mut completions: Vec<usize> = Vec::new();
+        let mut arrivals: Vec<usize> = Vec::new();
+        let mut finished_nodes: Vec<u32> = Vec::new();
+        let mut freed: Vec<u32> = Vec::new();
+        let mut makespan = 0.0f64;
+
+        while ex.nodes_done < ex.total_nodes {
+            let now = match heap.peek() {
+                Some(&Reverse(ev)) => ev.t,
+                None => panic!(
+                    "deadlock in streaming DES: {} of {} live nodes never \
+                     released",
+                    ex.total_nodes - ex.nodes_done,
+                    ex.total_nodes
+                ),
+            };
+            assert!(now.is_finite(), "deadlock in streaming DES");
+            completions.clear();
+            arrivals.clear();
+            finished_nodes.clear();
+            freed.clear();
+            while let Some(&Reverse(ev)) = heap.peek() {
+                if ev.t != now {
+                    break;
+                }
+                heap.pop();
+                let fi = ev.flow as usize;
+                match ev.kind {
+                    EV_COMPLETION => {
+                        if !ex.st.done[fi]
+                            && ex.st.active[fi]
+                            && ev.epoch == ex.st.epoch[fi]
+                        {
+                            completions.push(fi);
+                        }
+                    }
+                    EV_ARRIVAL => {
+                        if !ex.st.done[fi] && !ex.st.active[fi] {
+                            arrivals.push(fi);
+                        }
+                    }
+                    // EV_NODE: `flow` carries the global node id
+                    _ => finished_nodes.push(ev.flow),
+                }
+            }
+
+            // ---- flow completions: bulk leaves the fabric now, node
+            // completes after the latency/queue tail; the slot is
+            // recycled after this batch's solve ----
+            for &fi in &completions {
+                ex.st.complete(&ex.d, fi);
+                let rf = &ex.flow_rf[fi];
+                let tail = cm.msg_latency(&rf.path, rf.flow.bytes, rf.flow.buf)
+                    + if ex.st.queue_penalty[fi].is_nan() {
+                        0.0
+                    } else {
+                        ex.st.queue_penalty[fi]
+                    };
+                heap.push(Reverse(Ev {
+                    t: now + tail,
+                    kind: EV_NODE,
+                    flow: ex.flow_node[fi],
+                    epoch: 0,
+                }));
+                freed.push(fi as u32);
+            }
+
+            // ---- node completions: release dependents, materializing
+            // the next round the moment a deeper round first releases.
+            // Zero-length compute chains collapse within the instant
+            // (the list grows while we walk it, as in `run_dag`). ----
+            let mut k = 0;
+            while k < finished_nodes.len() {
+                let id = finished_nodes[k];
+                k += 1;
+                makespan = makespan.max(now);
+                let succs = ex.finish_node(id, now);
+                for su in succs {
+                    let sn = ex.node_mut(su);
+                    sn.deps_left -= 1;
+                    sn.release = sn.release.max(now);
+                    if sn.deps_left == 0 {
+                        relwork.push(su);
+                    }
+                }
+                while let Some(rid) = relwork.pop() {
+                    let round = ex.node(rid).round;
+                    ex.ensure_rounds(src, round + 2, &mut relwork);
+                    let rel = ex.node(rid).release;
+                    let rel = if rel < now {
+                        // dependencies all finished before this node was
+                        // materialized: clamp (inexact, counted)
+                        ex.late_releases += 1;
+                        now
+                    } else {
+                        rel
+                    };
+                    match ex.node(rid).kind {
+                        StreamKind::Xfer(slot) => {
+                            if rel <= now {
+                                arrivals.push(slot as usize);
+                            } else {
+                                heap.push(Reverse(Ev {
+                                    t: rel,
+                                    kind: EV_ARRIVAL,
+                                    flow: slot,
+                                    epoch: ex.st.epoch[slot as usize],
+                                }));
+                            }
+                        }
+                        StreamKind::Compute(dt) => {
+                            let t_fin = rel + dt;
+                            if t_fin <= now {
+                                finished_nodes.push(rid);
+                            } else {
+                                heap.push(Reverse(Ev {
+                                    t: t_fin,
+                                    kind: EV_NODE,
+                                    flow: rid,
+                                    epoch: 0,
+                                }));
+                            }
+                        }
+                    }
+                }
+            }
+
+            for &fi in &arrivals {
+                ex.st.arrive(&ex.d, fi, now);
+            }
+            if !(completions.is_empty() && arrivals.is_empty()) {
+                self.solve_batch(
+                    &ex.d, &mut ex.st, &mut heap, now, &completions,
+                    &arrivals, false,
+                );
+            }
+            // recycle flow slots only after the solve: the component walk
+            // reads the completed flows' links
+            ex.free_slots.append(&mut freed);
+            ex.retire();
+        }
+        StreamResult {
+            makespan,
+            rounds: ex.rounds,
+            total_nodes: ex.total_nodes,
+            peak_live_nodes: ex.peak_live,
+            contributors: ex.st.contributor_count(),
+            victims: ex.st.victim_count(),
+            late_releases: ex.late_releases,
         }
     }
 

@@ -29,11 +29,13 @@ pub mod routing;
 pub mod rounds;
 pub mod workload;
 
-pub use des::{DagResult, DesOpts, DesSim, TimedFlow};
+pub use des::{DagResult, DesOpts, DesSim, StreamResult, TimedFlow};
 pub use load::LoadMap;
 pub use qos::TrafficClass;
 pub use routing::Router;
-pub use workload::{DagBuilder, DagKind, DagNode, DagWorkload};
+pub use workload::{
+    DagBuilder, DagKind, DagNode, DagWorkload, RoundSource, StreamNode,
+};
 
 use crate::topology::Path;
 

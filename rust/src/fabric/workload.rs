@@ -234,18 +234,129 @@ impl DagBuilder {
         self.dag.xfer_at(rf, start)
     }
 
+    /// Set the absolute release floor of an already-added node (job phase
+    /// offsets, per-rank clock floors for `World::exchange` supersteps).
+    /// The node still waits for its dependencies; the floor only keeps it
+    /// from starting earlier.
+    pub fn set_floor(&mut self, id: u32, start: f64) {
+        self.dag.nodes[id as usize].start = start;
+    }
+
+    /// Nodes added so far.
+    pub fn node_count(&self) -> usize {
+        self.dag.len()
+    }
+
     pub fn finish(mut self) -> DagWorkload {
         self.end_round();
         self.dag
     }
 }
 
+// ------------------------------------------------------ streaming rounds
+
+/// One message of a streamed round (see [`RoundSource`]): either a
+/// fabric transfer between two logical endpoint keys or a fixed-duration
+/// node (intra-node message / compute) participating in the same round
+/// dependency semantics.
+#[derive(Debug, Clone)]
+pub enum StreamNode {
+    /// Fixed-duration node between keys `a` and `b` (use `a == b` for a
+    /// pure per-key compute interval).
+    Compute { a: u32, b: u32, dt: f64 },
+    /// Routed fabric transfer from key `a` to key `b`.
+    Xfer { a: u32, b: u32, rf: RoutedFlow },
+}
+
+/// Lazily yields the successive rounds of a round-structured closed-loop
+/// workload for [`DesSim::run_stream`](super::des::DesSim::run_stream).
+/// Round `k`'s messages are released by round `k-1` per source key
+/// ([`DagBuilder`] frontier semantics) without the O(rounds x P) DAG
+/// ever being materialized at once. Any `FnMut() -> Option<Vec<StreamNode>>`
+/// closure is a source.
+pub trait RoundSource {
+    /// The next round's messages; `None` once the workload is exhausted.
+    /// Empty rounds are skipped by the executor.
+    fn next_round(&mut self) -> Option<Vec<StreamNode>>;
+}
+
+impl<F: FnMut() -> Option<Vec<StreamNode>>> RoundSource for F {
+    fn next_round(&mut self) -> Option<Vec<StreamNode>> {
+        self()
+    }
+}
+
+/// Drain a round source into a fully materialized [`DagWorkload`] (the
+/// equivalence reference for the streaming executor: `run_dag` on the
+/// collected DAG must match `run_stream` on an identical source).
+pub fn collect_rounds(src: &mut dyn RoundSource) -> DagWorkload {
+    let mut b = DagBuilder::new();
+    while let Some(round) = src.next_round() {
+        for n in round {
+            match n {
+                StreamNode::Compute { a, b: bb, dt } => {
+                    b.compute_staged(a, bb, dt);
+                }
+                StreamNode::Xfer { a, b: bb, rf } => {
+                    b.xfer(a, bb, rf);
+                }
+            }
+        }
+        b.end_round();
+    }
+    b.finish()
+}
+
+/// Route `(src, dst, bytes)` round triples lazily: a [`RoundSource`]
+/// that pulls round `k` from `gen` and routes its messages on demand —
+/// the streaming analogue of [`dag_from_rounds`].
+pub fn routed_round_source<'r, 't: 'r, G>(
+    router: &'r mut Router<'t>,
+    mut gen: G,
+) -> impl RoundSource + 'r
+where
+    G: FnMut(usize) -> Option<Vec<(u32, u32, u64)>> + 'r,
+{
+    let mut k = 0usize;
+    move || -> Option<Vec<StreamNode>> {
+        let triples = gen(k)?;
+        k += 1;
+        Some(
+            triples
+                .into_iter()
+                .map(|(s, d, bytes)| {
+                    let f = Flow::new(s, d, bytes);
+                    let path = router.route(&f);
+                    StreamNode::Xfer {
+                        a: s,
+                        b: d,
+                        rf: RoutedFlow { flow: f, path },
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
 // ------------------------------------------------------ round generators
 
 /// Evenly spread `ranks` logical endpoints over the fabric's NICs.
+///
+/// Endpoints are distinct by construction: requesting more ranks than
+/// the fabric has compute endpoints would clamp the stride to 1 and wrap
+/// `i * stride` around `% nics`, aliasing endpoints — and aliased
+/// endpoints turn ring/pairwise generators' messages into self-flows
+/// (src == dst) that the round DAGs silently drop into the frontier, so
+/// this asserts instead of producing a corrupt workload.
 pub fn spread_nics(topo: &Topology, ranks: usize) -> Vec<u32> {
     let nics = topo.cfg.compute_endpoints() as u64;
-    let stride = (nics / ranks as u64).max(1);
+    assert!(
+        ranks as u64 <= nics,
+        "spread_nics: {ranks} ranks > {nics} compute endpoints would alias \
+         endpoints (self-flows in round generators); use a larger topology \
+         or fewer ranks"
+    );
+    let stride = (nics / ranks.max(1) as u64).max(1);
     (0..ranks as u64).map(|i| ((i * stride) % nics) as u32).collect()
 }
 
@@ -461,6 +572,95 @@ mod tests {
         assert!((cp[0] - (1.0 + solo)).abs() < 1e-12);
         assert!((cp[1] - (1.0 + solo + 0.25)).abs() < 1e-12);
         assert!((cp[2] - (1.0 + 2.0 * solo + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_nics_rejects_aliasing_and_stays_distinct() {
+        // regression (tiny topology): ranks > compute_endpoints used to
+        // clamp the stride to 1 and wrap, aliasing endpoints into
+        // self-flows; it must assert instead
+        let t = Topology::new(&AuroraConfig::tiny()); // 64 endpoints
+        let n = t.cfg.compute_endpoints();
+        let nics = spread_nics(&t, n);
+        let mut uniq = nics.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), n, "full-fabric spread must stay distinct");
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || spread_nics(&t, n + 1),
+        ));
+        assert!(res.is_err(), "oversubscribed spread must be rejected");
+    }
+
+    #[test]
+    fn collect_rounds_matches_dag_from_rounds() {
+        // the streaming source adapter and the materializing builder
+        // must express identical round DAGs
+        let t = setup();
+        let nics = spread_nics(&t, 6);
+        let rr = ring_rounds(&nics, 3, 2048);
+        let mut r1 = Router::with_seed(&t, 5);
+        let via_builder = dag_from_rounds(&mut r1, &rr, 0.0);
+        let mut r2 = Router::with_seed(&t, 5);
+        let rr2 = rr.clone();
+        let mut src = routed_round_source(&mut r2, move |k| {
+            rr2.get(k).cloned()
+        });
+        let via_source = collect_rounds(&mut src);
+        assert_eq!(via_builder.len(), via_source.len());
+        for (a, b) in via_builder.nodes.iter().zip(&via_source.nodes) {
+            assert_eq!(a.deps, b.deps);
+            match (&a.kind, &b.kind) {
+                (DagKind::Xfer(x), DagKind::Xfer(y)) => {
+                    assert_eq!(x.path, y.path);
+                    assert_eq!(x.flow.bytes, y.flow.bytes);
+                }
+                _ => panic!("kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn run_stream_matches_run_dag_on_ring() {
+        let t = setup();
+        let nics = spread_nics(&t, 8);
+        let rr = ring_rounds(&nics, 4, 1 << 20);
+        let mut r1 = Router::with_seed(&t, 9);
+        let dag = dag_from_rounds(&mut r1, &rr, 0.0);
+        let sim = DesSim::new(&t, DesOpts::default());
+        let full = sim.run_dag(&dag);
+        let mut r2 = Router::with_seed(&t, 9);
+        let rr2 = rr.clone();
+        let mut src = routed_round_source(&mut r2, move |k| {
+            rr2.get(k).cloned()
+        });
+        let streamed = sim.run_stream(&mut src);
+        let rel = (full.makespan - streamed.makespan).abs()
+            / full.makespan.max(1e-30);
+        assert!(
+            rel < 1e-9,
+            "streamed {} vs materialized {}",
+            streamed.makespan,
+            full.makespan
+        );
+        assert_eq!(streamed.late_releases, 0);
+        assert_eq!(streamed.total_nodes, dag.len());
+        assert!(streamed.peak_live_nodes <= dag.len());
+    }
+
+    #[test]
+    fn set_floor_delays_release() {
+        let t = setup();
+        let mut r = Router::new(&t);
+        let f = Flow::new(0, 200, 1 << 20);
+        let rf = RoutedFlow { path: r.route(&f), flow: f };
+        let mut b = DagBuilder::new();
+        let id = b.xfer(0, 1, rf);
+        b.set_floor(id, 2.5);
+        assert_eq!(b.node_count(), 1);
+        let wl = b.finish();
+        let res = DesSim::new(&t, DesOpts::default()).run_dag(&wl);
+        assert!(res.node_finish[0] > 2.5, "floor must gate the transfer");
     }
 
     #[test]

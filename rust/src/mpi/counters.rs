@@ -3,7 +3,8 @@
 //! changes. We model the counters the fabric-validation flow reads:
 //! per-NIC messages/bytes, retries and timeouts.
 
-use std::collections::HashMap;
+use crate::fabric::TrafficClass;
+use std::collections::{BTreeMap, HashMap};
 
 #[derive(Debug, Clone, Default)]
 pub struct NicCounters {
@@ -16,6 +17,10 @@ pub struct NicCounters {
 #[derive(Debug, Clone, Default)]
 pub struct CxiCounters {
     pub per_nic: HashMap<u32, NicCounters>,
+    /// Messages per QoS traffic class (§4.2.3): lets tests and the
+    /// fabric-validation flow confirm which class an operation rode —
+    /// e.g. that barriers use LowLatency (§3.1).
+    pub msgs_by_class: BTreeMap<TrafficClass, u64>,
     /// CXI-level timeouts (the §3.8.6 summary line).
     pub timeouts: u64,
 }
@@ -26,9 +31,25 @@ impl CxiCounters {
     }
 
     pub fn record_send(&mut self, nic: u32, bytes: u64) {
+        self.record_send_class(nic, bytes, TrafficClass::BestEffort);
+    }
+
+    /// Record a send on its QoS class (fabric flows carry `flow.class`).
+    pub fn record_send_class(
+        &mut self,
+        nic: u32,
+        bytes: u64,
+        class: TrafficClass,
+    ) {
         let c = self.per_nic.entry(nic).or_default();
         c.msgs_sent += 1;
         c.bytes_sent += bytes;
+        *self.msgs_by_class.entry(class).or_default() += 1;
+    }
+
+    /// Messages recorded on `class`.
+    pub fn class_msgs(&self, class: TrafficClass) -> u64 {
+        self.msgs_by_class.get(&class).copied().unwrap_or(0)
     }
 
     pub fn record_retry(&mut self, nic: u32) {
@@ -109,6 +130,17 @@ mod tests {
         c.record_send(3, 10);
         let r = c.report(true);
         assert!(r.contains("cxi3: msgs=1 bytes=10"));
+    }
+
+    #[test]
+    fn class_accounting() {
+        let mut c = CxiCounters::new();
+        c.record_send(0, 10); // defaults to BestEffort
+        c.record_send_class(1, 10, TrafficClass::LowLatency);
+        assert_eq!(c.class_msgs(TrafficClass::BestEffort), 1);
+        assert_eq!(c.class_msgs(TrafficClass::LowLatency), 1);
+        assert_eq!(c.class_msgs(TrafficClass::BulkData), 0);
+        assert_eq!(c.total_msgs(), 2);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod rma;
 use crate::config::AuroraConfig;
 use crate::fabric::des::{DesOpts, DesSim};
 use crate::fabric::rounds::CostModel;
+use crate::fabric::workload::DagBuilder;
 use crate::fabric::{BufLoc, Flow, Router, RoutedFlow, TrafficClass};
 use crate::node::{NodePaths, RankLoc};
 use crate::topology::Topology;
@@ -65,6 +66,18 @@ impl Comm {
     }
 }
 
+/// Superstep staging state (`FabricTier::Des`): exchanges accumulate as
+/// dependency-released rounds keyed by world rank and are priced as one
+/// closed-loop DAG at the next flush point (a collective, or an explicit
+/// [`World::flush_steps`] / [`World::end_superstep`]).
+#[derive(Default)]
+struct StagedSteps {
+    builder: DagBuilder,
+    /// Per staged node: participating world ranks and, for fabric
+    /// transfers, the NIC pair for router idle bookkeeping.
+    nodes: Vec<(usize, usize, Option<(u32, u32)>)>,
+}
+
 /// The simulated MPI world.
 pub struct World<'t> {
     pub topo: &'t Topology,
@@ -86,6 +99,8 @@ pub struct World<'t> {
     pub tier: FabricTier,
     node_paths: NodePaths,
     des_opts: DesOpts,
+    /// `Some` while exchange supersteps are being staged (Des tier).
+    staged: Option<StagedSteps>,
 }
 
 impl<'t> World<'t> {
@@ -107,6 +122,7 @@ impl<'t> World<'t> {
             tier: FabricTier::Analytic,
             node_paths: NodePaths::new(&topo.cfg),
             des_opts: DesOpts::default(),
+            staged: None,
             placements,
         }
     }
@@ -166,7 +182,7 @@ impl<'t> World<'t> {
         }
         let flow = self.flow(src, dst, bytes);
         let path = self.router.route(&flow);
-        self.counters.record_send(self.nics[src], bytes);
+        self.counters.record_send_class(self.nics[src], bytes, flow.class);
         self.cost_model().solo_msg_time(&path, bytes, self.buf)
     }
 
@@ -190,13 +206,211 @@ impl<'t> World<'t> {
         }
     }
 
+    /// Whether exchange supersteps are currently being staged.
+    pub fn staging(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// Begin dependency-released superstep staging (Des tier only; a
+    /// no-op on the analytic tier). Subsequent [`World::exchange`]
+    /// rounds accumulate into one closed-loop DAG — round k+1 released
+    /// per rank by round k — instead of being priced independently.
+    /// Collectives are flush points (their rounds join the staged DAG
+    /// and the whole superstep prices as one dependency-released run);
+    /// [`World::flush_steps`] flushes explicitly and
+    /// [`World::end_superstep`] flushes and stops staging.
+    pub fn begin_superstep(&mut self) {
+        if matches!(self.tier, FabricTier::Des) && self.staged.is_none() {
+            self.staged = Some(StagedSteps::default());
+        }
+    }
+
+    /// Flush staged supersteps: price the accumulated DAG closed-loop,
+    /// advance participant clocks to their node finishes, and keep
+    /// staging active. Returns the flushed span (0 if nothing staged).
+    pub fn flush_steps(&mut self) -> f64 {
+        if self.staged.is_none() {
+            return 0.0;
+        }
+        let t = self.end_superstep();
+        self.staged = Some(StagedSteps::default());
+        t
+    }
+
+    /// Flush staged supersteps and stop staging. Returns the wall span
+    /// of the staged work (earliest release floor to last finish).
+    pub fn end_superstep(&mut self) -> f64 {
+        match self.staged.take() {
+            Some(st) => {
+                let (mk, min_floor, _) = self.execute_staged(st);
+                mk - min_floor
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Per-rank compute inside a superstep: stages a compute node
+    /// serialized after everything the rank has staged so far and gating
+    /// the rank's next staged message — so compute genuinely separates
+    /// staged communication phases in the priced DAG. Without an active
+    /// superstep it is plain [`World::compute`] (immediate clock
+    /// advance). Plain `compute` during staging only moves the wall
+    /// clock (a release *floor*), which staged rounds already past that
+    /// floor would overlap.
+    pub fn superstep_compute(&mut self, rank: usize, seconds: f64) {
+        if let Some(mut st) = self.staged.take() {
+            let id = st.builder.compute(rank as u32, seconds.max(0.0));
+            st.builder.set_floor(id, self.clock[rank]);
+            st.nodes.push((rank, rank, None));
+            self.staged = Some(st);
+        } else {
+            self.compute(rank, seconds);
+        }
+    }
+
+    /// Stage one round of triples into `st`: intra-node messages become
+    /// fixed-duration nodes, fabric messages are routed now; every node
+    /// gets a release floor at its participants' current clocks (a rank
+    /// cannot take part before its local time). `ordered` selects the
+    /// flow's delivery mode: exchange rounds keep MPI envelope ordering
+    /// (`true`, pinned routes — the pre-existing `exchange` semantics),
+    /// while collective rounds staged at a flush point use `false` so
+    /// they route exactly like the streamed / `rounds_dag` Des paths.
+    fn stage_round_inner(
+        &mut self,
+        st: &mut StagedSteps,
+        msgs: &[(usize, usize, u64)],
+        ordered: bool,
+    ) {
+        for &(s, d, b) in msgs {
+            let (pa, pb) = (self.placements[s], self.placements[d]);
+            let floor = self.clock[s].max(self.clock[d]);
+            let (id, nics) = if pa.node == pb.node {
+                let dt = self.intra_node_time(&pa, &pb, b);
+                (st.builder.compute_staged(s as u32, d as u32, dt), None)
+            } else {
+                let mut f = self.flow(s, d, b);
+                f.ordered = ordered;
+                let path = self.router.route(&f);
+                self.counters.record_send_class(self.nics[s], b, f.class);
+                let id = st
+                    .builder
+                    .xfer(s as u32, d as u32, RoutedFlow { flow: f, path });
+                // destination-idle bookkeeping clears pinned routes, so
+                // it only applies to ordered (route-pinned) exchange
+                // flows — unordered collective rounds never pin and must
+                // not unpin unrelated ordered traffic
+                let idle = if ordered {
+                    Some((self.nics[s], self.nics[d]))
+                } else {
+                    None
+                };
+                (id, idle)
+            };
+            st.builder.set_floor(id, floor);
+            st.nodes.push((s, d, nics));
+        }
+        st.builder.end_round();
+    }
+
+    /// Execute a staged DAG closed-loop and advance clocks. Returns
+    /// `(makespan, min_floor, max_floor)` — absolute last finish plus
+    /// the earliest and latest release floors, so callers can report
+    /// either the wall span of the whole superstep (`makespan -
+    /// min_floor`) or, for a single round, the duration from the latest
+    /// participant start (`makespan - max_floor`, the analytic-tier
+    /// contract).
+    fn execute_staged(&mut self, st: StagedSteps) -> (f64, f64, f64) {
+        let dag = st.builder.finish();
+        if dag.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let (min_floor, max_floor) = dag.nodes.iter().fold(
+            (f64::INFINITY, 0.0f64),
+            |(lo, hi), n| (lo.min(n.start), hi.max(n.start)),
+        );
+        let res =
+            DesSim::new(self.topo, self.des_opts.clone()).run_dag(&dag);
+        for (i, &(s, d, nics)) in st.nodes.iter().enumerate() {
+            let t = res.node_finish[i];
+            self.clock[s] = self.clock[s].max(t);
+            self.clock[d] = self.clock[d].max(t);
+            if let Some((sn, dn)) = nics {
+                self.router.destination_idle(sn, dn);
+            }
+        }
+        (res.makespan, min_floor.min(res.makespan), max_floor)
+    }
+
+    /// Stage round triples after any pending exchanges and flush: the
+    /// whole superstep — pending exchange rounds plus these rounds —
+    /// prices as one dependency-released DAG (collective flush points).
+    /// Staging stays active for the next superstep. Requires staging.
+    pub(crate) fn stage_rounds_and_flush(
+        &mut self,
+        rounds: &[Vec<(usize, usize, u64)>],
+    ) -> f64 {
+        let mut st = self.staged.take().expect("superstep staging active");
+        for round in rounds {
+            self.stage_round_inner(&mut st, round, false);
+        }
+        let (mk, min_floor, _) = self.execute_staged(st);
+        self.staged = Some(StagedSteps::default());
+        mk - min_floor
+    }
+
     /// Execute one communication round: `(src, dst, bytes)` triples that
     /// start together. Advances the clocks of all participants; returns
     /// the round's duration (from the latest participant start).
+    ///
+    /// On `FabricTier::Des` the round runs **closed-loop**: while
+    /// superstep staging is active ([`World::begin_superstep`]) it is
+    /// staged — released per rank by the previous round, priced at the
+    /// next flush point, return value 0.0 until then — and otherwise it
+    /// executes immediately as a one-round dependency DAG with per-rank
+    /// clock floors. The analytic tier keeps the original independent
+    /// round pricing.
     pub fn exchange(&mut self, msgs: &[(usize, usize, u64)]) -> f64 {
         if msgs.is_empty() {
             return 0.0;
         }
+        if matches!(self.tier, FabricTier::Des) {
+            if let Some(mut st) = self.staged.take() {
+                self.stage_round_inner(&mut st, msgs, true);
+                self.staged = Some(st);
+                return 0.0; // priced at the next flush point
+            }
+        }
+        self.exchange_now(msgs)
+    }
+
+    /// Execute one round and price it **immediately**, regardless of
+    /// superstep staging — for callers that consume the returned
+    /// duration (the RMA wire round, the OSU bandwidth probes, anything
+    /// dividing bytes by the result). Pending staged rounds are left
+    /// pending and unpriced; call [`World::flush_steps`] first if this
+    /// round must observe their clock effects.
+    pub fn exchange_now(&mut self, msgs: &[(usize, usize, u64)]) -> f64 {
+        if msgs.is_empty() {
+            return 0.0;
+        }
+        match self.tier {
+            FabricTier::Des => {
+                let mut st = StagedSteps::default();
+                self.stage_round_inner(&mut st, msgs, true);
+                // single round: duration from the latest participant
+                // start (max floor), matching the analytic contract —
+                // pre-existing clock skew is not part of the round time
+                let (mk, _, max_floor) = self.execute_staged(st);
+                (mk - max_floor).max(0.0)
+            }
+            FabricTier::Analytic => self.exchange_analytic(msgs),
+        }
+    }
+
+    /// The analytic-tier round pricing (independent per-round DES or
+    /// round-tier evaluation above `des_flow_limit`).
+    fn exchange_analytic(&mut self, msgs: &[(usize, usize, u64)]) -> f64 {
         // split intra-node messages (no fabric) from fabric flows
         let mut fabric_idx = Vec::new();
         let mut intra: Vec<(usize, f64)> = Vec::new();
@@ -208,7 +422,7 @@ impl<'t> World<'t> {
             } else {
                 let f = self.flow(s, d, b);
                 let path = self.router.route(&f);
-                self.counters.record_send(self.nics[s], b);
+                self.counters.record_send_class(self.nics[s], b, f.class);
                 routed.push(RoutedFlow { flow: f, path });
                 fabric_idx.push(i);
             }
@@ -261,7 +475,11 @@ impl<'t> World<'t> {
         // latency, the rest are serialization-gated
         let total =
             lat + window as f64 * ser.max(1.0 / self.topo.cfg.nic_msg_rate);
-        self.counters.record_send(self.nics[src], bytes * window as u64);
+        self.counters.record_send_class(
+            self.nics[src],
+            bytes * window as u64,
+            flow.class,
+        );
         lat.max(total / window as f64)
     }
 
@@ -350,5 +568,112 @@ mod tests {
         w.compute(0, 5.0);
         w.sync_clocks(&Comm::world(4), 0.0);
         assert!(w.clock.iter().all(|&c| c == 5.0));
+    }
+
+    #[test]
+    fn des_exchange_prices_one_round_closed_loop() {
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let mut w = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        let d = w.exchange(&[(0, 4, 1 << 20), (1, 5, 1 << 20)]);
+        assert!(d > 0.0);
+        assert!(w.clock[0] > 0.0 && w.clock[5] > 0.0);
+        assert_eq!(w.clock[2], 0.0, "uninvolved rank unaffected");
+    }
+
+    #[test]
+    fn superstep_chains_exchange_rounds() {
+        // the same two rounds: staged as one dependency-released
+        // superstep, round 2 must wait for round 1 per rank — so the
+        // chained elapsed time clearly exceeds one round alone
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let round1 = [(0usize, 4usize, 8u64 << 20)];
+        let round2 = [(4usize, 0usize, 8u64 << 20)];
+        let mut w1 = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        w1.exchange(&round1);
+        let one = w1.elapsed();
+        let mut w = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        w.begin_superstep();
+        assert!(w.staging());
+        assert_eq!(w.exchange(&round1), 0.0, "staged rounds defer pricing");
+        w.exchange(&round2);
+        let span = w.end_superstep();
+        assert!(!w.staging());
+        assert!(span > one * 1.5, "span {span} vs one round {one}");
+        assert!((w.elapsed() - span).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_now_prices_during_staging() {
+        // duration-consuming callers (RMA wire rounds, OSU probes) must
+        // get a real value even while supersteps are being staged
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let mut w = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        w.begin_superstep();
+        assert_eq!(w.exchange(&[(0, 4, 1 << 20)]), 0.0);
+        let t = w.exchange_now(&[(1, 5, 1 << 20)]);
+        assert!(t > 0.0, "exchange_now must price immediately: {t}");
+        assert!(w.staging(), "staging state unaffected");
+        w.end_superstep();
+    }
+
+    #[test]
+    fn des_exchange_duration_excludes_prior_clock_skew() {
+        // regression: the Des-tier round duration is measured from the
+        // latest participant start (analytic contract), not from the
+        // earliest floor — pre-existing skew must not inflate it
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let mut w = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        w.compute(0, 10.0); // rank 0 busy until t=10
+        let d = w.exchange(&[(0, 4, 1 << 20), (1, 5, 1 << 20)]);
+        assert!(d > 0.0 && d < 1.0, "round duration {d} inflated by skew");
+        assert!(w.clock[4] > 10.0, "rank 0's flow still floored at t=10");
+    }
+
+    #[test]
+    fn superstep_compute_serializes_between_staged_rounds() {
+        // regression: a compute phase between two staged exchanges must
+        // sit ON the priced dependency chain (plain World::compute only
+        // moves the wall-clock floor, which staged rounds already past
+        // it would overlap)
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let run = |compute: f64| {
+            let mut w =
+                World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+            w.begin_superstep();
+            w.exchange(&[(0, 4, 1 << 20)]);
+            if compute > 0.0 {
+                w.superstep_compute(4, compute);
+            }
+            w.exchange(&[(4, 0, 1 << 20)]);
+            w.end_superstep()
+        };
+        let without = run(0.0);
+        let with = run(0.5);
+        assert!(
+            (with - (without + 0.5)).abs() < 1e-9,
+            "compute must separate the rounds: {without} vs {with}"
+        );
+    }
+
+    #[test]
+    fn superstep_floors_respect_rank_clocks() {
+        let m = Machine::new(&AuroraConfig::small(4, 4));
+        let mut w = World::new(&m.topo, m.place_job(0, 8, 1)).des_fabric();
+        w.begin_superstep();
+        w.compute(0, 1.0); // rank 0 busy until t=1
+        w.exchange(&[(0, 4, 1 << 20)]);
+        w.end_superstep();
+        assert!(w.clock[4] > 1.0, "transfer cannot start before its floor");
+    }
+
+    #[test]
+    fn superstep_is_noop_on_analytic_tier() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mut w = world(&m, 4, 2);
+        w.begin_superstep();
+        assert!(!w.staging(), "analytic tier never stages");
+        let d = w.exchange(&[(0, 2, 4096)]);
+        assert!(d > 0.0, "analytic exchange still prices immediately");
+        assert_eq!(w.end_superstep(), 0.0);
     }
 }

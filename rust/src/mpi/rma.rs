@@ -157,7 +157,9 @@ impl WindowSim {
                 .iter()
                 .map(|(&(s, d), &b)| (s, d, b))
                 .collect();
-            w.exchange(&msgs)
+            // the duration is consumed below, so the round must price
+            // immediately even if exchange supersteps are being staged
+            w.exchange_now(&msgs)
         };
         let t = engine_t.max(serial_t) + wire_t;
         w.sync_clocks(comm, t);

@@ -343,6 +343,165 @@ fn open_loop_dag_matches_timed_run() {
     }
 }
 
+// ---------------------------------------------------------------- streaming
+
+/// Stream and materialize the same routed round structure (independent
+/// same-seeded routers produce identical flows) and assert the windowed
+/// streaming executor reproduces the fully materialized closed-loop run.
+fn assert_stream_equivalent(
+    topo: &Topology,
+    opts: &DesOpts,
+    rounds: &[Vec<(u32, u32, u64)>],
+    seed: u64,
+    what: &str,
+) {
+    let mut r1 = Router::with_seed(topo, seed);
+    let dag = workload::dag_from_rounds(&mut r1, rounds, 0.0);
+    let sim = DesSim::new(topo, opts.clone());
+    let full = sim.run_dag(&dag);
+    let mut r2 = Router::with_seed(topo, seed);
+    let rv = rounds.to_vec();
+    let mut src =
+        workload::routed_round_source(&mut r2, move |k| rv.get(k).cloned());
+    let streamed = sim.run_stream(&mut src);
+    assert_eq!(streamed.late_releases, 0, "{what}: late releases");
+    assert_eq!(streamed.total_nodes, dag.len(), "{what}: node count");
+    assert_eq!(
+        streamed.contributors, full.contributors,
+        "{what}: contributors"
+    );
+    assert_eq!(streamed.victims, full.victims, "{what}: victims");
+    let rel = (streamed.makespan - full.makespan).abs()
+        / full.makespan.max(1e-30);
+    assert!(
+        rel < REL_TOL,
+        "{what}: streamed {:.15e} vs materialized {:.15e} (rel {rel:.2e})",
+        streamed.makespan,
+        full.makespan
+    );
+}
+
+#[test]
+fn sweep_streaming_matches_materialized() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE09);
+    for case in 0..9 {
+        let ranks = 6 + rng.gen_usize(10);
+        let nics = workload::spread_nics(&topo, ranks);
+        let bytes = 1 + rng.gen_range(2 << 20);
+        let rounds = match case % 3 {
+            0 => workload::ring_rounds(&nics, 3 + rng.gen_usize(5), bytes),
+            1 => workload::pairwise_rounds(&nics, bytes),
+            _ => workload::doubling_rounds(&nics, bytes),
+        };
+        let opts = DesOpts {
+            congestion_mgmt: case % 2 == 0,
+            ..DesOpts::default()
+        };
+        assert_stream_equivalent(
+            &topo,
+            &opts,
+            &rounds,
+            rng.next_u64(),
+            &format!("stream {case} ({ranks} ranks)"),
+        );
+    }
+}
+
+#[test]
+fn streaming_executor_reaches_fig14_scale() {
+    // the Fig 14 headline scale: 2,048 simulated endpoints, closed-loop.
+    // The windowed executor must keep only a dependency-skew window of
+    // rounds live — peak live nodes far below rounds x P — where full
+    // materialization holds every routed flow at once.
+    let topo = Topology::new(&AuroraConfig::small(16, 16)); // 4,096 NICs
+    let p = 2048usize;
+    let nics = workload::spread_nics(&topo, p);
+    let sim = DesSim::new(&topo, DesOpts::default());
+
+    // ring allreduce rounds (the large-message regime of Fig 14; equal
+    // 1 MiB chunks keep per-endpoint round times near-identical, so the
+    // dependency skew — and with it the live window — stays small)
+    let ring_rounds = 12usize;
+    let ring = workload::ring_rounds(&nics, ring_rounds, 1 << 20);
+    let mut r1 = Router::with_seed(&topo, 41);
+    let rv = ring.clone();
+    let mut src =
+        workload::routed_round_source(&mut r1, move |k| rv.get(k).cloned());
+    let res = sim.run_stream(&mut src);
+    assert_eq!(res.total_nodes, ring_rounds * p);
+    assert_eq!(res.late_releases, 0);
+    assert!(res.makespan > 0.0 && res.makespan.is_finite());
+    assert!(
+        res.peak_live_nodes * 2 < res.total_nodes,
+        "ring: peak live {} must be << total {}",
+        res.peak_live_nodes,
+        res.total_nodes
+    );
+
+    // pairwise all2all rotation rounds (first shifts of the P-1 sweep),
+    // generated lazily — the O(P^2) triple list never materializes
+    let shifts = 8usize;
+    let mut r2 = Router::with_seed(&topo, 42);
+    let nics2 = nics.clone();
+    let mut src2 = workload::routed_round_source(&mut r2, move |k| {
+        if k >= shifts {
+            return None;
+        }
+        Some(
+            (0..p)
+                .map(|i| (nics2[i], nics2[(i + k + 1) % p], 1 << 20))
+                .collect(),
+        )
+    });
+    let res2 = sim.run_stream(&mut src2);
+    assert_eq!(res2.total_nodes, shifts * p);
+    assert_eq!(res2.late_releases, 0);
+    assert!(res2.makespan > 0.0 && res2.makespan.is_finite());
+    assert!(
+        res2.peak_live_nodes * 2 < res2.total_nodes,
+        "pairwise: peak live {} must be << total {}",
+        res2.peak_live_nodes,
+        res2.total_nodes
+    );
+}
+
+#[test]
+fn des_world_full_collective_coverage_and_supersteps() {
+    use aurorasim::machine::Machine;
+    use aurorasim::mpi::{coll, Comm, World};
+    let m = Machine::new(&AuroraConfig::small(4, 4));
+    let comm = Comm::world(12);
+    // bcast / allgather / reduce_scatter price closed-loop on a
+    // des_fabric() world: positive makespans, clocks synced
+    let mut w = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+    let tb = coll::bcast(&mut w, &comm, 0, 1 << 20);
+    let tg = coll::allgather(&mut w, &comm, 1 << 20);
+    let tr = coll::reduce_scatter(&mut w, &comm, 12 << 20);
+    for (t, what) in
+        [(tb, "bcast"), (tg, "allgather"), (tr, "reduce_scatter")]
+    {
+        assert!(t > 0.0 && t.is_finite(), "{what}: {t}");
+    }
+    let t0 = w.clock[0];
+    assert!(t0 > 0.0);
+    assert!(w.clock.iter().all(|&c| (c - t0).abs() < 1e-12));
+
+    // World::exchange supersteps: two dependency-chained rounds must
+    // take clearly longer than the first round alone
+    let mut w1 = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+    w1.exchange(&[(0, 6, 8 << 20)]);
+    let single = w1.elapsed();
+    assert!(single > 0.0);
+    let mut w2 = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+    w2.begin_superstep();
+    w2.exchange(&[(0, 6, 8 << 20)]);
+    w2.exchange(&[(6, 0, 8 << 20)]);
+    let span = w2.end_superstep();
+    assert!(span > single * 1.5, "span {span} vs single {single}");
+    assert!((w2.elapsed() - span).abs() < 1e-12);
+}
+
 // ---------------------------------------------------------------- campaign
 
 #[test]
