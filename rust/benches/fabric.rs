@@ -247,6 +247,100 @@ fn main() {
         rep.ratio("stream_live_headroom_ring_2048", headroom);
     }
 
+    // route cache: 2,048-endpoint ring rounds re-route the same (src,
+    // dst) pair once per round without the cache, once per PAIR with
+    // it. The gated ratio is machine-independent: adaptive decisions
+    // made uncached vs cached (= the round count, 24x here; floor 2).
+    {
+        let p = 2048usize;
+        let rounds_n = 24usize;
+        let nics = workload::spread_nics(&small, p);
+        let rr = workload::ring_rounds(&nics, rounds_n, 1 << 20);
+        let route_all = |r: &mut Router| {
+            for round in &rr {
+                for &(s, d, b) in round {
+                    std::hint::black_box(r.route(&Flow::new(s, d, b)));
+                }
+            }
+        };
+        let mut decisions_uncached = 0usize;
+        rep.timed(
+            "des_route_cache_ring_2048_uncached",
+            "route/ring 2048 x 24 rounds uncached",
+            3,
+            || {
+                let mut r = Router::with_seed(&small, 31);
+                route_all(&mut r);
+                decisions_uncached = r.decisions;
+            },
+        );
+        let mut decisions_cached = 0usize;
+        rep.timed(
+            "des_route_cache_ring_2048",
+            "route/ring 2048 x 24 rounds cached",
+            3,
+            || {
+                let mut r = Router::with_seed(&small, 31);
+                r.enable_route_cache();
+                route_all(&mut r);
+                decisions_cached = r.decisions;
+            },
+        );
+        let ratio =
+            decisions_uncached as f64 / decisions_cached.max(1) as f64;
+        println!(
+            "route/cache decision ratio (2048-ring)           {ratio:>10.1}x \
+             ({decisions_uncached} vs {decisions_cached} decisions)"
+        );
+        rep.ratio("route_cache_decision_ratio_ring_2048", ratio);
+    }
+
+    // streamed superstep flush at app-loop scale: 2,048 ranks x 16
+    // exchange rounds staged into ONE dependency-released superstep and
+    // priced on the windowed executor — the staged triples are
+    // lightweight, and only a dependency-skew window of routed nodes is
+    // ever live (the headroom ratio below is the machine-independent
+    // gate; full materialization would hold all rounds x ranks nodes).
+    {
+        use aurorasim::machine::Machine;
+        use aurorasim::mpi::World;
+        let mch = Machine::new(&AuroraConfig::small(16, 16)); // 512 nodes
+        let p = 2048usize;
+        let rounds_n = 16usize;
+        let run = || {
+            let mut w =
+                World::new(&mch.topo, mch.place_job(0, 512, 4)).des_fabric();
+            w.begin_superstep();
+            for _ in 0..rounds_n {
+                let msgs: Vec<(usize, usize, u64)> =
+                    (0..p).map(|i| (i, (i + 4) % p, 1 << 20)).collect();
+                w.exchange(&msgs);
+            }
+            let span = w.end_superstep();
+            let fs = w.last_flush.expect("superstep flushed");
+            (span, fs)
+        };
+        std::hint::black_box(run()); // warmup (cold allocator/page cache)
+        let t0 = Instant::now();
+        let (span, fs) = run();
+        let dt = t0.elapsed().as_secs_f64();
+        rep.record(
+            "des_superstep_stream_flush",
+            "des/superstep streamed flush 2048 ranks x 16",
+            dt,
+        );
+        assert!(fs.streamed, "app-loop superstep must stream its flush");
+        assert_eq!(fs.late_releases, 0, "streamed flush must stay exact");
+        assert!(span > 0.0);
+        let headroom = fs.total_nodes as f64 / fs.peak_live_nodes as f64;
+        println!(
+            "des/superstep flush live-node headroom (2048)    {headroom:>10.1}x \
+             (peak {} of {})",
+            fs.peak_live_nodes, fs.total_nodes
+        );
+        rep.ratio("superstep_flush_headroom_2048", headroom);
+    }
+
     // incast + congestion classification
     let mut router = Router::new(&small);
     let incast: Vec<RoutedFlow> = (0..64)

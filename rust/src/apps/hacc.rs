@@ -224,6 +224,12 @@ mod tests {
         let mut wd = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
         let td = step_world(&mut wd, 12, 8 << 20);
         assert!(td > 200e-6, "compute phase must gate comm: {td}");
+        // the exchange-loop shape re-touches every rank each round, so
+        // the flush prices on the windowed streaming executor
+        let fs = wd.last_flush.expect("superstep flushed");
+        assert!(fs.streamed, "app exchange loop must stream its flush");
+        assert_eq!(fs.late_releases, 0);
+        assert!(fs.peak_live_nodes < fs.total_nodes);
         // deterministic across identical worlds
         let mut wd2 = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
         let td2 = step_world(&mut wd2, 12, 8 << 20);

@@ -186,6 +186,11 @@ mod tests {
         let mut wd = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
         let td = step_world(&mut wd, 12, 8 << 20);
         assert!(td > 150e-6, "compute must gate PPPM: {td}");
+        // halo / compute / pairwise rounds all re-touch every rank, so
+        // the superstep flush streams on the windowed executor
+        let fs = wd.last_flush.expect("superstep flushed");
+        assert!(fs.streamed, "exchange-loop flush must stream");
+        assert_eq!(fs.late_releases, 0);
         let mut wd2 = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
         let td2 = step_world(&mut wd2, 12, 8 << 20);
         assert!((td - td2).abs() < 1e-12, "{td} vs {td2}");

@@ -144,9 +144,14 @@ impl Campaign {
 
     /// Execute every scenario on up to `threads` workers. Results are in
     /// scenario order and independent of scheduling, so
-    /// `run(1)` and `run(k)` produce identical reports.
+    /// `run(1)` and `run(k)` produce identical reports. Each worker owns
+    /// one [`crate::fabric::DesScratch`] solver arena reused across the
+    /// scenarios it executes (a scenario's thousands of DES events then
+    /// run allocation-free after the first); scenario results are
+    /// scratch-history-independent, so this cannot perturb determinism.
     pub fn run(&self, threads: usize) -> CampaignReport {
-        let results = pool::par_map(&self.scenarios, threads, Scenario::run);
+        let results =
+            pool::par_map_with(&self.scenarios, threads, Scenario::run_with);
         CampaignReport { results }
     }
 

@@ -25,22 +25,44 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_with::<T, R, (), _>(items, threads, |t, _| f(t))
+}
+
+/// [`par_map`] with per-worker scratch state: every worker (or the
+/// caller thread, when running inline) owns one `S::default()` and
+/// threads it through its items — how campaign workers reuse one
+/// [`crate::fabric::DesScratch`] solver arena across the scenarios they
+/// execute instead of reallocating per scenario. `f` must produce
+/// results independent of the scratch's history (the campaign
+/// determinism suite asserts serial == parallel byte-for-byte, which
+/// exercises exactly this property).
+pub fn par_map_with<T, R, S, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Default,
+    F: Fn(&T, &mut S) -> R + Sync,
+{
     let threads = threads.clamp(1, items.len().max(1));
     if threads <= 1 {
-        return items.iter().map(&f).collect();
+        let mut scratch = S::default();
+        return items.iter().map(|t| f(t, &mut scratch)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> =
         items.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
+            s.spawn(|| {
+                let mut scratch = S::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&items[i], &mut scratch);
+                    *slots[i].lock().expect("poisoned result slot") = Some(r);
                 }
-                let r = f(&items[i]);
-                *slots[i].lock().expect("poisoned result slot") = Some(r);
             });
         }
     });

@@ -7,7 +7,7 @@
 //! and the result depends only on the scenario (never on scheduling).
 
 use crate::config::AuroraConfig;
-use crate::fabric::des::{DesOpts, DesSim, TimedFlow};
+use crate::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
 use crate::fabric::rounds::CostModel;
 use crate::fabric::workload::{self, DagBuilder, DagKind, DagWorkload};
 use crate::fabric::{Flow, RoutedFlow, Router};
@@ -392,6 +392,15 @@ impl Scenario {
     /// [`DesSim::run_dag`]; open-loop scenarios run timed flows through
     /// [`DesSim::run`].
     pub fn run(&self) -> ScenarioResult {
+        self.run_with(&mut DesScratch::new())
+    }
+
+    /// [`Scenario::run`] over a caller-owned [`DesScratch`] — the
+    /// campaign engine gives each worker one scratch reused across all
+    /// the scenarios it executes. Results are identical to [`run`]'s
+    /// (scratch reset is complete; the campaign determinism suite
+    /// asserts it byte-for-byte).
+    pub fn run_with(&self, scratch: &mut DesScratch) -> ScenarioResult {
         let topo = Topology::new(&self.cfg);
         if let Some((dag, opts)) = self.materialize_dag(&topo) {
             // contention-free dependency-aware reference: what the
@@ -399,7 +408,7 @@ impl Scenario {
             // (schema v2: its own critical_path_s field — v1 overloaded
             // rounds_upper for closed-loop rows)
             let cp = dag.critical_path_makespan(&CostModel::new(&topo));
-            let res = DesSim::new(&topo, opts).run_dag(&dag);
+            let res = DesSim::new(&topo, opts).run_dag_with(&dag, scratch);
             let finishes: Vec<f64> = dag
                 .xfer_ids()
                 .iter()
@@ -432,7 +441,7 @@ impl Scenario {
         } else {
             CostModel::new(&topo).eval_timed(&timed, &opts.degraded).makespan
         };
-        let res = DesSim::new(&topo, opts).run(&timed);
+        let res = DesSim::new(&topo, opts).run_with(&timed, scratch);
         ScenarioResult {
             name: self.name.clone(),
             flows: timed.len(),

@@ -159,33 +159,105 @@ enum StreamKind {
     Xfer(u32),
 }
 
-/// Windowed node/flow store of [`DesSim::run_stream`]: nodes are created
-/// in round order, held in a deque addressed by `id - base`, and retired
-/// in round order once a prefix round is fully complete and no key's
-/// frontier references it. Flow slots (dense link lists + solver state)
-/// recycle independently through `free_slots`.
-struct StreamExec<'a, 't> {
-    sim: &'a DesSim<'t>,
+/// One key's frontier in the streaming executor: the nodes of the last
+/// round that touched the key. Once that round is fully complete the
+/// entry is *collapsed* — the live node ids are replaced by the max
+/// finish time (`done_floor`), which is all a future dependent can
+/// extract from finished nodes — so the round stops being
+/// frontier-pinned and retires even if the key is never touched again
+/// (per-node refcount retirement; previously a once-touched key kept
+/// its round, and every later round, live forever).
+#[derive(Debug, Default)]
+struct FrontierEntry {
+    /// Round the live ids belong to; `u32::MAX` once collapsed.
+    round: u32,
+    ids: Vec<u32>,
+    /// Max finish among this key's already-retired dependency nodes.
+    done_floor: f64,
+}
+
+/// Reusable solver arena shared by every DES executor: the interned
+/// dense link/flow representation ([`Dense`]), the mutable solve state
+/// ([`SolveState`]), the event heap, the per-event work lists and the
+/// streaming window. `DesSim::run`, `run_dag` and `run_stream` allocate
+/// one internally per call; the `*_with` variants borrow a caller-owned
+/// scratch and only *reset* it (keeping every allocation), so
+/// repeated-structure drivers — `World` supersteps pricing thousands of
+/// per-step DAGs, campaign workers sweeping scenarios — stop churning
+/// the allocator. A reset scratch is observationally identical to a
+/// fresh one (results never depend on scratch history; asserted by
+/// `tests/des_equivalence.rs`).
+#[derive(Default)]
+pub struct DesScratch {
     d: Dense,
     intern: FxHashMap<LinkId, u32>,
     st: SolveState,
+    heap: BinaryHeap<Reverse<Ev>>,
+    completions: Vec<usize>,
+    arrivals: Vec<usize>,
+    // ---- run_dag bookkeeping ----
+    succs: Vec<Vec<u32>>,
+    deps_left: Vec<u32>,
+    node_done: Vec<bool>,
+    /// Flow slot -> node id (`run_dag` and streaming).
+    flow_node: Vec<u32>,
+    /// Node id -> flow slot (`run_dag`; `u32::MAX` for compute nodes).
+    node_flow: Vec<u32>,
+    // ---- streaming executor window ----
     nodes: VecDeque<StreamLive>,
-    /// Global id of `nodes[0]`.
-    base: u32,
-    /// Per live round (from `round_base`): unfinished node count.
     round_pending: VecDeque<u32>,
-    /// Per live round: number of keys whose frontier points at it.
     round_frontier_refs: VecDeque<u32>,
+    round_keys: VecDeque<Vec<u32>>,
+    frontier: FxHashMap<u32, FrontierEntry>,
+    flow_rf: Vec<RoutedFlow>,
+    free_slots: Vec<u32>,
+}
+
+impl DesScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear every run-local structure while retaining allocations.
+    fn reset(&mut self) {
+        self.d.reset();
+        self.intern.clear();
+        self.st.reset();
+        self.heap.clear();
+        self.completions.clear();
+        self.arrivals.clear();
+        for v in &mut self.succs {
+            v.clear();
+        }
+        self.deps_left.clear();
+        self.node_done.clear();
+        self.flow_node.clear();
+        self.node_flow.clear();
+        self.nodes.clear();
+        self.round_pending.clear();
+        self.round_frontier_refs.clear();
+        self.round_keys.clear();
+        self.frontier.clear();
+        self.flow_rf.clear();
+        self.free_slots.clear();
+    }
+}
+
+/// Windowed node/flow store of [`DesSim::run_stream`]: nodes are created
+/// in round order, held in a deque addressed by `id - base`, and retired
+/// in round order once a prefix round is fully complete and no key's
+/// frontier holds live references to it (fully-done frontier entries
+/// collapse to their max finish, see [`FrontierEntry`]). Flow slots
+/// (dense link lists + solver state) recycle independently through
+/// `free_slots`. All bulk storage lives in the borrowed [`DesScratch`].
+struct StreamExec<'a, 't> {
+    sim: &'a DesSim<'t>,
+    s: &'a mut DesScratch,
+    /// Global id of `s.nodes[0]`.
+    base: u32,
     round_base: u32,
     materialized_rounds: u32,
     exhausted: bool,
-    /// Key -> (round, node ids) — `DagBuilder` frontier semantics.
-    frontier: FxHashMap<u32, (u32, Vec<u32>)>,
-    /// Flow slot -> global node id of its current occupant.
-    flow_node: Vec<u32>,
-    /// Flow slot -> routed flow (for the latency tail at completion).
-    flow_rf: Vec<RoutedFlow>,
-    free_slots: Vec<u32>,
     nodes_done: usize,
     total_nodes: usize,
     peak_live: usize,
@@ -195,16 +267,16 @@ struct StreamExec<'a, 't> {
 
 impl StreamExec<'_, '_> {
     fn node(&self, id: u32) -> &StreamLive {
-        &self.nodes[(id - self.base) as usize]
+        &self.s.nodes[(id - self.base) as usize]
     }
 
     fn node_mut(&mut self, id: u32) -> &mut StreamLive {
-        &mut self.nodes[(id - self.base) as usize]
+        &mut self.s.nodes[(id - self.base) as usize]
     }
 
     /// Pull and wire one more (non-empty) round from the source.
-    /// Dependency-free nodes — immediately releasable — are pushed onto
-    /// `pending` for the caller to schedule. Returns false once the
+    /// Dependency-free nodes — releasable at their floors — are pushed
+    /// onto `pending` for the caller to schedule. Returns false once the
     /// source is exhausted.
     fn materialize_next_round(
         &mut self,
@@ -224,38 +296,39 @@ impl StreamExec<'_, '_> {
         let k = self.materialized_rounds;
         self.materialized_rounds += 1;
         self.rounds += 1;
-        self.round_pending.push_back(round.len() as u32);
-        self.round_frontier_refs.push_back(0);
+        self.s.round_pending.push_back(round.len() as u32);
+        self.s.round_frontier_refs.push_back(0);
+        self.s.round_keys.push_back(Vec::new());
         // within the round, everyone sees the pre-round frontier; the
         // staged (key, id) pairs commit afterwards (DagBuilder::end_round)
         let mut staged: Vec<(u32, u32)> = Vec::with_capacity(2 * round.len());
         for n in round {
-            let id = self.base + self.nodes.len() as u32;
-            let (a, b, kind) = match n {
-                StreamNode::Compute { a, b, dt } => {
-                    (a, b, StreamKind::Compute(dt.max(0.0)))
+            let id = self.base + self.s.nodes.len() as u32;
+            let (a, b, start, kind) = match n {
+                StreamNode::Compute { a, b, dt, start } => {
+                    (a, b, start, StreamKind::Compute(dt.max(0.0)))
                 }
-                StreamNode::Xfer { a, b, rf } => {
+                StreamNode::Xfer { a, b, rf, start } => {
                     let bytes = rf.flow.bytes as f64;
-                    let slot = if let Some(s) = self.free_slots.pop() {
-                        let s = s as usize;
+                    let slot = if let Some(fs) = self.s.free_slots.pop() {
+                        let fs = fs as usize;
                         self.sim.push_flow(
-                            &mut self.d, &mut self.intern, &rf, Some(s),
+                            &mut self.s.d, &mut self.s.intern, &rf, Some(fs),
                         );
-                        self.st.recycle_flow(s, bytes);
-                        self.flow_node[s] = id;
-                        self.flow_rf[s] = rf;
-                        s
+                        self.s.st.recycle_flow(fs, bytes);
+                        self.s.flow_node[fs] = id;
+                        self.s.flow_rf[fs] = rf;
+                        fs
                     } else {
-                        let s = self.sim.push_flow(
-                            &mut self.d, &mut self.intern, &rf, None,
+                        let fs = self.sim.push_flow(
+                            &mut self.s.d, &mut self.s.intern, &rf, None,
                         );
-                        self.st.push_flow(bytes);
-                        self.flow_node.push(id);
-                        self.flow_rf.push(rf);
-                        s
+                        self.s.st.push_flow(bytes);
+                        self.s.flow_node.push(id);
+                        self.s.flow_rf.push(rf);
+                        fs
                     };
-                    (a, b, StreamKind::Xfer(slot as u32))
+                    (a, b, start, StreamKind::Xfer(slot as u32))
                 }
             };
             let mut ln = StreamLive {
@@ -264,12 +337,15 @@ impl StreamExec<'_, '_> {
                 succs: Vec::new(),
                 done: false,
                 finish: f64::NAN,
-                release: 0.0,
+                // the node's release floor: its absolute start floor,
+                // raised by finished dependencies below / on release
+                release: start.max(0.0),
                 round: k,
             };
-            if let Some((_, deps)) = self.frontier.get(&a) {
-                for &dep in deps {
-                    let dn = &mut self.nodes[(dep - self.base) as usize];
+            if let Some(e) = self.s.frontier.get(&a) {
+                ln.release = ln.release.max(e.done_floor);
+                for &dep in &e.ids {
+                    let dn = &mut self.s.nodes[(dep - self.base) as usize];
                     if dn.done {
                         ln.release = ln.release.max(dn.finish);
                     } else {
@@ -279,11 +355,13 @@ impl StreamExec<'_, '_> {
                 }
             }
             staged.push((a, id));
-            staged.push((b, id));
+            if b != a {
+                staged.push((b, id));
+            }
             if ln.deps_left == 0 {
                 pending.push(id);
             }
-            self.nodes.push_back(ln);
+            self.s.nodes.push_back(ln);
             self.total_nodes += 1;
         }
         // commit frontiers: every key touched this round replaces its
@@ -293,15 +371,21 @@ impl StreamExec<'_, '_> {
             fresh.entry(key).or_default().push(id);
         }
         for (key, ids) in fresh {
-            if let Some((old_round, _)) = self.frontier.get(&key) {
-                self.round_frontier_refs
-                    [(old_round - self.round_base) as usize] -= 1;
+            if let Some(e) = self.s.frontier.get(&key) {
+                if e.round != u32::MAX {
+                    self.s.round_frontier_refs
+                        [(e.round - self.round_base) as usize] -= 1;
+                }
             }
-            self.round_frontier_refs[(k - self.round_base) as usize] += 1;
-            self.frontier.insert(key, (k, ids));
+            self.s.round_frontier_refs[(k - self.round_base) as usize] += 1;
+            self.s.round_keys[(k - self.round_base) as usize].push(key);
+            self.s.frontier.insert(
+                key,
+                FrontierEntry { round: k, ids, done_floor: 0.0 },
+            );
         }
-        self.peak_live = self.peak_live.max(self.nodes.len());
-        self.st.grow_links(self.d.cap.len());
+        self.peak_live = self.peak_live.max(self.s.nodes.len());
+        self.s.st.grow_links(self.s.d.cap.len());
         true
     }
 
@@ -321,44 +405,73 @@ impl StreamExec<'_, '_> {
 
     /// Mark node `id` complete; returns its dependents for release
     /// propagation (the successor list is consumed — no new successors
-    /// can attach once every frontier referencing the node is replaced,
-    /// and until then the node stays live for wiring-time finish reads).
+    /// can attach once every frontier referencing the node is replaced
+    /// or collapsed, and until then the node stays live for wiring-time
+    /// finish reads).
     fn finish_node(&mut self, id: u32, now: f64) -> Vec<u32> {
         let base = self.base;
         let round_base = self.round_base;
-        let n = &mut self.nodes[(id - base) as usize];
+        let n = &mut self.s.nodes[(id - base) as usize];
         debug_assert!(!n.done, "node {id} finished twice");
         n.done = true;
         n.finish = now;
         let round = n.round;
         let succs = std::mem::take(&mut n.succs);
         self.nodes_done += 1;
-        self.round_pending[(round - round_base) as usize] -= 1;
+        self.s.round_pending[(round - round_base) as usize] -= 1;
         succs
     }
 
-    /// Retire fully finished prefix rounds that no key's frontier
-    /// references any more: their nodes leave the window. Rounds still
-    /// referenced by a frontier stay live (their finish times seed the
-    /// release floors of future dependents).
+    /// Retire fully finished prefix rounds: their nodes leave the
+    /// window. Frontier entries still pointing at a fully finished round
+    /// collapse to their max finish first ([`FrontierEntry`]), so a key
+    /// touched once and never again cannot pin the round — or any later
+    /// round — live.
     fn retire(&mut self) {
-        while let (Some(&pend), Some(&refs)) = (
-            self.round_pending.front(),
-            self.round_frontier_refs.front(),
-        ) {
-            if pend != 0 || refs != 0 {
+        loop {
+            let pend = match self.s.round_pending.front() {
+                Some(&p) => p,
+                None => break,
+            };
+            if pend != 0 {
                 break;
             }
-            while let Some(front) = self.nodes.front() {
+            if self.s.round_frontier_refs[0] != 0 {
+                let keys = std::mem::take(&mut self.s.round_keys[0]);
+                for &key in &keys {
+                    let stale = match self.s.frontier.get(&key) {
+                        Some(e) => e.round == self.round_base,
+                        None => false,
+                    };
+                    if !stale {
+                        continue; // key re-touched later: not ours
+                    }
+                    let e = self.s.frontier.get_mut(&key).expect("entry");
+                    let ids = std::mem::take(&mut e.ids);
+                    let mut floor = e.done_floor;
+                    for &id in &ids {
+                        let dn = &self.s.nodes[(id - self.base) as usize];
+                        debug_assert!(dn.done);
+                        floor = floor.max(dn.finish);
+                    }
+                    let e = self.s.frontier.get_mut(&key).expect("entry");
+                    e.done_floor = floor;
+                    e.round = u32::MAX;
+                    self.s.round_frontier_refs[0] -= 1;
+                }
+                debug_assert_eq!(self.s.round_frontier_refs[0], 0);
+            }
+            while let Some(front) = self.s.nodes.front() {
                 if front.round != self.round_base {
                     break;
                 }
                 debug_assert!(front.done);
-                self.nodes.pop_front();
+                self.s.nodes.pop_front();
                 self.base += 1;
             }
-            self.round_pending.pop_front();
-            self.round_frontier_refs.pop_front();
+            self.s.round_pending.pop_front();
+            self.s.round_frontier_refs.pop_front();
+            self.s.round_keys.pop_front();
             self.round_base += 1;
         }
     }
@@ -368,6 +481,7 @@ impl StreamExec<'_, '_> {
 /// Grows incrementally: the streaming executor interns links and flows
 /// as rounds materialize (`DesSim::push_flow`), recycling flow slots
 /// once their transfer completes.
+#[derive(Default)]
 struct Dense {
     link_ids: Vec<LinkId>,
     /// Static effective capacity per link (degraded bw + NIC-eff caps).
@@ -378,17 +492,22 @@ struct Dense {
     flow_cap: Vec<f64>,
     /// Per flow: ejection (last) link id.
     flow_last: Vec<u32>,
+    /// Retired per-flow link lists; `push_flow` reuses them so repeated
+    /// runs on one [`DesScratch`] stop allocating per-flow vectors.
+    spare: Vec<Vec<u32>>,
 }
 
 impl Dense {
-    fn empty() -> Self {
-        Self {
-            link_ids: Vec::new(),
-            cap: Vec::new(),
-            flow_links: Vec::new(),
-            flow_cap: Vec::new(),
-            flow_last: Vec::new(),
+    /// Clear for the next run, keeping every allocation (per-flow link
+    /// lists move to the spare pool).
+    fn reset(&mut self) {
+        self.link_ids.clear();
+        self.cap.clear();
+        for v in self.flow_links.drain(..) {
+            self.spare.push(v);
         }
+        self.flow_cap.clear();
+        self.flow_last.clear();
     }
 }
 
@@ -399,6 +518,7 @@ impl Dense {
 /// all drive the same per-event solve block ([`DesSim::solve_batch`])
 /// over this state, so the max-min arithmetic, entry-queueing model and
 /// contributor/victim classification exist exactly once.
+#[derive(Default)]
 struct SolveState {
     remaining: Vec<f64>,
     rate: Vec<f64>,
@@ -432,33 +552,38 @@ struct SolveState {
 }
 
 impl SolveState {
-    fn empty() -> Self {
-        Self {
-            remaining: Vec::new(),
-            rate: Vec::new(),
-            last_sync: Vec::new(),
-            queue_penalty: Vec::new(),
-            active: Vec::new(),
-            done: Vec::new(),
-            epoch: Vec::new(),
-            link_flows: Vec::new(),
-            eject_count: Vec::new(),
-            rem_cap: Vec::new(),
-            count: Vec::new(),
-            slot: Vec::new(),
-            link_seen: Vec::new(),
-            flow_seen: Vec::new(),
-            stamp: 0,
-            touched: Vec::new(),
-            inflight: Vec::new(),
-            contaminated: Vec::new(),
-            contributors: FxHashSet::default(),
-            victims: FxHashSet::default(),
-            banked_contributors: 0,
-            banked_victims: 0,
-            comp: Vec::new(),
-            lstack: Vec::new(),
+    /// Clear for the next run, keeping every allocation. Per-link arrays
+    /// keep their length (zero-filled) — `grow_links` only ever grows
+    /// them, and link ids of the next run index below its own link
+    /// count, so longer-than-needed tails are simply never touched. A
+    /// reset state is observationally identical to a fresh one.
+    fn reset(&mut self) {
+        self.remaining.clear();
+        self.rate.clear();
+        self.last_sync.clear();
+        self.queue_penalty.clear();
+        self.active.clear();
+        self.done.clear();
+        self.epoch.clear();
+        self.slot.clear();
+        self.flow_seen.clear();
+        for v in &mut self.link_flows {
+            v.clear();
         }
+        self.eject_count.fill(0);
+        self.rem_cap.fill(0.0);
+        self.count.fill(0);
+        self.link_seen.fill(0);
+        self.inflight.fill(0.0);
+        self.contaminated.fill(false);
+        self.stamp = 0;
+        self.touched.clear();
+        self.contributors.clear();
+        self.victims.clear();
+        self.banked_contributors = 0;
+        self.banked_victims = 0;
+        self.comp.clear();
+        self.lstack.clear();
     }
 
     /// Unique contributor flows so far (banked recycled slots + live).
@@ -469,15 +594,6 @@ impl SolveState {
     /// Unique victim flows so far (banked recycled slots + live).
     fn victim_count(&self) -> usize {
         self.banked_victims + self.victims.len()
-    }
-
-    fn with_flows(flows: &[TimedFlow], n_links: usize) -> Self {
-        let mut st = Self::empty();
-        st.grow_links(n_links);
-        for tf in flows {
-            st.push_flow(tf.rf.flow.bytes as f64);
-        }
-        st
     }
 
     /// Append one flow slot (streaming materialization).
@@ -580,7 +696,9 @@ impl<'t> DesSim<'t> {
         rf: &RoutedFlow,
         slot: Option<usize>,
     ) -> usize {
-        let mut ls = Vec::with_capacity(rf.path.links.len());
+        let mut ls = d.spare.pop().unwrap_or_default();
+        ls.clear();
+        ls.reserve(rf.path.links.len());
         for l in &rf.path.links {
             let id = *intern.entry(*l).or_insert_with(|| {
                 d.link_ids.push(*l);
@@ -606,7 +724,8 @@ impl<'t> DesSim<'t> {
         let last = *ls.last().expect("flow with an empty path");
         match slot {
             Some(i) => {
-                d.flow_links[i] = ls;
+                let old = std::mem::replace(&mut d.flow_links[i], ls);
+                d.spare.push(old);
                 d.flow_cap[i] = fcap;
                 d.flow_last[i] = last;
                 i
@@ -626,7 +745,7 @@ impl<'t> DesSim<'t> {
     /// optimization that took the 512-flow DES from ~38 ms to single-digit
     /// milliseconds (EXPERIMENTS.md §Perf).
     fn build_dense(&self, flows: &[TimedFlow]) -> Dense {
-        let mut d = Dense::empty();
+        let mut d = Dense::default();
         let mut intern: FxHashMap<LinkId, u32> = FxHashMap::default();
         for tf in flows {
             self.push_flow(&mut d, &mut intern, &tf.rf, None);
@@ -1066,11 +1185,20 @@ impl<'t> DesSim<'t> {
 
     /// Convenience: all flows start at t=0; returns per-flow durations.
     pub fn run_simultaneous(&self, flows: &[RoutedFlow]) -> FlowTimes {
+        self.run_simultaneous_with(flows, &mut DesScratch::default())
+    }
+
+    /// [`DesSim::run_simultaneous`] over a caller-owned scratch.
+    pub fn run_simultaneous_with(
+        &self,
+        flows: &[RoutedFlow],
+        s: &mut DesScratch,
+    ) -> FlowTimes {
         let timed: Vec<TimedFlow> = flows
             .iter()
             .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
             .collect();
-        let res = self.run(&timed);
+        let res = self.run_with(&timed, s);
         FlowTimes::from_vec(res.finish)
     }
 
@@ -1098,6 +1226,14 @@ impl<'t> DesSim<'t> {
     /// [`DesSim::run_oracle`] (unique given caps + capacities), with
     /// finish times equal to floating-point noise.
     pub fn run(&self, flows: &[TimedFlow]) -> DesResult {
+        self.run_with(flows, &mut DesScratch::default())
+    }
+
+    /// [`DesSim::run`] over a caller-owned [`DesScratch`]: identical
+    /// results, no per-call arena allocation.
+    pub fn run_with(&self, flows: &[TimedFlow], s: &mut DesScratch)
+        -> DesResult {
+        s.reset();
         let n = flows.len();
         if n == 0 {
             return DesResult {
@@ -1107,15 +1243,16 @@ impl<'t> DesSim<'t> {
                 victims: 0,
             };
         }
-        let d = self.build_dense(flows);
+        for tf in flows {
+            self.push_flow(&mut s.d, &mut s.intern, &tf.rf, None);
+            s.st.push_flow(tf.rf.flow.bytes as f64);
+        }
+        s.st.grow_links(s.d.cap.len());
         let cm = super::rounds::CostModel::new(self.topo);
-        let mut st = SolveState::with_flows(flows, d.link_ids.len());
         let mut finish = vec![f64::NAN; n];
 
-        let mut heap: BinaryHeap<Reverse<Ev>> =
-            BinaryHeap::with_capacity(2 * n);
         for (i, tf) in flows.iter().enumerate() {
-            heap.push(Reverse(Ev {
+            s.heap.push(Reverse(Ev {
                 t: tf.start.max(0.0),
                 kind: EV_ARRIVAL,
                 flow: i as u32,
@@ -1123,65 +1260,66 @@ impl<'t> DesSim<'t> {
             }));
         }
 
-        let mut completions: Vec<usize> = Vec::new();
-        let mut arrivals: Vec<usize> = Vec::new();
         let mut n_done = 0usize;
 
         while n_done < n {
-            let now = match heap.peek() {
+            let now = match s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
                 None => panic!("deadlock in DES: {} flows stalled", n - n_done),
             };
             assert!(now.is_finite(), "deadlock in DES");
             // batch every event at this exact time: completions are applied
             // before arrivals, mirroring the oracle loop structure
-            completions.clear();
-            arrivals.clear();
-            while let Some(&Reverse(ev)) = heap.peek() {
+            s.completions.clear();
+            s.arrivals.clear();
+            while let Some(&Reverse(ev)) = s.heap.peek() {
                 if ev.t != now {
                     break;
                 }
-                heap.pop();
+                s.heap.pop();
                 let fi = ev.flow as usize;
                 if ev.kind == EV_COMPLETION {
                     // stale completion events are invalidated by epoch bumps
-                    if !st.done[fi] && st.active[fi] && ev.epoch == st.epoch[fi]
+                    if !s.st.done[fi]
+                        && s.st.active[fi]
+                        && ev.epoch == s.st.epoch[fi]
                     {
-                        completions.push(fi);
+                        s.completions.push(fi);
                     }
-                } else if !st.done[fi] && !st.active[fi] {
-                    arrivals.push(fi);
+                } else if !s.st.done[fi] && !s.st.active[fi] {
+                    s.arrivals.push(fi);
                 }
             }
-            if completions.is_empty() && arrivals.is_empty() {
+            if s.completions.is_empty() && s.arrivals.is_empty() {
                 continue;
             }
 
             // completion hook: record the per-flow result row (bulk
             // completion + zero-load latency + entry queueing delay)
-            for &fi in &completions {
-                st.complete(&d, fi);
+            for &fi in &s.completions {
+                s.st.complete(&s.d, fi);
                 n_done += 1;
                 let tf = &flows[fi];
                 finish[fi] = now
                     + cm.msg_latency(&tf.rf.path, tf.rf.flow.bytes,
                         tf.rf.flow.buf)
-                    + if st.queue_penalty[fi].is_nan() { 0.0 }
-                      else { st.queue_penalty[fi] };
+                    + if s.st.queue_penalty[fi].is_nan() { 0.0 }
+                      else { s.st.queue_penalty[fi] };
             }
-            for &fi in &arrivals {
-                st.arrive(&d, fi, now);
+            for &fi in &s.arrivals {
+                s.st.arrive(&s.d, fi, now);
             }
             self.solve_batch(
-                &d, &mut st, &mut heap, now, &completions, &arrivals, false,
+                &s.d, &mut s.st, &mut s.heap, now, &s.completions,
+                &s.arrivals, false,
             );
         }
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
         DesResult {
             finish,
             makespan,
-            contributors: st.contributor_count(),
-            victims: st.victim_count(),
+            contributors: s.st.contributor_count(),
+            victims: s.st.victim_count(),
         }
     }
 
@@ -1198,7 +1336,15 @@ impl<'t> DesSim<'t> {
     /// max-min, congestion classification — is the arithmetic of
     /// [`DesSim::run`].
     pub fn run_dag(&self, wl: &DagWorkload) -> DagResult {
-        self.run_dag_impl(wl, false)
+        self.run_dag_impl(wl, false, &mut DesScratch::default())
+    }
+
+    /// [`DesSim::run_dag`] over a caller-owned [`DesScratch`]: identical
+    /// results, no per-call arena allocation — the hot path for `World`
+    /// supersteps and campaign scenarios pricing thousands of step DAGs.
+    pub fn run_dag_with(&self, wl: &DagWorkload, s: &mut DesScratch)
+        -> DagResult {
+        self.run_dag_impl(wl, false, s)
     }
 
     /// Oracle variant of [`DesSim::run_dag`]: identical dependency
@@ -1207,10 +1353,16 @@ impl<'t> DesSim<'t> {
     /// [`DesSim::run_oracle`], swept against the incremental solver by
     /// `tests/des_equivalence.rs`.
     pub fn run_dag_oracle(&self, wl: &DagWorkload) -> DagResult {
-        self.run_dag_impl(wl, true)
+        self.run_dag_impl(wl, true, &mut DesScratch::default())
     }
 
-    fn run_dag_impl(&self, wl: &DagWorkload, full_resolve: bool) -> DagResult {
+    fn run_dag_impl(
+        &self,
+        wl: &DagWorkload,
+        full_resolve: bool,
+        s: &mut DesScratch,
+    ) -> DagResult {
+        s.reset();
         let n_nodes = wl.nodes.len();
         if n_nodes == 0 {
             return DagResult {
@@ -1220,49 +1372,47 @@ impl<'t> DesSim<'t> {
                 victims: 0,
             };
         }
-        // ---- transfer nodes -> dense flow set ----
-        let mut flow_node: Vec<u32> = Vec::new(); // flow idx -> node idx
-        let mut node_flow: Vec<u32> = vec![u32::MAX; n_nodes];
-        let mut timed: Vec<TimedFlow> = Vec::new();
+        // ---- transfer nodes -> dense flow set (no RoutedFlow clones:
+        // the dense representation and the latency tail read `wl`) ----
+        s.node_flow.resize(n_nodes, u32::MAX); // node idx -> flow idx
         for (ni, node) in wl.nodes.iter().enumerate() {
             if let DagKind::Xfer(rf) = &node.kind {
-                node_flow[ni] = timed.len() as u32;
-                flow_node.push(ni as u32);
-                // start is irrelevant here: arrivals are event-driven
-                timed.push(TimedFlow { rf: rf.clone(), start: 0.0 });
+                s.node_flow[ni] = s.flow_node.len() as u32;
+                s.flow_node.push(ni as u32);
+                self.push_flow(&mut s.d, &mut s.intern, rf, None);
+                s.st.push_flow(rf.flow.bytes as f64);
             }
         }
-        let d = self.build_dense(&timed);
+        s.st.grow_links(s.d.cap.len());
         let cm = super::rounds::CostModel::new(self.topo);
 
-        // ---- DAG bookkeeping ----
-        let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
-        let mut deps_left: Vec<u32> = vec![0; n_nodes];
+        // ---- DAG bookkeeping (scratch-resident; `succs` keeps inner
+        // vector capacity across runs) ----
+        if s.succs.len() < n_nodes {
+            s.succs.resize_with(n_nodes, Vec::new);
+        }
+        s.deps_left.resize(n_nodes, 0);
+        s.node_done.resize(n_nodes, false);
         for (ni, node) in wl.nodes.iter().enumerate() {
-            deps_left[ni] = node.deps.len() as u32;
+            s.deps_left[ni] = node.deps.len() as u32;
             for &dep in &node.deps {
-                succs[dep as usize].push(ni as u32);
+                s.succs[dep as usize].push(ni as u32);
             }
         }
         let mut node_finish = vec![f64::NAN; n_nodes];
-        let mut node_done = vec![false; n_nodes];
         let mut nodes_done = 0usize;
 
-        let mut st = SolveState::with_flows(&timed, d.link_ids.len());
-
-        let mut heap: BinaryHeap<Reverse<Ev>> =
-            BinaryHeap::with_capacity(2 * n_nodes);
         for (ni, node) in wl.nodes.iter().enumerate() {
             if node.deps.is_empty() {
                 let t0 = node.start.max(0.0);
                 match &node.kind {
-                    DagKind::Xfer(_) => heap.push(Reverse(Ev {
+                    DagKind::Xfer(_) => s.heap.push(Reverse(Ev {
                         t: t0,
                         kind: EV_ARRIVAL,
-                        flow: node_flow[ni],
+                        flow: s.node_flow[ni],
                         epoch: 0,
                     })),
-                    DagKind::Compute(dt) => heap.push(Reverse(Ev {
+                    DagKind::Compute(dt) => s.heap.push(Reverse(Ev {
                         t: t0 + dt.max(0.0),
                         kind: EV_NODE,
                         flow: ni as u32,
@@ -1272,12 +1422,10 @@ impl<'t> DesSim<'t> {
             }
         }
 
-        let mut completions: Vec<usize> = Vec::new();
-        let mut arrivals: Vec<usize> = Vec::new();
         let mut finished_nodes: Vec<u32> = Vec::new();
 
         while nodes_done < n_nodes {
-            let now = match heap.peek() {
+            let now = match s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
                 None => panic!(
                     "deadlock in closed-loop DES: {} of {n_nodes} nodes \
@@ -1286,27 +1434,27 @@ impl<'t> DesSim<'t> {
                 ),
             };
             assert!(now.is_finite(), "deadlock in closed-loop DES");
-            completions.clear();
-            arrivals.clear();
+            s.completions.clear();
+            s.arrivals.clear();
             finished_nodes.clear();
-            while let Some(&Reverse(ev)) = heap.peek() {
+            while let Some(&Reverse(ev)) = s.heap.peek() {
                 if ev.t != now {
                     break;
                 }
-                heap.pop();
+                s.heap.pop();
                 let fi = ev.flow as usize;
                 match ev.kind {
                     EV_COMPLETION => {
-                        if !st.done[fi]
-                            && st.active[fi]
-                            && ev.epoch == st.epoch[fi]
+                        if !s.st.done[fi]
+                            && s.st.active[fi]
+                            && ev.epoch == s.st.epoch[fi]
                         {
-                            completions.push(fi);
+                            s.completions.push(fi);
                         }
                     }
                     EV_ARRIVAL => {
-                        if !st.done[fi] && !st.active[fi] {
-                            arrivals.push(fi);
+                        if !s.st.done[fi] && !s.st.active[fi] {
+                            s.arrivals.push(fi);
                         }
                     }
                     // EV_NODE: `flow` carries the DAG node id
@@ -1317,22 +1465,29 @@ impl<'t> DesSim<'t> {
             // ---- flow completions (the closed-loop completion hook):
             // the bulk leaves the fabric now; the DAG node completes
             // after the latency/queue tail ----
-            for &fi in &completions {
-                st.complete(&d, fi);
-                let tf = &timed[fi];
-                let tail = cm.msg_latency(
-                    &tf.rf.path,
-                    tf.rf.flow.bytes,
-                    tf.rf.flow.buf,
-                ) + if st.queue_penalty[fi].is_nan() {
-                    0.0
-                } else {
-                    st.queue_penalty[fi]
+            for &fi in &s.completions {
+                s.st.complete(&s.d, fi);
+                let ni = s.flow_node[fi] as usize;
+                let lat = match &wl.nodes[ni].kind {
+                    DagKind::Xfer(rf) => cm.msg_latency(
+                        &rf.path,
+                        rf.flow.bytes,
+                        rf.flow.buf,
+                    ),
+                    DagKind::Compute(_) => {
+                        unreachable!("flow slot maps to a transfer node")
+                    }
                 };
-                heap.push(Reverse(Ev {
+                let tail = lat
+                    + if s.st.queue_penalty[fi].is_nan() {
+                        0.0
+                    } else {
+                        s.st.queue_penalty[fi]
+                    };
+                s.heap.push(Reverse(Ev {
                     t: now + tail,
                     kind: EV_NODE,
-                    flow: flow_node[fi],
+                    flow: ni as u32,
                     epoch: 0,
                 }));
             }
@@ -1344,24 +1499,24 @@ impl<'t> DesSim<'t> {
             while k < finished_nodes.len() {
                 let ni = finished_nodes[k] as usize;
                 k += 1;
-                debug_assert!(!node_done[ni], "node {ni} finished twice");
-                node_done[ni] = true;
+                debug_assert!(!s.node_done[ni], "node {ni} finished twice");
+                s.node_done[ni] = true;
                 node_finish[ni] = now;
                 nodes_done += 1;
-                for &su in &succs[ni] {
-                    let s = su as usize;
-                    deps_left[s] -= 1;
-                    if deps_left[s] > 0 {
+                for &su in &s.succs[ni] {
+                    let su = su as usize;
+                    s.deps_left[su] -= 1;
+                    if s.deps_left[su] > 0 {
                         continue;
                     }
-                    let rel = wl.nodes[s].start.max(now);
-                    match &wl.nodes[s].kind {
+                    let rel = wl.nodes[su].start.max(now);
+                    match &wl.nodes[su].kind {
                         DagKind::Xfer(_) => {
-                            let fi = node_flow[s];
+                            let fi = s.node_flow[su];
                             if rel <= now {
-                                arrivals.push(fi as usize);
+                                s.arrivals.push(fi as usize);
                             } else {
-                                heap.push(Reverse(Ev {
+                                s.heap.push(Reverse(Ev {
                                     t: rel,
                                     kind: EV_ARRIVAL,
                                     flow: fi,
@@ -1372,12 +1527,12 @@ impl<'t> DesSim<'t> {
                         DagKind::Compute(dt) => {
                             let t_fin = rel + dt.max(0.0);
                             if t_fin <= now {
-                                finished_nodes.push(s as u32);
+                                finished_nodes.push(su as u32);
                             } else {
-                                heap.push(Reverse(Ev {
+                                s.heap.push(Reverse(Ev {
                                     t: t_fin,
                                     kind: EV_NODE,
-                                    flow: s as u32,
+                                    flow: su as u32,
                                     epoch: 0,
                                 }));
                             }
@@ -1386,23 +1541,23 @@ impl<'t> DesSim<'t> {
                 }
             }
 
-            for &fi in &arrivals {
-                st.arrive(&d, fi, now);
+            for &fi in &s.arrivals {
+                s.st.arrive(&s.d, fi, now);
             }
-            if completions.is_empty() && arrivals.is_empty() {
+            if s.completions.is_empty() && s.arrivals.is_empty() {
                 continue; // pure node bookkeeping: no rate change
             }
             self.solve_batch(
-                &d, &mut st, &mut heap, now, &completions, &arrivals,
-                full_resolve,
+                &s.d, &mut s.st, &mut s.heap, now, &s.completions,
+                &s.arrivals, full_resolve,
             );
         }
         let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
         DagResult {
             node_finish,
             makespan,
-            contributors: st.contributor_count(),
-            victims: st.victim_count(),
+            contributors: s.st.contributor_count(),
+            victims: s.st.victim_count(),
         }
     }
 
@@ -1441,34 +1596,55 @@ impl<'t> DesSim<'t> {
     /// a round every message sees the pre-round frontier; a message
     /// depends on every previous-round node touching its *source* key,
     /// and both endpoints' frontiers gain the node when the round
-    /// commits. Completed flow slots are recycled (dense link/flow state
-    /// reuse), so fabric memory is bounded by peak *concurrency*, not
-    /// total flow count.
+    /// commits. Each node additionally honours its absolute release
+    /// floor ([`StreamNode`]'s `start` — per-rank clock floors for
+    /// `World` superstep flushes): release = max(floor, dependency
+    /// finishes). Completed flow slots are recycled (dense link/flow
+    /// state reuse), so fabric memory is bounded by peak *concurrency*,
+    /// not total flow count; and retirement is per-node-refcounted via
+    /// frontier collapse ([`FrontierEntry`]) — a key touched once and
+    /// never again does not pin its round, or any later round, live.
     pub fn run_stream(&self, src: &mut dyn RoundSource) -> StreamResult {
+        self.run_stream_with(src, &mut DesScratch::default())
+    }
+
+    /// [`DesSim::run_stream`] over a caller-owned [`DesScratch`]:
+    /// identical results, no per-call arena allocation.
+    pub fn run_stream_with(
+        &self,
+        src: &mut dyn RoundSource,
+        scratch: &mut DesScratch,
+    ) -> StreamResult {
+        self.run_stream_sink(src, scratch, |_, _| {})
+    }
+
+    /// [`DesSim::run_stream_with`] plus a per-node completion sink:
+    /// `on_finish(id, t)` fires once per node with its global
+    /// materialization-order id (0-based over non-empty rounds, in
+    /// round/source order) and its absolute finish time. This is how
+    /// `World`'s streamed superstep flush advances participant clocks
+    /// without the executor ever holding an O(total nodes) result.
+    pub fn run_stream_sink(
+        &self,
+        src: &mut dyn RoundSource,
+        scratch: &mut DesScratch,
+        mut on_finish: impl FnMut(u32, f64),
+    ) -> StreamResult {
+        scratch.reset();
         let cm = super::rounds::CostModel::new(self.topo);
         let mut ex = StreamExec {
             sim: self,
-            d: Dense::empty(),
-            intern: FxHashMap::default(),
-            st: SolveState::empty(),
-            nodes: VecDeque::new(),
+            s: scratch,
             base: 0,
-            round_pending: VecDeque::new(),
-            round_frontier_refs: VecDeque::new(),
             round_base: 0,
             materialized_rounds: 0,
             exhausted: false,
-            frontier: FxHashMap::default(),
-            flow_node: Vec::new(),
-            flow_rf: Vec::new(),
-            free_slots: Vec::new(),
             nodes_done: 0,
             total_nodes: 0,
             peak_live: 0,
             late_releases: 0,
             rounds: 0,
         };
-        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
         let mut relwork: Vec<u32> = Vec::new();
 
         // ---- bootstrap: round 0 plus the cascade of rounds reachable
@@ -1479,13 +1655,13 @@ impl<'t> DesSim<'t> {
             ex.ensure_rounds(src, round + 2, &mut relwork);
             let rel = ex.node(rid).release;
             match ex.node(rid).kind {
-                StreamKind::Xfer(slot) => heap.push(Reverse(Ev {
+                StreamKind::Xfer(slot) => ex.s.heap.push(Reverse(Ev {
                     t: rel,
                     kind: EV_ARRIVAL,
                     flow: slot,
                     epoch: 0,
                 })),
-                StreamKind::Compute(dt) => heap.push(Reverse(Ev {
+                StreamKind::Compute(dt) => ex.s.heap.push(Reverse(Ev {
                     t: rel + dt,
                     kind: EV_NODE,
                     flow: rid,
@@ -1494,14 +1670,12 @@ impl<'t> DesSim<'t> {
             }
         }
 
-        let mut completions: Vec<usize> = Vec::new();
-        let mut arrivals: Vec<usize> = Vec::new();
         let mut finished_nodes: Vec<u32> = Vec::new();
         let mut freed: Vec<u32> = Vec::new();
         let mut makespan = 0.0f64;
 
         while ex.nodes_done < ex.total_nodes {
-            let now = match heap.peek() {
+            let now = match ex.s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
                 None => panic!(
                     "deadlock in streaming DES: {} of {} live nodes never \
@@ -1511,28 +1685,28 @@ impl<'t> DesSim<'t> {
                 ),
             };
             assert!(now.is_finite(), "deadlock in streaming DES");
-            completions.clear();
-            arrivals.clear();
+            ex.s.completions.clear();
+            ex.s.arrivals.clear();
             finished_nodes.clear();
             freed.clear();
-            while let Some(&Reverse(ev)) = heap.peek() {
+            while let Some(&Reverse(ev)) = ex.s.heap.peek() {
                 if ev.t != now {
                     break;
                 }
-                heap.pop();
+                ex.s.heap.pop();
                 let fi = ev.flow as usize;
                 match ev.kind {
                     EV_COMPLETION => {
-                        if !ex.st.done[fi]
-                            && ex.st.active[fi]
-                            && ev.epoch == ex.st.epoch[fi]
+                        if !ex.s.st.done[fi]
+                            && ex.s.st.active[fi]
+                            && ev.epoch == ex.s.st.epoch[fi]
                         {
-                            completions.push(fi);
+                            ex.s.completions.push(fi);
                         }
                     }
                     EV_ARRIVAL => {
-                        if !ex.st.done[fi] && !ex.st.active[fi] {
-                            arrivals.push(fi);
+                        if !ex.s.st.done[fi] && !ex.s.st.active[fi] {
+                            ex.s.arrivals.push(fi);
                         }
                     }
                     // EV_NODE: `flow` carries the global node id
@@ -1543,19 +1717,19 @@ impl<'t> DesSim<'t> {
             // ---- flow completions: bulk leaves the fabric now, node
             // completes after the latency/queue tail; the slot is
             // recycled after this batch's solve ----
-            for &fi in &completions {
-                ex.st.complete(&ex.d, fi);
-                let rf = &ex.flow_rf[fi];
+            for &fi in &ex.s.completions {
+                ex.s.st.complete(&ex.s.d, fi);
+                let rf = &ex.s.flow_rf[fi];
                 let tail = cm.msg_latency(&rf.path, rf.flow.bytes, rf.flow.buf)
-                    + if ex.st.queue_penalty[fi].is_nan() {
+                    + if ex.s.st.queue_penalty[fi].is_nan() {
                         0.0
                     } else {
-                        ex.st.queue_penalty[fi]
+                        ex.s.st.queue_penalty[fi]
                     };
-                heap.push(Reverse(Ev {
+                ex.s.heap.push(Reverse(Ev {
                     t: now + tail,
                     kind: EV_NODE,
-                    flow: ex.flow_node[fi],
+                    flow: ex.s.flow_node[fi],
                     epoch: 0,
                 }));
                 freed.push(fi as u32);
@@ -1571,6 +1745,7 @@ impl<'t> DesSim<'t> {
                 k += 1;
                 makespan = makespan.max(now);
                 let succs = ex.finish_node(id, now);
+                on_finish(id, now);
                 for su in succs {
                     let sn = ex.node_mut(su);
                     sn.deps_left -= 1;
@@ -1594,13 +1769,14 @@ impl<'t> DesSim<'t> {
                     match ex.node(rid).kind {
                         StreamKind::Xfer(slot) => {
                             if rel <= now {
-                                arrivals.push(slot as usize);
+                                ex.s.arrivals.push(slot as usize);
                             } else {
-                                heap.push(Reverse(Ev {
+                                let epoch = ex.s.st.epoch[slot as usize];
+                                ex.s.heap.push(Reverse(Ev {
                                     t: rel,
                                     kind: EV_ARRIVAL,
                                     flow: slot,
-                                    epoch: ex.st.epoch[slot as usize],
+                                    epoch,
                                 }));
                             }
                         }
@@ -1609,7 +1785,7 @@ impl<'t> DesSim<'t> {
                             if t_fin <= now {
                                 finished_nodes.push(rid);
                             } else {
-                                heap.push(Reverse(Ev {
+                                ex.s.heap.push(Reverse(Ev {
                                     t: t_fin,
                                     kind: EV_NODE,
                                     flow: rid,
@@ -1621,18 +1797,18 @@ impl<'t> DesSim<'t> {
                 }
             }
 
-            for &fi in &arrivals {
-                ex.st.arrive(&ex.d, fi, now);
+            for &fi in &ex.s.arrivals {
+                ex.s.st.arrive(&ex.s.d, fi, now);
             }
-            if !(completions.is_empty() && arrivals.is_empty()) {
+            if !(ex.s.completions.is_empty() && ex.s.arrivals.is_empty()) {
                 self.solve_batch(
-                    &ex.d, &mut ex.st, &mut heap, now, &completions,
-                    &arrivals, false,
+                    &ex.s.d, &mut ex.s.st, &mut ex.s.heap, now,
+                    &ex.s.completions, &ex.s.arrivals, false,
                 );
             }
             // recycle flow slots only after the solve: the component walk
             // reads the completed flows' links
-            ex.free_slots.append(&mut freed);
+            ex.s.free_slots.append(&mut freed);
             ex.retire();
         }
         StreamResult {
@@ -1640,8 +1816,8 @@ impl<'t> DesSim<'t> {
             rounds: ex.rounds,
             total_nodes: ex.total_nodes,
             peak_live_nodes: ex.peak_live,
-            contributors: ex.st.contributor_count(),
-            victims: ex.st.victim_count(),
+            contributors: ex.s.st.contributor_count(),
+            victims: ex.s.st.victim_count(),
             late_releases: ex.late_releases,
         }
     }

@@ -29,7 +29,9 @@ pub mod routing;
 pub mod rounds;
 pub mod workload;
 
-pub use des::{DagResult, DesOpts, DesSim, StreamResult, TimedFlow};
+pub use des::{
+    DagResult, DesOpts, DesScratch, DesSim, StreamResult, TimedFlow,
+};
 pub use load::LoadMap;
 pub use qos::TrafficClass;
 pub use routing::Router;

@@ -258,14 +258,18 @@ impl DagBuilder {
 /// One message of a streamed round (see [`RoundSource`]): either a
 /// fabric transfer between two logical endpoint keys or a fixed-duration
 /// node (intra-node message / compute) participating in the same round
-/// dependency semantics.
+/// dependency semantics. `start` is the node's absolute release floor
+/// (0.0 for purely dependency-released traffic; per-rank clock floors
+/// for `World` superstep flushes) — the node still waits for its
+/// dependencies, the floor only keeps it from starting earlier,
+/// mirroring [`DagBuilder::set_floor`].
 #[derive(Debug, Clone)]
 pub enum StreamNode {
     /// Fixed-duration node between keys `a` and `b` (use `a == b` for a
     /// pure per-key compute interval).
-    Compute { a: u32, b: u32, dt: f64 },
+    Compute { a: u32, b: u32, dt: f64, start: f64 },
     /// Routed fabric transfer from key `a` to key `b`.
-    Xfer { a: u32, b: u32, rf: RoutedFlow },
+    Xfer { a: u32, b: u32, rf: RoutedFlow, start: f64 },
 }
 
 /// Lazily yields the successive rounds of a round-structured closed-loop
@@ -294,11 +298,13 @@ pub fn collect_rounds(src: &mut dyn RoundSource) -> DagWorkload {
     while let Some(round) = src.next_round() {
         for n in round {
             match n {
-                StreamNode::Compute { a, b: bb, dt } => {
-                    b.compute_staged(a, bb, dt);
+                StreamNode::Compute { a, b: bb, dt, start } => {
+                    let id = b.compute_staged(a, bb, dt);
+                    b.set_floor(id, start);
                 }
-                StreamNode::Xfer { a, b: bb, rf } => {
-                    b.xfer(a, bb, rf);
+                StreamNode::Xfer { a, b: bb, rf, start } => {
+                    let id = b.xfer(a, bb, rf);
+                    b.set_floor(id, start);
                 }
             }
         }
@@ -331,6 +337,7 @@ where
                         a: s,
                         b: d,
                         rf: RoutedFlow { flow: f, path },
+                        start: 0.0,
                     }
                 })
                 .collect(),

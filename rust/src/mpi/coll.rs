@@ -27,13 +27,14 @@ fn round_cost(w: &mut World, msgs: &[(usize, usize, u64)]) -> f64 {
     for &(s, d, b) in msgs {
         let (pa, pb) = (w.placements[s], w.placements[d]);
         if pa.node == pb.node {
-            let t = 0.4e-6 + w.cfg().mpi_overhead
-                + b as f64
-                    / crate::node::NodePaths::new(w.cfg()).intra_node_bw(
-                        &pa,
-                        &pb,
-                        matches!(w.buf, crate::fabric::BufLoc::Gpu),
-                    );
+            let t = crate::mpi::intra_node_time(
+                &crate::node::NodePaths::new(w.cfg()),
+                w.cfg(),
+                &pa,
+                &pb,
+                matches!(w.buf, crate::fabric::BufLoc::Gpu),
+                b,
+            );
             intra_max = intra_max.max(t);
         } else {
             let f = crate::fabric::Flow {
@@ -126,6 +127,22 @@ where
     let topo = w.topo;
     let opts = w.des_opts.clone();
     let sim = DesSim::new(topo, opts);
+    // disjoint field borrows: the round source routes/records through
+    // the router and counters while the executor owns the scratch
+    let World {
+        placements,
+        nics,
+        router,
+        counters,
+        scratch,
+        node_paths,
+        buf,
+        class,
+        ..
+    } = w;
+    let buf = *buf;
+    let class = *class;
+    let gpu = matches!(buf, crate::fabric::BufLoc::Gpu);
     let mut k = 0usize;
     let mut src = || -> Option<Vec<StreamNode>> {
         let triples = gen(k)?;
@@ -134,39 +151,39 @@ where
             triples
                 .into_iter()
                 .map(|(s, d, bytes)| {
-                    let (pa, pb) = (w.placements[s], w.placements[d]);
+                    let (pa, pb) = (placements[s], placements[d]);
                     if pa.node == pb.node {
                         StreamNode::Compute {
                             a: s as u32,
                             b: d as u32,
-                            dt: w.intra_node_time(&pa, &pb, bytes),
+                            dt: crate::mpi::intra_node_time(
+                                node_paths, &topo.cfg, &pa, &pb, gpu, bytes,
+                            ),
+                            start: 0.0,
                         }
                     } else {
                         let f = crate::fabric::Flow {
-                            src_nic: w.nics[s],
-                            dst_nic: w.nics[d],
+                            src_nic: nics[s],
+                            dst_nic: nics[d],
                             bytes,
-                            class: w.class,
-                            buf: w.buf,
+                            class,
+                            buf,
                             ordered: false,
                         };
-                        let path = w.router.route(&f);
-                        w.counters.record_send_class(
-                            w.nics[s],
-                            bytes,
-                            f.class,
-                        );
+                        let path = router.route(&f);
+                        counters.record_send_class(nics[s], bytes, f.class);
                         StreamNode::Xfer {
                             a: s as u32,
                             b: d as u32,
                             rf: RoutedFlow { flow: f, path },
+                            start: 0.0,
                         }
                     }
                 })
                 .collect(),
         )
     };
-    sim.run_stream(&mut src).makespan
+    sim.run_stream_with(&mut src, scratch).makespan
 }
 
 /// The trivial (size <= 1) communicator case: nothing to communicate,

@@ -17,13 +17,14 @@ pub mod counters;
 pub mod rma;
 
 use crate::config::AuroraConfig;
-use crate::fabric::des::{DesOpts, DesSim};
+use crate::fabric::des::{DesOpts, DesScratch, DesSim};
 use crate::fabric::rounds::CostModel;
-use crate::fabric::workload::DagBuilder;
+use crate::fabric::workload::{DagBuilder, StreamNode};
 use crate::fabric::{BufLoc, Flow, Router, RoutedFlow, TrafficClass};
 use crate::node::{NodePaths, RankLoc};
 use crate::topology::Topology;
 use counters::CxiCounters;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 /// Which fabric tier prices collective rounds (see [`coll`]).
 ///
@@ -66,16 +67,194 @@ impl Comm {
     }
 }
 
+/// One staged superstep node (`FabricTier::Des`). Fabric transfers
+/// capture everything routing needs at *stage* time (NICs are derivable
+/// from the rank, class/buffer/ordering are snapshotted) but are routed
+/// lazily at the flush — in staging order, so pinned-route replay and
+/// adaptive decisions see the same sequence the eager path saw — which
+/// keeps the staged representation at a few dozen bytes per message
+/// instead of a routed path plus a DAG node.
+#[derive(Debug, Clone, Copy)]
+enum StagedNode {
+    /// [`World::superstep_compute`]: serialized on `rank`'s chain.
+    Compute { rank: usize, dt: f64, floor: f64 },
+    /// Intra-node message: fixed duration, no fabric.
+    Intra { s: usize, d: usize, dt: f64, floor: f64 },
+    /// Fabric transfer, routed at flush time.
+    Xfer {
+        s: usize,
+        d: usize,
+        bytes: u64,
+        class: TrafficClass,
+        buf: BufLoc,
+        ordered: bool,
+        floor: f64,
+    },
+}
+
+impl StagedNode {
+    /// World-rank participants (clock-advance targets).
+    fn participants(&self) -> (usize, usize) {
+        match *self {
+            StagedNode::Compute { rank, .. } => (rank, rank),
+            StagedNode::Intra { s, d, .. }
+            | StagedNode::Xfer { s, d, .. } => (s, d),
+        }
+    }
+
+    /// Source key for round-release semantics (a round-k node is
+    /// released by the round-(k-1) nodes touching its source).
+    fn source(&self) -> usize {
+        match *self {
+            StagedNode::Compute { rank, .. } => rank,
+            StagedNode::Intra { s, .. } | StagedNode::Xfer { s, .. } => s,
+        }
+    }
+
+    fn floor(&self) -> f64 {
+        match *self {
+            StagedNode::Compute { floor, .. }
+            | StagedNode::Intra { floor, .. }
+            | StagedNode::Xfer { floor, .. } => floor,
+        }
+    }
+
+    /// The fabric flow of an `Xfer` node (`None` otherwise) — the ONE
+    /// place both flush arms (streamed and materialized) build the Flow
+    /// from, so their routing inputs cannot diverge.
+    fn fabric_flow(&self, nics: &[u32]) -> Option<Flow> {
+        match *self {
+            StagedNode::Xfer { s, d, bytes, class, buf, ordered, .. } => {
+                Some(Flow {
+                    src_nic: nics[s],
+                    dst_nic: nics[d],
+                    bytes,
+                    class,
+                    buf,
+                    ordered,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
 /// Superstep staging state (`FabricTier::Des`): exchanges accumulate as
 /// dependency-released rounds keyed by world rank and are priced as one
-/// closed-loop DAG at the next flush point (a collective, or an explicit
-/// [`World::flush_steps`] / [`World::end_superstep`]).
+/// closed-loop run at the next flush point (a collective, or an explicit
+/// [`World::flush_steps`] / [`World::end_superstep`]). Rounds are held
+/// as unrouted triples; [`World::execute_staged`] feeds them through the
+/// **streamed** executor (`DesSim::run_stream`) with per-rank clock
+/// floors whenever the static analysis proves exactness, falling back
+/// to the fully materialized `run_dag` otherwise.
 #[derive(Default)]
 struct StagedSteps {
-    builder: DagBuilder,
-    /// Per staged node: participating world ranks and, for fabric
-    /// transfers, the NIC pair for router idle bookkeeping.
-    nodes: Vec<(usize, usize, Option<(u32, u32)>)>,
+    /// Round-structured staged nodes. A run of consecutive
+    /// [`World::superstep_compute`] calls shares one round (per-rank
+    /// chains are independent), re-splitting if one rank stages two
+    /// computes in a row.
+    rounds: Vec<Vec<StagedNode>>,
+    n_nodes: usize,
+    /// Whether the last round is an open compute batch, and which ranks
+    /// it already holds.
+    open_compute: bool,
+    batch_ranks: FxHashSet<usize>,
+}
+
+/// Diagnostics of the most recent superstep flush (Des tier) — see
+/// [`World::last_flush`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlushStats {
+    /// Whether the flush ran on the windowed streaming executor (true)
+    /// or fell back to the fully materialized `run_dag` (false: the
+    /// staged structure admitted a potentially-late release).
+    pub streamed: bool,
+    /// Non-empty staged rounds priced.
+    pub rounds: usize,
+    /// Total nodes priced.
+    pub total_nodes: usize,
+    /// Peak simultaneously live nodes (`== total_nodes` when
+    /// materialized; bounded by the dependency-skew window when
+    /// streamed).
+    pub peak_live_nodes: usize,
+    /// Releases clamped by late materialization — 0 on both paths (the
+    /// streamed path is only taken when the analysis proves exactness).
+    pub late_releases: usize,
+}
+
+/// The intra-node (IPC-handle / shared-memory) message time: software
+/// overhead + path bandwidth, no NIC. The ONE definition of this model —
+/// `World::intra_node_time`, `coll::round_cost` and the Des-tier stream
+/// source all call it (the latter two cannot take `&World` because they
+/// hold disjoint field borrows), so the intra-node pricing cannot
+/// silently diverge between tiers.
+pub(crate) fn intra_node_time(
+    node_paths: &NodePaths,
+    cfg: &AuroraConfig,
+    a: &RankLoc,
+    b: &RankLoc,
+    gpu_buf: bool,
+    bytes: u64,
+) -> f64 {
+    0.4e-6
+        + cfg.mpi_overhead
+        + bytes as f64 / node_paths.intra_node_bw(a, b, gpu_buf)
+}
+
+/// Static exactness analysis for the streamed superstep flush: the
+/// windowed executor reproduces `run_dag` exactly iff no node is
+/// materialized after all of its dependencies have already finished.
+/// Rounds materialized at *bootstrap* (before the clock starts) are
+/// always exact: round 0 plus the cascade reachable through
+/// dependency-free nodes (`reach` — a dependency-free node in round
+/// k < reach extends materialization to k + 2). Past the bootstrap
+/// prefix a round materializes when the previous round first releases,
+/// so a node is exact iff its source key was touched in the immediately
+/// preceding round. Anything else — a dependency-free node beyond the
+/// bootstrap prefix, or a source key last touched two or more rounds
+/// back — could release late, and the flush falls back to the
+/// materialized path (identical semantics, full memory).
+fn staged_flush_is_exact(rounds: &[Vec<StagedNode>]) -> bool {
+    let r = rounds.len();
+    if r <= 2 {
+        return true; // rounds 0 and 1 always materialize at bootstrap
+    }
+    let mut last_touch: FxHashMap<usize, usize> = FxHashMap::default();
+    for n in &rounds[0] {
+        let (a, b) = n.participants();
+        last_touch.insert(a, 0);
+        last_touch.insert(b, 0);
+    }
+    let mut reach = 2usize;
+    for (k, round) in rounds.iter().enumerate().skip(1) {
+        for n in round {
+            match last_touch.get(&n.source()) {
+                None => {
+                    // dependency-free: released at its floor — exact
+                    // only when materialized at bootstrap, which also
+                    // extends the bootstrap cascade
+                    if k >= reach {
+                        return false;
+                    }
+                    reach = reach.max(k + 2);
+                }
+                Some(&t) if t + 1 == k => {}
+                Some(_) => {
+                    // stale source: its dependencies may finish before
+                    // round k materializes — exact only at bootstrap
+                    if k >= reach {
+                        return false;
+                    }
+                }
+            }
+        }
+        for n in round {
+            let (a, b) = n.participants();
+            last_touch.insert(a, k);
+            last_touch.insert(b, k);
+        }
+    }
+    true
 }
 
 /// The simulated MPI world.
@@ -101,6 +280,19 @@ pub struct World<'t> {
     des_opts: DesOpts,
     /// `Some` while exchange supersteps are being staged (Des tier).
     staged: Option<StagedSteps>,
+    /// Reusable DES solver arena: every staged flush / Des-tier
+    /// exchange / analytic sub-limit round borrows this instead of
+    /// reallocating (see [`DesScratch`]).
+    scratch: DesScratch,
+    /// Streamed superstep flush enabled (default). `false` forces every
+    /// flush onto the fully materialized `run_dag` path — the
+    /// equivalence reference the streamed flush is tested against.
+    stream_flush: bool,
+    /// Diagnostics of the most recent superstep flush (Des tier):
+    /// recorded by flush points only (`end_superstep`, `flush_steps`,
+    /// collective flushes) — an unstaged one-round `exchange` /
+    /// `exchange_now` never overwrites it.
+    pub last_flush: Option<FlushStats>,
 }
 
 impl<'t> World<'t> {
@@ -123,6 +315,9 @@ impl<'t> World<'t> {
             node_paths: NodePaths::new(&topo.cfg),
             des_opts: DesOpts::default(),
             staged: None,
+            scratch: DesScratch::new(),
+            stream_flush: true,
+            last_flush: None,
             placements,
         }
     }
@@ -132,10 +327,23 @@ impl<'t> World<'t> {
         self
     }
 
-    /// Switch collectives onto the closed-loop DES tier.
+    /// Switch collectives onto the closed-loop DES tier. Also enables
+    /// the router's route cache: Des-tier collective rings and app halo
+    /// loops re-send the same (src, dst) pair for O(P) rounds, so the
+    /// adaptive decision is made once per pair and replayed (load still
+    /// committed per flow; ordered exchange traffic keeps its pinned-
+    /// route/idle semantics untouched — EXPERIMENTS.md §Route cache).
     pub fn des_fabric(mut self) -> Self {
         self.tier = FabricTier::Des;
+        self.router.enable_route_cache();
         self
+    }
+
+    /// Toggle the streamed superstep flush (on by default); `false`
+    /// forces the fully materialized `run_dag` flush — the reference
+    /// `tests/des_equivalence.rs` compares the streamed flush against.
+    pub fn superstep_streaming(&mut self, on: bool) {
+        self.stream_flush = on;
     }
 
     pub fn size(&self) -> usize {
@@ -187,12 +395,14 @@ impl<'t> World<'t> {
     }
 
     fn intra_node_time(&self, a: &RankLoc, b: &RankLoc, bytes: u64) -> f64 {
-        let cfg = &self.topo.cfg;
-        let bw = self
-            .node_paths
-            .intra_node_bw(a, b, matches!(self.buf, BufLoc::Gpu));
-        // IPC-handle / shared-memory path: software overhead, no NIC
-        0.4e-6 + cfg.mpi_overhead + bytes as f64 / bw
+        intra_node_time(
+            &self.node_paths,
+            &self.topo.cfg,
+            a,
+            b,
+            matches!(self.buf, BufLoc::Gpu),
+            bytes,
+        )
     }
 
     fn flow(&self, src: usize, dst: usize, bytes: u64) -> Flow {
@@ -242,7 +452,10 @@ impl<'t> World<'t> {
     pub fn end_superstep(&mut self) -> f64 {
         match self.staged.take() {
             Some(st) => {
-                let (mk, min_floor, _) = self.execute_staged(st);
+                let (mk, min_floor, _, stats) = self.execute_staged(st);
+                if stats.is_some() {
+                    self.last_flush = stats;
+                }
                 mk - min_floor
             }
             None => 0.0,
@@ -258,88 +471,233 @@ impl<'t> World<'t> {
     /// clock (a release *floor*), which staged rounds already past that
     /// floor would overlap.
     pub fn superstep_compute(&mut self, rank: usize, seconds: f64) {
-        if let Some(mut st) = self.staged.take() {
-            let id = st.builder.compute(rank as u32, seconds.max(0.0));
-            st.builder.set_floor(id, self.clock[rank]);
-            st.nodes.push((rank, rank, None));
-            self.staged = Some(st);
+        if let Some(st) = &mut self.staged {
+            let node = StagedNode::Compute {
+                rank,
+                dt: seconds.max(0.0),
+                floor: self.clock[rank],
+            };
+            // consecutive computes batch into one round (per-rank chains
+            // are independent); a second compute for the same rank must
+            // serialize after the first, so it opens a new round
+            if st.open_compute && st.batch_ranks.insert(rank) {
+                st.rounds.last_mut().expect("open batch").push(node);
+            } else {
+                st.rounds.push(vec![node]);
+                st.open_compute = true;
+                st.batch_ranks.clear();
+                st.batch_ranks.insert(rank);
+            }
+            st.n_nodes += 1;
         } else {
             self.compute(rank, seconds);
         }
     }
 
     /// Stage one round of triples into `st`: intra-node messages become
-    /// fixed-duration nodes, fabric messages are routed now; every node
-    /// gets a release floor at its participants' current clocks (a rank
-    /// cannot take part before its local time). `ordered` selects the
-    /// flow's delivery mode: exchange rounds keep MPI envelope ordering
-    /// (`true`, pinned routes — the pre-existing `exchange` semantics),
-    /// while collective rounds staged at a flush point use `false` so
-    /// they route exactly like the streamed / `rounds_dag` Des paths.
+    /// fixed-duration nodes, fabric messages snapshot their routing
+    /// inputs (class/buffer/ordering) and are routed lazily at the
+    /// flush; every node gets a release floor at its participants'
+    /// current clocks (a rank cannot take part before its local time).
+    /// `ordered` selects the flow's delivery mode: exchange rounds keep
+    /// MPI envelope ordering (`true`, pinned routes — the pre-existing
+    /// `exchange` semantics), while collective rounds staged at a flush
+    /// point use `false` so they route exactly like the streamed /
+    /// `rounds_dag` Des paths. Counters are recorded at stage time
+    /// (matching the eager-routing staged path of old).
     fn stage_round_inner(
         &mut self,
         st: &mut StagedSteps,
         msgs: &[(usize, usize, u64)],
         ordered: bool,
     ) {
+        if msgs.is_empty() {
+            return; // the executor skips empty rounds; stage none
+        }
+        st.open_compute = false;
+        st.batch_ranks.clear();
+        let mut round = Vec::with_capacity(msgs.len());
         for &(s, d, b) in msgs {
             let (pa, pb) = (self.placements[s], self.placements[d]);
             let floor = self.clock[s].max(self.clock[d]);
-            let (id, nics) = if pa.node == pb.node {
+            if pa.node == pb.node {
                 let dt = self.intra_node_time(&pa, &pb, b);
-                (st.builder.compute_staged(s as u32, d as u32, dt), None)
+                round.push(StagedNode::Intra { s, d, dt, floor });
             } else {
-                let mut f = self.flow(s, d, b);
-                f.ordered = ordered;
-                let path = self.router.route(&f);
-                self.counters.record_send_class(self.nics[s], b, f.class);
-                let id = st
-                    .builder
-                    .xfer(s as u32, d as u32, RoutedFlow { flow: f, path });
-                // destination-idle bookkeeping clears pinned routes, so
-                // it only applies to ordered (route-pinned) exchange
-                // flows — unordered collective rounds never pin and must
-                // not unpin unrelated ordered traffic
-                let idle = if ordered {
-                    Some((self.nics[s], self.nics[d]))
-                } else {
-                    None
-                };
-                (id, idle)
-            };
-            st.builder.set_floor(id, floor);
-            st.nodes.push((s, d, nics));
-        }
-        st.builder.end_round();
-    }
-
-    /// Execute a staged DAG closed-loop and advance clocks. Returns
-    /// `(makespan, min_floor, max_floor)` — absolute last finish plus
-    /// the earliest and latest release floors, so callers can report
-    /// either the wall span of the whole superstep (`makespan -
-    /// min_floor`) or, for a single round, the duration from the latest
-    /// participant start (`makespan - max_floor`, the analytic-tier
-    /// contract).
-    fn execute_staged(&mut self, st: StagedSteps) -> (f64, f64, f64) {
-        let dag = st.builder.finish();
-        if dag.is_empty() {
-            return (0.0, 0.0, 0.0);
-        }
-        let (min_floor, max_floor) = dag.nodes.iter().fold(
-            (f64::INFINITY, 0.0f64),
-            |(lo, hi), n| (lo.min(n.start), hi.max(n.start)),
-        );
-        let res =
-            DesSim::new(self.topo, self.des_opts.clone()).run_dag(&dag);
-        for (i, &(s, d, nics)) in st.nodes.iter().enumerate() {
-            let t = res.node_finish[i];
-            self.clock[s] = self.clock[s].max(t);
-            self.clock[d] = self.clock[d].max(t);
-            if let Some((sn, dn)) = nics {
-                self.router.destination_idle(sn, dn);
+                self.counters.record_send_class(self.nics[s], b, self.class);
+                round.push(StagedNode::Xfer {
+                    s,
+                    d,
+                    bytes: b,
+                    class: self.class,
+                    buf: self.buf,
+                    ordered,
+                    floor,
+                });
             }
         }
-        (res.makespan, min_floor.min(res.makespan), max_floor)
+        st.n_nodes += round.len();
+        st.rounds.push(round);
+    }
+
+    /// Execute a staged superstep closed-loop and advance clocks.
+    /// Whenever [`staged_flush_is_exact`] proves the window-driven
+    /// release order exact (every app exchange-loop shape: halo /
+    /// pairwise / ring rounds re-touching their ranks each round), the
+    /// staged rounds are routed lazily and **streamed** through
+    /// [`DesSim::run_stream_sink`] with per-rank clock floors, so peak
+    /// memory is the dependency-skew window, not O(rounds x P) routed
+    /// nodes; otherwise (sparse key gaps, e.g. a tree allreduce's
+    /// remainder-fold flushed mid-superstep) it falls back to the fully
+    /// materialized `run_dag` — identical results either way, asserted
+    /// at 1e-9 by `tests/des_equivalence.rs`. Returns `(makespan,
+    /// min_floor, max_floor)` — absolute last finish plus the earliest
+    /// and latest release floors, so callers can report either the wall
+    /// span of the whole superstep (`makespan - min_floor`) or, for a
+    /// single round, the duration from the latest participant start
+    /// (`makespan - max_floor`, the analytic-tier contract).
+    fn execute_staged(
+        &mut self,
+        st: StagedSteps,
+    ) -> (f64, f64, f64, Option<FlushStats>) {
+        if st.n_nodes == 0 {
+            return (0.0, 0.0, 0.0, None);
+        }
+        let (mut min_floor, mut max_floor) = (f64::INFINITY, 0.0f64);
+        let mut meta: Vec<(usize, usize)> = Vec::with_capacity(st.n_nodes);
+        for round in &st.rounds {
+            for n in round {
+                let f = n.floor();
+                min_floor = min_floor.min(f);
+                max_floor = max_floor.max(f);
+                meta.push(n.participants());
+            }
+        }
+        let sim = DesSim::new(self.topo, self.des_opts.clone());
+        let streamed = self.stream_flush && staged_flush_is_exact(&st.rounds);
+        let (mk, stats) = if streamed {
+            let rounds = &st.rounds;
+            let World { router, clock, scratch, nics, .. } = self;
+            let mut k = 0usize;
+            let mut src = || -> Option<Vec<StreamNode>> {
+                let round = rounds.get(k)?;
+                k += 1;
+                Some(
+                    round
+                        .iter()
+                        .map(|n| match *n {
+                            StagedNode::Compute { rank, dt, floor } => {
+                                StreamNode::Compute {
+                                    a: rank as u32,
+                                    b: rank as u32,
+                                    dt,
+                                    start: floor,
+                                }
+                            }
+                            StagedNode::Intra { s, d, dt, floor } => {
+                                StreamNode::Compute {
+                                    a: s as u32,
+                                    b: d as u32,
+                                    dt,
+                                    start: floor,
+                                }
+                            }
+                            StagedNode::Xfer { s, d, floor, .. } => {
+                                let f = n
+                                    .fabric_flow(nics)
+                                    .expect("Xfer carries a flow");
+                                let path = router.route(&f);
+                                StreamNode::Xfer {
+                                    a: s as u32,
+                                    b: d as u32,
+                                    rf: RoutedFlow { flow: f, path },
+                                    start: floor,
+                                }
+                            }
+                        })
+                        .collect(),
+                )
+            };
+            let sink = |id: u32, t: f64| {
+                let (a, b) = meta[id as usize];
+                if clock[a] < t {
+                    clock[a] = t;
+                }
+                if clock[b] < t {
+                    clock[b] = t;
+                }
+            };
+            let res = sim.run_stream_sink(&mut src, scratch, sink);
+            debug_assert_eq!(
+                res.late_releases, 0,
+                "staged-flush exactness analysis admitted a late release"
+            );
+            let stats = FlushStats {
+                streamed: true,
+                rounds: res.rounds,
+                total_nodes: res.total_nodes,
+                peak_live_nodes: res.peak_live_nodes,
+                late_releases: res.late_releases,
+            };
+            (res.makespan, stats)
+        } else {
+            let mut b = DagBuilder::new();
+            for round in &st.rounds {
+                for n in round {
+                    match *n {
+                        StagedNode::Compute { rank, dt, floor } => {
+                            let id = b.compute(rank as u32, dt);
+                            b.set_floor(id, floor);
+                        }
+                        StagedNode::Intra { s, d, dt, floor } => {
+                            let id =
+                                b.compute_staged(s as u32, d as u32, dt);
+                            b.set_floor(id, floor);
+                        }
+                        StagedNode::Xfer { s, d, floor, .. } => {
+                            let f = n
+                                .fabric_flow(&self.nics)
+                                .expect("Xfer carries a flow");
+                            let path = self.router.route(&f);
+                            let id = b.xfer(
+                                s as u32,
+                                d as u32,
+                                RoutedFlow { flow: f, path },
+                            );
+                            b.set_floor(id, floor);
+                        }
+                    }
+                }
+                b.end_round();
+            }
+            let dag = b.finish();
+            let res = sim.run_dag_with(&dag, &mut self.scratch);
+            for (i, &t) in res.node_finish.iter().enumerate() {
+                let (a, b) = meta[i];
+                self.clock[a] = self.clock[a].max(t);
+                self.clock[b] = self.clock[b].max(t);
+            }
+            let stats = FlushStats {
+                streamed: false,
+                rounds: st.rounds.len(),
+                total_nodes: dag.len(),
+                peak_live_nodes: dag.len(),
+                late_releases: 0,
+            };
+            (res.makespan, stats)
+        };
+        // destination-idle bookkeeping clears pinned routes, so it only
+        // applies to ordered (route-pinned) exchange flows — unordered
+        // collective rounds never pin and must not unpin unrelated
+        // ordered traffic
+        for round in &st.rounds {
+            for n in round {
+                if let StagedNode::Xfer { s, d, ordered: true, .. } = *n {
+                    self.router.destination_idle(self.nics[s], self.nics[d]);
+                }
+            }
+        }
+        (mk, min_floor.min(mk), max_floor, Some(stats))
     }
 
     /// Stage round triples after any pending exchanges and flush: the
@@ -354,7 +712,10 @@ impl<'t> World<'t> {
         for round in rounds {
             self.stage_round_inner(&mut st, round, false);
         }
-        let (mk, min_floor, _) = self.execute_staged(st);
+        let (mk, min_floor, _, stats) = self.execute_staged(st);
+        if stats.is_some() {
+            self.last_flush = stats;
+        }
         self.staged = Some(StagedSteps::default());
         mk - min_floor
     }
@@ -400,8 +761,10 @@ impl<'t> World<'t> {
                 self.stage_round_inner(&mut st, msgs, true);
                 // single round: duration from the latest participant
                 // start (max floor), matching the analytic contract —
-                // pre-existing clock skew is not part of the round time
-                let (mk, _, max_floor) = self.execute_staged(st);
+                // pre-existing clock skew is not part of the round time.
+                // The one-round stats are dropped: `last_flush` reports
+                // superstep flushes only.
+                let (mk, _, max_floor, _) = self.execute_staged(st);
                 (mk - max_floor).max(0.0)
             }
             FabricTier::Analytic => self.exchange_analytic(msgs),
@@ -438,7 +801,7 @@ impl<'t> World<'t> {
         if !routed.is_empty() {
             let times = if routed.len() <= self.des_flow_limit {
                 DesSim::new(self.topo, self.des_opts.clone())
-                    .run_simultaneous(&routed)
+                    .run_simultaneous_with(&routed, &mut self.scratch)
             } else {
                 self.cost_model().eval_round(&routed)
             };

@@ -502,6 +502,249 @@ fn des_world_full_collective_coverage_and_supersteps() {
     assert!((w2.elapsed() - span).abs() < 1e-12);
 }
 
+// ------------------------------------------------------------- route cache
+
+/// Cached-vs-uncached equivalence: intra-group endpoint sets have
+/// exactly one minimal candidate per pair and the adaptive decision
+/// short-circuits before any load comparison, so the cached and the
+/// uncached router provably choose identical paths round after round —
+/// the two runs must be byte-identical (paths equal, `DagResult` and
+/// `StreamResult` within solver fp noise).
+#[test]
+fn route_cache_cached_matches_uncached_on_repeated_rounds() {
+    use aurorasim::fabric::DagKind;
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    // 12 endpoints inside group 0 (64 compute endpoints per group)
+    let nics: Vec<u32> = (0..12u32).map(|i| i * 5).collect();
+    let patterns: Vec<(&str, Vec<Vec<(u32, u32, u64)>>)> = vec![
+        ("ring", workload::ring_rounds(&nics, 6, 1 << 20)),
+        (
+            "halo",
+            (0..5)
+                .map(|_| workload::neighbor_round(&nics, &[-1, 1], 512 << 10))
+                .collect(),
+        ),
+    ];
+    for (what, rounds) in patterns {
+        let mut plain = Router::with_seed(&topo, 77);
+        let dag_plain = workload::dag_from_rounds(&mut plain, &rounds, 0.0);
+        let mut cached = Router::with_seed(&topo, 77);
+        cached.enable_route_cache();
+        let dag_cached = workload::dag_from_rounds(&mut cached, &rounds, 0.0);
+        assert!(cached.route_cache_hits() > 0, "{what}: cache must engage");
+        assert_eq!(dag_plain.len(), dag_cached.len(), "{what}");
+        for (a, b) in dag_plain.nodes.iter().zip(&dag_cached.nodes) {
+            match (&a.kind, &b.kind) {
+                (DagKind::Xfer(x), DagKind::Xfer(y)) => {
+                    assert_eq!(x.path, y.path, "{what}: paths must match");
+                }
+                _ => panic!("{what}: kind mismatch"),
+            }
+        }
+        let sim = DesSim::new(&topo, DesOpts::default());
+        let rp = sim.run_dag(&dag_plain);
+        let rc = sim.run_dag(&dag_cached);
+        for (i, (x, y)) in
+            rp.node_finish.iter().zip(&rc.node_finish).enumerate()
+        {
+            let rel = (x - y).abs() / y.abs().max(1e-30);
+            assert!(rel < REL_TOL, "{what} node {i}: {x} vs {y}");
+        }
+        assert_eq!(rp.contributors, rc.contributors, "{what}");
+        assert_eq!(rp.victims, rc.victims, "{what}");
+        // and the streamed executor prices the cached routes identically
+        let mut r3 = Router::with_seed(&topo, 77);
+        r3.enable_route_cache();
+        let rv = rounds.clone();
+        let mut src = workload::routed_round_source(&mut r3, move |k| {
+            rv.get(k).cloned()
+        });
+        let streamed = sim.run_stream(&mut src);
+        assert_eq!(streamed.late_releases, 0, "{what}");
+        let rel = (streamed.makespan - rc.makespan).abs()
+            / rc.makespan.max(1e-30);
+        assert!(rel < REL_TOL, "{what}: streamed vs cached dag");
+    }
+}
+
+/// Route-cache invalidation: the cache memoizes *paths* only, so a
+/// degraded-fabric run right after a clean run on the same cached
+/// router reprices every flow against its own `DesOpts` — no stale
+/// cached capacities — and matches the uncached degraded run exactly.
+#[test]
+fn route_cache_does_not_leak_capacities_across_des_opts() {
+    use aurorasim::fabric::DagKind;
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let nics: Vec<u32> = (0..10u32).map(|i| i * 6).collect();
+    let rounds = workload::ring_rounds(&nics, 5, 2 << 20);
+    let mut cached = Router::with_seed(&topo, 9);
+    cached.enable_route_cache();
+    let dag = workload::dag_from_rounds(&mut cached, &rounds, 0.0);
+    assert!(cached.route_cache_hits() > 0);
+    let clean = DesSim::new(&topo, DesOpts::default()).run_dag(&dag);
+    // degrade every used link to 25% and reprice the SAME cached routes
+    let mut degraded = HashMap::new();
+    for node in &dag.nodes {
+        if let DagKind::Xfer(rf) = &node.kind {
+            for l in &rf.path.links {
+                degraded.insert(*l, 0.25);
+            }
+        }
+    }
+    let opts = DesOpts { degraded, ..DesOpts::default() };
+    let slow = DesSim::new(&topo, opts.clone()).run_dag(&dag);
+    assert!(
+        slow.makespan > clean.makespan * 1.5,
+        "degraded run after a clean run must reprice: {} vs {}",
+        slow.makespan,
+        clean.makespan
+    );
+    // identical to an uncached degraded run (same paths intra-group)
+    let mut plain = Router::with_seed(&topo, 9);
+    let dag2 = workload::dag_from_rounds(&mut plain, &rounds, 0.0);
+    let slow2 = DesSim::new(&topo, opts).run_dag(&dag2);
+    let rel = (slow.makespan - slow2.makespan).abs()
+        / slow2.makespan.max(1e-30);
+    assert!(rel < REL_TOL, "cached vs uncached degraded repricing");
+}
+
+// ----------------------------------------------------------- solver scratch
+
+/// A reused [`DesScratch`] must be observationally identical to a fresh
+/// one: interleave different workloads, DES options and executors
+/// through ONE scratch and require bit-identical results — the property
+/// the campaign workers and `World` supersteps rely on.
+#[test]
+fn scratch_reuse_is_history_independent() {
+    use aurorasim::fabric::DesScratch;
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xE0A);
+    let (timed_a, opts_a) = mixed_case(&topo, &mut rng, 20, 6, true, true);
+    let (timed_b, opts_b) = mixed_case(&topo, &mut rng, 16, 0, false, false);
+    let fresh_a = DesSim::new(&topo, opts_a.clone()).run(&timed_a);
+    let fresh_b = DesSim::new(&topo, opts_b.clone()).run(&timed_b);
+    let mut scratch = DesScratch::new();
+    for pass in 0..3 {
+        let ra = DesSim::new(&topo, opts_a.clone())
+            .run_with(&timed_a, &mut scratch);
+        assert_eq!(ra.finish, fresh_a.finish, "pass {pass}: open loop a");
+        assert_eq!(ra.contributors, fresh_a.contributors);
+        let rb = DesSim::new(&topo, opts_b.clone())
+            .run_with(&timed_b, &mut scratch);
+        assert_eq!(rb.finish, fresh_b.finish, "pass {pass}: open loop b");
+    }
+    // closed-loop and streaming through the same (now well-used) scratch
+    let nics = workload::spread_nics(&topo, 10);
+    let rr = workload::ring_rounds(&nics, 5, 1 << 20);
+    let mut r1 = Router::with_seed(&topo, 13);
+    let dag = workload::dag_from_rounds(&mut r1, &rr, 0.0);
+    let sim = DesSim::new(&topo, DesOpts::default());
+    let fresh_dag = sim.run_dag(&dag);
+    let reused_dag = sim.run_dag_with(&dag, &mut scratch);
+    assert_eq!(fresh_dag.node_finish, reused_dag.node_finish);
+    let mut r2 = Router::with_seed(&topo, 13);
+    let rv = rr.clone();
+    let mut src =
+        workload::routed_round_source(&mut r2, move |k| rv.get(k).cloned());
+    let fresh_stream = sim.run_stream(&mut src);
+    let mut r3 = Router::with_seed(&topo, 13);
+    let rv2 = rr.clone();
+    let mut src2 =
+        workload::routed_round_source(&mut r3, move |k| rv2.get(k).cloned());
+    let reused_stream = sim.run_stream_with(&mut src2, &mut scratch);
+    assert_eq!(
+        fresh_stream.makespan.to_bits(),
+        reused_stream.makespan.to_bits(),
+        "streamed: fresh vs reused scratch"
+    );
+    assert_eq!(fresh_stream.peak_live_nodes, reused_stream.peak_live_nodes);
+    assert_eq!(fresh_stream.late_releases, reused_stream.late_releases);
+}
+
+// ------------------------------------------------- streaming retirement
+
+/// Per-node refcount retirement regression: a key touched once in round
+/// 0 and never again must not pin round 0 — and with it every later
+/// round — live for the whole run (the old prefix-round retirement kept
+/// peak == total here).
+#[test]
+fn stream_retires_rounds_pinned_only_by_idle_keys() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let ring: Vec<u32> = (0..8u32).map(|i| i * 24).collect();
+    let rounds_n = 40usize;
+    let bytes = 1u64 << 20;
+    let mut rounds: Vec<Vec<(u32, u32, u64)>> =
+        workload::ring_rounds(&ring, rounds_n, bytes);
+    rounds[0].push((300, 301, bytes)); // the once-touched pair
+    let sim = DesSim::new(&topo, DesOpts::default());
+    let mut r1 = Router::with_seed(&topo, 5);
+    let dag = workload::dag_from_rounds(&mut r1, &rounds, 0.0);
+    let full = sim.run_dag(&dag);
+    let mut r2 = Router::with_seed(&topo, 5);
+    let rv = rounds.clone();
+    let mut src =
+        workload::routed_round_source(&mut r2, move |k| rv.get(k).cloned());
+    let res = sim.run_stream(&mut src);
+    assert_eq!(res.late_releases, 0);
+    assert_eq!(res.total_nodes, dag.len());
+    let rel = (res.makespan - full.makespan).abs() / full.makespan.max(1e-30);
+    assert!(rel < REL_TOL, "sparse-key stream vs materialized");
+    assert!(
+        res.peak_live_nodes * 2 < res.total_nodes,
+        "peak {} of {} — an idle key must not pin the window",
+        res.peak_live_nodes,
+        res.total_nodes
+    );
+}
+
+// ------------------------------------------------- streamed superstep flush
+
+/// The streamed superstep flush must price identically (1e-9) to the
+/// fully materialized flush on every app step driver — and take the
+/// streamed path exactly when the staged structure is provably exact
+/// (hacc / lammps exchange loops re-touch every rank each round; the
+/// amr tree-allreduce flush at 12 ranks leaves remainder-rank gaps and
+/// falls back).
+#[test]
+fn superstep_streamed_flush_matches_materialized() {
+    use aurorasim::apps;
+    use aurorasim::machine::Machine;
+    use aurorasim::mpi::World;
+    let m = Machine::new(&AuroraConfig::small(6, 4));
+    for (what, expect_streamed) in
+        [("hacc", true), ("lammps", true), ("amr_wind", false)]
+    {
+        let drive = |w: &mut World| match what {
+            "hacc" => apps::hacc::step_world(w, 12, 8 << 20),
+            "lammps" => apps::lammps::step_world(w, 12, 8 << 20),
+            _ => apps::amr_wind::step_world(w, 12, 1 << 20),
+        };
+        let mut ws = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+        let ts = drive(&mut ws);
+        let fs = ws.last_flush.expect("superstep flushed");
+        assert_eq!(fs.streamed, expect_streamed, "{what}: flush path");
+        assert_eq!(fs.late_releases, 0, "{what}: exactness");
+        let mut wm = World::new(&m.topo, m.place_job(0, 12, 1)).des_fabric();
+        wm.superstep_streaming(false);
+        let tm = drive(&mut wm);
+        let rel = (ts - tm).abs() / tm.abs().max(1e-30);
+        assert!(rel < REL_TOL, "{what}: streamed {ts} vs materialized {tm}");
+        for (r, (a, b)) in ws.clock.iter().zip(&wm.clock).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-30);
+            assert!(rel < REL_TOL, "{what} rank {r}: {a} vs {b}");
+        }
+        if expect_streamed {
+            assert!(
+                fs.peak_live_nodes < fs.total_nodes,
+                "{what}: windowed flush must retire rounds \
+                 (peak {} of {})",
+                fs.peak_live_nodes,
+                fs.total_nodes
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------- campaign
 
 #[test]
