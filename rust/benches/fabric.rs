@@ -341,6 +341,64 @@ fn main() {
         rep.ratio("superstep_flush_headroom_2048", headroom);
     }
 
+    // component-parallel DES at full-Aurora scale: 128 group-aligned
+    // halo blocks of 128 endpoints (16,384 simulated endpoints on the
+    // 84,992-NIC machine) plus a chunked leader-ring allreduce, streamed
+    // with the per-batch component solves fanned over all cores. The
+    // gated ratio is machine-independent: link-disjoint components
+    // solved per event batch (halo batches carry up to 128; the fused
+    // allreduce batches carry 1; floor 2 guards that the partitioned
+    // walk keeps exposing parallel components at all).
+    {
+        use aurorasim::campaign::pool;
+        use aurorasim::fabric::DesScratch;
+        let full = Topology::new(&AuroraConfig::full_aurora());
+        let groups = 128usize;
+        let per_group = 128usize; // 16,384 endpoints
+        let blocks = workload::group_blocks(&full, groups, per_group);
+        let rounds =
+            workload::halo_allreduce_rounds(&blocks, 2, 1 << 20, 8, 4 << 20);
+        let opts = DesOpts {
+            solver_threads: pool::default_threads(),
+            ..DesOpts::default()
+        };
+        let sim = DesSim::new(&full, opts);
+        let mut scratch = DesScratch::new();
+        let run = |scratch: &mut DesScratch| {
+            let mut router = Router::with_seed(&full, 37);
+            let rv = rounds.clone();
+            let mut src = workload::routed_round_source(&mut router, move |k| {
+                rv.get(k).cloned()
+            });
+            sim.run_stream_with(&mut src, scratch)
+        };
+        std::hint::black_box(run(&mut scratch)); // warmup
+        let t0 = Instant::now();
+        let res = run(&mut scratch);
+        let dt = t0.elapsed().as_secs_f64();
+        rep.record(
+            "des_component_parallel_full_aurora",
+            "des/component-parallel full-aurora 16384 ep",
+            dt,
+        );
+        assert_eq!(res.total_nodes, 2 * groups * per_group * 2 + 8 * groups);
+        assert_eq!(res.late_releases, 0, "full-aurora stream must stay exact");
+        let per_batch =
+            res.components_solved as f64 / res.solve_batches.max(1) as f64;
+        println!(
+            "des/full-aurora components per batch              {per_batch:>10.1} \
+             ({} components over {} batches, {} fanned)",
+            res.components_solved,
+            res.solve_batches,
+            scratch.fanned_batches()
+        );
+        assert!(
+            per_batch >= 2.0,
+            "multi-group halos must expose >= 2 components per batch"
+        );
+        rep.ratio("parallel_components_per_batch", per_batch);
+    }
+
     // incast + congestion classification
     let mut router = Router::new(&small);
     let incast: Vec<RoutedFlow> = (0..64)

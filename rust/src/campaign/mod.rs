@@ -58,8 +58,9 @@ impl Campaign {
     /// permutation/ring collective rounds, a degraded-lane sweep and a
     /// staggered-arrival mix, plus the closed-loop (dependency-released)
     /// scenarios — collective-vs-incast interference, phase-staggered
-    /// multi-job, degraded-lane collective, and the HACC / AMR-Wind /
-    /// LAMMPS step traces — 16 scenarios on the given config.
+    /// multi-job, degraded-lane collective, the HACC / AMR-Wind /
+    /// LAMMPS step traces, and the multi-group halo+allreduce step —
+    /// 17 scenarios on the given config (needs >= 4 compute groups).
     pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
         let on = DesOpts::default();
         let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
@@ -138,7 +139,47 @@ impl Campaign {
                    Workload::AppPhase {
                        app: PhaseApp::Lammps, ranks: 24, bytes: 8 << 20,
                    }),
+                mk("halo_allreduce_closed", &on,
+                   Workload::HaloAllreduce {
+                       groups: 4,
+                       ranks_per_group: 8,
+                       halo_rounds: 3,
+                       bytes: 1 << 20,
+                       leader_rounds: 4,
+                       leader_bytes: 2 << 20,
+                   }),
             ],
+        }
+    }
+
+    /// The full-Aurora-scale sweep: the multi-group halo+allreduce step
+    /// over 128 group-aligned blocks of 128 endpoints — 16,384 simulated
+    /// endpoints on [`AuroraConfig::full_aurora`] — with the DES batch
+    /// solve fanned out over all available cores. This is the
+    /// `des_component_parallel_full_aurora` bench workload; it is kept
+    /// out of [`Campaign::standard`] because a full-machine DES run is
+    /// bench-scale, not unit-test-scale.
+    pub fn full_aurora(seed: u64) -> Self {
+        let cfg = AuroraConfig::full_aurora();
+        let opts = DesOpts {
+            solver_threads: pool::default_threads(),
+            ..DesOpts::default()
+        };
+        Self {
+            scenarios: vec![Scenario::new(
+                "full_aurora_halo_allreduce",
+                cfg,
+                opts,
+                Workload::HaloAllreduce {
+                    groups: 128,
+                    ranks_per_group: 128,
+                    halo_rounds: 2,
+                    bytes: 1 << 20,
+                    leader_rounds: 8,
+                    leader_bytes: 4 << 20,
+                },
+                seed,
+            )],
         }
     }
 
@@ -272,6 +313,27 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), c.scenarios.len());
+    }
+
+    #[test]
+    fn full_aurora_campaign_is_full_machine_scale() {
+        // construction-level checks only: executing 16,384 endpoints is
+        // bench-scale (des_component_parallel_full_aurora), not test-scale
+        let c = Campaign::full_aurora(7);
+        assert_eq!(c.scenarios.len(), 1);
+        let s = &c.scenarios[0];
+        assert!(s.is_closed_loop());
+        assert_eq!(s.cfg.compute_endpoints(), 84_992);
+        match s.workload {
+            Workload::HaloAllreduce { groups, ranks_per_group, .. } => {
+                assert!(
+                    groups * ranks_per_group >= 16_384,
+                    "full-aurora scenario must simulate >= 16,384 endpoints"
+                );
+            }
+            _ => panic!("full-aurora scenario must be HaloAllreduce"),
+        }
+        assert!(s.opts.solver_threads >= 1);
     }
 
     #[test]

@@ -40,29 +40,55 @@ pub fn par_map_with<T, R, S, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
-    S: Default,
+    S: Default + Send,
+    F: Fn(&T, &mut S) -> R + Sync,
+{
+    par_map_pooled(items, threads, &mut Vec::new(), f)
+}
+
+/// [`par_map_with`] over *caller-owned* worker scratches: `scratches`
+/// is grown to the worker count with `S::default()` and worker `w`
+/// exclusively uses `scratches[w]`, so repeated calls reuse the same
+/// warm arenas instead of re-building (and re-zeroing) per call — how
+/// the DES component-parallel batch solve keeps its per-worker
+/// `CompScratch` across thousands of event batches. Results are in
+/// input order; `f` must produce results independent of scratch
+/// history, exactly as for [`par_map_with`].
+pub fn par_map_pooled<T, R, S, F>(
+    items: &[T],
+    threads: usize,
+    scratches: &mut Vec<S>,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Default + Send,
     F: Fn(&T, &mut S) -> R + Sync,
 {
     let threads = threads.clamp(1, items.len().max(1));
+    if scratches.len() < threads {
+        scratches.resize_with(threads, S::default);
+    }
     if threads <= 1 {
-        let mut scratch = S::default();
-        return items.iter().map(|t| f(t, &mut scratch)).collect();
+        let scratch = &mut scratches[0];
+        return items.iter().map(|t| f(t, scratch)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> =
         items.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let mut scratch = S::default();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let r = f(&items[i], &mut scratch);
-                    *slots[i].lock().expect("poisoned result slot") = Some(r);
+        let next = &next;
+        let slots = &slots;
+        let f = &f;
+        for scratch in scratches.iter_mut().take(threads) {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
                 }
+                let r = f(&items[i], scratch);
+                *slots[i].lock().expect("poisoned result slot") = Some(r);
             });
         }
     });
@@ -105,5 +131,27 @@ mod tests {
     fn more_threads_than_items() {
         let items = [1u32, 2, 3];
         assert_eq!(par_map(&items, 64, |&x| x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pooled_scratches_persist_across_calls() {
+        let items: Vec<u32> = (0..40).collect();
+        let mut scratches: Vec<Vec<u32>> = Vec::new();
+        let out1 = par_map_pooled(&items, 4, &mut scratches, |&x, s| {
+            s.push(x); // scratch history must not affect results
+            x + 1
+        });
+        assert_eq!(scratches.len(), 4, "one scratch per worker");
+        let warmed: Vec<usize> =
+            scratches.iter().map(Vec::capacity).collect();
+        assert!(warmed.iter().any(|&c| c > 0));
+        let out2 = par_map_pooled(&items, 4, &mut scratches, |&x, s| {
+            s.clear();
+            s.push(x);
+            x + 1
+        });
+        assert_eq!(out1, out2);
+        assert_eq!(out1, (1..=40).collect::<Vec<_>>());
+        assert_eq!(scratches.len(), 4, "pool must not grow on reuse");
     }
 }

@@ -80,6 +80,23 @@ pub enum Workload {
     /// transpose + halo, AMR-Wind halos + residual allreduces, LAMMPS
     /// halo + PPPM) as a dependency DAG (see `apps::*::step_dag`).
     AppPhase { app: PhaseApp, ranks: usize, bytes: u64 },
+    /// **Closed-loop**: the multi-group application-step shape —
+    /// `groups` group-aligned blocks of `ranks_per_group` endpoints run
+    /// `halo_rounds` rounds of ±1 neighbour exchange (link-disjoint per
+    /// group, so the DES solves the blocks as independent components),
+    /// then `leader_rounds` chunked ring-allreduce rounds over the
+    /// block leaders fuse the groups
+    /// (`workload::halo_allreduce_rounds`). At `full_aurora()` scale —
+    /// 128 x 128 = 16,384 endpoints — this is the
+    /// `des_component_parallel_full_aurora` bench workload.
+    HaloAllreduce {
+        groups: usize,
+        ranks_per_group: usize,
+        halo_rounds: usize,
+        bytes: u64,
+        leader_rounds: usize,
+        leader_bytes: u64,
+    },
 }
 
 /// Which application's step trace an [`Workload::AppPhase`] scenario
@@ -140,6 +157,7 @@ impl Scenario {
                 | Workload::PhaseStaggered { .. }
                 | Workload::DegradedCollective { .. }
                 | Workload::AppPhase { .. }
+                | Workload::HaloAllreduce { .. }
         )
     }
 
@@ -152,6 +170,16 @@ impl Scenario {
     ) -> Option<(DagWorkload, DesOpts)> {
         let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
         let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+        // Closed-loop scenarios re-route the same (src, dst) pairs once
+        // per round; the PR-4 route cache replays the first decision (and
+        // still commits load) — enabled here since PR 5. Open-loop
+        // scenarios keep uncached routers (each pair routes once anyway).
+        // Golden note: reproduce's golden fixture pins no campaign keys
+        // (only paper-anchored scalars), so no re-pin was required; the
+        // campaign makespans it *computes* shift with the cached routes
+        // and get re-pinned whenever UPDATE_GOLDEN is next run on a
+        // toolchain'd checkout.
+        router.enable_route_cache();
         let nics_total = topo.cfg.compute_endpoints() as u64;
         let mut opts = self.opts.clone();
         match &self.workload {
@@ -243,6 +271,26 @@ impl Scenario {
                     ),
                 };
                 Some((dag, opts))
+            }
+            Workload::HaloAllreduce {
+                groups,
+                ranks_per_group,
+                halo_rounds,
+                bytes,
+                leader_rounds,
+                leader_bytes,
+            } => {
+                let blocks =
+                    workload::group_blocks(topo, *groups, *ranks_per_group);
+                let rounds = workload::halo_allreduce_rounds(
+                    &blocks,
+                    *halo_rounds,
+                    *bytes,
+                    *leader_rounds,
+                    *leader_bytes,
+                );
+                Some((workload::dag_from_rounds(&mut router, &rounds, 0.0),
+                      opts))
             }
             _ => None,
         }
@@ -379,7 +427,8 @@ impl Scenario {
             Workload::CollectiveIncast { .. }
             | Workload::PhaseStaggered { .. }
             | Workload::DegradedCollective { .. }
-            | Workload::AppPhase { .. } => unreachable!(
+            | Workload::AppPhase { .. }
+            | Workload::HaloAllreduce { .. } => unreachable!(
                 "closed-loop workload '{}' materializes via materialize_dag",
                 self.name
             ),

@@ -67,6 +67,19 @@ impl AuroraConfig {
         }
     }
 
+    /// The full-machine preset for DES-tier runs: identical to
+    /// [`AuroraConfig::aurora`] (166 compute groups, 10,624 nodes,
+    /// 84,992 compute endpoints), named separately because it is now a
+    /// *simulatable* scale, not just an analytic anchor — the
+    /// component-parallel DES solve plus the dense
+    /// [`crate::topology::Topology::link_index`] data layout route and
+    /// price multi-group workloads at >= 16,384 endpoints on it
+    /// (EXPERIMENTS.md §Full-Aurora preset; gated by the
+    /// `des_component_parallel_full_aurora` bench).
+    pub fn full_aurora() -> Self {
+        Self::aurora()
+    }
+
     /// A scaled-down dragonfly with the same per-link/per-node constants —
     /// used by functional-mode runs and the test suite. `groups` compute
     /// groups of `switches` switches each.
@@ -106,6 +119,17 @@ mod tests {
         // 0.69 PB/s bisection
         let bis_pb = c.global_bisection_bw() / 1e15;
         assert!((bis_pb - 0.69).abs() < 0.01, "bisection {bis_pb} PB/s");
+    }
+
+    #[test]
+    fn full_aurora_is_the_table1_machine_at_des_scale() {
+        let c = AuroraConfig::full_aurora();
+        assert_eq!(c.nodes(), 10_624);
+        assert_eq!(c.compute_endpoints(), 84_992);
+        // the full-Aurora DES scenario needs 128 group-aligned blocks
+        // of 128 endpoints: 16,384 endpoints, well inside the machine
+        assert!(c.compute_groups >= 128);
+        assert!(c.endpoints_per_group() >= 128);
     }
 
     #[test]

@@ -37,6 +37,18 @@
 //! Both compute the same unique max-min fixpoint, so per-flow finish times
 //! agree to floating-point noise (the equivalence suite asserts 1e-9
 //! relative).
+//!
+//! **Component-parallel batches** (EXPERIMENTS.md §Parallel solve): the
+//! per-event component walk now *partitions* the affected flows into
+//! link-disjoint components instead of lumping them into one set. Each
+//! component's solve — entry queueing, exact max-min, congestion
+//! classification — is a pure function of the synced pre-batch state,
+//! so when a batch spans several components (multi-group halos, multi-
+//! tenant mixes) they are fanned out over
+//! [`crate::campaign::pool::par_map_pooled`] worker scratches
+//! ([`DesOpts::solver_threads`] > 1); the merge and the commit
+//! (rate/heap/counter writes) stay serial in component-id order, so
+//! results are bit-identical at every thread count.
 
 use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode};
 use super::{FlowTimes, RoutedFlow};
@@ -61,6 +73,12 @@ pub struct DesOpts {
     /// can sit ahead of a message on each hop (drives the GPCNet latency
     /// inflation of Fig 5).
     pub queue_cap_bytes: f64,
+    /// Worker threads for the component-parallel batch solve (1 =
+    /// fully serial). Results are bit-identical at every value: the
+    /// per-component solve is a pure function of the synced pre-batch
+    /// state and the merge/commit is serial in component-id order —
+    /// the knob only changes wall time (EXPERIMENTS.md §Parallel solve).
+    pub solver_threads: usize,
 }
 
 impl Default for DesOpts {
@@ -71,9 +89,16 @@ impl Default for DesOpts {
             victim_penalty: 0.30,
             degraded: HashMap::new(),
             queue_cap_bytes: 256.0 * 1024.0,
+            solver_threads: 1,
         }
     }
 }
+
+/// Below this many flows in an event batch the fork-join fan-out costs
+/// more than the solve itself; such batches run inline regardless of
+/// [`DesOpts::solver_threads`]. Purely a wall-time knob — per-component
+/// arithmetic is identical on either path.
+const PAR_SOLVE_MIN_FLOWS: usize = 128;
 
 /// A flow with an arrival time.
 #[derive(Debug, Clone)]
@@ -91,6 +116,13 @@ pub struct DesResult {
     pub contributors: usize,
     /// Flows penalized as victims (only when congestion mgmt is off).
     pub victims: usize,
+    /// Event batches that re-solved at least one component.
+    pub solve_batches: usize,
+    /// Link-disjoint components re-solved across all batches;
+    /// `components_solved / solve_batches` is the mean component
+    /// parallelism the batch fan-out can exploit (the
+    /// `parallel_components_per_batch` bench ratio).
+    pub components_solved: usize,
 }
 
 /// Result of executing a [`DagWorkload`] (closed-loop simulation).
@@ -106,6 +138,11 @@ pub struct DagResult {
     pub contributors: usize,
     /// Flows penalized as victims (only when congestion mgmt is off).
     pub victims: usize,
+    /// Event batches that re-solved at least one component.
+    pub solve_batches: usize,
+    /// Link-disjoint components re-solved across all batches (see
+    /// [`DesResult::components_solved`]).
+    pub components_solved: usize,
 }
 
 /// Result of a streaming ([`DesSim::run_stream`]) closed-loop run.
@@ -132,6 +169,11 @@ pub struct StreamResult {
     /// materialized DAG (given the uniform-buffer precondition
     /// documented on [`DesSim::run_stream`]).
     pub late_releases: usize,
+    /// Event batches that re-solved at least one component.
+    pub solve_batches: usize,
+    /// Link-disjoint components re-solved across all batches (see
+    /// [`DesResult::components_solved`]).
+    pub components_solved: usize,
 }
 
 pub struct DesSim<'t> {
@@ -190,8 +232,13 @@ struct FrontierEntry {
 #[derive(Default)]
 pub struct DesScratch {
     d: Dense,
-    intern: FxHashMap<LinkId, u32>,
+    map: LinkMap,
     st: SolveState,
+    cscratch: CompScratch,
+    /// Per-worker scratches of the fanned batch solve
+    /// ([`crate::campaign::pool::par_map_pooled`]): warmed once, reused
+    /// across every fanned batch of every run on this scratch.
+    par_cscratch: Vec<CompScratch>,
     heap: BinaryHeap<Reverse<Ev>>,
     completions: Vec<usize>,
     arrivals: Vec<usize>,
@@ -218,10 +265,93 @@ impl DesScratch {
         Self::default()
     }
 
+    /// Event batches of the last run whose per-component solves were
+    /// fanned out over worker threads (0 when `solver_threads <= 1` or
+    /// no batch crossed the fan-out threshold). Diagnostic only —
+    /// results never depend on it.
+    pub fn fanned_batches(&self) -> usize {
+        self.st.fanned
+    }
+
+    /// Sum of the heap-allocated capacities of every arena in this
+    /// scratch. Two runs of the same workload through one scratch must
+    /// leave this unchanged — the reset-not-reallocate contract campaign
+    /// workers rely on (asserted by `tests/des_equivalence.rs`).
+    pub fn capacity_signature(&self) -> usize {
+        let d = &self.d;
+        let st = &self.st;
+        let cs = &self.cscratch;
+        d.link_ids.capacity()
+            + d.link_uids.capacity()
+            + d.cap.capacity()
+            + d.flow_links.capacity()
+            + d.flow_len.capacity()
+            + d.flow_cap.capacity()
+            + d.flow_last.capacity()
+            + self.map.ids.capacity()
+            + st.remaining.capacity()
+            + st.rate.capacity()
+            + st.last_sync.capacity()
+            + st.queue_penalty.capacity()
+            + st.active.capacity()
+            + st.done.capacity()
+            + st.epoch.capacity()
+            + st.link_flows.capacity()
+            + st.link_flows.iter().map(Vec::capacity).sum::<usize>()
+            + st.eject_count.capacity()
+            + st.link_seen.capacity()
+            + st.flow_seen.capacity()
+            + st.comp.capacity()
+            + st.comp_ends.capacity()
+            + st.lstack.capacity()
+            + st.contributors.capacity()
+            + st.victims.capacity()
+            + cs.rem_cap.capacity()
+            + cs.count.capacity()
+            + cs.slot.capacity()
+            + cs.touched.capacity()
+            + cs.inflight.capacity()
+            + cs.contaminated.capacity()
+            + self.par_cscratch.capacity()
+            + self
+                .par_cscratch
+                .iter()
+                .map(|w| {
+                    w.rem_cap.capacity()
+                        + w.count.capacity()
+                        + w.slot.capacity()
+                        + w.touched.capacity()
+                        + w.inflight.capacity()
+                        + w.contaminated.capacity()
+                })
+                .sum::<usize>()
+            + self.heap.capacity()
+            + self.completions.capacity()
+            + self.arrivals.capacity()
+            + self.succs.capacity()
+            + self.succs.iter().map(Vec::capacity).sum::<usize>()
+            + self.deps_left.capacity()
+            + self.node_done.capacity()
+            + self.flow_node.capacity()
+            + self.node_flow.capacity()
+            + self.nodes.capacity()
+            + self.round_pending.capacity()
+            + self.round_frontier_refs.capacity()
+            + self.round_keys.capacity()
+            + self.round_keys.iter().map(Vec::capacity).sum::<usize>()
+            + self.frontier.capacity()
+            + self.flow_rf.capacity()
+            + self.free_slots.capacity()
+    }
+
     /// Clear every run-local structure while retaining allocations.
     fn reset(&mut self) {
+        // un-mint the previous run's link ids before the dense store
+        // forgets which universe slots it used
+        for &u in &self.d.link_uids {
+            self.map.ids[u as usize] = u32::MAX;
+        }
         self.d.reset();
-        self.intern.clear();
         self.st.reset();
         self.heap.clear();
         self.completions.clear();
@@ -313,7 +443,7 @@ impl StreamExec<'_, '_> {
                     let slot = if let Some(fs) = self.s.free_slots.pop() {
                         let fs = fs as usize;
                         self.sim.push_flow(
-                            &mut self.s.d, &mut self.s.intern, &rf, Some(fs),
+                            &mut self.s.d, &mut self.s.map, &rf, Some(fs),
                         );
                         self.s.st.recycle_flow(fs, bytes);
                         self.s.flow_node[fs] = id;
@@ -321,7 +451,7 @@ impl StreamExec<'_, '_> {
                         fs
                     } else {
                         let fs = self.sim.push_flow(
-                            &mut self.s.d, &mut self.s.intern, &rf, None,
+                            &mut self.s.d, &mut self.s.map, &rf, None,
                         );
                         self.s.st.push_flow(bytes);
                         self.s.flow_node.push(id);
@@ -477,35 +607,71 @@ impl StreamExec<'_, '_> {
     }
 }
 
-/// Interned-link representation of a flow set (see `build_dense`).
-/// Grows incrementally: the streaming executor interns links and flows
-/// as rounds materialize (`DesSim::push_flow`), recycling flow slots
-/// once their transfer completes.
+/// Longest link list a routed path can produce: NIC injection +
+/// (local, global, local, global, local) Valiant fabric hops + NIC
+/// ejection. The dense flow store uses it as a fixed stride.
+const MAX_PATH_LINKS: usize = 8;
+
+/// Universe-indexed link-id mint: maps [`Topology::link_index`] slots to
+/// run-local interned ids (`u32::MAX` = not yet minted). A flat array
+/// instead of the old per-run `FxHashMap<LinkId, u32>` — interning a
+/// link is one load, full-Aurora's ~1.08M-slot universe is ~4.1 MiB
+/// allocated once per scratch, and `DesScratch::reset` un-mints only the
+/// slots the previous run touched (via `Dense::link_uids`).
+#[derive(Default)]
+struct LinkMap {
+    ids: Vec<u32>,
+}
+
+impl LinkMap {
+    /// Grow to `universe` slots (all unmapped). Called once per run;
+    /// never shrinks, so scratch reuse across topologies stays safe.
+    fn ensure(&mut self, universe: usize) {
+        if self.ids.len() < universe {
+            self.ids.resize(universe, u32::MAX);
+        }
+    }
+}
+
+/// Interned-link representation of a flow set, struct-of-arrays
+/// throughout (see `DesSim::push_flow`). Grows incrementally: the
+/// streaming executor interns links and flows as rounds materialize,
+/// recycling flow slots — a fixed [`MAX_PATH_LINKS`] stride per flow —
+/// in place, with no per-flow allocation at all.
 #[derive(Default)]
 struct Dense {
     link_ids: Vec<LinkId>,
+    /// Universe slot each interned link was minted from (resets the
+    /// [`LinkMap`] without re-deriving indices).
+    link_uids: Vec<u32>,
     /// Static effective capacity per link (degraded bw + NIC-eff caps).
     cap: Vec<f64>,
-    /// Per flow: dense link ids along its path.
-    flow_links: Vec<Vec<u32>>,
+    /// Per flow: dense link ids along its path, [`MAX_PATH_LINKS`]
+    /// slots per flow (only the first `flow_len` are meaningful).
+    flow_links: Vec<u32>,
+    /// Per flow: number of links on its path.
+    flow_len: Vec<u8>,
     /// Per flow: issue-rate cap.
     flow_cap: Vec<f64>,
     /// Per flow: ejection (last) link id.
     flow_last: Vec<u32>,
-    /// Retired per-flow link lists; `push_flow` reuses them so repeated
-    /// runs on one [`DesScratch`] stop allocating per-flow vectors.
-    spare: Vec<Vec<u32>>,
 }
 
 impl Dense {
-    /// Clear for the next run, keeping every allocation (per-flow link
-    /// lists move to the spare pool).
+    /// Dense link ids along flow `fi`'s path.
+    #[inline]
+    fn links_of(&self, fi: usize) -> &[u32] {
+        let o = fi * MAX_PATH_LINKS;
+        &self.flow_links[o..o + self.flow_len[fi] as usize]
+    }
+
+    /// Clear for the next run, keeping every allocation.
     fn reset(&mut self) {
         self.link_ids.clear();
+        self.link_uids.clear();
         self.cap.clear();
-        for v in self.flow_links.drain(..) {
-            self.spare.push(v);
-        }
+        self.flow_links.clear();
+        self.flow_len.clear();
         self.flow_cap.clear();
         self.flow_last.clear();
     }
@@ -530,16 +696,10 @@ struct SolveState {
     /// Per-link list of active flows (the incremental component index).
     link_flows: Vec<Vec<u32>>,
     eject_count: Vec<u32>,
-    // ---- scratch, reused across events ----
-    rem_cap: Vec<f64>,
-    count: Vec<u32>,
-    slot: Vec<u32>,
+    // ---- component-walk scratch, reused across events ----
     link_seen: Vec<u32>,
     flow_seen: Vec<u32>,
     stamp: u32,
-    touched: Vec<u32>,
-    inflight: Vec<f64>,
-    contaminated: Vec<bool>,
     contributors: FxHashSet<usize>,
     victims: FxHashSet<usize>,
     /// Classification counts banked when a slot is recycled (streaming):
@@ -547,8 +707,16 @@ struct SolveState {
     /// occupant must be counted out before reuse.
     banked_contributors: usize,
     banked_victims: usize,
+    /// The current batch's affected flows, partitioned into
+    /// link-disjoint components: component `i` is
+    /// `comp[comp_ends[i-1]..comp_ends[i]]`.
     comp: Vec<usize>,
+    comp_ends: Vec<usize>,
     lstack: Vec<u32>,
+    // ---- solve statistics (reported on every result) ----
+    batches: usize,
+    components: usize,
+    fanned: usize,
 }
 
 impl SolveState {
@@ -565,25 +733,23 @@ impl SolveState {
         self.active.clear();
         self.done.clear();
         self.epoch.clear();
-        self.slot.clear();
         self.flow_seen.clear();
         for v in &mut self.link_flows {
             v.clear();
         }
         self.eject_count.fill(0);
-        self.rem_cap.fill(0.0);
-        self.count.fill(0);
         self.link_seen.fill(0);
-        self.inflight.fill(0.0);
-        self.contaminated.fill(false);
         self.stamp = 0;
-        self.touched.clear();
         self.contributors.clear();
         self.victims.clear();
         self.banked_contributors = 0;
         self.banked_victims = 0;
         self.comp.clear();
+        self.comp_ends.clear();
         self.lstack.clear();
+        self.batches = 0;
+        self.components = 0;
+        self.fanned = 0;
     }
 
     /// Unique contributor flows so far (banked recycled slots + live).
@@ -606,7 +772,6 @@ impl SolveState {
         self.active.push(false);
         self.done.push(false);
         self.epoch.push(0);
-        self.slot.push(0);
         self.flow_seen.push(0);
         i
     }
@@ -634,18 +799,14 @@ impl SolveState {
     fn grow_links(&mut self, n_links: usize) {
         self.link_flows.resize_with(n_links, Vec::new);
         self.eject_count.resize(n_links, 0);
-        self.rem_cap.resize(n_links, 0.0);
-        self.count.resize(n_links, 0);
         self.link_seen.resize(n_links, 0);
-        self.inflight.resize(n_links, 0.0);
-        self.contaminated.resize(n_links, false);
     }
 
     /// Flow `fi`'s bulk left the fabric: drop it from the link index.
     fn complete(&mut self, d: &Dense, fi: usize) {
         self.done[fi] = true;
         self.active[fi] = false;
-        for &l in &d.flow_links[fi] {
+        for &l in d.links_of(fi) {
             let lf = &mut self.link_flows[l as usize];
             if let Some(pos) = lf.iter().position(|&x| x == fi as u32) {
                 lf.swap_remove(pos);
@@ -658,11 +819,57 @@ impl SolveState {
     fn arrive(&mut self, d: &Dense, fi: usize, now: f64) {
         self.active[fi] = true;
         self.last_sync[fi] = now;
-        for &l in &d.flow_links[fi] {
+        for &l in d.links_of(fi) {
             self.link_flows[l as usize].push(fi as u32);
         }
         self.eject_count[d.flow_last[fi] as usize] += 1;
     }
+}
+
+/// Per-component solve scratch: the link- and flow-indexed arrays the
+/// max-min filling, entry-queueing and classification blocks mark and
+/// then restore to zero. The serial path owns one inside [`DesScratch`];
+/// the parallel path gives each worker its own from the scratch's
+/// persistent pool ([`crate::campaign::pool::par_map_pooled`] over
+/// `DesScratch::par_cscratch`), so components never contend and the
+/// multi-MB link-indexed arrays are zero-built once, not per batch. All
+/// entries are zero between uses — each block cleans up exactly what it
+/// touched, which is also what makes pooling safe.
+#[derive(Default)]
+struct CompScratch {
+    rem_cap: Vec<f64>,
+    count: Vec<u32>,
+    /// Per-flow 1-based component-slot tags (`maxmin_component`).
+    slot: Vec<u32>,
+    touched: Vec<u32>,
+    inflight: Vec<f64>,
+    contaminated: Vec<bool>,
+}
+
+impl CompScratch {
+    fn grow(&mut self, n_links: usize, n_flows: usize) {
+        if self.rem_cap.len() < n_links {
+            self.rem_cap.resize(n_links, 0.0);
+            self.count.resize(n_links, 0);
+            self.inflight.resize(n_links, 0.0);
+            self.contaminated.resize(n_links, false);
+        }
+        if self.slot.len() < n_flows {
+            self.slot.resize(n_flows, 0);
+        }
+    }
+}
+
+/// What one component's solve produced — merged into [`SolveState`]
+/// serially, in component-id order, so the commit is deterministic no
+/// matter how the components were scheduled.
+struct CompOut {
+    /// Max-min rates aligned with the component's flow list.
+    rates: Vec<f64>,
+    /// `(flow, entry queueing delay)` for flows priced this batch.
+    penalties: Vec<(u32, f64)>,
+    contributors: Vec<u32>,
+    victims: Vec<u32>,
 }
 
 impl<'t> DesSim<'t> {
@@ -692,21 +899,15 @@ impl<'t> DesSim<'t> {
     fn push_flow(
         &self,
         d: &mut Dense,
-        intern: &mut FxHashMap<LinkId, u32>,
+        map: &mut LinkMap,
         rf: &RoutedFlow,
         slot: Option<usize>,
     ) -> usize {
-        let mut ls = d.spare.pop().unwrap_or_default();
-        ls.clear();
-        ls.reserve(rf.path.links.len());
-        for l in &rf.path.links {
-            let id = *intern.entry(*l).or_insert_with(|| {
-                d.link_ids.push(*l);
-                d.cap.push(self.link_cap(l));
-                (d.link_ids.len() - 1) as u32
-            });
-            ls.push(id);
-        }
+        let n = rf.path.links.len();
+        assert!(
+            (1..=MAX_PATH_LINKS).contains(&n),
+            "flow path has {n} links (1..={MAX_PATH_LINKS} supported)"
+        );
         let c = &self.topo.cfg;
         let fcap = match rf.flow.buf {
             super::BufLoc::Host => c.rank_issue_bw_host,
@@ -716,25 +917,38 @@ impl<'t> DesSim<'t> {
             super::BufLoc::Host => c.nic_eff_bw_host,
             super::BufLoc::Gpu => c.nic_eff_bw_gpu,
         };
-        for (&id, l) in ls.iter().zip(&rf.path.links) {
+        let mut ls = [0u32; MAX_PATH_LINKS];
+        for (k, l) in rf.path.links.iter().enumerate() {
+            let u = self.topo.link_index(l) as usize;
+            let mut id = map.ids[u];
+            if id == u32::MAX {
+                id = d.link_ids.len() as u32;
+                map.ids[u] = id;
+                d.link_ids.push(*l);
+                d.link_uids.push(u as u32);
+                d.cap.push(self.link_cap(l));
+            }
             if matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)) {
                 d.cap[id as usize] = d.cap[id as usize].min(eff);
             }
+            ls[k] = id;
         }
-        let last = *ls.last().expect("flow with an empty path");
+        let last = ls[n - 1];
         match slot {
             Some(i) => {
-                let old = std::mem::replace(&mut d.flow_links[i], ls);
-                d.spare.push(old);
+                let o = i * MAX_PATH_LINKS;
+                d.flow_links[o..o + MAX_PATH_LINKS].copy_from_slice(&ls);
+                d.flow_len[i] = n as u8;
                 d.flow_cap[i] = fcap;
                 d.flow_last[i] = last;
                 i
             }
             None => {
-                d.flow_links.push(ls);
+                d.flow_links.extend_from_slice(&ls);
+                d.flow_len.push(n as u8);
                 d.flow_cap.push(fcap);
                 d.flow_last.push(last);
-                d.flow_links.len() - 1
+                d.flow_len.len() - 1
             }
         }
     }
@@ -743,76 +957,104 @@ impl<'t> DesSim<'t> {
     /// Link ids are interned ONCE per simulation; the per-event max-min
     /// recomputation then runs on flat vectors — this is the §Perf
     /// optimization that took the 512-flow DES from ~38 ms to single-digit
-    /// milliseconds (EXPERIMENTS.md §Perf).
+    /// milliseconds (EXPERIMENTS.md §Perf). Interning itself is now
+    /// hash-free: ids come from the [`Topology::link_index`] universe
+    /// through a flat [`LinkMap`].
     fn build_dense(&self, flows: &[TimedFlow]) -> Dense {
         let mut d = Dense::default();
-        let mut intern: FxHashMap<LinkId, u32> = FxHashMap::default();
+        let mut map = LinkMap::default();
+        map.ensure(self.topo.link_universe());
         for tf in flows {
-            self.push_flow(&mut d, &mut intern, &tf.rf, None);
+            self.push_flow(&mut d, &mut map, &tf.rf, None);
         }
         d
     }
 
     /// The per-event solve block shared by `run`, `run_dag_impl` and
-    /// `run_stream`: component construction (incremental walk from the
+    /// `run_stream`: component *partitioning* (incremental walk from the
     /// changed flows, or the full active set when `full_resolve`), lazy
-    /// byte sync, entry-queueing pricing for new arrivals, exact max-min
-    /// over the component, congestion classification, and rate commit
-    /// with completion (re)projection into `heap`. Completion *effects*
-    /// — what a finished flow means (a result row, a DAG node, a
-    /// dependent release) — stay with the caller; this block is only the
-    /// fabric arithmetic, which is why the three executors price traffic
-    /// identically.
+    /// byte sync, then — per link-disjoint component — entry-queueing
+    /// pricing for new arrivals, exact max-min and congestion
+    /// classification ([`DesSim::solve_component`]), and finally a
+    /// serial, component-id-ordered merge + rate commit with completion
+    /// (re)projection into `heap`. When a batch spans several components
+    /// and `opts.solver_threads > 1`, the per-component solves fan out
+    /// over [`crate::campaign::pool::par_map_pooled`] worker scratches
+    /// (persistent in the [`DesScratch`], warm across batches);
+    /// every component's arithmetic is a pure function of the synced
+    /// pre-batch state, so the fan-out is bit-identical to the serial
+    /// path at any thread count. Completion *effects* — what a finished
+    /// flow means (a result row, a DAG node, a dependent release) —
+    /// stay with the caller; this block is only the fabric arithmetic,
+    /// which is why the three executors price traffic identically.
     #[allow(clippy::too_many_arguments)]
     fn solve_batch(
         &self,
         d: &Dense,
         st: &mut SolveState,
+        cs: &mut CompScratch,
+        pcs: &mut Vec<CompScratch>,
         heap: &mut BinaryHeap<Reverse<Ev>>,
         now: f64,
         completions: &[usize],
         arrivals: &[usize],
         full_resolve: bool,
     ) {
-        let thr = self.opts.incast_threshold as u32;
-        // ---- affected component (or, for the oracle, everything) ----
+        // ---- partition the affected flows into link-disjoint
+        // components (or, for the oracle, everything as one) ----
         st.comp.clear();
+        st.comp_ends.clear();
         if full_resolve {
             let n = st.active.len();
             st.comp.extend((0..n).filter(|&fi| st.active[fi]));
+            if !st.comp.is_empty() {
+                st.comp_ends.push(st.comp.len());
+            }
         } else {
             st.stamp = st.stamp.wrapping_add(1);
             let stamp = st.stamp;
             st.lstack.clear();
-            for &fi in completions.iter().chain(arrivals.iter()) {
-                for &l in &d.flow_links[fi] {
+            // each changed flow seeds (at most) one new partition: the
+            // closure of flows transitively sharing links. Later seeds
+            // whose region was already visited contribute nothing, so
+            // partitions are link-disjoint by construction — two flows
+            // sharing a link always land in the same partition.
+            for &seed in completions.iter().chain(arrivals.iter()) {
+                let start = st.comp.len();
+                for &l in d.links_of(seed) {
                     if st.link_seen[l as usize] != stamp {
                         st.link_seen[l as usize] = stamp;
                         st.lstack.push(l);
                     }
                 }
-            }
-            while let Some(l) = st.lstack.pop() {
-                for &fu in &st.link_flows[l as usize] {
-                    let fi = fu as usize;
-                    if st.flow_seen[fi] != stamp {
-                        st.flow_seen[fi] = stamp;
-                        st.comp.push(fi);
-                        for &ll in &d.flow_links[fi] {
-                            if st.link_seen[ll as usize] != stamp {
-                                st.link_seen[ll as usize] = stamp;
-                                st.lstack.push(ll);
+                while let Some(l) = st.lstack.pop() {
+                    for &fu in &st.link_flows[l as usize] {
+                        let fi = fu as usize;
+                        if st.flow_seen[fi] != stamp {
+                            st.flow_seen[fi] = stamp;
+                            st.comp.push(fi);
+                            for &ll in d.links_of(fi) {
+                                if st.link_seen[ll as usize] != stamp {
+                                    st.link_seen[ll as usize] = stamp;
+                                    st.lstack.push(ll);
+                                }
                             }
                         }
                     }
+                }
+                if st.comp.len() > start {
+                    st.comp_ends.push(st.comp.len());
                 }
             }
         }
         if st.comp.is_empty() {
             return; // isolated completion: nothing shares its links
         }
+        st.batches += 1;
+        st.components += st.comp_ends.len();
 
-        // ---- lazily sync transferred bytes for the component ----
+        // ---- lazily sync transferred bytes (serial: per-flow writes
+        // the component solves below read) ----
         for &fi in &st.comp {
             st.remaining[fi] = (st.remaining[fi]
                 - st.rate[fi] * (now - st.last_sync[fi]))
@@ -820,37 +1062,125 @@ impl<'t> DesSim<'t> {
             st.last_sync[fi] = now;
         }
 
+        // ---- per-component solve: fan out when the batch spans
+        // several components and carries enough work ----
+        let n_comp = st.comp_ends.len();
+        let fan_out = self.opts.solver_threads > 1
+            && n_comp >= 2
+            && st.comp.len() >= PAR_SOLVE_MIN_FLOWS;
+        let outs: Vec<CompOut> = if fan_out {
+            st.fanned += 1;
+            let mut ranges = Vec::with_capacity(n_comp);
+            let mut start = 0usize;
+            for &end in &st.comp_ends {
+                ranges.push((start, end));
+                start = end;
+            }
+            let stx: &SolveState = st;
+            crate::campaign::pool::par_map_pooled(
+                &ranges,
+                self.opts.solver_threads,
+                pcs,
+                |&(a, b), w: &mut CompScratch| {
+                    self.solve_component(d, stx, &stx.comp[a..b], w)
+                },
+            )
+        } else {
+            let mut outs = Vec::with_capacity(n_comp);
+            let mut start = 0usize;
+            for &end in &st.comp_ends {
+                outs.push(self.solve_component(d, st, &st.comp[start..end], cs));
+                start = end;
+            }
+            outs
+        };
+
+        // ---- deterministic merge + commit, in component-id order ----
+        let mut start = 0usize;
+        for (ci, out) in outs.into_iter().enumerate() {
+            let end = st.comp_ends[ci];
+            for &(fi, pen) in &out.penalties {
+                st.queue_penalty[fi as usize] = pen;
+            }
+            for &fi in &out.contributors {
+                st.contributors.insert(fi as usize);
+            }
+            for &fi in &out.victims {
+                st.victims.insert(fi as usize);
+            }
+            for (idx, &fi) in st.comp[start..end].iter().enumerate() {
+                st.rate[fi] = out.rates[idx];
+                st.epoch[fi] = st.epoch[fi].wrapping_add(1);
+                let t_fin = if st.remaining[fi] <= 1e-6 {
+                    now // mirrors the oracle's completion threshold
+                } else if st.rate[fi] > 0.0 {
+                    now + st.remaining[fi] / st.rate[fi]
+                } else {
+                    f64::INFINITY
+                };
+                if t_fin.is_finite() {
+                    heap.push(Reverse(Ev {
+                        t: t_fin,
+                        kind: EV_COMPLETION,
+                        flow: fi as u32,
+                        epoch: st.epoch[fi],
+                    }));
+                }
+            }
+            start = end;
+        }
+    }
+
+    /// One component's solve: entry-queueing pricing, exact max-min and
+    /// congestion classification over `comp` — a pure function of the
+    /// (already byte-synced) `st` and the worker-owned `cs`, which is
+    /// what lets [`DesSim::solve_batch`] run components concurrently
+    /// with bit-identical results. Nothing outside `cs` is written; the
+    /// produced [`CompOut`] is merged serially by the caller.
+    fn solve_component(
+        &self,
+        d: &Dense,
+        st: &SolveState,
+        comp: &[usize],
+        cs: &mut CompScratch,
+    ) -> CompOut {
+        let thr = self.opts.incast_threshold as u32;
+        cs.grow(d.cap.len(), st.remaining.len());
+        let mut penalties: Vec<(u32, f64)> = Vec::new();
+        let mut contributors: Vec<u32> = Vec::new();
+        let mut victims: Vec<u32> = Vec::new();
+
         // ---- queueing delay seen by newly arrived flows (Fig 5 shape):
         // in-flight bytes of OTHER flows on each hop, capped by the
         // switch queue; with congestion management incast contributors
         // are held at injection and excluded ----
-        if st.comp.iter().any(|&fi| st.queue_penalty[fi].is_nan()) {
-            for &fi in &st.comp {
+        if comp.iter().any(|&fi| st.queue_penalty[fi].is_nan()) {
+            for &fi in comp {
                 if self.opts.congestion_mgmt
                     && st.eject_count[d.flow_last[fi] as usize] >= thr
                 {
                     continue;
                 }
-                for &l in &d.flow_links[fi] {
-                    st.inflight[l as usize] += st.remaining[fi];
+                for &l in d.links_of(fi) {
+                    cs.inflight[l as usize] += st.remaining[fi];
                 }
             }
-            for &fi in &st.comp {
+            for &fi in comp {
                 if !st.queue_penalty[fi].is_nan() {
                     continue;
                 }
                 let mut pen = 0.0;
-                for &l in &d.flow_links[fi] {
-                    let queued = (st.inflight[l as usize] - st.remaining[fi])
+                for &l in d.links_of(fi) {
+                    let queued = (cs.inflight[l as usize] - st.remaining[fi])
                         .max(0.0)
                         .min(self.opts.queue_cap_bytes);
                     pen += queued / d.cap[l as usize].max(1.0);
                 }
-                st.queue_penalty[fi] = pen;
+                penalties.push((fi as u32, pen));
             }
-            for &fi in &st.comp {
-                for &l in &d.flow_links[fi] {
-                    st.inflight[l as usize] = 0.0;
+            for &fi in comp {
+                for &l in d.links_of(fi) {
+                    cs.inflight[l as usize] = 0.0;
                 }
             }
         }
@@ -858,71 +1188,50 @@ impl<'t> DesSim<'t> {
         // ---- exact max-min over the component ----
         let mut rates = self.maxmin_component(
             d,
-            &st.comp,
+            comp,
             &st.link_flows,
-            &mut st.rem_cap,
-            &mut st.count,
-            &mut st.slot,
-            &mut st.touched,
+            &mut cs.rem_cap,
+            &mut cs.count,
+            &mut cs.slot,
+            &mut cs.touched,
         );
 
         // ---- congestion classification (incast ejection links) ----
-        let any_incast = st
-            .comp
+        let any_incast = comp
             .iter()
             .any(|&fi| st.eject_count[d.flow_last[fi] as usize] >= thr);
         if any_incast {
-            for &fi in &st.comp {
+            for &fi in comp {
                 if st.eject_count[d.flow_last[fi] as usize] >= thr {
-                    st.contributors.insert(fi);
-                    for &l in &d.flow_links[fi] {
-                        st.contaminated[l as usize] = true;
+                    contributors.push(fi as u32);
+                    for &l in d.links_of(fi) {
+                        cs.contaminated[l as usize] = true;
                     }
                 }
             }
             if !self.opts.congestion_mgmt {
                 // back-pressure spreads: victims crossing contaminated
                 // links are slowed
-                for (idx, &fi) in st.comp.iter().enumerate() {
+                for (idx, &fi) in comp.iter().enumerate() {
                     if st.eject_count[d.flow_last[fi] as usize] >= thr {
                         continue; // contributor, already fair-shared
                     }
-                    if d.flow_links[fi]
+                    if d.links_of(fi)
                         .iter()
-                        .any(|&l| st.contaminated[l as usize])
+                        .any(|&l| cs.contaminated[l as usize])
                     {
                         rates[idx] *= self.opts.victim_penalty;
-                        st.victims.insert(fi);
+                        victims.push(fi as u32);
                     }
                 }
             }
-            for &fi in &st.comp {
-                for &l in &d.flow_links[fi] {
-                    st.contaminated[l as usize] = false;
+            for &fi in comp {
+                for &l in d.links_of(fi) {
+                    cs.contaminated[l as usize] = false;
                 }
             }
         }
-
-        // ---- commit rates and (re)project completions ----
-        for (idx, &fi) in st.comp.iter().enumerate() {
-            st.rate[fi] = rates[idx];
-            st.epoch[fi] = st.epoch[fi].wrapping_add(1);
-            let t_fin = if st.remaining[fi] <= 1e-6 {
-                now // mirrors the oracle's completion threshold
-            } else if st.rate[fi] > 0.0 {
-                now + st.remaining[fi] / st.rate[fi]
-            } else {
-                f64::INFINITY
-            };
-            if t_fin.is_finite() {
-                heap.push(Reverse(Ev {
-                    t: t_fin,
-                    kind: EV_COMPLETION,
-                    flow: fi as u32,
-                    epoch: st.epoch[fi],
-                }));
-            }
-        }
+        CompOut { rates, penalties, contributors, victims }
     }
 
     /// Exact max-min fair rates with per-flow caps (progressive filling)
@@ -952,7 +1261,7 @@ impl<'t> DesSim<'t> {
         let mut fixed = vec![false; n];
         touched.clear();
         for &fi in active {
-            for &l in &d.flow_links[fi] {
+            for &l in d.links_of(fi) {
                 let li = l as usize;
                 if count[li] == 0 {
                     touched.push(l);
@@ -991,7 +1300,7 @@ impl<'t> DesSim<'t> {
                 rate[idx] = c;
                 fixed[idx] = true;
                 n_fixed += 1;
-                for &l in &d.flow_links[active[idx]] {
+                for &l in d.links_of(active[idx]) {
                     rem_cap[l as usize] -= c;
                     count[l as usize] -= 1;
                 }
@@ -999,11 +1308,11 @@ impl<'t> DesSim<'t> {
                 let (l, fair) = best_link.unwrap();
                 // fix every unfixed flow crossing l at `fair`
                 for (idx, &fi) in active.iter().enumerate() {
-                    if !fixed[idx] && d.flow_links[fi].contains(&l) {
+                    if !fixed[idx] && d.links_of(fi).contains(&l) {
                         rate[idx] = fair;
                         fixed[idx] = true;
                         n_fixed += 1;
-                        for &ll in &d.flow_links[fi] {
+                        for &ll in d.links_of(fi) {
                             rem_cap[ll as usize] -= fair;
                             count[ll as usize] -= 1;
                         }
@@ -1086,7 +1395,7 @@ impl<'t> DesSim<'t> {
                     if self.opts.congestion_mgmt && is_contrib(fi) {
                         continue;
                     }
-                    for &l in &d.flow_links[fi] {
+                    for &l in d.links_of(fi) {
                         inflight[l as usize] += remaining[fi];
                     }
                 }
@@ -1095,7 +1404,7 @@ impl<'t> DesSim<'t> {
                         continue;
                     }
                     let mut pen = 0.0;
-                    for &l in &d.flow_links[fi] {
+                    for &l in d.links_of(fi) {
                         let queued = (inflight[l as usize] - remaining[fi])
                             .max(0.0)
                             .min(self.opts.queue_cap_bytes);
@@ -1104,7 +1413,7 @@ impl<'t> DesSim<'t> {
                     queue_penalty[fi] = pen;
                 }
                 for &fi in &active {
-                    for &l in &d.flow_links[fi] {
+                    for &l in d.links_of(fi) {
                         inflight[l as usize] = 0.0;
                     }
                 }
@@ -1113,7 +1422,7 @@ impl<'t> DesSim<'t> {
                 for &fi in &active {
                     if is_contrib(fi) {
                         contributors_set.insert(fi);
-                        for &l in &d.flow_links[fi] {
+                        for &l in d.links_of(fi) {
                             contaminated[l as usize] = true;
                         }
                     }
@@ -1125,7 +1434,7 @@ impl<'t> DesSim<'t> {
                         if is_contrib(fi) {
                             continue; // contributor, already fair-shared
                         }
-                        if d.flow_links[fi]
+                        if d.links_of(fi)
                             .iter()
                             .any(|&l| contaminated[l as usize])
                         {
@@ -1135,7 +1444,7 @@ impl<'t> DesSim<'t> {
                     }
                 }
                 for &fi in &active {
-                    for &l in &d.flow_links[fi] {
+                    for &l in d.links_of(fi) {
                         contaminated[l as usize] = false;
                     }
                 }
@@ -1180,6 +1489,10 @@ impl<'t> DesSim<'t> {
             makespan,
             contributors: contributors_set.len(),
             victims: victims_set.len(),
+            // the dense oracle re-solves the whole system per event —
+            // it never runs the incremental batch solve these count
+            solve_batches: 0,
+            components_solved: 0,
         }
     }
 
@@ -1234,6 +1547,7 @@ impl<'t> DesSim<'t> {
     pub fn run_with(&self, flows: &[TimedFlow], s: &mut DesScratch)
         -> DesResult {
         s.reset();
+        s.map.ensure(self.topo.link_universe());
         let n = flows.len();
         if n == 0 {
             return DesResult {
@@ -1241,10 +1555,12 @@ impl<'t> DesSim<'t> {
                 makespan: 0.0,
                 contributors: 0,
                 victims: 0,
+                solve_batches: 0,
+                components_solved: 0,
             };
         }
         for tf in flows {
-            self.push_flow(&mut s.d, &mut s.intern, &tf.rf, None);
+            self.push_flow(&mut s.d, &mut s.map, &tf.rf, None);
             s.st.push_flow(tf.rf.flow.bytes as f64);
         }
         s.st.grow_links(s.d.cap.len());
@@ -1310,8 +1626,8 @@ impl<'t> DesSim<'t> {
                 s.st.arrive(&s.d, fi, now);
             }
             self.solve_batch(
-                &s.d, &mut s.st, &mut s.heap, now, &s.completions,
-                &s.arrivals, false,
+                &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
+                &mut s.heap, now, &s.completions, &s.arrivals, false,
             );
         }
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
@@ -1320,6 +1636,8 @@ impl<'t> DesSim<'t> {
             makespan,
             contributors: s.st.contributor_count(),
             victims: s.st.victim_count(),
+            solve_batches: s.st.batches,
+            components_solved: s.st.components,
         }
     }
 
@@ -1363,6 +1681,7 @@ impl<'t> DesSim<'t> {
         s: &mut DesScratch,
     ) -> DagResult {
         s.reset();
+        s.map.ensure(self.topo.link_universe());
         let n_nodes = wl.nodes.len();
         if n_nodes == 0 {
             return DagResult {
@@ -1370,6 +1689,8 @@ impl<'t> DesSim<'t> {
                 makespan: 0.0,
                 contributors: 0,
                 victims: 0,
+                solve_batches: 0,
+                components_solved: 0,
             };
         }
         // ---- transfer nodes -> dense flow set (no RoutedFlow clones:
@@ -1379,7 +1700,7 @@ impl<'t> DesSim<'t> {
             if let DagKind::Xfer(rf) = &node.kind {
                 s.node_flow[ni] = s.flow_node.len() as u32;
                 s.flow_node.push(ni as u32);
-                self.push_flow(&mut s.d, &mut s.intern, rf, None);
+                self.push_flow(&mut s.d, &mut s.map, rf, None);
                 s.st.push_flow(rf.flow.bytes as f64);
             }
         }
@@ -1548,8 +1869,8 @@ impl<'t> DesSim<'t> {
                 continue; // pure node bookkeeping: no rate change
             }
             self.solve_batch(
-                &s.d, &mut s.st, &mut s.heap, now, &s.completions,
-                &s.arrivals, full_resolve,
+                &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
+                &mut s.heap, now, &s.completions, &s.arrivals, full_resolve,
             );
         }
         let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
@@ -1558,6 +1879,8 @@ impl<'t> DesSim<'t> {
             makespan,
             contributors: s.st.contributor_count(),
             victims: s.st.victim_count(),
+            solve_batches: s.st.batches,
+            components_solved: s.st.components,
         }
     }
 
@@ -1631,6 +1954,7 @@ impl<'t> DesSim<'t> {
         mut on_finish: impl FnMut(u32, f64),
     ) -> StreamResult {
         scratch.reset();
+        scratch.map.ensure(self.topo.link_universe());
         let cm = super::rounds::CostModel::new(self.topo);
         let mut ex = StreamExec {
             sim: self,
@@ -1802,7 +2126,8 @@ impl<'t> DesSim<'t> {
             }
             if !(ex.s.completions.is_empty() && ex.s.arrivals.is_empty()) {
                 self.solve_batch(
-                    &ex.s.d, &mut ex.s.st, &mut ex.s.heap, now,
+                    &ex.s.d, &mut ex.s.st, &mut ex.s.cscratch,
+                    &mut ex.s.par_cscratch, &mut ex.s.heap, now,
                     &ex.s.completions, &ex.s.arrivals, false,
                 );
             }
@@ -1819,6 +2144,8 @@ impl<'t> DesSim<'t> {
             contributors: ex.s.st.contributor_count(),
             victims: ex.s.st.victim_count(),
             late_releases: ex.late_releases,
+            solve_batches: ex.s.st.batches,
+            components_solved: ex.s.st.components,
         }
     }
 
@@ -1852,7 +2179,7 @@ impl<'t> DesSim<'t> {
         touched.clear();
         for (idx, &fi) in comp.iter().enumerate() {
             slot[fi] = idx as u32 + 1;
-            for &l in &d.flow_links[fi] {
+            for &l in d.links_of(fi) {
                 let li = l as usize;
                 if count[li] == 0 {
                     touched.push(l);
@@ -1917,7 +2244,7 @@ impl<'t> DesSim<'t> {
                 rates[s] = c;
                 fixed[s] = true;
                 n_fixed += 1;
-                for &l in &d.flow_links[comp[s]] {
+                for &l in d.links_of(comp[s]) {
                     rem_cap[l as usize] -= c;
                     count[l as usize] -= 1;
                 }
@@ -1935,7 +2262,7 @@ impl<'t> DesSim<'t> {
                     rates[s] = fair;
                     fixed[s] = true;
                     n_fixed += 1;
-                    for &ll in &d.flow_links[fu as usize] {
+                    for &ll in d.links_of(fu as usize) {
                         rem_cap[ll as usize] -= fair;
                         count[ll as usize] -= 1;
                     }

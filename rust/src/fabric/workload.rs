@@ -367,6 +367,68 @@ pub fn spread_nics(topo: &Topology, ranks: usize) -> Vec<u32> {
     (0..ranks as u64).map(|i| ((i * stride) % nics) as u32).collect()
 }
 
+/// `groups` blocks of `per_group` endpoints, each block confined to one
+/// dragonfly group (block `g` strides through group `g`'s endpoint
+/// range). Intra-block traffic therefore only touches group-local links
+/// — NIC up/down plus `Local` switch links of that group — so the
+/// blocks are link-disjoint by construction and the DES solves them as
+/// independent components (the multi-group shape the component-parallel
+/// batch solve fans out over; EXPERIMENTS.md §Parallel solve).
+pub fn group_blocks(
+    topo: &Topology,
+    groups: usize,
+    per_group: usize,
+) -> Vec<Vec<u32>> {
+    let epg = topo.cfg.endpoints_per_group();
+    assert!(
+        groups <= topo.cfg.compute_groups,
+        "group_blocks: {groups} blocks > {} compute groups",
+        topo.cfg.compute_groups
+    );
+    assert!(
+        (2..=epg).contains(&per_group),
+        "group_blocks: {per_group} ranks/group outside 2..={epg}"
+    );
+    let stride = (epg / per_group).max(1);
+    (0..groups)
+        .map(|g| {
+            (0..per_group)
+                .map(|r| (g * epg + r * stride) as u32)
+                .collect()
+        })
+        .collect()
+}
+
+/// The multi-group "halo + allreduce" application-step rounds:
+/// `halo_rounds` rounds of ±1 neighbour exchange *within* each block
+/// (group-local, link-disjoint across blocks), then `leader_rounds`
+/// chunked ring-allreduce rounds over the block leaders (`block[0]`),
+/// which fuse the groups through global links. Every endpoint is
+/// touched in every halo round and every leader in every leader round,
+/// so the rounds stream exactly (`late_releases == 0`) through
+/// [`super::des::DesSim::run_stream`].
+pub fn halo_allreduce_rounds(
+    blocks: &[Vec<u32>],
+    halo_rounds: usize,
+    halo_bytes: u64,
+    leader_rounds: usize,
+    leader_bytes: u64,
+) -> Vec<Vec<(u32, u32, u64)>> {
+    assert!(blocks.len() >= 2, "halo_allreduce_rounds: need >= 2 blocks");
+    let mut rounds = Vec::with_capacity(halo_rounds + leader_rounds);
+    for _ in 0..halo_rounds {
+        let mut round =
+            Vec::with_capacity(blocks.iter().map(|b| 2 * b.len()).sum());
+        for b in blocks {
+            round.extend(neighbor_round(b, &[-1, 1], halo_bytes));
+        }
+        rounds.push(round);
+    }
+    let leaders: Vec<u32> = blocks.iter().map(|b| b[0]).collect();
+    rounds.extend(ring_rounds(&leaders, leader_rounds, leader_bytes));
+    rounds
+}
+
 /// `rounds` ring rounds: in each, endpoint i sends `bytes` to i+1.
 pub fn ring_rounds(
     nics: &[u32],
@@ -597,6 +659,78 @@ mod tests {
             || spread_nics(&t, n + 1),
         ));
         assert!(res.is_err(), "oversubscribed spread must be rejected");
+    }
+
+    #[test]
+    fn group_blocks_are_group_confined_and_distinct() {
+        let t = setup();
+        let blocks = group_blocks(&t, 3, 8);
+        assert_eq!(blocks.len(), 3);
+        let mut all: Vec<u32> = Vec::new();
+        for (g, b) in blocks.iter().enumerate() {
+            assert_eq!(b.len(), 8);
+            for &nic in b {
+                assert_eq!(
+                    t.group_of_node(t.node_of_nic(nic)),
+                    g as u16,
+                    "block {g} endpoint {nic} strays outside its group"
+                );
+            }
+            all.extend(b);
+        }
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 24, "blocks must not alias endpoints");
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || group_blocks(&t, 99, 8),
+        ));
+        assert!(res.is_err(), "more blocks than groups must be rejected");
+    }
+
+    #[test]
+    fn halo_allreduce_rounds_shape_and_streaming_exactness() {
+        let t = setup();
+        let blocks = group_blocks(&t, 3, 8);
+        let rounds = halo_allreduce_rounds(&blocks, 2, 1 << 16, 3, 1 << 16);
+        assert_eq!(rounds.len(), 5);
+        // halo rounds: 2 msgs per endpoint per round, group-local
+        for round in &rounds[..2] {
+            assert_eq!(round.len(), 3 * 8 * 2);
+            for &(s, d, _) in round {
+                assert_eq!(
+                    t.group_of_node(t.node_of_nic(s)),
+                    t.group_of_node(t.node_of_nic(d)),
+                    "halo message {s}->{d} crosses groups"
+                );
+            }
+        }
+        // leader rounds: one msg per block leader
+        for round in &rounds[2..] {
+            assert_eq!(round.len(), 3);
+        }
+        // the full round structure streams exactly
+        let sim = crate::fabric::des::DesSim::new(&t, DesOpts::default());
+        let mut r1 = Router::with_seed(&t, 3);
+        let dag = dag_from_rounds(&mut r1, &rounds, 0.0);
+        let full = sim.run_dag(&dag);
+        let mut r2 = Router::with_seed(&t, 3);
+        let rv = rounds.clone();
+        let mut src =
+            routed_round_source(&mut r2, move |k| rv.get(k).cloned());
+        let streamed = sim.run_stream(&mut src);
+        assert_eq!(streamed.late_releases, 0);
+        assert_eq!(streamed.total_nodes, dag.len());
+        let rel = (streamed.makespan - full.makespan).abs()
+            / full.makespan.max(1e-30);
+        assert!(rel < 1e-9, "streamed vs materialized halo+allreduce");
+        // halo batches must expose multi-component parallelism
+        assert!(
+            full.components_solved > full.solve_batches,
+            "disjoint group blocks must yield multi-component batches \
+             ({} components over {} batches)",
+            full.components_solved,
+            full.solve_batches
+        );
     }
 
     #[test]

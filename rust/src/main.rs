@@ -127,7 +127,10 @@ fn main() -> Result<()> {
         }
         "campaign" => {
             // repro campaign [threads] [out.json] — the standard scenario
-            // sweep through the launcher's prolog/epilog gates
+            // sweep through the launcher's prolog/epilog gates.
+            // DES_THREADS=<n> fans each scenario's per-batch component
+            // solves over n solver threads; reports are byte-identical at
+            // every value (the CI solver-thread matrix diffs them).
             let threads: usize = args
                 .get(1)
                 .map(|s| s.parse())
@@ -136,7 +139,16 @@ fn main() -> Result<()> {
             let cfg = AuroraConfig::small(8, 4);
             let m = Machine::new(&cfg);
             let mut l = Launcher::new(&m);
-            let c = Campaign::standard(&cfg, aurorasim::reproduce::CAMPAIGN_SEED);
+            let mut c =
+                Campaign::standard(&cfg, aurorasim::reproduce::CAMPAIGN_SEED);
+            if let Some(n) = std::env::var("DES_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                for s in &mut c.scenarios {
+                    s.opts.solver_threads = n.max(1);
+                }
+            }
             let (rep, offlined) = l.launch_campaign(&c, threads)?;
             println!("{}", rep.render_table());
             if !offlined.is_empty() {

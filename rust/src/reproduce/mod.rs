@@ -529,7 +529,7 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
     let small = AuroraConfig::small(8, 4);
     let rep = crate::campaign::Campaign::standard(&small, CAMPAIGN_SEED)
         .run_serial();
-    const CAMPAIGN_KEYS: [&str; 16] = [
+    const CAMPAIGN_KEYS: [&str; 17] = [
         "campaign_gpcnet_isolated",
         "campaign_gpcnet_congested",
         "campaign_gpcnet_congested_nocm",
@@ -546,6 +546,7 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
         "campaign_hacc_step_closed",
         "campaign_amr_wind_step_closed",
         "campaign_lammps_step_closed",
+        "campaign_halo_allreduce_closed",
     ];
     for (key, r) in CAMPAIGN_KEYS.iter().zip(&rep.results) {
         debug_assert_eq!(format!("campaign_{}", r.name).as_str(), *key);

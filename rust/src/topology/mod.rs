@@ -208,6 +208,58 @@ impl Topology {
             .collect()
     }
 
+    // ---------------- dense link ids ----------------
+
+    /// Widest global-link bundle between any pair of groups (compute,
+    /// DAOS or service) — the per-pair slot width of the dense global
+    /// link-id space.
+    fn max_global_links(&self) -> usize {
+        self.cfg
+            .global_links_compute
+            .max(self.cfg.global_links_daos)
+            .max(self.cfg.global_links_noncompute)
+    }
+
+    /// Size of the dense link-id space [`Topology::link_index`] mints
+    /// into: every NIC injection/ejection link, every directed
+    /// switch-to-switch slot and every directed global-link slot. The
+    /// DES keys its per-link state by these ids, so a full-Aurora
+    /// instantiation (166 compute groups, 84,992 NICs) costs one flat
+    /// `u32` map of ~1.08M slots (~4.1 MiB) instead of hashing `LinkId`
+    /// enums on every flow-interning step.
+    pub fn link_universe(&self) -> usize {
+        let e = self.cfg.compute_endpoints();
+        let s = self.cfg.switches_per_group;
+        let g = self.cfg.total_groups();
+        2 * e + g * s * s + g * g * self.max_global_links()
+    }
+
+    /// Dense id of a directed link — a pure function of topology
+    /// position (the link-level analogue of the §3.6 algorithmic fabric
+    /// addresses: no learning, no hashing). Distinct links map to
+    /// distinct ids below [`Topology::link_universe`].
+    pub fn link_index(&self, link: &LinkId) -> u32 {
+        let e = self.cfg.compute_endpoints();
+        let s = self.cfg.switches_per_group;
+        let g = self.cfg.total_groups();
+        let idx = match link {
+            LinkId::NicUp(n) => *n as usize,
+            LinkId::NicDown(n) => e + *n as usize,
+            LinkId::Local { group, a, b } => {
+                2 * e + (*group as usize * s + *a as usize) * s + *b as usize
+            }
+            LinkId::Global { src, dst, idx } => {
+                2 * e
+                    + g * s * s
+                    + (*src as usize * g + *dst as usize)
+                        * self.max_global_links()
+                    + *idx as usize
+            }
+        };
+        debug_assert!(idx < self.link_universe(), "link outside universe");
+        idx as u32
+    }
+
     /// Per-direction link bandwidth.
     pub fn link_bw(&self, link: &LinkId) -> f64 {
         match link {
@@ -330,6 +382,56 @@ mod tests {
             })
             .count();
         assert!(differing > 140, "only {differing}/165 pairs split");
+    }
+
+    #[test]
+    fn link_index_is_injective_and_bounded() {
+        // every link a routed path can produce must mint a distinct id
+        // below the universe — sweep all NIC links plus every local and
+        // (sampled) global slot of a small machine
+        let t = topo();
+        let mut seen = std::collections::HashSet::new();
+        let uni = t.link_universe();
+        let mut check = |l: LinkId| {
+            let id = t.link_index(&l);
+            assert!((id as usize) < uni, "{l:?} -> {id} >= {uni}");
+            assert!(seen.insert(id), "duplicate id {id} for {l:?}");
+        };
+        for n in 0..t.cfg.compute_endpoints() as u32 {
+            check(LinkId::NicUp(n));
+            check(LinkId::NicDown(n));
+        }
+        let s = t.cfg.switches_per_group as u8;
+        for g in 0..t.cfg.total_groups() as u16 {
+            for a in 0..s {
+                for b in 0..s {
+                    check(LinkId::Local { group: g, a, b });
+                }
+            }
+        }
+        for src in 0..t.cfg.total_groups() as u16 {
+            for dst in 0..t.cfg.total_groups() as u16 {
+                for idx in 0..t.cfg.global_links_compute as u8 {
+                    check(LinkId::Global { src, dst, idx });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn link_index_covers_full_aurora_paths() {
+        // full-machine minimal + Valiant paths index inside the universe
+        let t = Topology::new(&AuroraConfig::aurora());
+        let uni = t.link_universe();
+        let last = t.cfg.compute_endpoints() as u32 - 1;
+        let mut paths = t.minimal_candidates(0, last);
+        paths.push(t.nonminimal_path(0, last, 7, 0, 1));
+        paths.push(t.minimal_path(3, 40, 0));
+        for p in &paths {
+            for l in &p.links {
+                assert!((t.link_index(l) as usize) < uni, "{l:?}");
+            }
+        }
     }
 
     #[test]

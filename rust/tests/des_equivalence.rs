@@ -608,6 +608,53 @@ fn route_cache_does_not_leak_capacities_across_des_opts() {
     assert!(rel < REL_TOL, "cached vs uncached degraded repricing");
 }
 
+/// Closed-loop campaign scenarios now route through a cached router
+/// (`Scenario::materialize_dag`). The cache must leave ordered traffic's
+/// decision accounting untouched: identical paths AND an identical
+/// `decisions` counter with and without the cache, replay after replay.
+#[test]
+fn campaign_route_cache_keeps_ordered_decision_count() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut plain = Router::with_seed(&topo, 11);
+    let mut cached = Router::with_seed(&topo, 11);
+    cached.enable_route_cache();
+    for round in 0..5 {
+        for i in 0..8u32 {
+            let f = Flow::new(i * 8, (i * 8 + 96) % 384, 1 << 16).ordered();
+            assert_eq!(
+                plain.route(&f),
+                cached.route(&f),
+                "round {round}: ordered paths must match"
+            );
+        }
+    }
+    assert_eq!(
+        plain.decisions, cached.decisions,
+        "the route cache must not change ordered decision counts"
+    );
+    assert_eq!(
+        cached.route_cache_hits(),
+        0,
+        "ordered flows bypass the unordered memo entirely"
+    );
+    // and a closed-loop scenario's cached materialization stays
+    // deterministic (covers the campaign golden/byte-diff contract)
+    let s = Scenario::new(
+        "rc",
+        AuroraConfig::small(6, 4),
+        DesOpts::default(),
+        Workload::CollectiveIncast {
+            ranks: 16,
+            rounds: 6,
+            bytes: 1 << 20,
+            fanin: 6,
+            congestor_bytes: 4 << 20,
+        },
+        3,
+    );
+    assert_eq!(s.run(), s.run(), "cached closed-loop scenario determinism");
+}
+
 // ----------------------------------------------------------- solver scratch
 
 /// A reused [`DesScratch`] must be observationally identical to a fresh
@@ -659,6 +706,151 @@ fn scratch_reuse_is_history_independent() {
     );
     assert_eq!(fresh_stream.peak_live_nodes, reused_stream.peak_live_nodes);
     assert_eq!(fresh_stream.late_releases, reused_stream.late_releases);
+}
+
+// ------------------------------------------- component-parallel solve
+
+/// A batch-parallel workload: 8 group-aligned halo blocks (link-disjoint
+/// components) + a leader-ring allreduce fusing them + an incast clique
+/// in a ninth group (contributor/victim classification under
+/// partitioning). Halo batches carry ~384 flows over >= 8 components, so
+/// the fan-out path engages past its work threshold.
+fn multi_component_rounds(
+    topo: &Topology,
+    halo_rounds: usize,
+) -> Vec<Vec<(u32, u32, u64)>> {
+    let blocks = workload::group_blocks(topo, 8, 24);
+    let mut rounds = workload::halo_allreduce_rounds(
+        &blocks, halo_rounds, 1 << 20, 3, 2 << 20,
+    );
+    let epg = topo.cfg.endpoints_per_group() as u32;
+    let root = 8 * epg + 33; // ninth group: disjoint from every block
+    for i in 0..8u32 {
+        rounds[0].push((8 * epg + i * 4, root, 4 << 20));
+    }
+    rounds
+}
+
+/// Tentpole acceptance: the component-parallel batch solve is
+/// bit-identical to serial at every thread count — `DagResult` and
+/// `StreamResult` compared at the `f64::to_bits` level (the campaign
+/// byte-diff pattern applied to raw results) for threads in {1, 2, 8}.
+#[test]
+fn parallel_solve_bit_identical_across_thread_counts() {
+    use aurorasim::fabric::DesScratch;
+    let topo = Topology::new(&AuroraConfig::small(10, 4));
+    let rounds = multi_component_rounds(&topo, 4);
+    let mk_opts = |threads: usize| DesOpts {
+        solver_threads: threads,
+        ..DesOpts::default()
+    };
+    let mut dag_sig: Option<(Vec<u64>, usize, usize, u64)> = None;
+    for &threads in &[1usize, 2, 8] {
+        let mut router = Router::with_seed(&topo, 55);
+        let dag = workload::dag_from_rounds(&mut router, &rounds, 0.0);
+        let mut scratch = DesScratch::new();
+        let sim = DesSim::new(&topo, mk_opts(threads));
+        let res = sim.run_dag_with(&dag, &mut scratch);
+        assert!(
+            res.components_solved > res.solve_batches,
+            "threads = {threads}: disjoint halo blocks must yield \
+             multi-component batches ({} over {})",
+            res.components_solved,
+            res.solve_batches
+        );
+        if threads == 8 {
+            assert!(
+                scratch.fanned_batches() > 0,
+                "8-thread run must exercise the fan-out path"
+            );
+        }
+        let sig = (
+            res.node_finish.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            res.contributors,
+            res.victims,
+            res.makespan.to_bits(),
+        );
+        match &dag_sig {
+            None => dag_sig = Some(sig),
+            Some(base) => assert_eq!(
+                base, &sig,
+                "threads = {threads}: DagResult must be bit-identical"
+            ),
+        }
+    }
+    // the streamed executor honours the same contract
+    let mut stream_sig: Option<(u64, usize, usize, usize, usize)> = None;
+    for &threads in &[1usize, 2, 8] {
+        let mut router = Router::with_seed(&topo, 55);
+        let rv = rounds.clone();
+        let mut src = workload::routed_round_source(&mut router, move |k| {
+            rv.get(k).cloned()
+        });
+        let res = DesSim::new(&topo, mk_opts(threads)).run_stream(&mut src);
+        assert_eq!(res.late_releases, 0, "threads = {threads}");
+        let sig = (
+            res.makespan.to_bits(),
+            res.contributors,
+            res.victims,
+            res.peak_live_nodes,
+            res.total_nodes,
+        );
+        match &stream_sig {
+            None => stream_sig = Some(sig),
+            Some(base) => assert_eq!(
+                base, &sig,
+                "threads = {threads}: StreamResult must be bit-identical"
+            ),
+        }
+    }
+}
+
+/// The partitioned walk + per-component solve must still reach the
+/// oracle's fixpoint: sweep the multi-component incast+halo case against
+/// the full-re-solve oracle with congestion management on and off.
+#[test]
+fn partitioned_solve_matches_oracle_on_multi_component_case() {
+    let topo = Topology::new(&AuroraConfig::small(10, 4));
+    let rounds = multi_component_rounds(&topo, 2);
+    let mut r1 = Router::with_seed(&topo, 56);
+    let dag = workload::dag_from_rounds(&mut r1, &rounds, 0.0);
+    assert_dag_equivalent(
+        &topo,
+        &DesOpts::default(),
+        &dag,
+        "multi-component halo+allreduce+incast",
+    );
+    assert_dag_equivalent(
+        &topo,
+        &DesOpts { congestion_mgmt: false, ..DesOpts::default() },
+        &dag,
+        "multi-component halo+allreduce+incast nocm",
+    );
+}
+
+/// Campaign-wide zero-rebuild: a worker's [`DesScratch`] threaded
+/// through every scenario of the standard sweep must be *reset*, never
+/// *reallocated*, on the second pass — the capacity signature (sum of
+/// every arena's heap capacity) is stable once the first sweep has
+/// warmed it, and results stay equal to the first pass.
+#[test]
+fn campaign_worker_scratch_resets_without_reallocating() {
+    use aurorasim::fabric::DesScratch;
+    let cfg = AuroraConfig::small(4, 4);
+    let scenarios = Campaign::standard(&cfg, 0xBEEF).scenarios;
+    let mut scratch = DesScratch::new();
+    let first: Vec<_> =
+        scenarios.iter().map(|s| s.run_with(&mut scratch)).collect();
+    let sig = scratch.capacity_signature();
+    assert!(sig > 0, "warmed scratch must own allocations");
+    let second: Vec<_> =
+        scenarios.iter().map(|s| s.run_with(&mut scratch)).collect();
+    assert_eq!(
+        scratch.capacity_signature(),
+        sig,
+        "second sweep through a warmed worker scratch must not allocate"
+    );
+    assert_eq!(first, second, "reset scratch must not perturb results");
 }
 
 // ------------------------------------------------- streaming retirement
