@@ -397,6 +397,170 @@ fn main() {
             "multi-group halos must expose >= 2 components per batch"
         );
         rep.ratio("parallel_components_per_batch", per_batch);
+        // the NIC-bound equal-share components of the same run — lone
+        // ring-chunk hops and shared-ejection tails — must keep hitting
+        // the single-bottleneck fast path (floor 1 per batch)
+        let fast_per_batch = res.fastpath_components as f64
+            / res.solve_batches.max(1) as f64;
+        println!(
+            "des/full-aurora fast-path components per batch    {fast_per_batch:>10.1} \
+             ({} of {} components)",
+            res.fastpath_components, res.components_solved
+        );
+        rep.ratio("fastpath_components_per_batch", fast_per_batch);
+    }
+
+    // single-bottleneck fast path vs the general waterfill: 8 disjoint
+    // 32-to-1 incasts, the equal-share shape the fast path targets. The
+    // two paths must agree bit-for-bit before either is timed; the gated
+    // ratio is their time quotient on identical work.
+    {
+        let mut router = Router::with_seed(&small, 41);
+        let nics = small.cfg.compute_endpoints() as u32;
+        let mut flows: Vec<RoutedFlow> = Vec::new();
+        for r in 0..8u32 {
+            let root = (r * 512 + 9) % nics;
+            for i in 0..32u32 {
+                let src = (root + 16 + i * 13) % nics;
+                // staggered sizes: completions thin the component one
+                // flow at a time, so every shrink re-solves (fast-pathed
+                // when enabled) instead of one simultaneous finish
+                let bytes = (4 << 20) + (i as u64) * (1 << 16);
+                let f = Flow::new(src, root, bytes);
+                flows.push(RoutedFlow { path: router.route(&f), flow: f });
+            }
+        }
+        let fast_opts = DesOpts::default(); // fast path on by default
+        let gen_opts = DesOpts {
+            single_bottleneck_fastpath: false,
+            ..DesOpts::default()
+        };
+        let rf = DesSim::new(&small, fast_opts.clone())
+            .run_simultaneous(&flows);
+        let rg = DesSim::new(&small, gen_opts.clone())
+            .run_simultaneous(&flows);
+        assert_eq!(
+            rf.finish.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            rg.finish.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "fast path must be bit-identical to the general waterfill"
+        );
+        assert!(
+            rf.fastpath_components > 0 && rg.fastpath_components == 0,
+            "incast components must take the fast path when enabled"
+        );
+        let fast = rep.timed(
+            "des_single_bottleneck_fastpath",
+            "des/single-bottleneck fast path (8x32 incast)",
+            10,
+            || {
+                let sim = DesSim::new(&small, fast_opts.clone());
+                std::hint::black_box(sim.run_simultaneous(&flows));
+            },
+        );
+        let general = rep.timed(
+            "des_single_bottleneck_fastpath_general",
+            "des/single-bottleneck general   (8x32 incast)",
+            10,
+            || {
+                let sim = DesSim::new(&small, gen_opts.clone());
+                std::hint::black_box(sim.run_simultaneous(&flows));
+            },
+        );
+        rep.ratio("fastpath_speedup", general / fast);
+    }
+
+    // dense router load map vs the hash baseline on full-Aurora paths:
+    // the adaptive router's per-decision load reads/writes are the hot
+    // loop this store replaced (EXPERIMENTS.md §Raw speed)
+    {
+        use aurorasim::fabric::{LoadMap, SparseLoadMap};
+        let flows = random_flows(&aurora, 1000, 43);
+        let mut dense = LoadMap::new(&aurora);
+        let mut sparse = SparseLoadMap::new();
+        let d = rep.timed(
+            "des_router_dense_load",
+            "load/dense router map (1k aurora paths)",
+            50,
+            || {
+                dense.clear();
+                for rf in &flows {
+                    dense.add_path(&rf.path.links, rf.flow.bytes as f64);
+                }
+                let mut acc = 0.0;
+                for rf in &flows {
+                    acc += dense.max_on(&rf.path.links)
+                        + dense.sum_on(&rf.path.links);
+                }
+                std::hint::black_box(acc);
+            },
+        );
+        let h = rep.timed(
+            "des_router_dense_load_hash",
+            "load/hash router map  (1k aurora paths)",
+            50,
+            || {
+                sparse.clear();
+                for rf in &flows {
+                    sparse.add_path(&rf.path.links, rf.flow.bytes as f64);
+                }
+                let mut acc = 0.0;
+                for rf in &flows {
+                    acc += sparse.max_on(&rf.path.links)
+                        + sparse.sum_on(&rf.path.links);
+                }
+                std::hint::black_box(acc);
+            },
+        );
+        rep.ratio("dense_load_speedup", h / d);
+    }
+
+    // persistent worker pool vs per-batch thread spawn: the DES fans out
+    // thousands of small component batches per run, so dispatch overhead
+    // is the cost that matters — same items, same worker count, fresh
+    // `thread::spawn` per batch vs parked workers woken by condvar
+    {
+        use aurorasim::campaign::pool::{self, WorkerPool};
+        let items: Vec<u64> = (0..64).collect();
+        let threads = 4usize;
+        let mut scratches: Vec<u64> = Vec::new();
+        let work = |&x: &u64, s: &mut u64| {
+            let mut acc = x;
+            for i in 0..2_000u64 {
+                acc = acc.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(7)
+                    ^ i;
+            }
+            *s = acc;
+            acc
+        };
+        let fresh = rep.timed(
+            "pool_batch_fresh_spawn",
+            "pool/64-item batch, fresh threads",
+            200,
+            || {
+                std::hint::black_box(pool::par_map_pooled(
+                    &items,
+                    threads,
+                    &mut scratches,
+                    work,
+                ));
+            },
+        );
+        let wp = WorkerPool::new(threads);
+        let persistent = rep.timed(
+            "pool_batch_persistent",
+            "pool/64-item batch, persistent pool",
+            200,
+            || {
+                std::hint::black_box(pool::par_map_on(
+                    &wp,
+                    &items,
+                    threads,
+                    &mut scratches,
+                    work,
+                ));
+            },
+        );
+        rep.ratio("pool_persistent_speedup", fresh / persistent);
     }
 
     // incast + congestion classification

@@ -1,14 +1,23 @@
-//! Deterministic fork-join map over `std::thread::scope`.
+//! Deterministic fork-join maps over a persistent worker pool.
 //!
-//! The build is offline, so rayon is replaced by this ~50-line work-
+//! The build is offline, so rayon is replaced by this small work-
 //! stealing-free pool: workers pull item indices from an atomic counter
 //! and write results into per-item slots, so the output order — and
 //! therefore every byte of a campaign report — is identical no matter how
 //! the OS schedules the workers. `tests/des_equivalence.rs` asserts
 //! parallel == serial byte-for-byte.
+//!
+//! [`WorkerPool`] holds long-lived parked workers (condvar-blocked
+//! between batches) so high-frequency dispatchers — the DES
+//! component-parallel batch solve fans out thousands of event batches
+//! per run — pay no `thread::spawn` per batch; [`par_map_on`] dispatches
+//! one in-order map on such a pool. [`par_map_pooled`]/[`par_map_with`]/
+//! [`par_map`] keep their historical one-shot semantics (the campaign
+//! engine spawns once per campaign, where spawn cost is irrelevant).
 
+use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of workers to use by default: one per available core.
 pub fn default_threads() -> usize {
@@ -16,6 +25,166 @@ pub fn default_threads() -> usize {
         .map(|n| n.get())
         .unwrap_or(1)
 }
+
+/// State guarded by the pool mutex. `job` holds a lifetime-erased
+/// reference to the current batch closure; see the safety argument on
+/// [`WorkerPool::run`].
+struct PoolState {
+    /// Batch generation; bumped once per [`WorkerPool::run`].
+    gen: u64,
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Workers participating in the current batch (`0..participants`).
+    participants: usize,
+    /// Participants that have not yet finished the current batch.
+    active: usize,
+    shutdown: bool,
+    panicked: bool,
+}
+
+struct Shared {
+    m: Mutex<PoolState>,
+    /// Workers wait here for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The dispatching caller waits here for `active == 0`.
+    done_cv: Condvar,
+}
+
+/// Long-lived parked workers for repeated in-order fork-join maps.
+/// Created once, reused for any number of [`par_map_on`] batches, joined
+/// on drop. One batch runs at a time (`run` takes `&self` but the
+/// caller blocks until the batch completes, so batches never overlap).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked worker threads (at least 1).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            m: Mutex::new(PoolState {
+                gen: 0,
+                job: None,
+                participants: 0,
+                active: 0,
+                shutdown: false,
+                panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|me| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh, me))
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(w)` on workers `0..participants` and block until every
+    /// participant returned.
+    ///
+    /// Safety of the lifetime erasure: the borrow of `f` is transmuted
+    /// to `'static` so it can sit in the shared state, but this function
+    /// only returns after `active` (set to `participants`) has been
+    /// decremented to zero — i.e. after every call into the closure has
+    /// finished — and the job slot is cleared before returning. Workers
+    /// of a *previous* generation that wake late never touch it: a
+    /// worker only calls the job of the generation it observed, the slot
+    /// is `None` between batches, and a new generation cannot be posted
+    /// while this one runs (the poster is blocked right here).
+    fn run(&self, participants: usize, f: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(
+            participants >= 1 && participants <= self.handles.len(),
+            "participants out of range"
+        );
+        let job: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let mut st = self.shared.m.lock().expect("pool mutex");
+        debug_assert!(st.job.is_none(), "pool batches never overlap");
+        st.gen = st.gen.wrapping_add(1);
+        st.job = Some(job);
+        st.participants = participants;
+        st.active = participants;
+        self.shared.work_cv.notify_all();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).expect("pool mutex");
+        }
+        st.job = None;
+        if st.panicked {
+            // a worker died unwinding; the pool cannot guarantee further
+            // batches complete — release everything and propagate
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+            drop(st);
+            panic!("worker panicked during pooled batch");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.m.lock().expect("pool mutex");
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Decrements `active` when a participant finishes — including by
+/// panic, so the dispatching caller can never deadlock on `done_cv`.
+struct ActiveGuard<'a>(&'a Shared);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.m.lock().expect("pool mutex");
+        if std::thread::panicking() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, me: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job;
+        {
+            let mut st = shared.m.lock().expect("pool mutex");
+            while !st.shutdown && (st.gen == seen || st.job.is_none()) {
+                st = shared.work_cv.wait(st).expect("pool mutex");
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.gen;
+            if me >= st.participants {
+                continue; // not in this batch; drop the lock and re-park
+            }
+            job = st.job.expect("woken with a job");
+        }
+        let _guard = ActiveGuard(shared);
+        job(me);
+    }
+}
+
+/// Raw-pointer wrapper so disjoint per-worker / per-item writes can
+/// cross the closure boundary. Safety is argued at each use site.
+struct SendPtr<P>(*mut P);
+unsafe impl<P> Send for SendPtr<P> {}
+unsafe impl<P> Sync for SendPtr<P> {}
 
 /// Map `f` over `items` with up to `threads` workers; results are in
 /// input order. `threads <= 1` runs inline on the caller thread.
@@ -49,11 +218,11 @@ where
 /// [`par_map_with`] over *caller-owned* worker scratches: `scratches`
 /// is grown to the worker count with `S::default()` and worker `w`
 /// exclusively uses `scratches[w]`, so repeated calls reuse the same
-/// warm arenas instead of re-building (and re-zeroing) per call — how
-/// the DES component-parallel batch solve keeps its per-worker
-/// `CompScratch` across thousands of event batches. Results are in
-/// input order; `f` must produce results independent of scratch
-/// history, exactly as for [`par_map_with`].
+/// warm arenas instead of re-building (and re-zeroing) per call.
+/// Results are in input order; `f` must produce results independent of
+/// scratch history, exactly as for [`par_map_with`]. Spawns a transient
+/// [`WorkerPool`] per call — callers dispatching many small batches
+/// should hold a pool and use [`par_map_on`] instead.
 pub fn par_map_pooled<T, R, S, F>(
     items: &[T],
     threads: usize,
@@ -67,6 +236,53 @@ where
     F: Fn(&T, &mut S) -> R + Sync,
 {
     let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        if scratches.is_empty() {
+            scratches.resize_with(1, S::default);
+        }
+        let scratch = &mut scratches[0];
+        return items.iter().map(|t| f(t, scratch)).collect();
+    }
+    let pool = WorkerPool::new(threads);
+    par_map_on(&pool, items, threads, scratches, f)
+}
+
+/// Make sure `slot` holds a pool of at least `threads` workers,
+/// (re)creating it when absent or too small, and return it. How owners
+/// of an optional lazily-built pool (the DES solver scratch) obtain
+/// their pool right before a batch dispatch.
+pub fn ensure_pool(
+    slot: &mut Option<WorkerPool>,
+    threads: usize,
+) -> &WorkerPool {
+    let need = threads.max(1);
+    if slot.as_ref().map_or(true, |p| p.workers() < need) {
+        *slot = Some(WorkerPool::new(need));
+    }
+    slot.as_ref().expect("pool just ensured")
+}
+
+/// [`par_map_pooled`] dispatched on a persistent [`WorkerPool`]: no
+/// thread spawn, no per-item `Mutex` — results land in `MaybeUninit`
+/// slots, each written exactly once (the atomic counter hands out every
+/// index exactly once), and are collected in input order after the
+/// batch barrier. Same determinism contract as [`par_map_pooled`].
+pub fn par_map_on<T, R, S, F>(
+    pool: &WorkerPool,
+    items: &[T],
+    threads: usize,
+    scratches: &mut Vec<S>,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Default + Send,
+    F: Fn(&T, &mut S) -> R + Sync,
+{
+    let threads = threads
+        .clamp(1, items.len().max(1))
+        .min(pool.workers());
     if scratches.len() < threads {
         scratches.resize_with(threads, S::default);
     }
@@ -75,30 +291,32 @@ where
         return items.iter().map(|t| f(t, scratch)).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> =
-        items.iter().map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
+    let mut slots: Vec<MaybeUninit<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), MaybeUninit::uninit);
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    let scratch_ptr = SendPtr(scratches.as_mut_ptr());
+    {
         let next = &next;
-        let slots = &slots;
-        let f = &f;
-        for scratch in scratches.iter_mut().take(threads) {
-            s.spawn(move || loop {
+        let job = move |w: usize| {
+            // worker `w` exclusively owns scratches[w] (w < threads <=
+            // scratches.len()); slot i is written exactly once because
+            // the counter hands out each index exactly once
+            let scratch: &mut S = unsafe { &mut *scratch_ptr.0.add(w) };
+            loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
                 let r = f(&items[i], scratch);
-                *slots[i].lock().expect("poisoned result slot") = Some(r);
-            });
-        }
-    });
+                unsafe { (*slots_ptr.0.add(i)).write(r) };
+            }
+        };
+        pool.run(threads, &job);
+    }
+    // the barrier in run() guarantees every slot was initialized
     slots
         .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("poisoned result slot")
-                .expect("worker filled every slot")
-        })
+        .map(|s| unsafe { s.assume_init() })
         .collect()
 }
 
@@ -153,5 +371,51 @@ mod tests {
         assert_eq!(out1, out2);
         assert_eq!(out1, (1..=40).collect::<Vec<_>>());
         assert_eq!(scratches.len(), 4, "pool must not grow on reuse");
+    }
+
+    #[test]
+    fn persistent_pool_reused_across_batches() {
+        let pool = WorkerPool::new(4);
+        let mut scratches: Vec<()> = Vec::new();
+        for round in 0..50u64 {
+            let items: Vec<u64> = (0..31).collect();
+            let out = par_map_on(&pool, &items, 4, &mut scratches, |&x, _| {
+                x.wrapping_mul(round + 1)
+            });
+            let want: Vec<u64> =
+                (0..31).map(|x| x * (round + 1)).collect();
+            assert_eq!(out, want, "round {round}");
+        }
+        assert_eq!(pool.workers(), 4);
+    }
+
+    #[test]
+    fn par_map_on_clamps_to_pool_and_items() {
+        let pool = WorkerPool::new(2);
+        let mut scratches: Vec<()> = Vec::new();
+        // more threads requested than the pool has: clamped, in order
+        let items: Vec<u32> = (0..9).collect();
+        let out = par_map_on(&pool, &items, 16, &mut scratches, |&x, _| x);
+        assert_eq!(out, items);
+        assert!(scratches.len() <= 2);
+        // single item runs inline
+        let one = par_map_on(&pool, &[7u32], 8, &mut scratches, |&x, _| x + 1);
+        assert_eq!(one, vec![8]);
+        // empty input
+        let none: Vec<u32> =
+            par_map_on(&pool, &[] as &[u32], 8, &mut scratches, |&x, _| x);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn ensure_pool_grows_but_never_shrinks() {
+        let mut slot: Option<WorkerPool> = None;
+        assert_eq!(ensure_pool(&mut slot, 2).workers(), 2);
+        assert_eq!(ensure_pool(&mut slot, 2).workers(), 2);
+        // larger request: rebuilt
+        assert_eq!(ensure_pool(&mut slot, 5).workers(), 5);
+        // smaller request: the existing pool is big enough, kept
+        assert_eq!(ensure_pool(&mut slot, 3).workers(), 5);
+        assert_eq!(ensure_pool(&mut slot, 0).workers(), 5);
     }
 }

@@ -180,6 +180,15 @@ impl Scenario {
         // and get re-pinned whenever UPDATE_GOLDEN is next run on a
         // toolchain'd checkout.
         router.enable_route_cache();
+        // pre-set degraded multipliers steer adaptive decisions too:
+        // the router scores against *effective* bandwidth, matching the
+        // DES pricing (workload-*derived* degradations below are built
+        // after routing and stay post-hoc, as before)
+        if !self.opts.degraded.is_empty() {
+            router.set_degraded(
+                self.opts.degraded.iter().map(|(l, m)| (*l, *m)),
+            );
+        }
         let nics_total = topo.cfg.compute_endpoints() as u64;
         let mut opts = self.opts.clone();
         match &self.workload {
@@ -303,6 +312,12 @@ impl Scenario {
     pub fn materialize(&self, topo: &Topology) -> (Vec<TimedFlow>, DesOpts) {
         let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
         let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+        // pre-set degraded multipliers steer routing (see materialize_dag)
+        if !self.opts.degraded.is_empty() {
+            router.set_degraded(
+                self.opts.degraded.iter().map(|(l, m)| (*l, *m)),
+            );
+        }
         let nics = topo.cfg.compute_endpoints() as u64;
         let mut opts = self.opts.clone();
         let mut timed: Vec<TimedFlow> = Vec::new();

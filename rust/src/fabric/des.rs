@@ -79,6 +79,14 @@ pub struct DesOpts {
     /// state and the merge/commit is serial in component-id order —
     /// the knob only changes wall time (EXPERIMENTS.md §Parallel solve).
     pub solver_threads: usize,
+    /// Service components whose flows all share one saturated link (the
+    /// NIC-bound equal-share common case) with an O(flows) closed-form
+    /// update instead of the full max-min waterfill. Bit-identical to
+    /// the general path — the detection rule only fires where the
+    /// waterfill's first fixing step provably covers the whole component
+    /// (EXPERIMENTS.md §Raw speed) — so this is purely a wall-time knob,
+    /// kept togglable for the equivalence suite and the bench baseline.
+    pub single_bottleneck_fastpath: bool,
 }
 
 impl Default for DesOpts {
@@ -90,6 +98,7 @@ impl Default for DesOpts {
             degraded: HashMap::new(),
             queue_cap_bytes: 256.0 * 1024.0,
             solver_threads: 1,
+            single_bottleneck_fastpath: true,
         }
     }
 }
@@ -123,6 +132,11 @@ pub struct DesResult {
     /// parallelism the batch fan-out can exploit (the
     /// `parallel_components_per_batch` bench ratio).
     pub components_solved: usize,
+    /// Of `components_solved`, how many were serviced by the
+    /// single-bottleneck fast path (see
+    /// [`DesOpts::single_bottleneck_fastpath`]). Diagnostic only —
+    /// rates are bit-identical either way.
+    pub fastpath_components: usize,
 }
 
 /// Result of executing a [`DagWorkload`] (closed-loop simulation).
@@ -143,6 +157,9 @@ pub struct DagResult {
     /// Link-disjoint components re-solved across all batches (see
     /// [`DesResult::components_solved`]).
     pub components_solved: usize,
+    /// Components serviced by the single-bottleneck fast path (see
+    /// [`DesResult::fastpath_components`]).
+    pub fastpath_components: usize,
 }
 
 /// Result of a streaming ([`DesSim::run_stream`]) closed-loop run.
@@ -174,6 +191,9 @@ pub struct StreamResult {
     /// Link-disjoint components re-solved across all batches (see
     /// [`DesResult::components_solved`]).
     pub components_solved: usize,
+    /// Components serviced by the single-bottleneck fast path (see
+    /// [`DesResult::fastpath_components`]).
+    pub fastpath_components: usize,
 }
 
 pub struct DesSim<'t> {
@@ -239,6 +259,13 @@ pub struct DesScratch {
     /// ([`crate::campaign::pool::par_map_pooled`]): warmed once, reused
     /// across every fanned batch of every run on this scratch.
     par_cscratch: Vec<CompScratch>,
+    /// Persistent worker pool for the fanned batch solve: spawned lazily
+    /// on the first fan-out, then reused (parked between batches) for
+    /// every later batch of every run on this scratch — thousands of
+    /// batches per run would otherwise pay a `thread::spawn` each.
+    /// Threads, not an arena: excluded from [`Self::capacity_signature`]
+    /// and untouched by reset.
+    par_pool: Option<crate::campaign::pool::WorkerPool>,
     heap: BinaryHeap<Reverse<Ev>>,
     completions: Vec<usize>,
     arrivals: Vec<usize>,
@@ -717,6 +744,7 @@ struct SolveState {
     batches: usize,
     components: usize,
     fanned: usize,
+    fastpath: usize,
 }
 
 impl SolveState {
@@ -750,6 +778,7 @@ impl SolveState {
         self.batches = 0;
         self.components = 0;
         self.fanned = 0;
+        self.fastpath = 0;
     }
 
     /// Unique contributor flows so far (banked recycled slots + live).
@@ -870,6 +899,9 @@ struct CompOut {
     penalties: Vec<(u32, f64)>,
     contributors: Vec<u32>,
     victims: Vec<u32>,
+    /// Rates came from the single-bottleneck fast path (statistics only;
+    /// the rates themselves are bit-identical to the general waterfill).
+    fast: bool,
 }
 
 impl<'t> DesSim<'t> {
@@ -994,6 +1026,7 @@ impl<'t> DesSim<'t> {
         st: &mut SolveState,
         cs: &mut CompScratch,
         pcs: &mut Vec<CompScratch>,
+        wp: &mut Option<crate::campaign::pool::WorkerPool>,
         heap: &mut BinaryHeap<Reverse<Ev>>,
         now: f64,
         completions: &[usize],
@@ -1077,7 +1110,14 @@ impl<'t> DesSim<'t> {
                 start = end;
             }
             let stx: &SolveState = st;
-            crate::campaign::pool::par_map_pooled(
+            // long-lived parked workers: spawned on the first fanned
+            // batch, then every later batch only pays a condvar wake
+            let pool = crate::campaign::pool::ensure_pool(
+                wp,
+                self.opts.solver_threads,
+            );
+            crate::campaign::pool::par_map_on(
+                pool,
                 &ranges,
                 self.opts.solver_threads,
                 pcs,
@@ -1099,6 +1139,9 @@ impl<'t> DesSim<'t> {
         let mut start = 0usize;
         for (ci, out) in outs.into_iter().enumerate() {
             let end = st.comp_ends[ci];
+            if out.fast {
+                st.fastpath += 1;
+            }
             for &(fi, pen) in &out.penalties {
                 st.queue_penalty[fi as usize] = pen;
             }
@@ -1186,7 +1229,7 @@ impl<'t> DesSim<'t> {
         }
 
         // ---- exact max-min over the component ----
-        let mut rates = self.maxmin_component(
+        let (mut rates, fast) = self.maxmin_component(
             d,
             comp,
             &st.link_flows,
@@ -1231,7 +1274,7 @@ impl<'t> DesSim<'t> {
                 }
             }
         }
-        CompOut { rates, penalties, contributors, victims }
+        CompOut { rates, penalties, contributors, victims, fast }
     }
 
     /// Exact max-min fair rates with per-flow caps (progressive filling)
@@ -1493,6 +1536,7 @@ impl<'t> DesSim<'t> {
             // it never runs the incremental batch solve these count
             solve_batches: 0,
             components_solved: 0,
+            fastpath_components: 0,
         }
     }
 
@@ -1557,6 +1601,7 @@ impl<'t> DesSim<'t> {
                 victims: 0,
                 solve_batches: 0,
                 components_solved: 0,
+                fastpath_components: 0,
             };
         }
         for tf in flows {
@@ -1627,7 +1672,8 @@ impl<'t> DesSim<'t> {
             }
             self.solve_batch(
                 &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
-                &mut s.heap, now, &s.completions, &s.arrivals, false,
+                &mut s.par_pool, &mut s.heap, now, &s.completions,
+                &s.arrivals, false,
             );
         }
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
@@ -1638,6 +1684,7 @@ impl<'t> DesSim<'t> {
             victims: s.st.victim_count(),
             solve_batches: s.st.batches,
             components_solved: s.st.components,
+            fastpath_components: s.st.fastpath,
         }
     }
 
@@ -1691,6 +1738,7 @@ impl<'t> DesSim<'t> {
                 victims: 0,
                 solve_batches: 0,
                 components_solved: 0,
+                fastpath_components: 0,
             };
         }
         // ---- transfer nodes -> dense flow set (no RoutedFlow clones:
@@ -1870,7 +1918,8 @@ impl<'t> DesSim<'t> {
             }
             self.solve_batch(
                 &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
-                &mut s.heap, now, &s.completions, &s.arrivals, full_resolve,
+                &mut s.par_pool, &mut s.heap, now, &s.completions,
+                &s.arrivals, full_resolve,
             );
         }
         let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
@@ -1881,6 +1930,7 @@ impl<'t> DesSim<'t> {
             victims: s.st.victim_count(),
             solve_batches: s.st.batches,
             components_solved: s.st.components,
+            fastpath_components: s.st.fastpath,
         }
     }
 
@@ -2127,8 +2177,9 @@ impl<'t> DesSim<'t> {
             if !(ex.s.completions.is_empty() && ex.s.arrivals.is_empty()) {
                 self.solve_batch(
                     &ex.s.d, &mut ex.s.st, &mut ex.s.cscratch,
-                    &mut ex.s.par_cscratch, &mut ex.s.heap, now,
-                    &ex.s.completions, &ex.s.arrivals, false,
+                    &mut ex.s.par_cscratch, &mut ex.s.par_pool,
+                    &mut ex.s.heap, now, &ex.s.completions,
+                    &ex.s.arrivals, false,
                 );
             }
             // recycle flow slots only after the solve: the component walk
@@ -2146,6 +2197,7 @@ impl<'t> DesSim<'t> {
             late_releases: ex.late_releases,
             solve_batches: ex.s.st.batches,
             components_solved: ex.s.st.components,
+            fastpath_components: ex.s.st.fastpath,
         }
     }
 
@@ -2162,6 +2214,10 @@ impl<'t> DesSim<'t> {
     /// stale, smaller keys; entries are re-validated and re-inserted on
     /// pop. `slot`, `rem_cap`, `count` and `touched` are caller-owned
     /// scratch, zeroed on return.
+    ///
+    /// Returns `(rates, fast)` where `fast` flags that the
+    /// single-bottleneck fast path serviced the component (statistics
+    /// only — the rates are bit-identical either way).
     #[allow(clippy::too_many_arguments)]
     fn maxmin_component(
         &self,
@@ -2172,10 +2228,9 @@ impl<'t> DesSim<'t> {
         count: &mut [u32],
         slot: &mut [u32],
         touched: &mut Vec<u32>,
-    ) -> Vec<f64> {
+    ) -> (Vec<f64>, bool) {
         let nc = comp.len();
         let mut rates = vec![f64::NAN; nc];
-        let mut fixed = vec![false; nc];
         touched.clear();
         for (idx, &fi) in comp.iter().enumerate() {
             slot[fi] = idx as u32 + 1;
@@ -2188,6 +2243,70 @@ impl<'t> DesSim<'t> {
                 count[li] += 1;
             }
         }
+        // ---- single-bottleneck fast path: bit-identical shortcuts for
+        // the shapes that dominate real batches (EXPERIMENTS.md §Raw
+        // speed). Each branch reproduces exactly what the waterfill
+        // below would do on its first fixing step when that step covers
+        // the whole component, so `f64` results match to the bit. ----
+        if self.opts.single_bottleneck_fastpath {
+            if nc == 1 {
+                // lone flow: its rate is min(flow cap, tightest link) —
+                // the general path's single iteration, written out
+                let fi = comp[0];
+                let mut fair = f64::INFINITY;
+                for &l in d.links_of(fi) {
+                    let v = rem_cap[l as usize].max(0.0);
+                    if v < fair {
+                        fair = v;
+                    }
+                }
+                let cap = d.flow_cap[fi];
+                // `cap <= fair` mirrors `flow_level <= link_level`
+                rates[0] = if cap <= fair { cap } else { fair };
+                for &l in touched.iter() {
+                    count[l as usize] = 0;
+                }
+                slot[fi] = 0;
+                return (rates, true);
+            }
+            // the lexicographic (fair, link) minimum over the touched
+            // links is exactly the waterfill's first heap pop
+            let mut bl = u32::MAX;
+            let mut bfair = f64::INFINITY;
+            for &l in touched.iter() {
+                let f = rem_cap[l as usize].max(0.0) / count[l as usize] as f64;
+                if f < bfair || (f == bfair && l < bl) {
+                    bfair = f;
+                    bl = l;
+                }
+            }
+            if bl != u32::MAX && count[bl as usize] as usize == nc {
+                // every flow crosses the binding link: the first fixing
+                // step assigns all of them the equal share. Strict `>`
+                // keeps cap ties on the general path (which fixes flow
+                // caps first at equal levels).
+                let mut min_cap = f64::INFINITY;
+                for &fi in comp {
+                    let c = d.flow_cap[fi];
+                    if c < min_cap {
+                        min_cap = c;
+                    }
+                }
+                if min_cap > bfair {
+                    for r in rates.iter_mut() {
+                        *r = bfair;
+                    }
+                    for &l in touched.iter() {
+                        count[l as usize] = 0;
+                    }
+                    for &fi in comp {
+                        slot[fi] = 0;
+                    }
+                    return (rates, true);
+                }
+            }
+        }
+        let mut fixed = vec![false; nc];
         // flows sorted by issue cap: the "next flow-cap constraint" pointer
         let mut cap_order: Vec<u32> = (0..nc as u32).collect();
         cap_order.sort_unstable_by(|&a, &b| {
@@ -2276,7 +2395,7 @@ impl<'t> DesSim<'t> {
         for &fi in comp {
             slot[fi] = 0;
         }
-        rates
+        (rates, false)
     }
 }
 

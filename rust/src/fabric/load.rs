@@ -1,17 +1,140 @@
 //! Link-load bookkeeping shared by the router and the cost tiers.
+//!
+//! Two stores with one API:
+//!
+//! * [`LoadMap`] — dense, [`Topology::link_universe`]-indexed slots with
+//!   epoch-stamped touched-slot reset. Built once per router (~8 MiB at
+//!   full Aurora) and queried on every adaptive-routing score, where the
+//!   old `FxHashMap<LinkId, f64>` lookup dominated router cost
+//!   (EXPERIMENTS.md §Raw speed).
+//! * [`SparseLoadMap`] — the hash-map implementation, kept for transient
+//!   per-call accumulators (round-tier evaluation builds one per call;
+//!   a dense map there would allocate the whole universe each time) and
+//!   as the baseline arm of the `des_router_dense_load` bench.
 
-use crate::topology::LinkId;
+use crate::topology::{LinkId, LinkIndexer, Topology};
 use rustc_hash::FxHashMap as HashMap;
 
-/// Accumulated load per directed link. Values are in *bytes* for round
-/// evaluation or *flow counts / normalized rates* for adaptive-routing
-/// scoring — the router only compares relative magnitudes.
-#[derive(Debug, Clone, Default)]
+/// Accumulated load per directed link, dense over the topology's link
+/// universe. Values are in *bytes* for round evaluation or *flow counts
+/// / normalized rates* for adaptive-routing scoring — the router only
+/// compares relative magnitudes.
+///
+/// `clear` is O(1): slots carry an epoch stamp and a slot is live only
+/// when its stamp matches the current epoch, so resetting is one epoch
+/// bump (the touched list is kept for iteration and rebuilt lazily).
+#[derive(Debug, Clone)]
 pub struct LoadMap {
-    map: HashMap<LinkId, f64>,
+    slots: Vec<f64>,
+    stamp: Vec<u32>,
+    epoch: u32,
+    /// Universe ids minted this epoch, insertion-ordered.
+    touched: Vec<u32>,
+    /// The [`LinkId`] behind each `touched` entry (for iteration).
+    links: Vec<LinkId>,
+    ix: LinkIndexer,
 }
 
 impl LoadMap {
+    pub fn new(topo: &Topology) -> Self {
+        let ix = topo.link_indexer();
+        let uni = ix.universe();
+        Self {
+            slots: vec![0.0; uni],
+            stamp: vec![0; uni],
+            epoch: 1,
+            touched: Vec::new(),
+            links: Vec::new(),
+            ix,
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, link: LinkId, amount: f64) {
+        let u = self.ix.index(&link) as usize;
+        if self.stamp[u] != self.epoch {
+            self.stamp[u] = self.epoch;
+            self.slots[u] = 0.0;
+            self.touched.push(u as u32);
+            self.links.push(link);
+        }
+        self.slots[u] += amount;
+    }
+
+    #[inline]
+    pub fn add_path(&mut self, links: &[LinkId], amount: f64) {
+        for l in links {
+            self.add(*l, amount);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, link: &LinkId) -> f64 {
+        let u = self.ix.index(link) as usize;
+        if self.stamp[u] == self.epoch {
+            self.slots[u]
+        } else {
+            0.0
+        }
+    }
+
+    /// Maximum load over the links of a path.
+    pub fn max_on(&self, links: &[LinkId]) -> f64 {
+        links.iter().map(|l| self.get(l)).fold(0.0, f64::max)
+    }
+
+    /// Sum of loads over the links of a path (routing score).
+    pub fn sum_on(&self, links: &[LinkId]) -> f64 {
+        links.iter().map(|l| self.get(l)).sum()
+    }
+
+    /// Number of links carrying load this epoch.
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// O(1) reset: bump the epoch so every slot reads as unminted. On
+    /// (u32) epoch wrap-around the stamps are refilled once.
+    pub fn clear(&mut self) {
+        self.touched.clear();
+        self.links.clear();
+        if self.epoch == u32::MAX {
+            self.stamp.fill(0);
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&LinkId, &f64)> {
+        self.links
+            .iter()
+            .zip(self.touched.iter())
+            .map(|(l, &u)| (l, &self.slots[u as usize]))
+    }
+
+    /// Hottest link and its load — the congestion hot-spot report the
+    /// fabric manager surfaces (§4.3). Ties break to the lowest
+    /// [`LinkId`] (deterministic regardless of insertion order).
+    pub fn hottest(&self) -> Option<(LinkId, f64)> {
+        hottest_of(self.iter())
+    }
+}
+
+/// The original hash-map load store: no universe allocation, so it stays
+/// the right shape for transient per-call accumulators (the round tier's
+/// `eval_round`/`eval_timed`) where a dense map would pay an O(universe)
+/// build per call.
+#[derive(Debug, Clone, Default)]
+pub struct SparseLoadMap {
+    map: HashMap<LinkId, f64>,
+}
+
+impl SparseLoadMap {
     pub fn new() -> Self {
         Self::default()
     }
@@ -59,23 +182,49 @@ impl LoadMap {
         self.map.iter()
     }
 
-    /// Hottest link and its load — the congestion hot-spot report the
-    /// fabric manager surfaces (§4.3).
+    /// Hottest link and its load; ties break to the lowest [`LinkId`]
+    /// (the old `max_by` answer depended on hash iteration order).
     pub fn hottest(&self) -> Option<(LinkId, f64)> {
-        self.map
-            .iter()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(l, v)| (*l, *v))
+        hottest_of(self.map.iter())
     }
+}
+
+/// Shared hottest-link scan: max by load, ties to the lowest link id, so
+/// the answer is a pure function of the (link, load) *set*.
+fn hottest_of<'a, I>(it: I) -> Option<(LinkId, f64)>
+where
+    I: Iterator<Item = (&'a LinkId, &'a f64)>,
+{
+    let mut best: Option<(LinkId, f64)> = None;
+    for (l, v) in it {
+        let better = match &best {
+            None => true,
+            Some((bl, bv)) => match v.total_cmp(bv) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => *l < *bl,
+                std::cmp::Ordering::Less => false,
+            },
+        };
+        if better {
+            best = Some((*l, *v));
+        }
+    }
+    best
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AuroraConfig;
+
+    fn topo() -> Topology {
+        Topology::new(&AuroraConfig::small(4, 4))
+    }
 
     #[test]
     fn add_and_query() {
-        let mut m = LoadMap::new();
+        let t = topo();
+        let mut m = LoadMap::new(&t);
         let l1 = LinkId::NicUp(1);
         let l2 = LinkId::NicDown(2);
         m.add(l1, 10.0);
@@ -84,12 +233,76 @@ mod tests {
         assert_eq!(m.get(&l1), 15.0);
         assert_eq!(m.max_on(&[l1, l2]), 15.0);
         assert_eq!(m.sum_on(&[l1, l2]), 18.0);
+        assert_eq!(m.len(), 2);
         assert_eq!(m.hottest().unwrap().0, l1);
     }
 
     #[test]
     fn missing_is_zero() {
-        let m = LoadMap::new();
+        let t = topo();
+        let m = LoadMap::new(&t);
         assert_eq!(m.get(&LinkId::NicUp(9)), 0.0);
+        assert!(m.is_empty());
+        assert!(m.hottest().is_none());
+    }
+
+    #[test]
+    fn clear_resets_without_reallocating() {
+        let t = topo();
+        let mut m = LoadMap::new(&t);
+        m.add(LinkId::NicUp(3), 7.0);
+        assert_eq!(m.len(), 1);
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.get(&LinkId::NicUp(3)), 0.0);
+        // a re-add after the epoch bump starts from zero again
+        m.add(LinkId::NicUp(3), 2.0);
+        assert_eq!(m.get(&LinkId::NicUp(3)), 2.0);
+        assert_eq!(m.hottest().unwrap(), (LinkId::NicUp(3), 2.0));
+    }
+
+    #[test]
+    fn hottest_tie_breaks_to_lowest_link_id() {
+        // equal loads: the winner must be the lowest LinkId no matter
+        // the insertion order (the old hash-map max_by was iteration-
+        // order dependent)
+        let t = topo();
+        let a = LinkId::NicUp(1);
+        let b = LinkId::NicUp(5);
+        let c = LinkId::NicDown(0);
+        for order in [[c, b, a], [a, b, c], [b, a, c]] {
+            let mut dense = LoadMap::new(&t);
+            let mut sparse = SparseLoadMap::new();
+            for l in order {
+                dense.add(l, 4.0);
+                sparse.add(l, 4.0);
+            }
+            assert_eq!(dense.hottest().unwrap().0, a, "{order:?}");
+            assert_eq!(sparse.hottest().unwrap().0, a, "{order:?}");
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let t = topo();
+        let mut dense = LoadMap::new(&t);
+        let mut sparse = SparseLoadMap::new();
+        let links = [
+            LinkId::NicUp(0),
+            LinkId::NicDown(7),
+            LinkId::Local { group: 1, a: 0, b: 2 },
+            LinkId::Global { src: 0, dst: 3, idx: 1 },
+        ];
+        for (i, l) in links.iter().enumerate() {
+            dense.add(*l, (i + 1) as f64);
+            sparse.add(*l, (i + 1) as f64);
+        }
+        for l in &links {
+            assert_eq!(dense.get(l), sparse.get(l));
+        }
+        assert_eq!(dense.len(), sparse.len());
+        assert_eq!(dense.max_on(&links), sparse.max_on(&links));
+        assert_eq!(dense.sum_on(&links), sparse.sum_on(&links));
+        assert_eq!(dense.hottest(), sparse.hottest());
     }
 }

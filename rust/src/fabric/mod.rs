@@ -32,7 +32,7 @@ pub mod workload;
 pub use des::{
     DagResult, DesOpts, DesScratch, DesSim, StreamResult, TimedFlow,
 };
-pub use load::LoadMap;
+pub use load::{LoadMap, SparseLoadMap};
 pub use qos::TrafficClass;
 pub use routing::Router;
 pub use workload::{

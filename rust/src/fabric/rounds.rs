@@ -12,7 +12,7 @@
 //! * eager -> rendezvous protocol switch (extra RTT),
 //! * per-NIC message-rate ceiling (bounds tiny-message all2all).
 
-use super::{BufLoc, Flow, FlowTimes, LoadMap, RoutedFlow};
+use super::{BufLoc, Flow, FlowTimes, RoutedFlow, SparseLoadMap};
 use crate::topology::{Path, Topology};
 use std::collections::HashMap;
 
@@ -85,8 +85,10 @@ impl<'t> CostModel<'t> {
     /// NIC links additionally respect message-rate and effective-bandwidth
     /// ceilings, and each flow respects its rank issue ceiling.
     pub fn eval_round(&self, flows: &[RoutedFlow]) -> FlowTimes {
-        let mut bytes_on = LoadMap::new();
-        let mut msgs_on = LoadMap::new();
+        // sparse: these are per-call accumulators — the dense LoadMap
+        // would allocate the whole link universe on every evaluation
+        let mut bytes_on = SparseLoadMap::new();
+        let mut msgs_on = SparseLoadMap::new();
         for rf in flows {
             bytes_on.add_path(&rf.path.links, rf.flow.bytes as f64);
             // message-rate pressure only matters at the NIC endpoints
@@ -135,8 +137,8 @@ impl<'t> CostModel<'t> {
         flows: &[super::des::TimedFlow],
         degraded: &HashMap<crate::topology::LinkId, f64>,
     ) -> FlowTimes {
-        let mut bytes_on = LoadMap::new();
-        let mut msgs_on = LoadMap::new();
+        let mut bytes_on = SparseLoadMap::new();
+        let mut msgs_on = SparseLoadMap::new();
         for tf in flows {
             bytes_on.add_path(&tf.rf.path.links, tf.rf.flow.bytes as f64);
             msgs_on.add(tf.rf.path.links[0], 1.0);

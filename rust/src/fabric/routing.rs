@@ -10,7 +10,7 @@
 //! per destination while traffic is pending (§3.1).
 
 use super::{Flow, LoadMap, TrafficClass};
-use crate::topology::{Path, Topology};
+use crate::topology::{LinkId, Path, Topology};
 use crate::util::Pcg;
 use rustc_hash::FxHashMap;
 
@@ -43,6 +43,11 @@ pub struct Router<'t> {
     pinned: FxHashMap<(u32, u32), Path>,
     /// Route memo for unordered repeated-structure traffic (None = off).
     cache: Option<RouteCache>,
+    /// §3.4 lane-degraded links: bandwidth multiplier per link, the same
+    /// map the DES prices ([`crate::fabric::des::DesOpts::degraded`]).
+    /// Candidate scoring divides by *effective* bandwidth so adaptive
+    /// decisions route around degraded links the way real UGAL does.
+    degraded: FxHashMap<LinkId, f64>,
     rng: Pcg,
     /// Statistics: how many flows were diverted non-minimally.
     pub nonminimal_count: usize,
@@ -61,13 +66,43 @@ impl<'t> Router<'t> {
     pub fn with_seed(topo: &'t Topology, seed: u64) -> Self {
         Self {
             topo,
-            loads: LoadMap::new(),
+            loads: LoadMap::new(topo),
             pinned: FxHashMap::default(),
             cache: None,
+            degraded: FxHashMap::default(),
             rng: Pcg::new(seed),
             nonminimal_count: 0,
             total_routed: 0,
             decisions: 0,
+        }
+    }
+
+    /// Install the §3.4 degraded-link multipliers (replacing any previous
+    /// set) and invalidate every stored decision: the route cache and the
+    /// pinned-route map hold *paths only*, so a decision made against the
+    /// old bandwidths must not replay against the new ones. Pass the same
+    /// map as [`crate::fabric::des::DesOpts::degraded`] so routing and
+    /// DES pricing see one fabric.
+    pub fn set_degraded<I>(&mut self, degraded: I)
+    where
+        I: IntoIterator<Item = (LinkId, f64)>,
+    {
+        self.degraded = degraded.into_iter().collect();
+        self.pinned.clear();
+        if let Some(c) = &mut self.cache {
+            c.map.clear(); // keep the hit counter: it counts history
+        }
+    }
+
+    /// Effective per-direction bandwidth: nominal scaled by the degraded
+    /// multiplier. The healthy-fabric hot path stays hash-free.
+    #[inline]
+    fn eff_bw(&self, l: &LinkId) -> f64 {
+        let base = self.topo.link_bw(l);
+        if self.degraded.is_empty() {
+            base
+        } else {
+            base * self.degraded.get(l).copied().unwrap_or(1.0)
         }
     }
 
@@ -90,18 +125,18 @@ impl<'t> Router<'t> {
         self.cache.as_ref().map_or(0, |c| c.hits)
     }
 
-    /// Bottleneck service time (load / bw) along the *fabric* links of a
-    /// path plus a small per-hop term so longer paths lose ties. Endpoint
-    /// (NIC) links are excluded: injection/ejection is unavoidable, and
-    /// the switch's adaptive decision only chooses among fabric routes.
+    /// Bottleneck service time (load / *effective* bw) along the
+    /// *fabric* links of a path plus a small per-hop term so longer
+    /// paths lose ties. Endpoint (NIC) links are excluded:
+    /// injection/ejection is unavoidable, and the switch's adaptive
+    /// decision only chooses among fabric routes. Degraded links divide
+    /// by their reduced bandwidth — the same service time the DES
+    /// charges — so equal loads no longer hide a half-bandwidth link.
     fn bottleneck(&self, path: &Path) -> f64 {
         path.links
             .iter()
-            .filter(|l| {
-                !matches!(l, crate::topology::LinkId::NicUp(_)
-                    | crate::topology::LinkId::NicDown(_))
-            })
-            .map(|l| self.loads.get(l) / self.topo.link_bw(l))
+            .filter(|l| !matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)))
+            .map(|l| self.loads.get(l) / self.eff_bw(l))
             .fold(0.0, f64::max)
     }
 
@@ -414,6 +449,78 @@ mod tests {
             }
         }
         assert_eq!(cached.route_cache_hits(), 5 * 8);
+    }
+
+    #[test]
+    fn degraded_global_link_diverts_traffic() {
+        // §3.4 regression: equal loads on the parallel global links tie
+        // and the first candidate wins; once that link is lane-degraded
+        // to half bandwidth its service time doubles, and the decision
+        // must divert — the degraded-blind router kept scoring it as
+        // healthy and never moved.
+        let t = topo();
+        let sg = t.group_of_node(t.node_of_nic(0));
+        let dg = t.group_of_node(t.node_of_nic(200));
+        assert_ne!(sg, dg, "test needs an inter-group pair");
+        let preload = |r: &mut Router| {
+            for i in 0..t.cfg.global_links_compute as u8 {
+                r.loads.add(
+                    LinkId::Global { src: sg, dst: dg, idx: i },
+                    1e5,
+                );
+            }
+        };
+        let f = Flow::new(0, 200, 1 << 20);
+        let mut healthy = Router::with_seed(&t, 9);
+        preload(&mut healthy);
+        let hot = *healthy
+            .route(&f)
+            .links
+            .iter()
+            .find(|l| matches!(l, LinkId::Global { .. }))
+            .expect("inter-group path crosses a global link");
+        let mut deg = Router::with_seed(&t, 9);
+        preload(&mut deg);
+        deg.set_degraded([(hot, 0.5)]);
+        let dp = deg.route(&f);
+        assert!(
+            !dp.links.contains(&hot),
+            "traffic must route around the degraded link: {dp:?}"
+        );
+    }
+
+    #[test]
+    fn set_degraded_invalidates_cache_and_pinned_routes() {
+        // cache and pin store paths only: a decision made against the
+        // old bandwidths must not replay after the fabric degrades
+        let t = topo();
+        let mut r = Router::new(&t);
+        r.enable_route_cache();
+        let f = Flow::new(0, 200, 1 << 20);
+        r.route(&f);
+        r.route(&f);
+        assert_eq!(r.decisions, 1);
+        assert_eq!(r.route_cache_hits(), 1);
+        let ord = Flow::new(8, 208, 4096).ordered();
+        r.route(&ord);
+        r.route(&ord);
+        assert_eq!(r.decisions, 2, "pin replay is not a decision");
+        r.set_degraded([(LinkId::NicUp(0), 0.5)]);
+        r.route(&f);
+        assert_eq!(
+            r.decisions, 3,
+            "cached path must not replay across set_degraded"
+        );
+        r.route(&ord);
+        assert_eq!(
+            r.decisions, 4,
+            "pinned path must not replay across set_degraded"
+        );
+        // the refreshed decisions memoize / pin again
+        r.route(&f);
+        r.route(&ord);
+        assert_eq!(r.decisions, 4);
+        assert_eq!(r.route_cache_hits(), 2);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::fabric::rounds::CostModel;
 use crate::fabric::workload::{DagBuilder, StreamNode};
 use crate::fabric::{BufLoc, Flow, Router, RoutedFlow, TrafficClass};
 use crate::node::{NodePaths, RankLoc};
-use crate::topology::Topology;
+use crate::topology::{LinkId, Topology};
 use counters::CxiCounters;
 use rustc_hash::{FxHashMap, FxHashSet};
 
@@ -344,6 +344,21 @@ impl<'t> World<'t> {
     /// `tests/des_equivalence.rs` compares the streamed flush against.
     pub fn superstep_streaming(&mut self, on: bool) {
         self.stream_flush = on;
+    }
+
+    /// Install §3.4 degraded-link bandwidth multipliers on BOTH pricing
+    /// layers: the DES (which scales link capacities) and the router
+    /// (whose congestion scores divide by *effective* bandwidth, so
+    /// adaptive decisions divert off degraded links). Installing also
+    /// invalidates cached and pinned routes decided against the old
+    /// bandwidths (see [`Router::set_degraded`]).
+    pub fn set_degraded(
+        &mut self,
+        degraded: std::collections::HashMap<LinkId, f64>,
+    ) {
+        self.router
+            .set_degraded(degraded.iter().map(|(l, m)| (*l, *m)));
+        self.des_opts.degraded = degraded;
     }
 
     pub fn size(&self) -> usize {

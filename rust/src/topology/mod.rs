@@ -239,25 +239,25 @@ impl Topology {
     /// addresses: no learning, no hashing). Distinct links map to
     /// distinct ids below [`Topology::link_universe`].
     pub fn link_index(&self, link: &LinkId) -> u32 {
-        let e = self.cfg.compute_endpoints();
-        let s = self.cfg.switches_per_group;
-        let g = self.cfg.total_groups();
-        let idx = match link {
-            LinkId::NicUp(n) => *n as usize,
-            LinkId::NicDown(n) => e + *n as usize,
-            LinkId::Local { group, a, b } => {
-                2 * e + (*group as usize * s + *a as usize) * s + *b as usize
-            }
-            LinkId::Global { src, dst, idx } => {
-                2 * e
-                    + g * s * s
-                    + (*src as usize * g + *dst as usize)
-                        * self.max_global_links()
-                    + *idx as usize
-            }
-        };
-        debug_assert!(idx < self.link_universe(), "link outside universe");
-        idx as u32
+        let idx = self.link_indexer().index(link);
+        debug_assert!(
+            (idx as usize) < self.link_universe(),
+            "link outside universe"
+        );
+        idx
+    }
+
+    /// The arithmetic behind [`Topology::link_index`] as a `Copy` value:
+    /// long-lived dense link-keyed stores (the router's
+    /// [`crate::fabric::LoadMap`]) capture it once and mint ids without
+    /// borrowing the topology.
+    pub fn link_indexer(&self) -> LinkIndexer {
+        LinkIndexer {
+            e: self.cfg.compute_endpoints(),
+            s: self.cfg.switches_per_group,
+            g: self.cfg.total_groups(),
+            mgl: self.max_global_links(),
+        }
     }
 
     /// Per-direction link bandwidth.
@@ -279,6 +279,46 @@ impl Topology {
         (path.switch_hops as f64 + 1.0) * c.switch_latency
             + electrical_hops as f64 * c.electrical_prop
             + path.global_hops as f64 * c.optical_prop
+    }
+}
+
+/// Captured [`Topology::link_index`] parameters — the same injective
+/// arithmetic mint, detached from the topology borrow. Obtained via
+/// [`Topology::link_indexer`]; two indexers from the same topology mint
+/// identical ids.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkIndexer {
+    e: usize,
+    s: usize,
+    g: usize,
+    mgl: usize,
+}
+
+impl LinkIndexer {
+    /// Size of the dense id space (== [`Topology::link_universe`]).
+    pub fn universe(&self) -> usize {
+        2 * self.e + self.g * self.s * self.s + self.g * self.g * self.mgl
+    }
+
+    /// Dense id of a directed link (== [`Topology::link_index`]).
+    #[inline]
+    pub fn index(&self, link: &LinkId) -> u32 {
+        let idx = match link {
+            LinkId::NicUp(n) => *n as usize,
+            LinkId::NicDown(n) => self.e + *n as usize,
+            LinkId::Local { group, a, b } => {
+                2 * self.e
+                    + (*group as usize * self.s + *a as usize) * self.s
+                    + *b as usize
+            }
+            LinkId::Global { src, dst, idx } => {
+                2 * self.e
+                    + self.g * self.s * self.s
+                    + (*src as usize * self.g + *dst as usize) * self.mgl
+                    + *idx as usize
+            }
+        };
+        idx as u32
     }
 }
 

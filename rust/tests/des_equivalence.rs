@@ -828,6 +828,155 @@ fn partitioned_solve_matches_oracle_on_multi_component_case() {
     );
 }
 
+// ------------------------------------------- single-bottleneck fast path
+
+/// Raw-speed acceptance: the single-bottleneck fast path is bit-identical
+/// to the general waterfill. Sweep fastpath {on, off} × threads {1, 2, 8}
+/// on the mixed multi-component case — the shared-ejection incast and
+/// lone-flow tail components qualify, while the 3-neighbour halo blocks
+/// chain through per-NIC links with no single link carrying every flow
+/// and must stay on the general path — and require identical `to_bits`
+/// signatures throughout, then close the loop against the oracle.
+#[test]
+fn single_bottleneck_fastpath_bit_identical_across_thread_counts() {
+    use aurorasim::fabric::DesScratch;
+    let topo = Topology::new(&AuroraConfig::small(10, 4));
+    let rounds = multi_component_rounds(&topo, 4);
+    let mk = |threads: usize, fast: bool| DesOpts {
+        solver_threads: threads,
+        single_bottleneck_fastpath: fast,
+        ..DesOpts::default()
+    };
+    let mut sig: Option<(Vec<u64>, usize, usize, u64)> = None;
+    for &fast in &[true, false] {
+        for &threads in &[1usize, 2, 8] {
+            let mut router = Router::with_seed(&topo, 55);
+            let dag = workload::dag_from_rounds(&mut router, &rounds, 0.0);
+            let mut scratch = DesScratch::new();
+            let res = DesSim::new(&topo, mk(threads, fast))
+                .run_dag_with(&dag, &mut scratch);
+            if fast {
+                assert!(
+                    res.fastpath_components > 0,
+                    "threads = {threads}: the mixed case must contain \
+                     qualifying components"
+                );
+                assert!(
+                    res.fastpath_components < res.components_solved,
+                    "threads = {threads}: chained halo components must \
+                     stay on the general path ({} of {})",
+                    res.fastpath_components,
+                    res.components_solved
+                );
+            } else {
+                assert_eq!(
+                    res.fastpath_components, 0,
+                    "threads = {threads}: fast path disabled"
+                );
+            }
+            let s = (
+                res.node_finish
+                    .iter()
+                    .map(|f| f.to_bits())
+                    .collect::<Vec<_>>(),
+                res.contributors,
+                res.victims,
+                res.makespan.to_bits(),
+            );
+            match &sig {
+                None => sig = Some(s),
+                Some(base) => assert_eq!(
+                    base, &s,
+                    "fastpath = {fast}, threads = {threads}: results \
+                     must be bit-identical to the general path"
+                ),
+            }
+        }
+    }
+    // the fast-pathed incremental solver still reaches the oracle
+    // fixpoint, with the fast path on and off
+    let mut r = Router::with_seed(&topo, 55);
+    let dag = workload::dag_from_rounds(&mut r, &rounds, 0.0);
+    assert_dag_equivalent(&topo, &mk(1, true), &dag, "fastpath vs oracle");
+    assert_dag_equivalent(&topo, &mk(1, false), &dag, "general vs oracle");
+}
+
+/// Open-loop spot check of the same contract: `DesSim::run` with the
+/// fast path on and off over seeded mixed workloads (incast cliques
+/// qualify; degraded links and staggered arrivals exercise the guards),
+/// bit-compared, plus the `fastpath_components` bookkeeping.
+#[test]
+fn single_bottleneck_fastpath_bit_identical_open_loop() {
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xFA57);
+    let mut any_fast = 0usize;
+    for case in 0..8usize {
+        let (timed, opts) = mixed_case(
+            &topo,
+            &mut rng,
+            12 + case,
+            if case % 2 == 0 { 6 } else { 0 },
+            case % 3 == 0,
+            case % 2 == 1,
+        );
+        let on = DesSim::new(
+            &topo,
+            DesOpts { single_bottleneck_fastpath: true, ..opts.clone() },
+        )
+        .run(&timed);
+        let off = DesSim::new(
+            &topo,
+            DesOpts { single_bottleneck_fastpath: false, ..opts.clone() },
+        )
+        .run(&timed);
+        let bits = |f: &[f64]| {
+            f.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&on.finish), bits(&off.finish), "case {case}");
+        assert_eq!(
+            on.makespan.to_bits(),
+            off.makespan.to_bits(),
+            "case {case}"
+        );
+        assert_eq!(on.contributors, off.contributors, "case {case}");
+        assert_eq!(on.victims, off.victims, "case {case}");
+        assert_eq!(off.fastpath_components, 0, "case {case}: disabled");
+        any_fast += on.fastpath_components;
+    }
+    assert!(any_fast > 0, "the sweep must exercise the fast path");
+}
+
+/// `World::set_degraded` installs §3.4 multipliers on BOTH pricing
+/// layers at once: the DES prices degraded links at reduced capacity
+/// (asserted here via NIC uplinks, which no adaptive decision can
+/// route around) and the router's diversion/invalidation behaviour is
+/// covered by the `fabric::routing` unit tests.
+#[test]
+fn world_set_degraded_reprices_both_layers() {
+    use aurorasim::machine::Machine;
+    use aurorasim::mpi::{coll, Comm, World};
+    use aurorasim::topology::LinkId;
+    let m = Machine::new(&AuroraConfig::small(6, 4));
+    let comm = Comm::world(32);
+    let mut clean =
+        World::new(&m.topo, m.place_job(0, 32, 1)).des_fabric();
+    let t_clean = coll::allreduce_ring_time(&mut clean, &comm, 8 << 20);
+    let mut slow =
+        World::new(&m.topo, m.place_job(0, 32, 1)).des_fabric();
+    let degraded: HashMap<_, _> = slow
+        .nics
+        .iter()
+        .map(|&n| (LinkId::NicUp(n), 0.1))
+        .collect();
+    slow.set_degraded(degraded);
+    let t_slow = coll::allreduce_ring_time(&mut slow, &comm, 8 << 20);
+    assert!(
+        t_slow > t_clean * 2.0,
+        "10%-bandwidth NIC uplinks must slow the ring allreduce: \
+         {t_slow} vs {t_clean}"
+    );
+}
+
 /// Campaign-wide zero-rebuild: a worker's [`DesScratch`] threaded
 /// through every scenario of the standard sweep must be *reset*, never
 /// *reallocated*, on the second pass — the capacity signature (sum of
