@@ -563,6 +563,68 @@ fn main() {
         rep.ratio("pool_persistent_speedup", fresh / persistent);
     }
 
+    // open-loop service tier: one million Poisson RPC arrivals streamed
+    // over the full-Aurora machine at bounded memory (ROADMAP item 2).
+    // The gated ratio is machine-independent: total materialized nodes
+    // over peak live nodes — the streaming executor must retire flows
+    // as they complete, so memory scales with peak concurrency (offered
+    // load x latency), not trace length. A 10k-arrival run of the same
+    // process pins the flat-peak contract: 100x the arrivals must not
+    // grow the live window beyond concurrency warm-up noise.
+    {
+        use aurorasim::fabric::arrivals::{
+            run_open_loop, PoissonArrivals, RpcClass,
+        };
+        use aurorasim::fabric::DesScratch;
+        let full = Topology::new(&AuroraConfig::full_aurora());
+        let nics = workload::spread_nics(&full, 2048);
+        let mix = vec![
+            RpcClass { bytes: 4 << 10, weight: 0.70 },
+            RpcClass { bytes: 64 << 10, weight: 0.25 },
+            RpcClass { bytes: 1 << 20, weight: 0.05 },
+        ];
+        let sim = DesSim::new(&full, DesOpts::default());
+        let mut scratch = DesScratch::new();
+        let run = |n: u64, scratch: &mut DesScratch| {
+            let mut router = Router::with_seed(&full, 53);
+            let src = PoissonArrivals::new(
+                53,
+                400_000.0,
+                n,
+                nics.clone(),
+                mix.clone(),
+            );
+            run_open_loop(&sim, scratch, src, &mut router, 1e-3, 100e-3)
+        };
+        let (small_res, _) = run(10_000, &mut scratch); // also the warmup
+        let t0 = Instant::now();
+        let (res, ss) = run(1_000_000, &mut scratch);
+        let dt = t0.elapsed().as_secs_f64();
+        rep.record(
+            "des_open_loop_steady",
+            "des/open-loop steady 1M arrivals (full aurora)",
+            dt,
+        );
+        assert_eq!(res.late_releases, 0, "arrival floors are never late");
+        assert_eq!(ss.completed, 1_000_000, "every arrival must retire");
+        assert!(
+            res.peak_live_nodes <= small_res.peak_live_nodes * 4,
+            "100x arrivals must keep the live window flat \
+             (peak {} at 1M vs {} at 10k)",
+            res.peak_live_nodes,
+            small_res.peak_live_nodes
+        );
+        let headroom = res.total_nodes as f64 / res.peak_live_nodes as f64;
+        println!(
+            "des/open-loop live-node headroom (1M)            {headroom:>10.1}x \
+             (peak {} of {}, p99 {:.3} ms)",
+            res.peak_live_nodes,
+            res.total_nodes,
+            ss.p99 * 1e3
+        );
+        rep.ratio("open_loop_live_headroom", headroom);
+    }
+
     // incast + congestion classification
     let mut router = Router::new(&small);
     let incast: Vec<RoutedFlow> = (0..64)

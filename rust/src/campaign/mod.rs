@@ -25,6 +25,7 @@ pub mod scenario;
 pub use scenario::{PhaseApp, Scenario, ScenarioResult, Workload};
 
 use crate::config::AuroraConfig;
+use crate::fabric::arrivals::RpcClass;
 use crate::fabric::des::DesOpts;
 use crate::metrics::table;
 use crate::runtime::manifest::RunInfo;
@@ -34,9 +35,25 @@ use anyhow::Result;
 /// JSON schema tag stamped onto campaign reports. v2: closed-loop rows
 /// report their contention-free dependency reference in an explicit
 /// `critical_path_s` field instead of overloading `rounds_upper_s`
-/// (which is now 0 for closed-loop rows and vice versa); see
+/// (which is now 0 for closed-loop rows and vice versa). v3: every row
+/// gains a `steady_state` member — an object (arrivals, completed,
+/// duration_s, throughput, p50/p99/p999, per-class max_backlog,
+/// peak_live, windows) for open-loop *service* scenarios
+/// ([`Workload::OpenLoop`]), `null` for batch and closed-loop rows; see
 /// EXPERIMENTS.md §Campaign schema.
-pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v2";
+pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v3";
+
+/// The RPC size mix shared by the open-loop service scenarios: mostly
+/// small control-plane messages, some medium payloads, a thin tail of
+/// 1 MiB bulk transfers. The entry index is the service class reported
+/// in `steady_state.max_backlog`.
+fn rpc_mix() -> Vec<RpcClass> {
+    vec![
+        RpcClass { bytes: 4 << 10, weight: 0.70 },
+        RpcClass { bytes: 64 << 10, weight: 0.25 },
+        RpcClass { bytes: 1 << 20, weight: 0.05 },
+    ]
+}
 
 /// A named set of scenarios executed as one unit.
 #[derive(Debug, Clone, Default)]
@@ -60,7 +77,9 @@ impl Campaign {
     /// scenarios — collective-vs-incast interference, phase-staggered
     /// multi-job, degraded-lane collective, the HACC / AMR-Wind /
     /// LAMMPS step traces, and the multi-group halo+allreduce step —
-    /// 17 scenarios on the given config (needs >= 4 compute groups).
+    /// plus the open-loop *service* scenarios (Poisson RPC mixes on the
+    /// bounded-memory streaming tier, healthy and degraded-link) —
+    /// 19 scenarios on the given config (needs >= 4 compute groups).
     pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
         let on = DesOpts::default();
         let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
@@ -148,7 +167,62 @@ impl Campaign {
                        leader_rounds: 4,
                        leader_bytes: 2 << 20,
                    }),
+                // ---- open-loop service tier (fabric::arrivals) ----
+                mk("open_loop_rpc", &on,
+                   Workload::OpenLoop {
+                       arrivals: 200_000,
+                       rate: 100_000.0,
+                       endpoints: 256,
+                       mix: rpc_mix(),
+                       quantum: 1e-3,
+                       window: 50e-3,
+                       bw_multiplier: 1.0,
+                       link_fraction: 0.0,
+                   }),
+                mk("open_loop_degraded", &on,
+                   Workload::OpenLoop {
+                       arrivals: 120_000,
+                       rate: 60_000.0,
+                       endpoints: 256,
+                       mix: rpc_mix(),
+                       quantum: 1e-3,
+                       window: 50e-3,
+                       bw_multiplier: 0.5,
+                       link_fraction: 0.25,
+                   }),
             ],
+        }
+    }
+
+    /// The full-Aurora-scale open-loop service sweep (ROADMAP item 2's
+    /// headline): one million Poisson RPC arrivals over 2,048 endpoints
+    /// spread across the whole [`AuroraConfig::full_aurora`] machine,
+    /// streamed at bounded memory with windowed steady-state metrics.
+    /// Kept out of [`Campaign::standard`] for the same reason as
+    /// [`Campaign::full_aurora`]: a million-arrival full-machine run is
+    /// CI/bench-scale, not unit-test-scale. The `aurorasim openloop` CLI
+    /// runs it; the campaign-determinism CI job byte-diffs its report
+    /// across serial and `DES_THREADS=8` runs, and the
+    /// `des_open_loop_steady` bench enforces the
+    /// `open_loop_live_headroom` peak-live floor on it.
+    pub fn open_loop_aurora(seed: u64) -> Self {
+        Self {
+            scenarios: vec![Scenario::new(
+                "open_loop_rpc_aurora",
+                AuroraConfig::full_aurora(),
+                DesOpts::default(),
+                Workload::OpenLoop {
+                    arrivals: 1_000_000,
+                    rate: 400_000.0,
+                    endpoints: 2_048,
+                    mix: rpc_mix(),
+                    quantum: 1e-3,
+                    window: 100e-3,
+                    bw_multiplier: 1.0,
+                    link_fraction: 0.0,
+                },
+                seed,
+            )],
         }
     }
 
@@ -236,6 +310,13 @@ impl CampaignReport {
             .results
             .iter()
             .map(|r| {
+                let (thru, sp99) = match &r.steady_state {
+                    Some(ss) => (
+                        format!("{:.0}", ss.throughput_flows),
+                        format!("{:.3}", ss.p99 * 1e3),
+                    ),
+                    None => ("-".to_string(), "-".to_string()),
+                };
                 vec![
                     r.name.clone(),
                     r.flows.to_string(),
@@ -245,6 +326,8 @@ impl CampaignReport {
                     r.victims.to_string(),
                     format!("{:.3}", r.rounds_upper * 1e3),
                     format!("{:.3}", r.critical_path * 1e3),
+                    thru,
+                    sp99,
                 ]
             })
             .collect();
@@ -258,6 +341,8 @@ impl CampaignReport {
                 "victims",
                 "rounds-UB ms",
                 "crit-path ms",
+                "svc-thru f/s",
+                "svc-p99 ms",
             ],
             &rows,
         )
@@ -287,9 +372,25 @@ mod tests {
         ));
         c.push(Scenario::new(
             "c",
-            cfg,
+            cfg.clone(),
             DesOpts::default(),
             Workload::Ring { ranks: 32, bytes: 4 << 20 },
+            9,
+        ));
+        c.push(Scenario::new(
+            "d_open_loop",
+            cfg,
+            DesOpts::default(),
+            Workload::OpenLoop {
+                arrivals: 2_000,
+                rate: 40_000.0,
+                endpoints: 32,
+                mix: rpc_mix(),
+                quantum: 1e-3,
+                window: 10e-3,
+                bw_multiplier: 1.0,
+                link_fraction: 0.0,
+            },
             9,
         ));
         c
@@ -345,7 +446,48 @@ mod tests {
             j.get("info").and_then(|i| i.get("schema")).and_then(Json::as_str),
             Some(CAMPAIGN_SCHEMA)
         );
-        assert_eq!(j.get("scenarios").and_then(Json::as_arr).unwrap().len(), 3);
+        assert_eq!(j.get("scenarios").and_then(Json::as_arr).unwrap().len(), 4);
+        // the open-loop row carries a steady_state object, batch rows null
+        let rows = j.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows[0].get("steady_state"), Some(&Json::Null));
+        let ss = rows[3].get("steady_state").unwrap();
+        assert_ne!(ss, &Json::Null);
+        assert_eq!(
+            ss.get("arrivals").and_then(Json::as_f64),
+            Some(2_000.0)
+        );
+    }
+
+    #[test]
+    fn standard_suite_includes_open_loop_service_scenarios() {
+        let c = Campaign::standard(&AuroraConfig::small(4, 4), 1);
+        let open: Vec<&str> = c
+            .scenarios
+            .iter()
+            .filter(|s| s.is_open_loop())
+            .map(|s| s.name.as_str())
+            .collect();
+        assert!(open.len() >= 2, "{open:?}");
+        assert!(open.contains(&"open_loop_rpc"));
+        assert!(open.contains(&"open_loop_degraded"));
+    }
+
+    #[test]
+    fn open_loop_aurora_campaign_is_million_arrival_full_machine() {
+        // construction-level checks only: a million-arrival full-machine
+        // run is bench/CI-scale (des_open_loop_steady), not test-scale
+        let c = Campaign::open_loop_aurora(7);
+        assert_eq!(c.scenarios.len(), 1);
+        let s = &c.scenarios[0];
+        assert!(s.is_open_loop());
+        assert_eq!(s.cfg.compute_endpoints(), 84_992);
+        match &s.workload {
+            Workload::OpenLoop { arrivals, endpoints, .. } => {
+                assert!(*arrivals >= 1_000_000);
+                assert!(*endpoints >= 2_048);
+            }
+            _ => panic!("open_loop_aurora scenario must be OpenLoop"),
+        }
     }
 
     #[test]

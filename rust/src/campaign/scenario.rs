@@ -7,6 +7,9 @@
 //! and the result depends only on the scenario (never on scheduling).
 
 use crate::config::AuroraConfig;
+use crate::fabric::arrivals::{
+    run_open_loop, PoissonArrivals, RpcClass, SteadyState,
+};
 use crate::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
 use crate::fabric::rounds::CostModel;
 use crate::fabric::workload::{self, DagBuilder, DagKind, DagWorkload};
@@ -97,6 +100,26 @@ pub enum Workload {
         leader_rounds: usize,
         leader_bytes: u64,
     },
+    /// **Open-loop service** (fabric::arrivals): `arrivals` Poisson RPC
+    /// transfers at `rate`/s over `endpoints` uniformly spread NICs,
+    /// with a weighted size `mix` (the entry index is the service
+    /// class), streamed through the bounded-memory open-loop tier in
+    /// `quantum`-second materialization windows and summarized over
+    /// `window`-second metric windows ([`SteadyState`]). When
+    /// `link_fraction > 0`, a deterministic fraction of the links used
+    /// by a routed 256-pair sample is degraded to `bw_multiplier` of
+    /// nominal bandwidth before the service starts (§3.4 degraded-mode
+    /// steady state).
+    OpenLoop {
+        arrivals: u64,
+        rate: f64,
+        endpoints: usize,
+        mix: Vec<RpcClass>,
+        quantum: f64,
+        window: f64,
+        bw_multiplier: f64,
+        link_fraction: f64,
+    },
 }
 
 /// Which application's step trace an [`Workload::AppPhase`] scenario
@@ -145,6 +168,13 @@ impl Scenario {
             workload,
             seed: fnv1a(name) ^ campaign_seed,
         }
+    }
+
+    /// Whether this scenario runs through the open-loop *service* tier
+    /// (trace/Poisson arrivals on the streaming executor with
+    /// steady-state metrics) rather than a batch flow set or DAG.
+    pub fn is_open_loop(&self) -> bool {
+        matches!(self.workload, Workload::OpenLoop { .. })
     }
 
     /// Whether this scenario's workload is dependency-released (runs
@@ -447,6 +477,12 @@ impl Scenario {
                 "closed-loop workload '{}' materializes via materialize_dag",
                 self.name
             ),
+            Workload::OpenLoop { .. } => unreachable!(
+                "open-loop service workload '{}' streams via run_with \
+                 (fabric::arrivals::run_open_loop) and is never \
+                 materialized",
+                self.name
+            ),
         }
         (timed, opts)
     }
@@ -466,6 +502,9 @@ impl Scenario {
     /// asserts it byte-for-byte).
     pub fn run_with(&self, scratch: &mut DesScratch) -> ScenarioResult {
         let topo = Topology::new(&self.cfg);
+        if self.is_open_loop() {
+            return self.run_service(&topo, scratch);
+        }
         if let Some((dag, opts)) = self.materialize_dag(&topo) {
             // contention-free dependency-aware reference: what the
             // analytic tier predicts without queueing dynamics
@@ -497,6 +536,7 @@ impl Scenario {
                 victims: res.victims,
                 rounds_upper: 0.0,
                 critical_path: cp,
+                steady_state: None,
             };
         }
         let (timed, opts) = self.materialize(&topo);
@@ -519,6 +559,98 @@ impl Scenario {
             victims: res.victims,
             rounds_upper,
             critical_path: 0.0,
+            steady_state: None,
+        }
+    }
+
+    /// Execute an [`Workload::OpenLoop`] service scenario: a Poisson
+    /// arrival stream (seeded with the scenario's name-derived seed — no
+    /// wall-clock anywhere) over the bounded-memory streaming executor,
+    /// summarized as windowed steady-state metrics. The classic batch
+    /// fields keep their meaning where one exists (`makespan` = last
+    /// node completion, `flows` = arrivals executed) and the latency
+    /// quantiles live in [`ScenarioResult::steady_state`].
+    fn run_service(
+        &self,
+        topo: &Topology,
+        scratch: &mut DesScratch,
+    ) -> ScenarioResult {
+        let Workload::OpenLoop {
+            arrivals,
+            rate,
+            endpoints,
+            mix,
+            quantum,
+            window,
+            bw_multiplier,
+            link_fraction,
+        } = &self.workload
+        else {
+            unreachable!("run_service on non-service workload")
+        };
+        let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
+        let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+        let eps = workload::spread_nics(topo, *endpoints);
+        let mut opts = self.opts.clone();
+        if *link_fraction > 0.0 {
+            // Degraded steady state: sample 256 random endpoint pairs,
+            // route them on a throwaway router (so the service path's
+            // adaptive decisions are untouched by the sampling), and
+            // degrade a deterministic fraction of the links the sample
+            // used — the open-loop analogue of [`Workload::Degraded`],
+            // which derives links from the materialized flow set the
+            // streaming tier never holds.
+            let mut probe = Router::with_seed(topo, self.seed ^ 0x707e);
+            let mut seen: BTreeSet<LinkId> = BTreeSet::new();
+            for _ in 0..256 {
+                let s = eps[rng.gen_usize(eps.len())];
+                let d = loop {
+                    let d = eps[rng.gen_usize(eps.len())];
+                    if d != s {
+                        break d;
+                    }
+                };
+                let f = Flow::new(s, d, 1 << 20);
+                seen.extend(probe.route(&f).links.iter().copied());
+            }
+            let mut links: Vec<LinkId> = seen.into_iter().collect();
+            rng.shuffle(&mut links);
+            let k = ((links.len() as f64) * link_fraction).ceil() as usize;
+            for l in links.into_iter().take(k) {
+                opts.degraded.insert(l, *bw_multiplier);
+            }
+            router.set_degraded(
+                opts.degraded.iter().map(|(l, m)| (*l, *m)),
+            );
+        } else if !opts.degraded.is_empty() {
+            router.set_degraded(
+                opts.degraded.iter().map(|(l, m)| (*l, *m)),
+            );
+        }
+        let src = PoissonArrivals::new(
+            self.seed,
+            *rate,
+            *arrivals,
+            eps,
+            mix.clone(),
+        );
+        let sim = DesSim::new(topo, opts);
+        let (res, ss) =
+            run_open_loop(&sim, scratch, src, &mut router, *quantum, *window);
+        debug_assert_eq!(res.late_releases, 0, "{}: open-loop floors sit \
+             inside their windows, nothing can release late", self.name);
+        ScenarioResult {
+            name: self.name.clone(),
+            flows: res.total_nodes,
+            total_bytes: ss.completed_bytes,
+            makespan: res.makespan,
+            mean_finish: 0.0,
+            p99_finish: 0.0,
+            contributors: res.contributors,
+            victims: res.victims,
+            rounds_upper: 0.0,
+            critical_path: 0.0,
+            steady_state: Some(ss),
         }
     }
 }
@@ -545,10 +677,38 @@ pub struct ScenarioResult {
     /// congestion-induced round slowdown only the closed-loop DES can
     /// expose. 0 for open-loop scenarios.
     pub critical_path: f64,
+    /// Windowed steady-state metrics (campaign schema v3): `Some` for
+    /// open-loop *service* scenarios ([`Workload::OpenLoop`]),
+    /// serialized as `null` for every batch/closed-loop row.
+    pub steady_state: Option<SteadyState>,
 }
 
 impl ScenarioResult {
     pub fn to_json(&self) -> Json {
+        let steady = match &self.steady_state {
+            None => Json::Null,
+            Some(ss) => Json::obj(vec![
+                ("arrivals", Json::num(ss.arrivals as f64)),
+                ("completed", Json::num(ss.completed as f64)),
+                ("duration_s", Json::num(ss.duration)),
+                ("throughput_flows_per_s", Json::num(ss.throughput_flows)),
+                ("throughput_bytes_per_s", Json::num(ss.throughput_bytes)),
+                ("p50_s", Json::num(ss.p50)),
+                ("p99_s", Json::num(ss.p99)),
+                ("p999_s", Json::num(ss.p999)),
+                (
+                    "max_backlog",
+                    Json::arr(
+                        ss.max_backlog
+                            .iter()
+                            .map(|&b| Json::num(b as f64))
+                            .collect(),
+                    ),
+                ),
+                ("peak_live", Json::num(ss.peak_inflight as f64)),
+                ("windows", Json::num(ss.windows as f64)),
+            ]),
+        };
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
             ("flows", Json::num(self.flows as f64)),
@@ -560,6 +720,7 @@ impl ScenarioResult {
             ("victims", Json::num(self.victims as f64)),
             ("rounds_upper_s", Json::num(self.rounds_upper)),
             ("critical_path_s", Json::num(self.critical_path)),
+            ("steady_state", steady),
         ])
     }
 }
@@ -762,6 +923,73 @@ mod tests {
             "degraded {} vs healthy {}",
             degraded.makespan,
             healthy.makespan
+        );
+    }
+
+    fn open_loop(name: &str, arrivals: u64, frac: f64) -> Scenario {
+        Scenario::new(
+            name,
+            small(),
+            DesOpts::default(),
+            Workload::OpenLoop {
+                arrivals,
+                rate: 50_000.0,
+                endpoints: 64,
+                mix: vec![
+                    RpcClass { bytes: 4 << 10, weight: 0.7 },
+                    RpcClass { bytes: 64 << 10, weight: 0.3 },
+                ],
+                quantum: 1e-3,
+                window: 10e-3,
+                bw_multiplier: 0.5,
+                link_fraction: frac,
+            },
+            9,
+        )
+    }
+
+    #[test]
+    fn open_loop_service_scenario_reports_steady_state() {
+        let s = open_loop("ol", 5_000, 0.0);
+        assert!(s.is_open_loop() && !s.is_closed_loop());
+        let a = s.run();
+        let b = s.run();
+        assert_eq!(a, b, "open-loop service runs must be deterministic");
+        assert_eq!(a.flows, 5_000);
+        let ss = a.steady_state.as_ref().expect("steady_state block");
+        assert_eq!(ss.arrivals, 5_000);
+        assert_eq!(ss.completed, 5_000);
+        assert!(ss.duration > 0.0 && ss.duration.is_finite());
+        assert!(ss.throughput_flows > 0.0);
+        assert!(ss.p50 > 0.0 && ss.p50 <= ss.p99 && ss.p99 <= ss.p999);
+        assert!(ss.peak_inflight > 0);
+        assert!(!ss.max_backlog.is_empty());
+        assert!(a.makespan >= ss.duration * 0.999);
+        // batch rows keep null steady state (schema v3)
+        let batch = Scenario::new(
+            "b",
+            small(),
+            DesOpts::default(),
+            Workload::Ring { ranks: 8, bytes: 1 << 20 },
+            9,
+        )
+        .run();
+        assert!(batch.steady_state.is_none());
+    }
+
+    #[test]
+    fn open_loop_degraded_is_slower_than_healthy() {
+        let h = open_loop("olh", 4_000, 0.0).run();
+        let d = open_loop("olh", 4_000, 0.9).run();
+        let (hs, ds) = (
+            h.steady_state.as_ref().unwrap(),
+            d.steady_state.as_ref().unwrap(),
+        );
+        assert!(
+            ds.p99 >= hs.p99 * 0.999,
+            "degraded p99 {} vs healthy {}",
+            ds.p99,
+            hs.p99
         );
     }
 

@@ -1,0 +1,689 @@
+//! Open-loop arrival tier: trace- and Poisson-driven RPC traffic on the
+//! streaming DES executor, at bounded memory for any trace length.
+//!
+//! Everything below ROADMAP item 2: an [`ArrivalSource`] yields
+//! individual timed transfers (millions of small RPC-style flows over
+//! simulated hours); [`OpenLoopSource`] adapts a source into the
+//! executor's [`RoundSource`] by batching arrivals into fixed *quantum*
+//! windows of [`NO_KEY`] nodes — no frontier dependencies, released
+//! purely by their arrival-time floors — and declaring each window's
+//! start through [`RoundSource::next_round_not_before`], so the executor
+//! materializes a window only when the simulated clock reaches it
+//! instead of pulling the whole trace up front. Completed windows retire
+//! through the refcount frontier (zero refs by construction), which is
+//! what keeps peak-live nodes proportional to *concurrency*, not trace
+//! length — proven by `tests/open_loop.rs` and the gated
+//! `des_open_loop_steady` bench (`open_loop_live_headroom` floor).
+//!
+//! Metrics are windowed steady-state, not a single makespan: the
+//! [`SteadyCollector`] banks each completion into a cumulative
+//! deterministic log-bucket latency histogram the moment it happens
+//! (completions leave the executor in non-decreasing time order, so
+//! fixed *metric windows* seal in order), and tracks per-class backlog
+//! and peak in-flight flows. The final [`SteadyState`] carries sustained
+//! throughput and p50/p99/p999 completion latency. All state is O(peak
+//! concurrency + histogram), never O(total arrivals).
+//!
+//! Determinism: [`PoissonArrivals`] seeds [`Pcg`] with the same
+//! name-derived `fnv1a(name) ^ campaign_seed` convention the campaign
+//! layer uses everywhere else (stream [`ARRIVAL_STREAM`]) — there is no
+//! wall-clock anywhere in the arrival path, so serial and
+//! `DES_THREADS=8` runs produce byte-identical reports.
+
+use super::des::{DesScratch, DesSim, StreamResult};
+use super::workload::{RoundSource, StreamNode, NO_KEY};
+use super::{Flow, RoutedFlow, Router};
+use crate::util::rng::Pcg;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::BufRead;
+
+/// Pcg stream id for arrival processes (the workload layer uses
+/// `0x5ce0`, the router `seed ^ 0x707e`; arrivals get their own stream
+/// so an open-loop scenario's arrival pattern is independent of both).
+pub const ARRIVAL_STREAM: u64 = 0xa771;
+
+/// One open-loop arrival: a transfer of `bytes` from endpoint `src` to
+/// endpoint `dst` entering the fabric at absolute time `t`, tagged with
+/// a small service-class id (an index into the scenario's RPC mix —
+/// per-class backlog is reported per id).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub t: f64,
+    pub src: u32,
+    pub dst: u32,
+    pub bytes: u64,
+    pub class: u8,
+}
+
+/// A stream of [`Arrival`]s in non-decreasing time order ([`OpenLoopSource`]
+/// asserts the order). `None` ends the trace.
+pub trait ArrivalSource {
+    fn next_arrival(&mut self) -> Option<Arrival>;
+}
+
+/// One entry of an RPC size mix: transfers of `bytes` drawn with
+/// relative `weight`. The entry's index in the mix slice is the
+/// arrival's service class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RpcClass {
+    pub bytes: u64,
+    pub weight: f64,
+}
+
+/// Poisson arrival process over a uniform random endpoint mix:
+/// exponential inter-arrival times at `rate` arrivals/second,
+/// independent uniform (src, dst) pairs (re-drawn on src == dst), and a
+/// weighted size mix. Seeded deterministically — pass
+/// `fnv1a(name) ^ campaign_seed` like every other campaign RNG; the
+/// generator never reads a clock.
+pub struct PoissonArrivals {
+    rng: Pcg,
+    rate: f64,
+    remaining: u64,
+    t: f64,
+    endpoints: Vec<u32>,
+    mix: Vec<RpcClass>,
+    weight_total: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(
+        seed: u64,
+        rate: f64,
+        count: u64,
+        endpoints: Vec<u32>,
+        mix: Vec<RpcClass>,
+    ) -> Self {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate {rate}");
+        assert!(endpoints.len() >= 2, "need >= 2 endpoints");
+        assert!(!mix.is_empty(), "empty RPC mix");
+        assert!(mix.len() <= 256, "class ids are u8");
+        let weight_total = mix.iter().map(|c| c.weight).sum::<f64>();
+        assert!(weight_total > 0.0, "mix weights sum to {weight_total}");
+        Self {
+            rng: Pcg::with_stream(seed, ARRIVAL_STREAM),
+            rate,
+            remaining: count,
+            t: 0.0,
+            endpoints,
+            mix,
+            weight_total,
+        }
+    }
+}
+
+impl ArrivalSource for PoissonArrivals {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        // exponential inter-arrival; 1 - u in (0, 1] so ln() is finite
+        let u = self.rng.gen_f64();
+        self.t += -(1.0 - u).ln() / self.rate;
+        let n = self.endpoints.len();
+        let src = self.endpoints[self.rng.gen_usize(n)];
+        let dst = loop {
+            let d = self.endpoints[self.rng.gen_usize(n)];
+            if d != src {
+                break d;
+            }
+        };
+        let mut w = self.rng.gen_f64() * self.weight_total;
+        let mut class = self.mix.len() - 1;
+        for (i, c) in self.mix.iter().enumerate() {
+            if w < c.weight {
+                class = i;
+                break;
+            }
+            w -= c.weight;
+        }
+        Some(Arrival {
+            t: self.t,
+            src,
+            dst,
+            bytes: self.mix[class].bytes,
+            class: class as u8,
+        })
+    }
+}
+
+/// File-backed trace reader: whitespace-separated
+/// `t_seconds src dst bytes [class]` per line, `#`-prefixed and blank
+/// lines skipped. Panics with the 1-based line number on malformed
+/// input or decreasing timestamps (a corrupt trace should fail loudly,
+/// not silently misprice).
+pub struct TraceArrivals<R: BufRead> {
+    reader: R,
+    line: usize,
+    last_t: f64,
+    buf: String,
+}
+
+impl<R: BufRead> TraceArrivals<R> {
+    pub fn new(reader: R) -> Self {
+        Self { reader, line: 0, last_t: 0.0, buf: String::new() }
+    }
+}
+
+impl<R: BufRead> ArrivalSource for TraceArrivals<R> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        loop {
+            self.buf.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.buf)
+                .unwrap_or_else(|e| panic!("trace read error: {e}"));
+            if n == 0 {
+                return None;
+            }
+            self.line += 1;
+            let line = self.buf.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let mut field = |name: &str| {
+                it.next().unwrap_or_else(|| {
+                    panic!("trace line {}: missing {name}", self.line)
+                })
+            };
+            let t: f64 = field("t").parse().unwrap_or_else(|e| {
+                panic!("trace line {}: bad t: {e}", self.line)
+            });
+            let src: u32 = field("src").parse().unwrap_or_else(|e| {
+                panic!("trace line {}: bad src: {e}", self.line)
+            });
+            let dst: u32 = field("dst").parse().unwrap_or_else(|e| {
+                panic!("trace line {}: bad dst: {e}", self.line)
+            });
+            let bytes: u64 = field("bytes").parse().unwrap_or_else(|e| {
+                panic!("trace line {}: bad bytes: {e}", self.line)
+            });
+            let class: u8 = match it.next() {
+                None => 0,
+                Some(c) => c.parse().unwrap_or_else(|e| {
+                    panic!("trace line {}: bad class: {e}", self.line)
+                }),
+            };
+            assert!(
+                t.is_finite() && t >= self.last_t,
+                "trace line {}: timestamp {t} decreases (last {})",
+                self.line,
+                self.last_t
+            );
+            assert!(src != dst, "trace line {}: src == dst", self.line);
+            self.last_t = t;
+            return Some(Arrival { t, src, dst, bytes, class });
+        }
+    }
+}
+
+// ------------------------------------------------------------- adapter
+
+/// Adapts an [`ArrivalSource`] into the streaming executor's
+/// [`RoundSource`]: arrivals are batched into fixed `quantum` windows
+/// (one non-empty window per round), routed on demand, and emitted as
+/// [`NO_KEY`] transfer nodes whose release floor is the exact arrival
+/// time. [`RoundSource::next_round_not_before`] reports the next
+/// window's start, so the executor defers materialization until the
+/// clock gets there — at any instant only the windows overlapping live
+/// flows are materialized. Floors sit inside their window
+/// (`floor >= window start`), so open-loop runs never clamp
+/// (`late_releases == 0`) and a short trace is 1e-9-equivalent to
+/// `run_dag` on [`super::workload::DagWorkload::from_timed`] over the
+/// same transfers.
+pub struct OpenLoopSource<'c, 'r, 't, S: ArrivalSource> {
+    arrivals: S,
+    router: &'r mut Router<'t>,
+    quantum: f64,
+    pending: Option<Arrival>,
+    last_t: f64,
+    collector: Option<&'c RefCell<SteadyCollector>>,
+}
+
+impl<'c, 'r, 't, S: ArrivalSource> OpenLoopSource<'c, 'r, 't, S> {
+    pub fn new(arrivals: S, router: &'r mut Router<'t>, quantum: f64) -> Self {
+        assert!(quantum > 0.0 && quantum.is_finite(), "quantum {quantum}");
+        Self {
+            arrivals,
+            router,
+            quantum,
+            pending: None,
+            last_t: 0.0,
+            collector: None,
+        }
+    }
+
+    /// Attach a shared metrics collector: every emitted node's
+    /// (arrival time, bytes, class) is recorded at materialization, in
+    /// node-id order (the executor numbers nodes in emission order).
+    pub fn collect(mut self, c: &'c RefCell<SteadyCollector>) -> Self {
+        self.collector = Some(c);
+        self
+    }
+
+    /// Pull the next arrival (through the one-arrival lookahead) and
+    /// enforce the non-decreasing contract.
+    fn pull(&mut self) -> Option<Arrival> {
+        let a = self.pending.take().or_else(|| self.arrivals.next_arrival())?;
+        assert!(
+            a.t.is_finite() && a.t >= self.last_t,
+            "arrival time {} decreases (last {})",
+            a.t,
+            self.last_t
+        );
+        self.last_t = a.t;
+        Some(a)
+    }
+
+    fn window_start(&self, t: f64) -> f64 {
+        (t / self.quantum).floor() * self.quantum
+    }
+
+    fn emit(&mut self, a: Arrival) -> StreamNode {
+        let f = Flow::new(a.src, a.dst, a.bytes);
+        let path = self.router.route(&f);
+        if let Some(c) = self.collector {
+            c.borrow_mut().arrive(a);
+        }
+        StreamNode::Xfer {
+            a: NO_KEY,
+            b: NO_KEY,
+            rf: RoutedFlow { flow: f, path },
+            start: a.t,
+        }
+    }
+}
+
+impl<S: ArrivalSource> RoundSource for OpenLoopSource<'_, '_, '_, S> {
+    fn next_round(&mut self) -> Option<Vec<StreamNode>> {
+        let first = self.pull()?;
+        let end = self.window_start(first.t) + self.quantum;
+        let mut nodes = vec![self.emit(first)];
+        loop {
+            match self.pull() {
+                None => break,
+                Some(a) if a.t < end => nodes.push(self.emit(a)),
+                Some(a) => {
+                    self.pending = Some(a);
+                    break;
+                }
+            }
+        }
+        Some(nodes)
+    }
+
+    fn next_round_not_before(&mut self) -> f64 {
+        if self.pending.is_none() {
+            self.pending = self.arrivals.next_arrival();
+        }
+        match &self.pending {
+            Some(a) => self.window_start(a.t),
+            None => 0.0, // exhausted: the next `next_round` returns None
+        }
+    }
+}
+
+// ----------------------------------------------------------- collector
+
+/// Number of log buckets in the latency histogram: positive-f64 bit
+/// pattern shifted down 50 (11 exponent bits + top 2 mantissa bits),
+/// i.e. 4 geometric buckets per octave, ~19% relative bucket width.
+const HIST_BUCKETS: usize = 1 << 13;
+
+/// Deterministic log-bucket histogram over positive f64 samples. The
+/// bucket of `x` is `x.to_bits() >> 50` — pure integer manipulation, so
+/// identical across runs and thread counts. Quantiles report the
+/// bucket's lower edge (`bits = bucket << 50`), biasing every quantile
+/// down by at most one bucket width.
+#[derive(Clone)]
+struct LatHist {
+    count: Vec<u64>,
+    total: u64,
+}
+
+impl LatHist {
+    fn new() -> Self {
+        Self { count: vec![0; HIST_BUCKETS], total: 0 }
+    }
+
+    fn add(&mut self, x: f64) {
+        debug_assert!(x >= 0.0, "negative latency {x}");
+        let b = ((x.max(0.0).to_bits() >> 50) as usize).min(HIST_BUCKETS - 1);
+        self.count[b] += 1;
+        self.total += 1;
+    }
+
+    /// Lower edge of the bucket holding the `q`-quantile sample
+    /// (rank `ceil(q * total)`, clamped to [1, total]); 0.0 when empty.
+    fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64)
+            .clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.count.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return f64::from_bits((b as u64) << 50);
+            }
+        }
+        f64::from_bits(((HIST_BUCKETS - 1) as u64) << 50)
+    }
+}
+
+/// Per-node metadata held only while the flow is in flight.
+#[derive(Clone, Copy)]
+struct NodeMeta {
+    t_arr: f64,
+    bytes: u64,
+    class: u8,
+    done: bool,
+}
+
+/// Windowed steady-state metrics, banked incrementally: latency samples
+/// fold into a cumulative [`LatHist`] the moment each flow finishes, and
+/// fixed `window`-second metric windows seal in completion-time order
+/// (the executor emits completions in non-decreasing time). Live state
+/// is the in-flight metadata deque plus O(1) scalars and the fixed-size
+/// histogram — bounded at any trace length.
+pub struct SteadyCollector {
+    window: f64,
+    meta: VecDeque<NodeMeta>,
+    meta_base: u32,
+    hist: LatHist,
+    /// Cumulative arrivals / completions per class.
+    arrived: Vec<u64>,
+    completed_c: Vec<u64>,
+    /// Max instantaneous per-class backlog (arrived - completed).
+    max_backlog: Vec<u64>,
+    completed: u64,
+    completed_bytes: u64,
+    last_finish: f64,
+    inflight: usize,
+    peak_inflight: usize,
+    /// Current metric window [seal - window, seal).
+    seal: f64,
+    win_flows: u64,
+    win_bytes: u64,
+    windows: u64,
+    peak_win_flows: u64,
+}
+
+impl SteadyCollector {
+    pub fn new(window: f64) -> Self {
+        assert!(window > 0.0 && window.is_finite(), "window {window}");
+        Self {
+            window,
+            meta: VecDeque::new(),
+            meta_base: 0,
+            hist: LatHist::new(),
+            arrived: Vec::new(),
+            completed_c: Vec::new(),
+            max_backlog: Vec::new(),
+            completed: 0,
+            completed_bytes: 0,
+            last_finish: 0.0,
+            inflight: 0,
+            peak_inflight: 0,
+            seal: window,
+            win_flows: 0,
+            win_bytes: 0,
+            windows: 0,
+            peak_win_flows: 0,
+        }
+    }
+
+    fn class_slot(&mut self, class: u8) {
+        let need = class as usize + 1;
+        if self.arrived.len() < need {
+            self.arrived.resize(need, 0);
+            self.completed_c.resize(need, 0);
+            self.max_backlog.resize(need, 0);
+        }
+    }
+
+    /// Record an arrival at materialization time. Must be called in
+    /// node-id order (the [`OpenLoopSource`] adapter guarantees it).
+    fn arrive(&mut self, a: Arrival) {
+        self.class_slot(a.class);
+        self.arrived[a.class as usize] += 1;
+        let backlog =
+            self.arrived[a.class as usize] - self.completed_c[a.class as usize];
+        let mb = &mut self.max_backlog[a.class as usize];
+        *mb = (*mb).max(backlog);
+        self.inflight += 1;
+        self.peak_inflight = self.peak_inflight.max(self.inflight);
+        self.meta.push_back(NodeMeta {
+            t_arr: a.t,
+            bytes: a.bytes,
+            class: a.class,
+            done: false,
+        });
+    }
+
+    /// Bank node `id`'s completion at absolute time `t` (the streaming
+    /// sink callback). Completion times are non-decreasing, so metric
+    /// windows seal in order.
+    pub fn finish(&mut self, id: u32, t: f64) {
+        while t >= self.seal {
+            self.windows += 1;
+            self.peak_win_flows = self.peak_win_flows.max(self.win_flows);
+            self.win_flows = 0;
+            self.win_bytes = 0;
+            self.seal += self.window;
+        }
+        let i = (id - self.meta_base) as usize;
+        let m = self.meta[i];
+        debug_assert!(!m.done, "node {id} finished twice");
+        self.hist.add(t - m.t_arr);
+        self.completed += 1;
+        self.completed_bytes += m.bytes;
+        self.completed_c[m.class as usize] += 1;
+        self.win_flows += 1;
+        self.win_bytes += m.bytes;
+        self.inflight -= 1;
+        self.last_finish = self.last_finish.max(t);
+        self.meta[i].done = true;
+        while let Some(front) = self.meta.front() {
+            if !front.done {
+                break;
+            }
+            self.meta.pop_front();
+            self.meta_base += 1;
+        }
+    }
+
+    /// Fold the (possibly partial) final window and summarize.
+    pub fn into_summary(mut self) -> SteadyState {
+        if self.win_flows > 0 {
+            self.windows += 1;
+            self.peak_win_flows = self.peak_win_flows.max(self.win_flows);
+        }
+        let span = self.last_finish;
+        SteadyState {
+            arrivals: self.arrived.iter().sum(),
+            completed: self.completed,
+            completed_bytes: self.completed_bytes,
+            duration: span,
+            throughput_flows: if span > 0.0 {
+                self.completed as f64 / span
+            } else {
+                0.0
+            },
+            throughput_bytes: if span > 0.0 {
+                self.completed_bytes as f64 / span
+            } else {
+                0.0
+            },
+            p50: self.hist.quantile(0.50),
+            p99: self.hist.quantile(0.99),
+            p999: self.hist.quantile(0.999),
+            max_backlog: self.max_backlog,
+            peak_inflight: self.peak_inflight,
+            windows: self.windows,
+        }
+    }
+}
+
+/// Steady-state summary of one open-loop run (campaign schema v3
+/// `steady_state` block). Latency quantiles are log-bucket lower edges
+/// (deterministic; see [`SteadyCollector`]); throughput is sustained
+/// over the whole run (completions / last completion time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SteadyState {
+    pub arrivals: u64,
+    pub completed: u64,
+    /// Total payload bytes of completed transfers.
+    pub completed_bytes: u64,
+    /// Last completion time (seconds) — the steady-state span.
+    pub duration: f64,
+    /// Sustained completions per second.
+    pub throughput_flows: f64,
+    /// Sustained payload bytes per second.
+    pub throughput_bytes: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    /// Max instantaneous backlog (arrived - completed) per class id.
+    pub max_backlog: Vec<u64>,
+    /// Peak concurrently in-flight flows seen by the collector.
+    pub peak_inflight: usize,
+    /// Metric windows sealed (including the final partial one).
+    pub windows: u64,
+}
+
+/// Run an [`ArrivalSource`] open-loop on the streaming executor and
+/// collect steady-state metrics: the one-call entry the campaign layer,
+/// the CLI and the benches share. `quantum` is the materialization
+/// window (arrival batching granularity), `window` the metric window.
+pub fn run_open_loop<S: ArrivalSource>(
+    sim: &DesSim<'_>,
+    scratch: &mut DesScratch,
+    arrivals: S,
+    router: &mut Router<'_>,
+    quantum: f64,
+    window: f64,
+) -> (StreamResult, SteadyState) {
+    let coll = RefCell::new(SteadyCollector::new(window));
+    let mut src = OpenLoopSource::new(arrivals, router, quantum).collect(&coll);
+    let res = sim
+        .session(scratch)
+        .stream_sink(&mut src, |id, t| coll.borrow_mut().finish(id, t));
+    drop(src);
+    (res, coll.into_inner().into_summary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(seed: u64, n: u64) -> PoissonArrivals {
+        PoissonArrivals::new(
+            seed,
+            1000.0,
+            n,
+            vec![0, 1, 2, 3, 4, 5, 6, 7],
+            vec![
+                RpcClass { bytes: 4096, weight: 0.7 },
+                RpcClass { bytes: 65536, weight: 0.3 },
+            ],
+        )
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_ordered() {
+        let a: Vec<Arrival> =
+            std::iter::from_fn(|| poisson(42, 0).next_arrival()).collect();
+        assert!(a.is_empty());
+        let mut s1 = poisson(42, 500);
+        let mut s2 = poisson(42, 500);
+        let mut last = 0.0;
+        for _ in 0..500 {
+            let x = s1.next_arrival().unwrap();
+            let y = s2.next_arrival().unwrap();
+            assert_eq!(x, y, "same seed must replay identically");
+            assert!(x.t >= last && x.t.is_finite());
+            assert!(x.src != x.dst);
+            assert!((x.class as usize) < 2);
+            last = x.t;
+        }
+        assert!(s1.next_arrival().is_none());
+        let z = poisson(43, 1).next_arrival().unwrap();
+        let w = poisson(42, 1).next_arrival().unwrap();
+        assert!(z != w, "different seeds must differ");
+    }
+
+    #[test]
+    fn trace_reader_parses_and_defaults_class() {
+        let trace = "# comment\n\n0.5 3 9 4096 1\n 1.25 2 7 128 \n2.0 1 4 64 2\n";
+        let mut src = TraceArrivals::new(trace.as_bytes());
+        let a = src.next_arrival().unwrap();
+        assert_eq!(
+            a,
+            Arrival { t: 0.5, src: 3, dst: 9, bytes: 4096, class: 1 }
+        );
+        let b = src.next_arrival().unwrap();
+        assert_eq!(b.class, 0, "class column is optional");
+        assert_eq!(b.bytes, 128);
+        assert_eq!(src.next_arrival().unwrap().class, 2);
+        assert!(src.next_arrival().is_none());
+        assert!(src.next_arrival().is_none(), "stays exhausted");
+    }
+
+    #[test]
+    #[should_panic(expected = "line 2")]
+    fn trace_reader_rejects_decreasing_time() {
+        let mut src = TraceArrivals::new("1.0 0 1 64\n0.5 1 2 64\n".as_bytes());
+        src.next_arrival();
+        src.next_arrival();
+    }
+
+    #[test]
+    #[should_panic(expected = "bad bytes")]
+    fn trace_reader_rejects_garbage() {
+        TraceArrivals::new("0.0 1 2 many\n".as_bytes()).next_arrival();
+    }
+
+    #[test]
+    fn hist_quantiles_bracket_samples() {
+        let mut h = LatHist::new();
+        for i in 1..=1000u64 {
+            h.add(i as f64 * 1e-6); // 1us .. 1ms
+        }
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p999 = h.quantile(0.999);
+        // lower bucket edges: within one bucket (~19%) below the sample
+        assert!(p50 <= 500e-6 && p50 >= 500e-6 / 1.25, "{p50}");
+        assert!(p99 <= 990e-6 && p99 >= 990e-6 / 1.25, "{p99}");
+        assert!(p999 <= 1000e-6 && p999 >= 1000e-6 / 1.25, "{p999}");
+        assert!(p50 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn collector_banks_in_flight_only() {
+        let mut c = SteadyCollector::new(1.0);
+        for i in 0..100u32 {
+            c.arrive(Arrival {
+                t: i as f64 * 0.1,
+                src: 0,
+                dst: 1,
+                bytes: 10,
+                class: (i % 3) as u8,
+            });
+            c.finish(i, i as f64 * 0.1 + 0.05);
+        }
+        assert!(c.meta.is_empty(), "retired metadata must leave the deque");
+        assert_eq!(c.peak_inflight, 1);
+        let s = c.into_summary();
+        assert_eq!(s.arrivals, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.max_backlog, vec![1, 1, 1]);
+        assert!((s.p50 - 0.05).abs() / 0.05 < 0.25, "{}", s.p50);
+        assert!(s.windows >= 10);
+    }
+}

@@ -50,7 +50,7 @@
 //! (rate/heap/counter writes) stay serial in component-id order, so
 //! results are bit-identical at every thread count.
 
-use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode};
+use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode, NO_KEY};
 use super::{FlowTimes, RoutedFlow};
 use crate::topology::{LinkId, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
@@ -420,6 +420,13 @@ struct StreamExec<'a, 't> {
     peak_live: usize,
     late_releases: usize,
     rounds: usize,
+    /// An [`EV_ROUND`] wake-up is already queued (at most one in flight):
+    /// the source declared, via
+    /// [`RoundSource::next_round_not_before`], that its next round must
+    /// not materialize before that time. While set, the main loop keeps
+    /// running even if every materialized node is done — more rounds are
+    /// still coming.
+    round_ev_pending: bool,
 }
 
 impl StreamExec<'_, '_> {
@@ -499,20 +506,25 @@ impl StreamExec<'_, '_> {
                 release: start.max(0.0),
                 round: k,
             };
-            if let Some(e) = self.s.frontier.get(&a) {
-                ln.release = ln.release.max(e.done_floor);
-                for &dep in &e.ids {
-                    let dn = &mut self.s.nodes[(dep - self.base) as usize];
-                    if dn.done {
-                        ln.release = ln.release.max(dn.finish);
-                    } else {
-                        dn.succs.push(id);
-                        ln.deps_left += 1;
+            // NO_KEY nodes ride outside the frontier: no dependencies
+            // taken, none offered — released purely by their floor
+            // (open-loop arrivals; see `workload::NO_KEY`).
+            if a != NO_KEY {
+                if let Some(e) = self.s.frontier.get(&a) {
+                    ln.release = ln.release.max(e.done_floor);
+                    for &dep in &e.ids {
+                        let dn = &mut self.s.nodes[(dep - self.base) as usize];
+                        if dn.done {
+                            ln.release = ln.release.max(dn.finish);
+                        } else {
+                            dn.succs.push(id);
+                            ln.deps_left += 1;
+                        }
                     }
                 }
+                staged.push((a, id));
             }
-            staged.push((a, id));
-            if b != a {
+            if b != a && b != NO_KEY {
                 staged.push((b, id));
             }
             if ln.deps_left == 0 {
@@ -547,17 +559,29 @@ impl StreamExec<'_, '_> {
     }
 
     /// Materialize rounds until `upto` rounds exist (or the source ends).
+    /// Honors [`RoundSource::next_round_not_before`]: if the source's
+    /// next round may not materialize before some future time `t > now`,
+    /// stops and returns `Some(t)` so the caller can schedule an
+    /// [`EV_ROUND`] wake-up instead of pulling the round early (the
+    /// bounded-memory contract of the open-loop tier). Closed-loop
+    /// sources keep the default `0.0` floor and are never deferred.
     fn ensure_rounds(
         &mut self,
         src: &mut dyn RoundSource,
         upto: u32,
+        now: f64,
         pending: &mut Vec<u32>,
-    ) {
+    ) -> Option<f64> {
         while !self.exhausted && self.materialized_rounds < upto {
+            let not_before = src.next_round_not_before();
+            if not_before > now {
+                return Some(not_before);
+            }
             if !self.materialize_next_round(src, pending) {
                 break;
             }
         }
+        None
     }
 
     /// Mark node `id` complete; returns its dependents for release
@@ -907,6 +931,30 @@ struct CompOut {
 impl<'t> DesSim<'t> {
     pub fn new(topo: &'t Topology, opts: DesOpts) -> Self {
         Self { topo, opts }
+    }
+
+    /// Open a [`DesSession`] over a caller-owned scratch arena — the
+    /// unified entry into every execution mode of the simulator:
+    ///
+    /// ```text
+    /// sim.session(&mut scratch).solve(&timed)            // flat flow set
+    /// sim.session(&mut scratch).simultaneous(&routed)    // all start at 0
+    /// sim.session(&mut scratch).dag(&workload)           // closed-loop DAG
+    /// sim.session(&mut scratch).stream(&mut source)      // windowed stream
+    /// sim.session(&mut scratch).stream_sink(&mut source, sink)
+    /// sim.session(&mut scratch).opts(custom).dag(&workload)
+    /// ```
+    ///
+    /// The legacy `run*` entry points (`run`, `run_with`, `run_dag`,
+    /// `run_dag_with`, `run_simultaneous_with`, `run_stream_with`,
+    /// `run_stream_sink`) are kept as `#[doc(hidden)]` wrappers over the
+    /// same implementations — `tests/session_api.rs` proves each one
+    /// bit-identical to its session-built twin.
+    pub fn session<'a, 's>(
+        &'a self,
+        scratch: &'s mut DesScratch,
+    ) -> DesSession<'a, 's, 't> {
+        DesSession { sim: self, scratch, opts: None }
     }
 
     fn link_cap(&self, l: &LinkId) -> f64 {
@@ -1545,8 +1593,20 @@ impl<'t> DesSim<'t> {
         self.run_simultaneous_with(flows, &mut DesScratch::default())
     }
 
-    /// [`DesSim::run_simultaneous`] over a caller-owned scratch.
+    /// [`DesSim::run_simultaneous`] over a caller-owned scratch. Legacy
+    /// name for [`DesSession::simultaneous`].
+    #[doc(hidden)]
     pub fn run_simultaneous_with(
+        &self,
+        flows: &[RoutedFlow],
+        s: &mut DesScratch,
+    ) -> FlowTimes {
+        self.simultaneous_impl(flows, s)
+    }
+
+    /// Implementation behind [`DesSession::simultaneous`] and the legacy
+    /// [`DesSim::run_simultaneous`] wrappers.
+    fn simultaneous_impl(
         &self,
         flows: &[RoutedFlow],
         s: &mut DesScratch,
@@ -1555,7 +1615,7 @@ impl<'t> DesSim<'t> {
             .iter()
             .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
             .collect();
-        let res = self.run_with(&timed, s);
+        let res = self.solve_impl(&timed, s);
         FlowTimes::from_vec(res.finish)
     }
 
@@ -1582,13 +1642,24 @@ impl<'t> DesSim<'t> {
     /// construction. Produces the same max-min fixpoint as
     /// [`DesSim::run_oracle`] (unique given caps + capacities), with
     /// finish times equal to floating-point noise.
+    /// Legacy name for [`DesSession::solve`] over a throwaway scratch.
+    #[doc(hidden)]
     pub fn run(&self, flows: &[TimedFlow]) -> DesResult {
-        self.run_with(flows, &mut DesScratch::default())
+        self.solve_impl(flows, &mut DesScratch::default())
     }
 
     /// [`DesSim::run`] over a caller-owned [`DesScratch`]: identical
-    /// results, no per-call arena allocation.
+    /// results, no per-call arena allocation. Legacy name for
+    /// [`DesSession::solve`].
+    #[doc(hidden)]
     pub fn run_with(&self, flows: &[TimedFlow], s: &mut DesScratch)
+        -> DesResult {
+        self.solve_impl(flows, s)
+    }
+
+    /// Implementation behind [`DesSession::solve`] and the legacy
+    /// [`DesSim::run`] / [`DesSim::run_with`] wrappers.
+    fn solve_impl(&self, flows: &[TimedFlow], s: &mut DesScratch)
         -> DesResult {
         s.reset();
         s.map.ensure(self.topo.link_universe());
@@ -1700,6 +1771,8 @@ impl<'t> DesSim<'t> {
     /// Everything else — component walk, lazy byte sync, queueing delay,
     /// max-min, congestion classification — is the arithmetic of
     /// [`DesSim::run`].
+    /// Legacy name for [`DesSession::dag`] over a throwaway scratch.
+    #[doc(hidden)]
     pub fn run_dag(&self, wl: &DagWorkload) -> DagResult {
         self.run_dag_impl(wl, false, &mut DesScratch::default())
     }
@@ -1707,6 +1780,8 @@ impl<'t> DesSim<'t> {
     /// [`DesSim::run_dag`] over a caller-owned [`DesScratch`]: identical
     /// results, no per-call arena allocation — the hot path for `World`
     /// supersteps and campaign scenarios pricing thousands of step DAGs.
+    /// Legacy name for [`DesSession::dag`].
+    #[doc(hidden)]
     pub fn run_dag_with(&self, wl: &DagWorkload, s: &mut DesScratch)
         -> DagResult {
         self.run_dag_impl(wl, false, s)
@@ -1982,13 +2057,15 @@ impl<'t> DesSim<'t> {
     }
 
     /// [`DesSim::run_stream`] over a caller-owned [`DesScratch`]:
-    /// identical results, no per-call arena allocation.
+    /// identical results, no per-call arena allocation. Legacy name for
+    /// [`DesSession::stream`].
+    #[doc(hidden)]
     pub fn run_stream_with(
         &self,
         src: &mut dyn RoundSource,
         scratch: &mut DesScratch,
     ) -> StreamResult {
-        self.run_stream_sink(src, scratch, |_, _| {})
+        self.stream_sink_impl(src, scratch, |_, _| {})
     }
 
     /// [`DesSim::run_stream_with`] plus a per-node completion sink:
@@ -1997,7 +2074,20 @@ impl<'t> DesSim<'t> {
     /// round/source order) and its absolute finish time. This is how
     /// `World`'s streamed superstep flush advances participant clocks
     /// without the executor ever holding an O(total nodes) result.
+    /// Legacy name for [`DesSession::stream_sink`].
+    #[doc(hidden)]
     pub fn run_stream_sink(
+        &self,
+        src: &mut dyn RoundSource,
+        scratch: &mut DesScratch,
+        on_finish: impl FnMut(u32, f64),
+    ) -> StreamResult {
+        self.stream_sink_impl(src, scratch, on_finish)
+    }
+
+    /// Implementation behind [`DesSession::stream`] /
+    /// [`DesSession::stream_sink`] and the legacy `run_stream*` wrappers.
+    fn stream_sink_impl(
         &self,
         src: &mut dyn RoundSource,
         scratch: &mut DesScratch,
@@ -2018,15 +2108,37 @@ impl<'t> DesSim<'t> {
             peak_live: 0,
             late_releases: 0,
             rounds: 0,
+            round_ev_pending: false,
         };
         let mut relwork: Vec<u32> = Vec::new();
 
         // ---- bootstrap: round 0 plus the cascade of rounds reachable
-        // through dependency-free nodes, all released at their floors ----
-        ex.materialize_next_round(src, &mut relwork);
+        // through dependency-free nodes, all released at their floors.
+        // A time-throttled source (next_round_not_before > 0) defers
+        // instead: its first round materializes off an EV_ROUND wake-up ----
+        if let Some(t) = ex.ensure_rounds(src, 1, 0.0, &mut relwork) {
+            ex.round_ev_pending = true;
+            ex.s.heap.push(Reverse(Ev {
+                t,
+                kind: EV_ROUND,
+                flow: u32::MAX,
+                epoch: 0,
+            }));
+        }
         while let Some(rid) = relwork.pop() {
             let round = ex.node(rid).round;
-            ex.ensure_rounds(src, round + 2, &mut relwork);
+            if let Some(t) = ex.ensure_rounds(src, round + 2, 0.0, &mut relwork)
+            {
+                if !ex.round_ev_pending {
+                    ex.round_ev_pending = true;
+                    ex.s.heap.push(Reverse(Ev {
+                        t,
+                        kind: EV_ROUND,
+                        flow: u32::MAX,
+                        epoch: 0,
+                    }));
+                }
+            }
             let rel = ex.node(rid).release;
             match ex.node(rid).kind {
                 StreamKind::Xfer(slot) => ex.s.heap.push(Reverse(Ev {
@@ -2048,7 +2160,7 @@ impl<'t> DesSim<'t> {
         let mut freed: Vec<u32> = Vec::new();
         let mut makespan = 0.0f64;
 
-        while ex.nodes_done < ex.total_nodes {
+        while ex.nodes_done < ex.total_nodes || ex.round_ev_pending {
             let now = match ex.s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
                 None => panic!(
@@ -2063,6 +2175,7 @@ impl<'t> DesSim<'t> {
             ex.s.arrivals.clear();
             finished_nodes.clear();
             freed.clear();
+            let mut rounds_due = false;
             while let Some(&Reverse(ev)) = ex.s.heap.peek() {
                 if ev.t != now {
                     break;
@@ -2083,8 +2196,60 @@ impl<'t> DesSim<'t> {
                             ex.s.arrivals.push(fi);
                         }
                     }
+                    EV_ROUND => rounds_due = true,
                     // EV_NODE: `flow` carries the global node id
                     _ => finished_nodes.push(ev.flow),
+                }
+            }
+
+            // ---- deferred rounds whose wake-up is due: materialize every
+            // round the source allows at `now`, release the new
+            // dependency-free nodes at their floors (floors >= the window
+            // start == now for throttled sources, so nothing is late), and
+            // re-defer the remainder ----
+            if rounds_due {
+                ex.round_ev_pending = false;
+                if let Some(t) =
+                    ex.ensure_rounds(src, u32::MAX, now, &mut relwork)
+                {
+                    ex.round_ev_pending = true;
+                    ex.s.heap.push(Reverse(Ev {
+                        t,
+                        kind: EV_ROUND,
+                        flow: u32::MAX,
+                        epoch: 0,
+                    }));
+                }
+                while let Some(rid) = relwork.pop() {
+                    let rel = ex.node(rid).release;
+                    match ex.node(rid).kind {
+                        StreamKind::Xfer(slot) => {
+                            if rel <= now {
+                                ex.s.arrivals.push(slot as usize);
+                            } else {
+                                let epoch = ex.s.st.epoch[slot as usize];
+                                ex.s.heap.push(Reverse(Ev {
+                                    t: rel,
+                                    kind: EV_ARRIVAL,
+                                    flow: slot,
+                                    epoch,
+                                }));
+                            }
+                        }
+                        StreamKind::Compute(dt) => {
+                            let t_fin = rel.max(now) + dt;
+                            if t_fin <= now {
+                                finished_nodes.push(rid);
+                            } else {
+                                ex.s.heap.push(Reverse(Ev {
+                                    t: t_fin,
+                                    kind: EV_NODE,
+                                    flow: rid,
+                                    epoch: 0,
+                                }));
+                            }
+                        }
+                    }
                 }
             }
 
@@ -2130,7 +2295,19 @@ impl<'t> DesSim<'t> {
                 }
                 while let Some(rid) = relwork.pop() {
                     let round = ex.node(rid).round;
-                    ex.ensure_rounds(src, round + 2, &mut relwork);
+                    if let Some(t) =
+                        ex.ensure_rounds(src, round + 2, now, &mut relwork)
+                    {
+                        if !ex.round_ev_pending {
+                            ex.round_ev_pending = true;
+                            ex.s.heap.push(Reverse(Ev {
+                                t,
+                                kind: EV_ROUND,
+                                flow: u32::MAX,
+                                epoch: 0,
+                            }));
+                        }
+                    }
                     let rel = ex.node(rid).release;
                     let rel = if rel < now {
                         // dependencies all finished before this node was
@@ -2399,11 +2576,92 @@ impl<'t> DesSim<'t> {
     }
 }
 
+/// Builder returned by [`DesSim::session`]: one entry point for every
+/// execution mode of the simulator, over a caller-owned scratch arena.
+/// `.opts(custom)` overrides the simulator's [`DesOpts`] for this run
+/// only (the `DesSim` itself is untouched); the terminal methods
+/// (`solve` / `simultaneous` / `dag` / `stream` / `stream_sink`) consume
+/// the session and run the same implementations the legacy
+/// `DesSim::run*` names delegate to, so results are bit-identical by
+/// construction (and proven so by `tests/session_api.rs`).
+pub struct DesSession<'a, 's, 't> {
+    sim: &'a DesSim<'t>,
+    scratch: &'s mut DesScratch,
+    opts: Option<DesOpts>,
+}
+
+impl<'a, 's, 't> DesSession<'a, 's, 't> {
+    /// Override the simulator's [`DesOpts`] for this session only.
+    pub fn opts(mut self, opts: DesOpts) -> Self {
+        self.opts = Some(opts);
+        self
+    }
+
+    /// The simulator this session runs on: the borrowed one, or a
+    /// same-topology twin carrying the session's [`DesOpts`] override.
+    fn effective(&self) -> DesSim<'t> {
+        DesSim {
+            topo: self.sim.topo,
+            opts: self
+                .opts
+                .clone()
+                .unwrap_or_else(|| self.sim.opts.clone()),
+        }
+    }
+
+    /// Flat timed flow set — the session twin of [`DesSim::run`] /
+    /// [`DesSim::run_with`].
+    pub fn solve(self, flows: &[TimedFlow]) -> DesResult {
+        let sim = self.effective();
+        sim.solve_impl(flows, self.scratch)
+    }
+
+    /// All flows start at t=0; per-flow durations — the session twin of
+    /// [`DesSim::run_simultaneous`] / [`DesSim::run_simultaneous_with`].
+    pub fn simultaneous(self, flows: &[RoutedFlow]) -> FlowTimes {
+        let sim = self.effective();
+        sim.simultaneous_impl(flows, self.scratch)
+    }
+
+    /// Closed-loop dependency DAG — the session twin of
+    /// [`DesSim::run_dag`] / [`DesSim::run_dag_with`].
+    pub fn dag(self, wl: &DagWorkload) -> DagResult {
+        let sim = self.effective();
+        sim.run_dag_impl(wl, false, self.scratch)
+    }
+
+    /// Windowed streaming execution — the session twin of
+    /// [`DesSim::run_stream`] / [`DesSim::run_stream_with`].
+    pub fn stream(self, src: &mut dyn RoundSource) -> StreamResult {
+        let sim = self.effective();
+        sim.stream_sink_impl(src, self.scratch, |_, _| {})
+    }
+
+    /// Streaming execution with a per-node completion sink — the session
+    /// twin of [`DesSim::run_stream_sink`].
+    pub fn stream_sink(
+        self,
+        src: &mut dyn RoundSource,
+        on_finish: impl FnMut(u32, f64),
+    ) -> StreamResult {
+        let sim = self.effective();
+        sim.stream_sink_impl(src, self.scratch, on_finish)
+    }
+}
+
 const EV_COMPLETION: u8 = 0;
 const EV_ARRIVAL: u8 = 1;
 /// DAG-node completion (closed-loop runs only): `Ev::flow` carries the
 /// workload node id, not a flow index.
 const EV_NODE: u8 = 2;
+/// Deferred-round wake-up (streaming runs with a time-throttled
+/// [`RoundSource`] only): the source's next round becomes materializable
+/// at `Ev::t`. `Ev::flow` is unused (`u32::MAX`); at most one is in
+/// flight per run (`StreamExec::round_ev_pending`). Ordered after every
+/// node completion at the same instant, which is irrelevant for
+/// correctness (materialization happens after the pop loop either way)
+/// but keeps the heap order stable.
+const EV_ROUND: u8 = 3;
 
 /// Heap event for the incremental solver (min-heap through `Reverse`):
 /// ordered by time, completions before arrivals at equal times.

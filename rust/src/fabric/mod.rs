@@ -20,8 +20,17 @@
 //! triggered by predecessor completions ([`DesSim::run_dag`]), so
 //! congestion in one collective round delays every later round — the
 //! dynamics the open-loop tiers cannot express.
+//!
+//! [`arrivals`] is the open-loop *service* tier on the same executor:
+//! Poisson/trace arrival sources batched into time-throttled streaming
+//! windows, with windowed steady-state metrics (sustained throughput,
+//! p50/p99/p999 completion latency, per-class backlog) at memory bounded
+//! by peak concurrency — millions of arrivals over simulated hours.
+//! Every execution mode is reachable through one builder,
+//! [`DesSim::session`].
 
 pub mod analytic;
+pub mod arrivals;
 pub mod des;
 pub mod load;
 pub mod qos;
@@ -29,14 +38,20 @@ pub mod routing;
 pub mod rounds;
 pub mod workload;
 
+pub use arrivals::{
+    run_open_loop, Arrival, ArrivalSource, PoissonArrivals, RpcClass,
+    SteadyCollector, SteadyState, TraceArrivals,
+};
 pub use des::{
-    DagResult, DesOpts, DesScratch, DesSim, StreamResult, TimedFlow,
+    DagResult, DesOpts, DesScratch, DesSession, DesSim, StreamResult,
+    TimedFlow,
 };
 pub use load::{LoadMap, SparseLoadMap};
 pub use qos::TrafficClass;
 pub use routing::Router;
 pub use workload::{
     DagBuilder, DagKind, DagNode, DagWorkload, RoundSource, StreamNode,
+    NO_KEY,
 };
 
 use crate::topology::Path;

@@ -272,6 +272,16 @@ pub enum StreamNode {
     Xfer { a: u32, b: u32, rf: RoutedFlow, start: f64 },
 }
 
+/// Sentinel stream-node key meaning "no frontier participation": a node
+/// whose `a` (and `b`) key is `NO_KEY` takes no dependencies from the
+/// previous round and registers nothing in the frontier, so it is
+/// released purely by its `start` floor. Open-loop arrival traffic
+/// ([`super::arrivals`]) uses this — arrivals are ordered by wall-clock,
+/// not by round dependency — and rounds made only of `NO_KEY` nodes
+/// retire the moment their last node completes (zero frontier refs),
+/// which is what keeps live state bounded over million-arrival traces.
+pub const NO_KEY: u32 = u32::MAX;
+
 /// Lazily yields the successive rounds of a round-structured closed-loop
 /// workload for [`DesSim::run_stream`](super::des::DesSim::run_stream).
 /// Round `k`'s messages are released by round `k-1` per source key
@@ -282,6 +292,19 @@ pub trait RoundSource {
     /// The next round's messages; `None` once the workload is exhausted.
     /// Empty rounds are skipped by the executor.
     fn next_round(&mut self) -> Option<Vec<StreamNode>>;
+
+    /// Earliest simulated time at which the *next* round may be
+    /// materialized. The default (`0.0`) means "whenever dependencies
+    /// allow" — the closed-loop behavior, where rounds materialize as
+    /// the frontier releases them. Open-loop sources return the next
+    /// arrival window's start time so the executor defers
+    /// materialization until the clock gets there instead of pulling
+    /// the whole trace up front (bounded memory at any trace length).
+    /// Must be non-decreasing across calls; the executor re-queries it
+    /// after every `next_round`.
+    fn next_round_not_before(&mut self) -> f64 {
+        0.0
+    }
 }
 
 impl<F: FnMut() -> Option<Vec<StreamNode>>> RoundSource for F {

@@ -8,6 +8,7 @@
 //! repro validate [nodes]             fabric-validation ladder demo
 //! repro launch <nodes> <ppn> <app>   run a benchmark via the launcher
 //! repro campaign [threads] [out]     parallel scenario sweep (JSON report)
+//! repro openloop [threads] [out]     1M-arrival open-loop service run
 //! ```
 //!
 //! (The registry is offline in this environment, so argument parsing is
@@ -26,7 +27,8 @@ use aurorasim::validate::{NodeFault, Validator};
 fn usage() -> ! {
     eprintln!(
         "usage: repro \
-         <spec|list|reproduce|functional|validate|launch|campaign> ..."
+         <spec|list|reproduce|functional|validate|launch|campaign|openloop> \
+         ..."
     );
     std::process::exit(2);
 }
@@ -154,6 +156,36 @@ fn main() -> Result<()> {
             if !offlined.is_empty() {
                 println!("epilog offlined nodes: {offlined:?}");
             }
+            if let Some(out) = args.get(2) {
+                rep.write(out)?;
+                println!("report written to {out}");
+            }
+        }
+        "openloop" => {
+            // repro openloop [threads] [out.json] — one million Poisson
+            // RPC arrivals streamed over the full-Aurora topology at
+            // bounded memory (ROADMAP item 2). DES_THREADS=<n> fans the
+            // per-batch component solves over n solver threads; the CI
+            // campaign-determinism job byte-diffs the report across
+            // serial and DES_THREADS=8 runs.
+            let threads: usize = args
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or_else(pool::default_threads);
+            let mut c = Campaign::open_loop_aurora(
+                aurorasim::reproduce::CAMPAIGN_SEED,
+            );
+            if let Some(n) = std::env::var("DES_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                for s in &mut c.scenarios {
+                    s.opts.solver_threads = n.max(1);
+                }
+            }
+            let rep = c.run(threads);
+            println!("{}", rep.render_table());
             if let Some(out) = args.get(2) {
                 rep.write(out)?;
                 println!("report written to {out}");

@@ -17,6 +17,9 @@ pub mod counters;
 pub mod rma;
 
 use crate::config::AuroraConfig;
+use crate::fabric::arrivals::{
+    run_open_loop, PoissonArrivals, RpcClass, SteadyState,
+};
 use crate::fabric::des::{DesOpts, DesScratch, DesSim};
 use crate::fabric::rounds::CostModel;
 use crate::fabric::workload::{DagBuilder, StreamNode};
@@ -361,6 +364,50 @@ impl<'t> World<'t> {
         self.des_opts.degraded = degraded;
     }
 
+    /// Run an open-loop Poisson RPC service over this world's rank NICs
+    /// on the bounded-memory streaming tier ([`crate::fabric::arrivals`]):
+    /// `arrivals` flows at `rate`/s, sizes drawn from `mix`, batched
+    /// into `quantum`-second materialization windows with steady-state
+    /// metrics collected per `window` seconds. Uses the world's router
+    /// (so degraded links installed via [`World::set_degraded`] shape
+    /// the service traffic) and its reusable DES scratch. Arrival times
+    /// are absolute (the service occupies `[0, makespan]`); every rank
+    /// clock is advanced to at least the service makespan. Service
+    /// flows bypass the per-rank CXI send counters — they model
+    /// background RPC load, not MPI traffic.
+    pub fn open_loop_service(
+        &mut self,
+        seed: u64,
+        rate: f64,
+        arrivals: u64,
+        mix: Vec<RpcClass>,
+        quantum: f64,
+        window: f64,
+    ) -> SteadyState {
+        let sim = DesSim::new(self.topo, self.des_opts.clone());
+        let src = PoissonArrivals::new(
+            seed,
+            rate,
+            arrivals,
+            self.nics.clone(),
+            mix,
+        );
+        let (res, ss) = {
+            let World { router, scratch, .. } = &mut *self;
+            run_open_loop(&sim, scratch, src, router, quantum, window)
+        };
+        debug_assert_eq!(
+            res.late_releases, 0,
+            "open-loop arrivals are floor-released, never late"
+        );
+        for c in &mut self.clock {
+            if *c < res.makespan {
+                *c = res.makespan;
+            }
+        }
+        ss
+    }
+
     pub fn size(&self) -> usize {
         self.placements.len()
     }
@@ -559,8 +606,9 @@ impl<'t> World<'t> {
     /// Whenever [`staged_flush_is_exact`] proves the window-driven
     /// release order exact (every app exchange-loop shape: halo /
     /// pairwise / ring rounds re-touching their ranks each round), the
-    /// staged rounds are routed lazily and **streamed** through
-    /// [`DesSim::run_stream_sink`] with per-rank clock floors, so peak
+    /// staged rounds are routed lazily and **streamed** through the
+    /// session API's sink mode ([`DesSim::session`]) with per-rank clock
+    /// floors, so peak
     /// memory is the dependency-skew window, not O(rounds x P) routed
     /// nodes; otherwise (sparse key gaps, e.g. a tree allreduce's
     /// remainder-fold flushed mid-superstep) it falls back to the fully
@@ -642,7 +690,7 @@ impl<'t> World<'t> {
                     clock[b] = t;
                 }
             };
-            let res = sim.run_stream_sink(&mut src, scratch, sink);
+            let res = sim.session(scratch).stream_sink(&mut src, sink);
             debug_assert_eq!(
                 res.late_releases, 0,
                 "staged-flush exactness analysis admitted a late release"
@@ -686,7 +734,7 @@ impl<'t> World<'t> {
                 b.end_round();
             }
             let dag = b.finish();
-            let res = sim.run_dag_with(&dag, &mut self.scratch);
+            let res = sim.session(&mut self.scratch).dag(&dag);
             for (i, &t) in res.node_finish.iter().enumerate() {
                 let (a, b) = meta[i];
                 self.clock[a] = self.clock[a].max(t);
@@ -816,7 +864,8 @@ impl<'t> World<'t> {
         if !routed.is_empty() {
             let times = if routed.len() <= self.des_flow_limit {
                 DesSim::new(self.topo, self.des_opts.clone())
-                    .run_simultaneous_with(&routed, &mut self.scratch)
+                    .session(&mut self.scratch)
+                    .simultaneous(&routed)
             } else {
                 self.cost_model().eval_round(&routed)
             };
@@ -891,6 +940,31 @@ mod tests {
         let subs = c.split(|i| i / 4);
         assert_eq!(subs.len(), 3);
         assert_eq!(subs[0].ranks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn open_loop_service_is_deterministic_and_advances_clocks() {
+        let m = Machine::new(&AuroraConfig::tiny());
+        let mix = vec![
+            RpcClass { bytes: 4 << 10, weight: 0.8 },
+            RpcClass { bytes: 64 << 10, weight: 0.2 },
+        ];
+        let run = || {
+            let mut w = world(&m, 4, 2);
+            let ss = w.open_loop_service(
+                7, 20_000.0, 1_000, mix.clone(), 1e-3, 5e-3,
+            );
+            (ss, w.elapsed())
+        };
+        let (a, ta) = run();
+        let (b, tb) = run();
+        assert_eq!(a, b, "service tier must be deterministic");
+        assert_eq!(ta.to_bits(), tb.to_bits());
+        assert_eq!(a.arrivals, 1_000);
+        assert_eq!(a.completed, 1_000);
+        assert!(a.p50 > 0.0 && a.p50 <= a.p99 && a.p99 <= a.p999);
+        assert!(a.throughput_flows > 0.0);
+        assert!(ta >= a.duration, "clocks advance past the service span");
     }
 
     #[test]

@@ -485,7 +485,8 @@ fn campaign_experiment() -> String {
         "§3.8.2 GPCNet isolated/congested, §3.1 incast fan-ins, §3.4 \
          degraded lanes, §5.1 collective rounds, plus closed-loop \
          dependency-released rounds (collective-vs-incast, multi-job \
-         phase stagger, HACC/AMR-Wind/LAMMPS step traces)",
+         phase stagger, HACC/AMR-Wind/LAMMPS step traces) and the \
+         open-loop Poisson RPC service scenarios (healthy and degraded)",
     );
     s.push_str(&rep.render_table());
     s
@@ -529,7 +530,7 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
     let small = AuroraConfig::small(8, 4);
     let rep = crate::campaign::Campaign::standard(&small, CAMPAIGN_SEED)
         .run_serial();
-    const CAMPAIGN_KEYS: [&str; 17] = [
+    const CAMPAIGN_KEYS: [&str; 19] = [
         "campaign_gpcnet_isolated",
         "campaign_gpcnet_congested",
         "campaign_gpcnet_congested_nocm",
@@ -547,6 +548,8 @@ pub fn key_metrics() -> Vec<(&'static str, f64)> {
         "campaign_amr_wind_step_closed",
         "campaign_lammps_step_closed",
         "campaign_halo_allreduce_closed",
+        "campaign_open_loop_rpc",
+        "campaign_open_loop_degraded",
     ];
     for (key, r) in CAMPAIGN_KEYS.iter().zip(&rep.results) {
         debug_assert_eq!(format!("campaign_{}", r.name).as_str(), *key);

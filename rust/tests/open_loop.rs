@@ -1,0 +1,162 @@
+//! PR-7 open-loop service tier: bounded-memory proof, trace-vs-`run_dag`
+//! equivalence, and campaign determinism for the steady-state report.
+//!
+//! * Memory bound: growing the trace 100x must leave the streaming
+//!   executor's peak-live node window flat (live = offered load x
+//!   latency plus one materialization quantum, never trace length) —
+//!   the test-scale twin of the gated `des_open_loop_steady` bench and
+//!   its `open_loop_live_headroom >= 50` floor.
+//! * Exactness: open-loop arrival floors sit inside their
+//!   materialization windows, so nothing releases late and a short
+//!   trace is 1e-9-equivalent to `run_dag` over
+//!   `DagWorkload::from_timed` on the identical routed transfers.
+//! * Determinism: the open-loop campaign scenario serializes to
+//!   byte-identical JSON at every DES solver-thread count.
+
+use aurorasim::campaign::{Campaign, Scenario, Workload};
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::arrivals::OpenLoopSource;
+use aurorasim::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
+use aurorasim::fabric::{
+    run_open_loop, workload, Arrival, ArrivalSource, Flow, PoissonArrivals,
+    Router, RoutedFlow, RpcClass, TraceArrivals,
+};
+use aurorasim::topology::Topology;
+
+fn mix() -> Vec<RpcClass> {
+    vec![
+        RpcClass { bytes: 4 << 10, weight: 0.7 },
+        RpcClass { bytes: 64 << 10, weight: 0.3 },
+    ]
+}
+
+#[test]
+fn peak_live_stays_flat_as_trace_grows_100x() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let nics = workload::spread_nics(&t, 64);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let mut scratch = DesScratch::new();
+    let mut run = |n: u64| {
+        let mut router = Router::with_seed(&t, 7);
+        let src =
+            PoissonArrivals::new(7, 100_000.0, n, nics.clone(), mix());
+        run_open_loop(&sim, &mut scratch, src, &mut router, 1e-3, 10e-3)
+    };
+    let (small, _) = run(1_000);
+    let (big, ss) = run(100_000);
+    assert_eq!(big.total_nodes, 100_000, "every arrival materializes");
+    assert_eq!(ss.completed, 100_000, "every arrival retires");
+    assert_eq!(big.late_releases, 0, "arrival floors are never late");
+    assert!(
+        big.peak_live_nodes <= small.peak_live_nodes * 4,
+        "100x arrivals must not grow the live window \
+         (peak {} at 100k vs {} at 1k)",
+        big.peak_live_nodes,
+        small.peak_live_nodes
+    );
+    let headroom = big.total_nodes as f64 / big.peak_live_nodes as f64;
+    assert!(
+        headroom >= 50.0,
+        "live-node headroom {headroom:.1} below the CI floor \
+         (peak {} of {})",
+        big.peak_live_nodes,
+        big.total_nodes
+    );
+    // steady-state sanity on the big run
+    assert!(ss.duration > 0.0 && ss.throughput_flows > 0.0);
+    assert!(ss.p50 > 0.0 && ss.p50 <= ss.p99 && ss.p99 <= ss.p999);
+    assert!(ss.peak_inflight >= 1);
+    assert_eq!(ss.max_backlog.len(), 2, "one backlog slot per mix class");
+    assert!(ss.windows > 0);
+}
+
+#[test]
+fn short_trace_matches_run_dag_on_materialized_equivalent() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let nics = workload::spread_nics(&t, 32);
+    // generate a Poisson arrival set, round-trip it through the
+    // text trace format (f64 Display is shortest-round-trip, so the
+    // parsed times are bit-identical)
+    let mut gen = PoissonArrivals::new(21, 5_000.0, 400, nics, mix());
+    let mut trace = String::from("# t src dst bytes class\n");
+    let mut arrivals: Vec<Arrival> = Vec::new();
+    while let Some(a) = gen.next_arrival() {
+        trace.push_str(&format!(
+            "{} {} {} {} {}\n",
+            a.t, a.src, a.dst, a.bytes, a.class
+        ));
+        arrivals.push(a);
+    }
+    assert_eq!(arrivals.len(), 400);
+
+    let sim = DesSim::new(&t, DesOpts::default());
+
+    // path A: the trace reader through the streaming open-loop tier
+    let mut router_a = Router::with_seed(&t, 99);
+    let mut finish = vec![f64::NAN; arrivals.len()];
+    let res = {
+        let src = TraceArrivals::new(trace.as_bytes());
+        let mut ol = OpenLoopSource::new(src, &mut router_a, 1e-3);
+        sim.session(&mut DesScratch::new())
+            .stream_sink(&mut ol, |id, tf| finish[id as usize] = tf)
+    };
+    assert_eq!(res.total_nodes, arrivals.len());
+    assert_eq!(res.late_releases, 0);
+
+    // path B: the same transfers, routed identically, fully
+    // materialized and run closed-loop
+    let mut router_b = Router::with_seed(&t, 99);
+    let timed: Vec<TimedFlow> = arrivals
+        .iter()
+        .map(|a| {
+            let f = Flow::new(a.src, a.dst, a.bytes);
+            TimedFlow {
+                rf: RoutedFlow { path: router_b.route(&f), flow: f },
+                start: a.t,
+            }
+        })
+        .collect();
+    let dag = sim.run_dag(&aurorasim::fabric::DagWorkload::from_timed(&timed));
+    assert!((res.makespan - dag.makespan).abs()
+        / dag.makespan.abs().max(1e-30)
+        < 1e-9);
+    for (i, (a, b)) in finish.iter().zip(&dag.node_finish).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-30);
+        assert!(rel < 1e-9, "arrival {i}: stream {a} vs dag {b}");
+    }
+}
+
+#[test]
+fn open_loop_scenario_json_is_identical_across_solver_threads() {
+    let scenario = |threads: usize| {
+        Scenario::new(
+            "ol_det",
+            AuroraConfig::small(4, 4),
+            DesOpts { solver_threads: threads, ..DesOpts::default() },
+            Workload::OpenLoop {
+                arrivals: 2_000,
+                rate: 50_000.0,
+                endpoints: 64,
+                mix: mix(),
+                quantum: 1e-3,
+                window: 10e-3,
+                bw_multiplier: 1.0,
+                link_fraction: 0.0,
+            },
+            9,
+        )
+    };
+    let report = |threads: usize, workers: usize| {
+        let c = Campaign { scenarios: vec![scenario(threads)] };
+        c.run(workers).to_json().dump_pretty()
+    };
+    let serial = report(1, 1);
+    let fanned = report(8, 2);
+    assert_eq!(
+        serial, fanned,
+        "open-loop steady-state report must be byte-identical across \
+         DES solver-thread counts"
+    );
+    assert!(serial.contains("\"p999_s\""));
+    assert!(serial.contains("\"peak_live\""));
+}

@@ -1,0 +1,214 @@
+//! PR-7 session-API satellite: every legacy `DesSim` entry point
+//! (`run`, `run_with`, `run_dag`, `run_dag_with`,
+//! `run_simultaneous_with`, `run_stream_with`, `run_stream_sink`) must
+//! be **bit-identical** to its [`DesSession`] twin — the legacy names
+//! are thin `#[doc(hidden)]` wrappers over the same implementations, so
+//! these tests pin that the builder introduces no arithmetic, ordering
+//! or scratch-handling difference whatsoever (f64s compared by bits).
+
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{
+    DagResult, DesOpts, DesResult, DesScratch, DesSim, StreamResult,
+    TimedFlow,
+};
+use aurorasim::fabric::workload;
+use aurorasim::fabric::{Flow, FlowTimes, RoutedFlow, Router};
+use aurorasim::topology::Topology;
+use aurorasim::util::Pcg;
+
+fn topo() -> Topology {
+    Topology::new(&AuroraConfig::small(4, 4))
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn routed_flows(t: &Topology, n: usize, seed: u64) -> Vec<RoutedFlow> {
+    let mut rng = Pcg::new(seed);
+    let mut router = Router::with_seed(t, seed);
+    let nics = t.cfg.compute_endpoints() as u64;
+    (0..n)
+        .map(|i| {
+            let src = rng.gen_range(nics) as u32;
+            let dst =
+                (src + 1 + rng.gen_range(nics - 1) as u32) % nics as u32;
+            let f = Flow::new(src, dst, (1 + i as u64 % 7) << 18);
+            RoutedFlow { path: router.route(&f), flow: f }
+        })
+        .collect()
+}
+
+fn timed_flows(t: &Topology, n: usize, seed: u64) -> Vec<TimedFlow> {
+    routed_flows(t, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, rf)| TimedFlow { rf, start: (i % 5) as f64 * 2e-4 })
+        .collect()
+}
+
+fn assert_des_eq(a: &DesResult, b: &DesResult) {
+    assert_eq!(bits(&a.finish), bits(&b.finish));
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.contributors, b.contributors);
+    assert_eq!(a.victims, b.victims);
+    assert_eq!(a.solve_batches, b.solve_batches);
+    assert_eq!(a.components_solved, b.components_solved);
+    assert_eq!(a.fastpath_components, b.fastpath_components);
+}
+
+fn assert_dag_eq(a: &DagResult, b: &DagResult) {
+    assert_eq!(bits(&a.node_finish), bits(&b.node_finish));
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.contributors, b.contributors);
+    assert_eq!(a.victims, b.victims);
+    assert_eq!(a.solve_batches, b.solve_batches);
+    assert_eq!(a.components_solved, b.components_solved);
+    assert_eq!(a.fastpath_components, b.fastpath_components);
+}
+
+fn assert_stream_eq(a: &StreamResult, b: &StreamResult) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.total_nodes, b.total_nodes);
+    assert_eq!(a.peak_live_nodes, b.peak_live_nodes);
+    assert_eq!(a.contributors, b.contributors);
+    assert_eq!(a.victims, b.victims);
+    assert_eq!(a.late_releases, b.late_releases);
+    assert_eq!(a.solve_batches, b.solve_batches);
+    assert_eq!(a.components_solved, b.components_solved);
+    assert_eq!(a.fastpath_components, b.fastpath_components);
+}
+
+fn assert_times_eq(a: &FlowTimes, b: &FlowTimes) {
+    assert_eq!(bits(&a.per_flow), bits(&b.per_flow));
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+}
+
+#[test]
+fn run_matches_session_solve() {
+    let t = topo();
+    let flows = timed_flows(&t, 96, 3);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let legacy = sim.run(&flows);
+    let session = sim.session(&mut DesScratch::default()).solve(&flows);
+    assert_des_eq(&legacy, &session);
+}
+
+#[test]
+fn run_with_matches_session_solve() {
+    let t = topo();
+    let flows = timed_flows(&t, 96, 5);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let mut s1 = DesScratch::new();
+    let mut s2 = DesScratch::new();
+    let legacy = sim.run_with(&flows, &mut s1);
+    let session = sim.session(&mut s2).solve(&flows);
+    assert_des_eq(&legacy, &session);
+    // and scratch reuse does not perturb the session path either
+    let again = sim.session(&mut s2).solve(&flows);
+    assert_des_eq(&legacy, &again);
+}
+
+#[test]
+fn run_simultaneous_with_matches_session_simultaneous() {
+    let t = topo();
+    let flows = routed_flows(&t, 128, 7);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let legacy = sim.run_simultaneous_with(&flows, &mut DesScratch::new());
+    let session =
+        sim.session(&mut DesScratch::new()).simultaneous(&flows);
+    assert_times_eq(&legacy, &session);
+}
+
+#[test]
+fn run_dag_and_run_dag_with_match_session_dag() {
+    let t = topo();
+    let nics = workload::spread_nics(&t, 24);
+    let mut router = Router::with_seed(&t, 11);
+    let rr = workload::ring_rounds(&nics, 8, 1 << 20);
+    let dag = workload::dag_from_rounds(&mut router, &rr, 0.0);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let legacy = sim.run_dag(&dag);
+    let legacy_with = sim.run_dag_with(&dag, &mut DesScratch::new());
+    let session = sim.session(&mut DesScratch::new()).dag(&dag);
+    assert_dag_eq(&legacy, &session);
+    assert_dag_eq(&legacy_with, &session);
+}
+
+fn ring_stream_result(
+    t: &Topology,
+    sim: &DesSim,
+    via_session: bool,
+) -> StreamResult {
+    let nics = workload::spread_nics(t, 24);
+    let rr = workload::ring_rounds(&nics, 8, 1 << 20);
+    let mut router = Router::with_seed(t, 13);
+    let mut src = workload::routed_round_source(&mut router, move |k| {
+        rr.get(k).cloned()
+    });
+    if via_session {
+        sim.session(&mut DesScratch::new()).stream(&mut src)
+    } else {
+        sim.run_stream_with(&mut src, &mut DesScratch::new())
+    }
+}
+
+#[test]
+fn run_stream_with_matches_session_stream() {
+    let t = topo();
+    let sim = DesSim::new(&t, DesOpts::default());
+    let legacy = ring_stream_result(&t, &sim, false);
+    let session = ring_stream_result(&t, &sim, true);
+    assert!(legacy.total_nodes > 0);
+    assert_stream_eq(&legacy, &session);
+}
+
+#[test]
+fn run_stream_sink_matches_session_stream_sink() {
+    let t = topo();
+    let sim = DesSim::new(&t, DesOpts::default());
+    let run = |via_session: bool| {
+        let nics = workload::spread_nics(&t, 24);
+        let rr = workload::ring_rounds(&nics, 8, 1 << 20);
+        let mut router = Router::with_seed(&t, 17);
+        let mut src =
+            workload::routed_round_source(&mut router, move |k| {
+                rr.get(k).cloned()
+            });
+        let mut sunk: Vec<(u32, u64)> = Vec::new();
+        let res = if via_session {
+            sim.session(&mut DesScratch::new())
+                .stream_sink(&mut src, |id, t| sunk.push((id, t.to_bits())))
+        } else {
+            sim.run_stream_sink(&mut src, &mut DesScratch::new(), |id, t| {
+                sunk.push((id, t.to_bits()))
+            })
+        };
+        (res, sunk)
+    };
+    let (legacy, sunk_l) = run(false);
+    let (session, sunk_s) = run(true);
+    assert_eq!(sunk_l.len(), legacy.total_nodes);
+    assert_eq!(sunk_l, sunk_s, "sink callbacks must replay identically");
+    assert_stream_eq(&legacy, &session);
+}
+
+#[test]
+fn session_opts_override_matches_dedicated_sim() {
+    let t = topo();
+    let flows = timed_flows(&t, 96, 19);
+    let nocm = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
+    let dedicated = DesSim::new(&t, nocm.clone()).run(&flows);
+    // base sim has CM on; the session override must fully replace it
+    let base = DesSim::new(&t, DesOpts::default());
+    let overridden = base
+        .session(&mut DesScratch::new())
+        .opts(nocm)
+        .solve(&flows);
+    assert_des_eq(&dedicated, &overridden);
+    // and a session WITHOUT the override must match the base sim, not
+    // the overridden one (the override is per-session, not sticky)
+    let plain = base.session(&mut DesScratch::new()).solve(&flows);
+    assert_des_eq(&base.run(&flows), &plain);
+}
