@@ -1,0 +1,43 @@
+//! `detlint` — the source-level determinism lint, runnable standalone
+//! (`cargo run --bin detlint`) and in CI as a blocking job. The same
+//! engine is exercised by `tests/detlint.rs`, which also proves every
+//! rule class fires on the deliberately-violating fixtures under
+//! `tests/fixtures/detlint/`.
+//!
+//! Exit status: 0 when `rust/src/` is clean (modulo the reviewed
+//! exceptions in `ci/detlint_allow.txt`), 1 when any rule fires.
+
+use aurorasim::util::detlint::{scan_tree, Allowlist};
+use std::path::Path;
+
+fn main() {
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    let src = Path::new(manifest).join("src");
+    let allow_path = Path::new(manifest).join("..").join("ci").join(
+        "detlint_allow.txt",
+    );
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => Allowlist::parse(&text),
+        Err(_) => Allowlist::default(),
+    };
+    let res = scan_tree(&src, &allow);
+    for d in &res.diags {
+        eprintln!("{}", d.render());
+    }
+    if res.diags.is_empty() {
+        println!(
+            "detlint: clean — {} file(s) scanned, {} allowlist entr(y/ies)",
+            res.files,
+            allow.len()
+        );
+    } else {
+        eprintln!(
+            "detlint: {} violation(s) in {} file(s) scanned \
+             (intentional exceptions go in ci/detlint_allow.txt with a \
+             reason)",
+            res.diags.len(),
+            res.files
+        );
+        std::process::exit(1);
+    }
+}

@@ -7,8 +7,9 @@
 //! and the result depends only on the scenario (never on scheduling).
 
 use crate::config::AuroraConfig;
+use crate::fabric::analysis::{AnalysisReport, WorkloadAnalyzer};
 use crate::fabric::arrivals::{
-    run_open_loop, PoissonArrivals, RpcClass, SteadyState,
+    run_open_loop, OpenLoopSource, PoissonArrivals, RpcClass, SteadyState,
 };
 use crate::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
 use crate::fabric::rounds::CostModel;
@@ -194,7 +195,34 @@ impl Scenario {
     /// Materialize a closed-loop scenario: the dependency DAG plus the
     /// (possibly degraded-link-augmented) DES options. Returns `None`
     /// for open-loop workloads (use [`Scenario::materialize`]).
+    ///
+    /// Fails fast: the pre-execution verifier
+    /// ([`crate::fabric::analysis`]) runs over the materialized DAG and
+    /// panics with the rendered report if the generator produced a
+    /// structurally invalid workload — a campaign must never hand the
+    /// executor a cyclic or mis-routed graph. Use [`Scenario::lint`] to
+    /// get the diagnostics without the panic.
     pub fn materialize_dag(
+        &self,
+        topo: &Topology,
+    ) -> Option<(DagWorkload, DesOpts)> {
+        let out = self.materialize_dag_unchecked(topo);
+        if let Some((dag, _)) = &out {
+            let rep = WorkloadAnalyzer::new().analyze_dag(dag);
+            assert!(
+                rep.is_clean(),
+                "scenario {}: workload verifier rejected the DAG:\n{}",
+                self.name,
+                rep.render()
+            );
+        }
+        out
+    }
+
+    /// The raw generator behind [`Scenario::materialize_dag`] — no
+    /// verification, so [`Scenario::lint`] can report diagnostics
+    /// instead of panicking.
+    fn materialize_dag_unchecked(
         &self,
         topo: &Topology,
     ) -> Option<(DagWorkload, DesOpts)> {
@@ -652,6 +680,51 @@ impl Scenario {
             critical_path: 0.0,
             steady_state: Some(ss),
         }
+    }
+
+    /// Static pre-execution analysis of this scenario's workload — the
+    /// `aurorasim lint` entry point. Closed-loop scenarios analyze the
+    /// fully materialized dependency DAG; open-loop service scenarios
+    /// stream a bounded prefix of the arrival source (`max_rounds`
+    /// quantum windows) through the round-source liveness checks; flat
+    /// batch scenarios analyze the timed flow set as a dependency-free
+    /// DAG. Never panics — errors come back as diagnostics in the
+    /// report.
+    pub fn lint(&self, topo: &Topology, max_rounds: usize) -> AnalysisReport {
+        let analyzer = WorkloadAnalyzer::new();
+        if self.is_closed_loop() {
+            let (dag, _) = self
+                .materialize_dag_unchecked(topo)
+                .expect("closed-loop scenarios materialize a DAG");
+            return analyzer.analyze_dag(&dag);
+        }
+        if let Workload::OpenLoop {
+            arrivals,
+            rate,
+            endpoints,
+            mix,
+            quantum,
+            ..
+        } = &self.workload
+        {
+            // the same stream construction as run_service (identical
+            // seed, so the linted prefix IS the executed prefix); the
+            // degraded-link sampling is skipped — it changes pricing,
+            // not workload structure
+            let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
+            let eps = workload::spread_nics(topo, *endpoints);
+            let arrivals = PoissonArrivals::new(
+                self.seed,
+                *rate,
+                *arrivals,
+                eps,
+                mix.clone(),
+            );
+            let mut src = OpenLoopSource::new(arrivals, &mut router, *quantum);
+            return analyzer.analyze_source(&mut src, max_rounds);
+        }
+        let (timed, _) = self.materialize(topo);
+        analyzer.analyze_dag(&DagWorkload::from_timed(&timed))
     }
 }
 

@@ -1,0 +1,1195 @@
+//! Pre-execution workload static analysis (the paper's fabric-validation
+//! posture applied to *workloads*: check invariants before running at
+//! scale, §3.8).
+//!
+//! The executors enforce most structural invariants only as they trip
+//! over them — a forward dependency panics inside
+//! [`DagWorkload::push`], an aliased endpoint asserts inside
+//! [`super::workload::spread_nics`], a malformed round deadlocks the
+//! frontier mid-run. [`WorkloadAnalyzer`] front-loads those checks into
+//! one pass that produces a structured [`AnalysisReport`] — diagnostics
+//! with severity, node and round ids — over any [`DagWorkload`] or a
+//! materialized [`RoundSource`] prefix, *before* any solve runs:
+//!
+//! * cycle-freeness and dependency sanity: iterative Kahn walk (no
+//!   recursion — 16k-rank DAGs must not blow the stack), dangling and
+//!   forward dependency ids;
+//! * release-floor sanity: non-finite floors are errors, negative
+//!   floors warnings (the executor clamps them to 0);
+//! * NIC aliasing, generalizing the `spread_nics` assert: self-flows
+//!   (src == dst) and unrouted (empty-path) transfers are errors,
+//!   inconsistent key→NIC bindings warnings;
+//! * `NO_KEY` sentinel misuse: a half-sentinel stream node (`a` is
+//!   [`NO_KEY`] but `b` is not, or vice versa) would thread the
+//!   sentinel through the frontier as a real key — giving a "no
+//!   dependencies" node dependents and breaking streamed/staged
+//!   equivalence — so it is an error;
+//! * key liveness: a frontier key re-touched after a long idle gap is
+//!   the sparse-key memory class from PR 4 (pre-collapse it pinned
+//!   every round since the last touch live) — flagged as a warning
+//!   with the gap;
+//! * round-source liveness ([`WorkloadAnalyzer::analyze_source`]): a
+//!   time-throttled source that emits an *empty* round defeats the
+//!   executor's `EV_ROUND` throttling (the skip loop re-pulls
+//!   immediately, so an always-empty source spins forever) — an
+//!   error, as is a non-monotone `next_round_not_before`;
+//! * byte conservation for the collective round generators
+//!   ([`check_collective_rounds`]): the ring allreduce must move
+//!   exactly `2*(P-1)*max(bytes/P, 1)` bytes per rank, the pairwise
+//!   all2all every ordered pair exactly once, and so on — checked
+//!   against `mpi::coll::*_rounds` output by `tests/analysis.rs`.
+//!
+//! Wiring: `Scenario::materialize_dag` fails fast on an invalid
+//! workload, the `aurorasim lint [scenario|--all]` CLI verb sweeps
+//! every campaign scenario, and `debug_assertions` builds self-check
+//! every `run_dag`/`run_stream` entry (`des.rs`), so the whole test
+//! suite exercises the verifier for free.
+
+use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode, NO_KEY};
+use rustc_hash::FxHashMap;
+
+/// How bad a finding is. `Error` means the workload violates an
+/// executor contract and must not run; `Warning` flags legal but
+/// suspicious structure; `Info` is advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+/// One finding: which check fired, where (node id in the workload /
+/// emission order, round index for streamed prefixes), and why.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable check id (`cycle`, `forward-dep`, `self-flow`, ...).
+    pub check: &'static str,
+    pub node: Option<u32>,
+    pub round: Option<u32>,
+    pub message: String,
+}
+
+/// Structured result of one analysis pass.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    pub diags: Vec<Diagnostic>,
+    /// Nodes examined (DAG nodes or streamed nodes).
+    pub nodes: usize,
+    /// Rounds examined (0 for flat DAG analysis).
+    pub rounds: usize,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    /// No errors (warnings and infos are allowed).
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    fn push(
+        &mut self,
+        severity: Severity,
+        check: &'static str,
+        node: Option<u32>,
+        round: Option<u32>,
+        message: String,
+    ) {
+        self.diags.push(Diagnostic { severity, check, node, round, message });
+    }
+
+    /// Human-readable rendering, one line per diagnostic plus a summary.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for d in &self.diags {
+            let sev = match d.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+                Severity::Info => "info",
+            };
+            let _ = write!(out, "{sev}[{}]", d.check);
+            if let Some(n) = d.node {
+                let _ = write!(out, " node {n}");
+            }
+            if let Some(r) = d.round {
+                let _ = write!(out, " round {r}");
+            }
+            let _ = writeln!(out, ": {}", d.message);
+        }
+        let _ = write!(
+            out,
+            "{} nodes, {} rounds: {} error(s), {} warning(s)",
+            self.nodes,
+            self.rounds,
+            self.errors(),
+            self.warnings()
+        );
+        out
+    }
+}
+
+/// The pre-execution workload verifier. Stateless apart from
+/// thresholds; one instance can analyze any number of workloads.
+#[derive(Debug, Clone)]
+pub struct WorkloadAnalyzer {
+    /// A frontier key idle for more than this many rounds before being
+    /// re-touched gets a `sparse-key` warning (the PR 4 memory class:
+    /// without done-floor collapse such a key pins every round since
+    /// its last touch live).
+    pub sparse_key_gap: u32,
+}
+
+impl Default for WorkloadAnalyzer {
+    fn default() -> Self {
+        Self { sparse_key_gap: 4096 }
+    }
+}
+
+impl WorkloadAnalyzer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Analyze a fully materialized dependency workload.
+    pub fn analyze_dag(&self, wl: &DagWorkload) -> AnalysisReport {
+        let mut rep = AnalysisReport {
+            nodes: wl.nodes.len(),
+            ..Default::default()
+        };
+        let n = wl.nodes.len();
+
+        // ---- dependency-id sanity + per-node local checks ----
+        let mut edges = 0usize;
+        for (ni, node) in wl.nodes.iter().enumerate() {
+            let id = ni as u32;
+            for &d in &node.deps {
+                edges += 1;
+                if d as usize >= n {
+                    rep.push(
+                        Severity::Error,
+                        "dangling-dep",
+                        Some(id),
+                        None,
+                        format!("dependency {d} beyond the last node ({n})"),
+                    );
+                } else if d >= id {
+                    rep.push(
+                        Severity::Error,
+                        "forward-dep",
+                        Some(id),
+                        None,
+                        format!(
+                            "dependency {d} not before node {id} (nodes \
+                             must be added in topological order)"
+                        ),
+                    );
+                }
+            }
+            self.check_floor(&mut rep, node.start, Some(id), None);
+            if let DagKind::Xfer(rf) = &node.kind {
+                self.check_xfer(
+                    &mut rep,
+                    rf.flow.src_nic,
+                    rf.flow.dst_nic,
+                    rf.flow.bytes,
+                    rf.path.links.len(),
+                    Some(id),
+                    None,
+                );
+            }
+        }
+
+        // ---- cycle-freeness: iterative Kahn peel (never recursive —
+        // a 16k-rank app step is ~100k nodes deep in the worst case).
+        // With the forward-dep contract intact a cycle is impossible;
+        // this catches direct `nodes` manipulation that bypassed
+        // `DagWorkload::push`. Dangling deps are skipped here (already
+        // reported) so the walk stays in-bounds. ----
+        let mut indeg = vec![0u32; n];
+        let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (ni, node) in wl.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                if (d as usize) < n {
+                    indeg[ni] += 1;
+                    succs[d as usize].push(ni as u32);
+                }
+            }
+        }
+        let mut queue: Vec<u32> = (0..n as u32)
+            .filter(|&i| indeg[i as usize] == 0)
+            .collect();
+        let mut peeled = 0usize;
+        while let Some(i) = queue.pop() {
+            peeled += 1;
+            for &s in &succs[i as usize] {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if peeled < n {
+            let member = indeg
+                .iter()
+                .position(|&d| d > 0)
+                .map(|i| i as u32)
+                .unwrap_or(0);
+            rep.push(
+                Severity::Error,
+                "cycle",
+                Some(member),
+                None,
+                format!(
+                    "{} node(s) unreachable by the Kahn peel (dependency \
+                     cycle; first member: node {member})",
+                    n - peeled
+                ),
+            );
+        }
+        let _ = edges;
+        rep
+    }
+
+    /// Analyze a materialized list of streamed rounds (the frontier-key
+    /// semantics of [`super::workload::DagBuilder`] /
+    /// [`super::des::DesSim::run_stream`]).
+    pub fn analyze_rounds(&self, rounds: &[Vec<StreamNode>]) -> AnalysisReport {
+        let mut rep = AnalysisReport::default();
+        self.rounds_pass(&mut rep, rounds, false);
+        rep
+    }
+
+    /// Materialize up to `max_rounds` rounds from a live source and
+    /// analyze the prefix, additionally enforcing the [`RoundSource`]
+    /// contract itself: `next_round_not_before` must be non-decreasing,
+    /// and a time-throttled source must never emit an *empty* round —
+    /// the executor's skip loop would immediately re-pull, defeating
+    /// the throttle (and spinning forever on an infinite empty tail),
+    /// which is the deadlock-freedom guarantee the open-loop tier
+    /// relies on. Consumes the prefix; pass a freshly built source.
+    pub fn analyze_source(
+        &self,
+        src: &mut dyn RoundSource,
+        max_rounds: usize,
+    ) -> AnalysisReport {
+        let mut rep = AnalysisReport::default();
+        let mut rounds: Vec<Vec<StreamNode>> = Vec::new();
+        let mut last_nb = f64::NEG_INFINITY;
+        while rounds.len() < max_rounds {
+            let nb = src.next_round_not_before();
+            if !nb.is_finite() {
+                rep.push(
+                    Severity::Error,
+                    "bad-not-before",
+                    None,
+                    Some(rounds.len() as u32),
+                    format!("next_round_not_before returned {nb}"),
+                );
+                break;
+            }
+            // an exhausted open-loop source reports 0.0 ("no deferral");
+            // only flag a regression between two *pulled* rounds
+            if nb < last_nb && nb != 0.0 {
+                rep.push(
+                    Severity::Error,
+                    "non-monotone-not-before",
+                    None,
+                    Some(rounds.len() as u32),
+                    format!(
+                        "next_round_not_before went backwards: {nb} after \
+                         {last_nb}"
+                    ),
+                );
+            }
+            last_nb = last_nb.max(nb);
+            let Some(round) = src.next_round() else { break };
+            if round.is_empty() {
+                rep.push(
+                    Severity::Error,
+                    "empty-round",
+                    None,
+                    Some(rounds.len() as u32),
+                    "time-throttled source emitted an empty round (the \
+                     executor re-pulls immediately: throttle defeated, \
+                     potential spin on an empty tail) — advance \
+                     next_round_not_before instead"
+                        .into(),
+                );
+            }
+            for n in &round {
+                let floor = match n {
+                    StreamNode::Compute { start, .. }
+                    | StreamNode::Xfer { start, .. } => *start,
+                };
+                if floor.is_finite() && floor < nb {
+                    rep.push(
+                        Severity::Warning,
+                        "floor-below-window",
+                        None,
+                        Some(rounds.len() as u32),
+                        format!(
+                            "release floor {floor} below the declared \
+                             window start {nb} (would clamp as a late \
+                             release)"
+                        ),
+                    );
+                }
+            }
+            rounds.push(round);
+        }
+        self.rounds_pass(&mut rep, &rounds, true);
+        rep
+    }
+
+    /// The shared per-round checks (`analyze_rounds` on a materialized
+    /// list, or the prefix collected by [`Self::analyze_source`]).
+    fn rounds_pass(
+        &self,
+        rep: &mut AnalysisReport,
+        rounds: &[Vec<StreamNode>],
+        from_source: bool,
+    ) {
+        rep.rounds += rounds.len();
+        // key -> (last round touched, NIC binding) — both sides of the
+        // spread_nics generalization live here
+        let mut key_last: FxHashMap<u32, u32> = FxHashMap::default();
+        let mut key_nic: FxHashMap<u32, u32> = FxHashMap::default();
+        let mut key_floor: FxHashMap<u32, f64> = FxHashMap::default();
+        let mut staged_floor: FxHashMap<u32, f64> = FxHashMap::default();
+        let mut last_no_key_floor = f64::NEG_INFINITY;
+        let mut id = 0u32;
+        for (k, round) in rounds.iter().enumerate() {
+            let rk = k as u32;
+            if round.is_empty() && !from_source {
+                // the executor skips these; only a *throttled* source
+                // emitting them is a liveness hazard (handled above)
+                rep.push(
+                    Severity::Warning,
+                    "empty-round",
+                    None,
+                    Some(rk),
+                    "empty round (skipped by the executor)".into(),
+                );
+            }
+            staged_floor.clear();
+            for n in round {
+                rep.nodes += 1;
+                let (a, b, floor) = match n {
+                    StreamNode::Compute { a, b, start, .. } => (*a, *b, *start),
+                    StreamNode::Xfer { a, b, rf, start } => {
+                        self.check_xfer(
+                            rep,
+                            rf.flow.src_nic,
+                            rf.flow.dst_nic,
+                            rf.flow.bytes,
+                            rf.path.links.len(),
+                            Some(id),
+                            Some(rk),
+                        );
+                        // key -> NIC binding consistency (a logical
+                        // endpoint aliased onto two NICs is the class
+                        // spread_nics asserts against)
+                        if *a != NO_KEY {
+                            self.check_binding(
+                                rep, &mut key_nic, *a, rf.flow.src_nic, id, rk,
+                            );
+                        }
+                        if *b != NO_KEY {
+                            self.check_binding(
+                                rep, &mut key_nic, *b, rf.flow.dst_nic, id, rk,
+                            );
+                        }
+                        (*a, *b, *start)
+                    }
+                };
+                self.check_floor(rep, floor, Some(id), Some(rk));
+                if (a == NO_KEY) != (b == NO_KEY) {
+                    rep.push(
+                        Severity::Error,
+                        "no-key-misuse",
+                        Some(id),
+                        Some(rk),
+                        format!(
+                            "half-sentinel keys ({a}, {b}): NO_KEY must \
+                             cover both ends or neither — a half-sentinel \
+                             registers the sentinel in the frontier and \
+                             gives a floor-released node dependents"
+                        ),
+                    );
+                }
+                if a == NO_KEY && b == NO_KEY {
+                    // open-loop arrivals: floors are the schedule and
+                    // must be non-decreasing in emission order
+                    if floor.is_finite() && floor < last_no_key_floor {
+                        rep.push(
+                            Severity::Warning,
+                            "no-key-floor-regression",
+                            Some(id),
+                            Some(rk),
+                            format!(
+                                "NO_KEY floor {floor} before previous \
+                                 {last_no_key_floor} (arrival order \
+                                 contract)"
+                            ),
+                        );
+                    }
+                    last_no_key_floor = last_no_key_floor.max(floor);
+                } else {
+                    for key in [a, b] {
+                        if key == NO_KEY {
+                            continue;
+                        }
+                        if let Some(&last) = key_last.get(&key) {
+                            let gap = rk - last;
+                            if gap > self.sparse_key_gap {
+                                rep.push(
+                                    Severity::Warning,
+                                    "sparse-key",
+                                    Some(id),
+                                    Some(rk),
+                                    format!(
+                                        "key {key} idle for {gap} rounds \
+                                         (> {}): the sparse-key memory \
+                                         class (PR 4)",
+                                        self.sparse_key_gap
+                                    ),
+                                );
+                            }
+                        }
+                        // floors per key must not regress across rounds
+                        // (per-rank clocks only move forward)
+                        if floor > 0.0 {
+                            if let Some(&prev) = key_floor.get(&key) {
+                                if floor < prev {
+                                    rep.push(
+                                        Severity::Warning,
+                                        "floor-regression",
+                                        Some(id),
+                                        Some(rk),
+                                        format!(
+                                            "key {key} floor {floor} below \
+                                             its previous round floor \
+                                             {prev}"
+                                        ),
+                                    );
+                                }
+                            }
+                            let e =
+                                staged_floor.entry(key).or_insert(floor);
+                            *e = e.max(floor);
+                        }
+                    }
+                }
+                id += 1;
+            }
+            // commit this round's touches after the round (within a
+            // round all nodes see the pre-round frontier)
+            for n in round {
+                let (a, b) = match n {
+                    StreamNode::Compute { a, b, .. } => (*a, *b),
+                    StreamNode::Xfer { a, b, .. } => (*a, *b),
+                };
+                for key in [a, b] {
+                    if key != NO_KEY {
+                        key_last.insert(key, rk);
+                    }
+                }
+            }
+            for (&key, &fl) in &staged_floor {
+                let e = key_floor.entry(key).or_insert(fl);
+                *e = e.max(fl);
+            }
+        }
+    }
+
+    fn check_floor(
+        &self,
+        rep: &mut AnalysisReport,
+        start: f64,
+        node: Option<u32>,
+        round: Option<u32>,
+    ) {
+        if !start.is_finite() {
+            rep.push(
+                Severity::Error,
+                "bad-floor",
+                node,
+                round,
+                format!("non-finite release floor {start}"),
+            );
+        } else if start < 0.0 {
+            rep.push(
+                Severity::Warning,
+                "negative-floor",
+                node,
+                round,
+                format!("negative release floor {start} (clamped to 0)"),
+            );
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_xfer(
+        &self,
+        rep: &mut AnalysisReport,
+        src: u32,
+        dst: u32,
+        bytes: u64,
+        path_links: usize,
+        node: Option<u32>,
+        round: Option<u32>,
+    ) {
+        if src == dst {
+            rep.push(
+                Severity::Error,
+                "self-flow",
+                node,
+                round,
+                format!(
+                    "transfer from NIC {src} to itself (aliased \
+                     endpoints; see spread_nics)"
+                ),
+            );
+        }
+        if path_links == 0 {
+            rep.push(
+                Severity::Error,
+                "empty-path",
+                node,
+                round,
+                format!("unrouted transfer {src}->{dst} (no path links)"),
+            );
+        }
+        if bytes == 0 {
+            rep.push(
+                Severity::Warning,
+                "zero-bytes",
+                node,
+                round,
+                format!("zero-byte transfer {src}->{dst}"),
+            );
+        }
+    }
+
+    fn check_binding(
+        &self,
+        rep: &mut AnalysisReport,
+        key_nic: &mut FxHashMap<u32, u32>,
+        key: u32,
+        nic: u32,
+        node: u32,
+        round: u32,
+    ) {
+        match key_nic.get(&key) {
+            None => {
+                key_nic.insert(key, nic);
+            }
+            Some(&prev) if prev != nic => {
+                rep.push(
+                    Severity::Warning,
+                    "key-aliasing",
+                    Some(node),
+                    Some(round),
+                    format!(
+                        "key {key} bound to NIC {nic} after NIC {prev} \
+                         (one logical endpoint on two NICs)"
+                    ),
+                );
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+// --------------------------------------------- collective byte budgets
+
+/// Which collective a round list claims to implement — selects the
+/// closed-form per-rank byte budget [`check_collective_rounds`]
+/// verifies (the paper's §5.1 algorithms, as generated by
+/// `mpi::coll::*_rounds`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// 2(P-1) shift-by-one rounds of `max(bytes/P, 1)` chunks: every
+    /// rank moves exactly `2*(P-1)/P * bytes` (up to chunk rounding).
+    AllreduceRing,
+    /// Remainder fold-in, log2(P2) exchange rounds, fold-out.
+    AllreduceTree,
+    /// P-1 rotation rounds; every ordered pair exactly once.
+    Alltoall,
+    /// P-1 shift-by-one rounds of `bytes` per rank.
+    Allgather,
+    /// P-1 shift-by-one rounds of `max(bytes/P, 1)` chunks.
+    ReduceScatter,
+    /// Binomial tree: P-1 messages total, every non-root rank receives
+    /// exactly once.
+    Bcast,
+}
+
+/// Rank keys of a per-rank accounting map in sorted order, so
+/// diagnostics report ranks smallest-first regardless of hash order.
+fn sorted_keys(m: &FxHashMap<usize, u64>) -> Vec<usize> {
+    let mut ks: Vec<usize> = m.keys().copied().collect();
+    ks.sort_unstable();
+    ks
+}
+
+/// Verify the byte-conservation identity of a collective's round list
+/// (world-rank triples, as produced by `mpi::coll::*_rounds`): per-rank
+/// sent/received byte totals match the algorithm's closed form, and the
+/// permutation rounds really are permutations (each participating rank
+/// sends and receives at most once per round). `bytes` is the
+/// collective's input size argument (per-rank payload for allgather).
+pub fn check_collective_rounds(
+    kind: Collective,
+    p: usize,
+    bytes: u64,
+    rounds: &[Vec<(usize, usize, u64)>],
+) -> AnalysisReport {
+    let mut rep = AnalysisReport {
+        rounds: rounds.len(),
+        ..Default::default()
+    };
+    if p <= 1 {
+        if !rounds.is_empty() {
+            rep.push(
+                Severity::Error,
+                "coll-shape",
+                None,
+                None,
+                format!("{} round(s) for a {p}-rank collective", rounds.len()),
+            );
+        }
+        return rep;
+    }
+    let chunk = (bytes / p as u64).max(1);
+    let p2 = {
+        let mut v = 1usize;
+        while v * 2 <= p {
+            v *= 2;
+        }
+        v
+    };
+    let log2p2 = p2.trailing_zeros() as u64;
+
+    // ---- expected shape ----
+    let expect_rounds = match kind {
+        Collective::AllreduceRing => 2 * (p - 1),
+        Collective::AllreduceTree => {
+            log2p2 as usize + if p > p2 { 2 } else { 0 }
+        }
+        Collective::Alltoall | Collective::Allgather
+        | Collective::ReduceScatter => p - 1,
+        Collective::Bcast => p.next_power_of_two().trailing_zeros() as usize,
+    };
+    if rounds.len() != expect_rounds {
+        rep.push(
+            Severity::Error,
+            "coll-shape",
+            None,
+            None,
+            format!(
+                "{:?}: {} round(s), expected {expect_rounds} for P={p}",
+                kind,
+                rounds.len()
+            ),
+        );
+    }
+
+    // ---- per-rank accounting + per-round permutation check ----
+    let mut sent: FxHashMap<usize, u64> = FxHashMap::default();
+    let mut recv: FxHashMap<usize, u64> = FxHashMap::default();
+    let mut pairs: FxHashMap<(usize, usize), u32> = FxHashMap::default();
+    for (k, round) in rounds.iter().enumerate() {
+        let rk = k as u32;
+        let mut round_src: FxHashMap<usize, u32> = FxHashMap::default();
+        let mut round_dst: FxHashMap<usize, u32> = FxHashMap::default();
+        for (i, &(s, d, b)) in round.iter().enumerate() {
+            rep.nodes += 1;
+            if s == d {
+                rep.push(
+                    Severity::Error,
+                    "self-flow",
+                    Some(i as u32),
+                    Some(rk),
+                    format!("rank {s} sends to itself"),
+                );
+            }
+            *sent.entry(s).or_default() += b;
+            *recv.entry(d).or_default() += b;
+            *pairs.entry((s, d)).or_default() += 1;
+            *round_src.entry(s).or_default() += 1;
+            *round_dst.entry(d).or_default() += 1;
+        }
+        // sorted walk: diagnostics come out in rank order, not the
+        // (deterministic but unsorted) hash order
+        let mut sides: Vec<(usize, u32)> = round_src
+            .iter()
+            .chain(round_dst.iter())
+            .map(|(&r, &c)| (r, c))
+            .collect();
+        sides.sort_unstable();
+        for (r, c) in sides {
+            if c > 1 {
+                rep.push(
+                    Severity::Error,
+                    "coll-permutation",
+                    None,
+                    Some(rk),
+                    format!(
+                        "rank {r} appears {c} times on one side of round \
+                         {k} (rounds must be permutations)"
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- closed-form per-rank budgets ----
+    let mut expect_sent = |rep: &mut AnalysisReport, rank: usize, want: u64| {
+        let got = sent.get(&rank).copied().unwrap_or(0);
+        if got != want {
+            rep.push(
+                Severity::Error,
+                "coll-bytes",
+                None,
+                None,
+                format!(
+                    "{kind:?}: rank {rank} sent {got} bytes, expected \
+                     {want} (P={p}, bytes={bytes})"
+                ),
+            );
+        }
+    };
+    match kind {
+        Collective::AllreduceRing => {
+            // the paper's 2(P-1)/P * bytes identity, exact in chunks
+            for r in sorted_keys(&sent) {
+                expect_sent(&mut rep, r, 2 * (p as u64 - 1) * chunk);
+            }
+            if sent.len() != p {
+                rep.push(
+                    Severity::Error,
+                    "coll-bytes",
+                    None,
+                    None,
+                    format!(
+                        "AllreduceRing: {} of {p} ranks ever send",
+                        sent.len()
+                    ),
+                );
+            }
+        }
+        Collective::ReduceScatter => {
+            for r in sorted_keys(&sent) {
+                expect_sent(&mut rep, r, (p as u64 - 1) * chunk);
+            }
+        }
+        Collective::Allgather => {
+            for r in sorted_keys(&sent) {
+                expect_sent(&mut rep, r, (p as u64 - 1) * bytes);
+            }
+        }
+        Collective::Alltoall => {
+            // every ordered pair exactly once at `bytes` each
+            let mut missing = 0usize;
+            for s in 0..p {
+                for d in 0..p {
+                    if s == d {
+                        continue;
+                    }
+                    match pairs.get(&(s, d)) {
+                        Some(&1) => {}
+                        Some(&c) => rep.push(
+                            Severity::Error,
+                            "coll-bytes",
+                            None,
+                            None,
+                            format!("Alltoall: pair ({s},{d}) sent {c} times"),
+                        ),
+                        None => missing += 1,
+                    }
+                }
+            }
+            if missing > 0 {
+                rep.push(
+                    Severity::Error,
+                    "coll-bytes",
+                    None,
+                    None,
+                    format!("Alltoall: {missing} ordered pair(s) never sent"),
+                );
+            }
+        }
+        Collective::Bcast => {
+            let total: u64 = sent.values().sum();
+            if total != (p as u64 - 1) * bytes {
+                rep.push(
+                    Severity::Error,
+                    "coll-bytes",
+                    None,
+                    None,
+                    format!(
+                        "Bcast: {total} total bytes, expected {}",
+                        (p as u64 - 1) * bytes
+                    ),
+                );
+            }
+            for r in sorted_keys(&recv) {
+                let c = recv[&r];
+                if c != bytes {
+                    rep.push(
+                        Severity::Error,
+                        "coll-bytes",
+                        None,
+                        None,
+                        format!(
+                            "Bcast: rank {r} received {c} bytes, expected \
+                             exactly {bytes} (every non-root receives once)"
+                        ),
+                    );
+                }
+            }
+            if recv.len() != p - 1 {
+                rep.push(
+                    Severity::Error,
+                    "coll-bytes",
+                    None,
+                    None,
+                    format!(
+                        "Bcast: {} rank(s) receive, expected {}",
+                        recv.len(),
+                        p - 1
+                    ),
+                );
+            }
+        }
+        Collective::AllreduceTree => {
+            // power-of-two participants exchange `bytes` in each of the
+            // log2(P2) rounds; each remainder rank sends one fold-in
+            // and receives one fold-out message
+            let rem = p - p2;
+            let total: u64 = sent.values().sum();
+            let want =
+                (p2 as u64 * log2p2 + 2 * rem as u64) * bytes;
+            if total != want {
+                rep.push(
+                    Severity::Error,
+                    "coll-bytes",
+                    None,
+                    None,
+                    format!(
+                        "AllreduceTree: {total} total bytes, expected \
+                         {want} (P={p}, P2={p2})"
+                    ),
+                );
+            }
+        }
+    }
+    rep
+}
+
+// ------------------------------------------------- executor self-checks
+
+/// `debug_assertions` hook for every `run_dag` entry: panic with the
+/// rendered report if the workload violates an executor contract.
+#[cfg(debug_assertions)]
+pub(crate) fn debug_check_dag(wl: &DagWorkload) {
+    let rep = WorkloadAnalyzer::new().analyze_dag(wl);
+    assert!(
+        rep.is_clean(),
+        "workload verifier rejected the DAG before execution:\n{}",
+        rep.render()
+    );
+}
+
+/// `debug_assertions` hook for every streamed round as it materializes
+/// (a live source cannot be pre-analyzed without consuming it): the
+/// cheap structural subset — sentinel misuse, self-flows, unrouted
+/// paths, bad floors — checked per round.
+#[cfg(debug_assertions)]
+pub(crate) fn debug_check_round(round: &[StreamNode], round_idx: u32) {
+    let a = WorkloadAnalyzer::new();
+    let mut rep = AnalysisReport::default();
+    for (i, n) in round.iter().enumerate() {
+        let id = i as u32;
+        let (ka, kb, floor) = match n {
+            StreamNode::Compute { a, b, start, .. } => (*a, *b, *start),
+            StreamNode::Xfer { a, b, rf, start } => {
+                a.check_xfer(
+                    &mut rep,
+                    rf.flow.src_nic,
+                    rf.flow.dst_nic,
+                    rf.flow.bytes,
+                    rf.path.links.len(),
+                    Some(id),
+                    Some(round_idx),
+                );
+                (*a, *b, *start)
+            }
+        };
+        a.check_floor(&mut rep, floor, Some(id), Some(round_idx));
+        if (ka == NO_KEY) != (kb == NO_KEY) {
+            rep.push(
+                Severity::Error,
+                "no-key-misuse",
+                Some(id),
+                Some(round_idx),
+                format!("half-sentinel keys ({ka}, {kb})"),
+            );
+        }
+    }
+    assert!(
+        rep.is_clean(),
+        "workload verifier rejected streamed round {round_idx}:\n{}",
+        rep.render()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+    use crate::fabric::workload::{self, DagNode};
+    use crate::fabric::{Flow, RoutedFlow, Router};
+    use crate::topology::Topology;
+
+    fn topo() -> Topology {
+        Topology::new(&AuroraConfig::small(4, 4))
+    }
+
+    fn routed(r: &mut Router, s: u32, d: u32, bytes: u64) -> RoutedFlow {
+        let f = Flow::new(s, d, bytes);
+        RoutedFlow { path: r.route(&f), flow: f }
+    }
+
+    #[test]
+    fn clean_ring_dag_passes() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let nics = workload::spread_nics(&t, 8);
+        let wl = workload::dag_from_rounds(
+            &mut r,
+            &workload::ring_rounds(&nics, 3, 4096),
+            0.0,
+        );
+        let rep = WorkloadAnalyzer::new().analyze_dag(&wl);
+        assert!(rep.is_clean(), "{}", rep.render());
+        assert_eq!(rep.nodes, wl.len());
+        assert_eq!(rep.warnings(), 0, "{}", rep.render());
+    }
+
+    #[test]
+    fn cycle_is_rejected_with_structured_diag() {
+        // build a 2-cycle by bypassing `push` (the `nodes` field is
+        // public): node 0 <-> node 1
+        let t = topo();
+        let mut r = Router::new(&t);
+        let mut wl = DagWorkload::new();
+        wl.nodes.push(DagNode {
+            kind: DagKind::Xfer(routed(&mut r, 0, 200, 4096)),
+            deps: vec![1],
+            start: 0.0,
+        });
+        wl.nodes.push(DagNode {
+            kind: DagKind::Compute(1.0),
+            deps: vec![0],
+            start: 0.0,
+        });
+        let rep = WorkloadAnalyzer::new().analyze_dag(&wl);
+        assert!(!rep.is_clean());
+        assert!(
+            rep.diags.iter().any(|d| d.check == "cycle"
+                && d.severity == Severity::Error
+                && d.node.is_some()),
+            "{}",
+            rep.render()
+        );
+        // the forward-dep contract check fires too (node 0 -> 1)
+        assert!(rep.diags.iter().any(|d| d.check == "forward-dep"));
+    }
+
+    #[test]
+    fn dangling_dep_self_flow_and_bad_floor_are_errors() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let mut wl = DagWorkload::new();
+        wl.nodes.push(DagNode {
+            kind: DagKind::Xfer(routed(&mut r, 7, 7, 4096)), // self-flow
+            deps: vec![42],                                  // dangling
+            start: f64::NAN,                                 // bad floor
+        });
+        let rep = WorkloadAnalyzer::new().analyze_dag(&wl);
+        for check in ["dangling-dep", "self-flow", "bad-floor"] {
+            assert!(
+                rep.diags.iter().any(|d| d.check == check
+                    && d.severity == Severity::Error),
+                "missing {check}: {}",
+                rep.render()
+            );
+        }
+    }
+
+    #[test]
+    fn half_sentinel_round_is_rejected() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let rounds = vec![vec![StreamNode::Xfer {
+            a: NO_KEY,
+            b: 3,
+            rf: routed(&mut r, 0, 200, 4096),
+            start: 0.0,
+        }]];
+        let rep = WorkloadAnalyzer::new().analyze_rounds(&rounds);
+        assert!(!rep.is_clean());
+        assert!(
+            rep.diags.iter().any(|d| d.check == "no-key-misuse"
+                && d.round == Some(0)),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn sparse_key_gap_warns() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let a = WorkloadAnalyzer { sparse_key_gap: 4 };
+        let mk = |r: &mut Router| StreamNode::Xfer {
+            a: 0,
+            b: 1,
+            rf: routed(r, 0, 200, 4096),
+            start: 0.0,
+        };
+        let mut rounds = vec![vec![mk(&mut r)]];
+        for _ in 0..6 {
+            rounds.push(vec![StreamNode::Compute {
+                a: 9,
+                b: 9,
+                dt: 0.1,
+                start: 0.0,
+            }]);
+        }
+        rounds.push(vec![mk(&mut r)]); // keys 0/1 idle for 7 > 4 rounds
+        let rep = a.analyze_rounds(&rounds);
+        assert!(rep.is_clean(), "sparse keys are a warning, not an error");
+        assert!(
+            rep.diags.iter().any(|d| d.check == "sparse-key"),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn key_aliasing_binding_conflict_warns() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let rounds = vec![
+            vec![StreamNode::Xfer {
+                a: 5,
+                b: 6,
+                rf: routed(&mut r, 0, 200, 4096),
+                start: 0.0,
+            }],
+            vec![StreamNode::Xfer {
+                a: 5, // same key, different source NIC
+                b: 6,
+                rf: routed(&mut r, 8, 200, 4096),
+                start: 0.0,
+            }],
+        ];
+        let rep = WorkloadAnalyzer::new().analyze_rounds(&rounds);
+        assert!(
+            rep.diags.iter().any(|d| d.check == "key-aliasing"),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn throttled_source_empty_round_is_deadlock_hazard() {
+        struct Empties(u32);
+        impl RoundSource for Empties {
+            fn next_round(&mut self) -> Option<Vec<StreamNode>> {
+                if self.0 == 0 {
+                    return None;
+                }
+                self.0 -= 1;
+                Some(Vec::new())
+            }
+            fn next_round_not_before(&mut self) -> f64 {
+                1.0
+            }
+        }
+        let rep =
+            WorkloadAnalyzer::new().analyze_source(&mut Empties(3), 16);
+        assert!(!rep.is_clean());
+        assert!(
+            rep.diags.iter().any(|d| d.check == "empty-round"
+                && d.severity == Severity::Error),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn non_monotone_not_before_is_error() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let rf = routed(&mut r, 0, 200, 4096);
+        struct Back {
+            k: u32,
+            rf: RoutedFlow,
+        }
+        impl RoundSource for Back {
+            fn next_round(&mut self) -> Option<Vec<StreamNode>> {
+                if self.k >= 3 {
+                    return None;
+                }
+                self.k += 1;
+                Some(vec![StreamNode::Xfer {
+                    a: NO_KEY,
+                    b: NO_KEY,
+                    rf: self.rf.clone(),
+                    start: 10.0,
+                }])
+            }
+            fn next_round_not_before(&mut self) -> f64 {
+                // 5.0, 4.0, 3.0, ... — goes backwards
+                5.0 - self.k as f64
+            }
+        }
+        let rep = WorkloadAnalyzer::new()
+            .analyze_source(&mut Back { k: 0, rf }, 16);
+        assert!(
+            rep.diags.iter().any(|d| d.check == "non-monotone-not-before"
+                && d.severity == Severity::Error),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn render_carries_ids_and_counts() {
+        let mut wl = DagWorkload::new();
+        wl.nodes.push(DagNode {
+            kind: DagKind::Compute(1.0),
+            deps: vec![9],
+            start: 0.0,
+        });
+        let rep = WorkloadAnalyzer::new().analyze_dag(&wl);
+        let text = rep.render();
+        assert!(text.contains("error[dangling-dep] node 0"), "{text}");
+        assert!(text.contains("error(s)"), "{text}");
+    }
+}

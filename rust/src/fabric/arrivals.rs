@@ -152,18 +152,38 @@ impl ArrivalSource for PoissonArrivals {
 /// File-backed trace reader: whitespace-separated
 /// `t_seconds src dst bytes [class]` per line, `#`-prefixed and blank
 /// lines skipped. Panics with the 1-based line number on malformed
-/// input or decreasing timestamps (a corrupt trace should fail loudly,
+/// input, non-finite or decreasing timestamps, aliased endpoints, or —
+/// when a bound is installed via [`TraceArrivals::with_endpoint_bound`]
+/// — out-of-range endpoint ids (a corrupt trace should fail loudly,
 /// not silently misprice).
 pub struct TraceArrivals<R: BufRead> {
     reader: R,
     line: usize,
     last_t: f64,
     buf: String,
+    /// Exclusive endpoint-id upper bound (`None`: unchecked — the
+    /// router's topology lookup is then the only guard).
+    endpoint_bound: Option<u32>,
 }
 
 impl<R: BufRead> TraceArrivals<R> {
     pub fn new(reader: R) -> Self {
-        Self { reader, line: 0, last_t: 0.0, buf: String::new() }
+        Self {
+            reader,
+            line: 0,
+            last_t: 0.0,
+            buf: String::new(),
+            endpoint_bound: None,
+        }
+    }
+
+    /// Reject endpoint ids `>= bound` at parse time (pass the
+    /// topology's compute-endpoint count), so a rank-mangled trace
+    /// fails with its line number instead of a routing panic deep in
+    /// the executor.
+    pub fn with_endpoint_bound(mut self, bound: u32) -> Self {
+        self.endpoint_bound = Some(bound);
+        self
     }
 }
 
@@ -208,12 +228,27 @@ impl<R: BufRead> ArrivalSource for TraceArrivals<R> {
                 }),
             };
             assert!(
-                t.is_finite() && t >= self.last_t,
+                t.is_finite(),
+                "trace line {}: non-finite timestamp {t}",
+                self.line
+            );
+            assert!(
+                t >= self.last_t,
                 "trace line {}: timestamp {t} decreases (last {})",
                 self.line,
                 self.last_t
             );
             assert!(src != dst, "trace line {}: src == dst", self.line);
+            if let Some(bound) = self.endpoint_bound {
+                for (name, ep) in [("src", src), ("dst", dst)] {
+                    assert!(
+                        ep < bound,
+                        "trace line {}: {name} {ep} out of range \
+                         (endpoints < {bound})",
+                        self.line
+                    );
+                }
+            }
             self.last_t = t;
             return Some(Arrival { t, src, dst, bytes, class });
         }

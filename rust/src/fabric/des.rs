@@ -55,7 +55,7 @@ use super::{FlowTimes, RoutedFlow};
 use crate::topology::{LinkId, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 /// DES knobs.
 #[derive(Debug, Clone)]
@@ -67,8 +67,11 @@ pub struct DesOpts {
     pub incast_threshold: usize,
     /// Rate multiplier applied to victims when congestion mgmt is OFF.
     pub victim_penalty: f64,
-    /// Degraded links (§3.4 lane-disable): bandwidth multiplier per link.
-    pub degraded: HashMap<LinkId, f64>,
+    /// Degraded links (§3.4 lane-disable): bandwidth multiplier per
+    /// link. A `BTreeMap` on purpose (detlint R1): capacity
+    /// installation iterates this map, and iteration order must be a
+    /// pure function of the contents.
+    pub degraded: BTreeMap<LinkId, f64>,
     /// Switch per-port queue capacity: bounds how much in-flight bulk data
     /// can sit ahead of a message on each hop (drives the GPCNet latency
     /// inflation of Fig 5).
@@ -95,7 +98,7 @@ impl Default for DesOpts {
             congestion_mgmt: true,
             incast_threshold: 4,
             victim_penalty: 0.30,
-            degraded: HashMap::new(),
+            degraded: BTreeMap::new(),
             queue_cap_bytes: 256.0 * 1024.0,
             solver_threads: 1,
             single_bottleneck_fastpath: true,
@@ -458,6 +461,11 @@ impl StreamExec<'_, '_> {
             }
         };
         let k = self.materialized_rounds;
+        // verify the round's structural contracts (sentinel use, routed
+        // paths, finite floors) before any of it is wired into the
+        // frontier — a malformed round must fail here, not deadlock later
+        #[cfg(debug_assertions)]
+        super::analysis::debug_check_round(&round, k);
         self.materialized_rounds += 1;
         self.rounds += 1;
         self.s.round_pending.push_back(round.len() as u32);
@@ -1133,6 +1141,8 @@ impl<'t> DesSim<'t> {
         }
         st.batches += 1;
         st.components += st.comp_ends.len();
+        #[cfg(debug_assertions)]
+        self.debug_check_partition(d, st);
 
         // ---- lazily sync transferred bytes (serial: per-flow writes
         // the component solves below read) ----
@@ -1219,6 +1229,73 @@ impl<'t> DesSim<'t> {
                 }
             }
             start = end;
+        }
+        #[cfg(debug_assertions)]
+        self.debug_check_capacity(d, st);
+    }
+
+    /// `debug_assertions` sanitizer for the PR 5 disjointness argument:
+    /// the partition walk's transitive closure must place two flows
+    /// sharing any link in the SAME component (that is what makes the
+    /// per-component solves independent and the fan-out bit-identical),
+    /// and no flow in two components. Checked at every batch in debug
+    /// builds — the prose proof in EXPERIMENTS.md becomes a property.
+    #[cfg(debug_assertions)]
+    fn debug_check_partition(&self, d: &Dense, st: &SolveState) {
+        let mut link_comp: FxHashMap<u32, usize> = FxHashMap::default();
+        let mut flow_comp: FxHashMap<usize, usize> = FxHashMap::default();
+        let mut start = 0usize;
+        for (ci, &end) in st.comp_ends.iter().enumerate() {
+            for &fi in &st.comp[start..end] {
+                if let Some(prev) = flow_comp.insert(fi, ci) {
+                    panic!(
+                        "solve_batch partition: flow {fi} in components \
+                         {prev} and {ci}"
+                    );
+                }
+                for &l in d.links_of(fi) {
+                    if let Some(prev) = link_comp.insert(l, ci) {
+                        assert!(
+                            prev == ci,
+                            "solve_batch partition not link-disjoint: \
+                             dense link {l} touched by components {prev} \
+                             and {ci}"
+                        );
+                    }
+                }
+            }
+            start = end;
+        }
+    }
+
+    /// `debug_assertions` sanitizer: after the merge/commit, the summed
+    /// committed rates of the active flows on every link touched by this
+    /// batch must not exceed the link's effective capacity (1e-9
+    /// relative slack for the waterfill's float arithmetic). Partitions
+    /// are link-closed, so `link_flows` holds every rate sharing the
+    /// link — the sum is the whole subscription, not a sample.
+    #[cfg(debug_assertions)]
+    fn debug_check_capacity(&self, d: &Dense, st: &SolveState) {
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
+        for &fi in &st.comp {
+            for &l in d.links_of(fi) {
+                if !seen.insert(l) {
+                    continue;
+                }
+                let lu = l as usize;
+                let sum: f64 = st.link_flows[lu]
+                    .iter()
+                    .map(|&fu| fu as usize)
+                    .filter(|&f2| st.active[f2])
+                    .map(|f2| st.rate[f2])
+                    .sum();
+                let cap = d.cap[lu];
+                assert!(
+                    sum <= cap * (1.0 + 1e-9) + 1e-12,
+                    "committed rates oversubscribe dense link {l}: \
+                     {sum} > cap {cap}"
+                );
+            }
         }
     }
 
@@ -1802,6 +1879,13 @@ impl<'t> DesSim<'t> {
         full_resolve: bool,
         s: &mut DesScratch,
     ) -> DagResult {
+        // pre-execution verifier (fabric::analysis): reject cyclic /
+        // forward-dep / self-flow workloads with a structured report
+        // before any solve state is touched. Debug builds only — the
+        // pass is O(nodes + edges) but release campaigns re-run known
+        // workload shapes millions of times.
+        #[cfg(debug_assertions)]
+        super::analysis::debug_check_dag(wl);
         s.reset();
         s.map.ensure(self.topo.link_universe());
         let n_nodes = wl.nodes.len();
@@ -2822,7 +2906,7 @@ mod tests {
         let bytes = 64u64 << 20;
         let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
         let healthy = DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
-        let mut degraded = HashMap::new();
+        let mut degraded = BTreeMap::new();
         // half the lanes on every link of this path (§3.4 degraded mode)
         for l in &fl[0].path.links {
             degraded.insert(*l, 0.5);

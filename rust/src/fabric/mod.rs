@@ -28,7 +28,13 @@
 //! by peak concurrency — millions of arrivals over simulated hours.
 //! Every execution mode is reachable through one builder,
 //! [`DesSim::session`].
+//!
+//! [`analysis`] is the pre-execution workload verifier: structural
+//! diagnostics (cycles, sentinel misuse, aliasing, collective byte
+//! budgets) over any workload before it reaches an executor — the
+//! paper's validate-before-scale posture applied to inputs.
 
+pub mod analysis;
 pub mod analytic;
 pub mod arrivals;
 pub mod des;
@@ -38,6 +44,10 @@ pub mod routing;
 pub mod rounds;
 pub mod workload;
 
+pub use analysis::{
+    check_collective_rounds, AnalysisReport, Collective, Diagnostic, Severity,
+    WorkloadAnalyzer,
+};
 pub use arrivals::{
     run_open_loop, Arrival, ArrivalSource, PoissonArrivals, RpcClass,
     SteadyCollector, SteadyState, TraceArrivals,

@@ -14,7 +14,7 @@
 
 use super::{BufLoc, Flow, FlowTimes, RoutedFlow, SparseLoadMap};
 use crate::topology::{Path, Topology};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Zero-load + contention cost evaluation, shared by all tiers.
 pub struct CostModel<'t> {
@@ -135,7 +135,7 @@ impl<'t> CostModel<'t> {
     pub fn eval_timed(
         &self,
         flows: &[super::des::TimedFlow],
-        degraded: &HashMap<crate::topology::LinkId, f64>,
+        degraded: &BTreeMap<crate::topology::LinkId, f64>,
     ) -> FlowTimes {
         let mut bytes_on = SparseLoadMap::new();
         let mut msgs_on = SparseLoadMap::new();
@@ -289,7 +289,7 @@ mod tests {
                 start: i as f64 * 0.25,
             })
             .collect();
-        let ub = cm.eval_timed(&timed, &HashMap::new());
+        let ub = cm.eval_timed(&timed, &BTreeMap::new());
         assert!(ub.per_flow[1] >= 0.25, "start must shift the bound");
         let des = DesSim::new(&t, DesOpts::default()).run(&timed);
         for (i, (&u, &d)) in

@@ -9,6 +9,7 @@
 //! repro launch <nodes> <ppn> <app>   run a benchmark via the launcher
 //! repro campaign [threads] [out]     parallel scenario sweep (JSON report)
 //! repro openloop [threads] [out]     1M-arrival open-loop service run
+//! repro lint [scenario|--all]        pre-execution workload verifier
 //! ```
 //!
 //! (The registry is offline in this environment, so argument parsing is
@@ -27,8 +28,8 @@ use aurorasim::validate::{NodeFault, Validator};
 fn usage() -> ! {
     eprintln!(
         "usage: repro \
-         <spec|list|reproduce|functional|validate|launch|campaign|openloop> \
-         ..."
+         <spec|list|reproduce|functional|validate|launch|campaign|openloop\
+         |lint> ..."
     );
     std::process::exit(2);
 }
@@ -190,6 +191,56 @@ fn main() -> Result<()> {
                 rep.write(out)?;
                 println!("report written to {out}");
             }
+        }
+        "lint" => {
+            // repro lint [scenario|--all] — run the pre-execution
+            // workload verifier (fabric::analysis) over every campaign
+            // scenario without executing any of them: closed-loop DAGs
+            // are fully materialized and checked, open-loop services
+            // stream a 64-window prefix through the round-source
+            // liveness checks. Exits nonzero if any scenario's workload
+            // carries a structural error.
+            let target = args.get(1).map(String::as_str).unwrap_or("--all");
+            let seed = aurorasim::reproduce::CAMPAIGN_SEED;
+            let mut scenarios =
+                Campaign::standard(&AuroraConfig::small(8, 4), seed)
+                    .scenarios;
+            scenarios.extend(Campaign::open_loop_aurora(seed).scenarios);
+            if target != "--all" {
+                scenarios.retain(|s| s.name == target);
+                if scenarios.is_empty() {
+                    bail!(
+                        "unknown scenario '{target}' \
+                         (run `repro lint --all` for the full sweep)"
+                    );
+                }
+            }
+            let mut errors = 0usize;
+            for s in &scenarios {
+                let topo = aurorasim::topology::Topology::new(&s.cfg);
+                let rep = s.lint(&topo, 64);
+                println!(
+                    "{:32} {:>7} nodes {:>5} rounds  {} error(s), \
+                     {} warning(s)",
+                    s.name,
+                    rep.nodes,
+                    rep.rounds,
+                    rep.errors(),
+                    rep.warnings()
+                );
+                if !rep.diags.is_empty() {
+                    for line in
+                        rep.render().lines().take(rep.diags.len())
+                    {
+                        println!("    {line}");
+                    }
+                }
+                errors += rep.errors();
+            }
+            if errors > 0 {
+                bail!("lint: {errors} workload error(s)");
+            }
+            println!("lint: {} scenario(s), no errors", scenarios.len());
         }
         _ => usage(),
     }

@@ -357,7 +357,7 @@ impl<'t> World<'t> {
     /// bandwidths (see [`Router::set_degraded`]).
     pub fn set_degraded(
         &mut self,
-        degraded: std::collections::HashMap<LinkId, f64>,
+        degraded: std::collections::BTreeMap<LinkId, f64>,
     ) {
         self.router
             .set_degraded(degraded.iter().map(|(l, m)| (*l, *m)));

@@ -1,0 +1,411 @@
+//! Source-level determinism lint (`detlint`): the engine behind
+//! `src/bin/detlint.rs` and `tests/detlint.rs`.
+//!
+//! The engine's headline guarantees — bit-identical campaign reports at
+//! any thread count, exact streamed/staged equivalence — rest on a few
+//! source-level contracts that nothing in the type system enforces:
+//! iteration must never depend on a randomized hash order, no wall
+//! clock may leak into simulated time, threads are only created by the
+//! pooled worker protocol, and rate arithmetic stays in `f64`. This
+//! module enforces them as a lint over `rust/src/`:
+//!
+//! | rule | contract protected |
+//! |---|---|
+//! | `std-hash-container` | no `std::collections::{HashMap,HashSet}` in `fabric/`/`campaign/` — iteration order is per-process random (`RandomState`), which breaks byte-identical reports; use `FxHashMap` (deterministic hasher) behind sorted/dense commit order, or `BTreeMap` |
+//! | `wall-clock` | no `Instant`/`SystemTime` anywhere in `src/` — simulated time is the only clock, and a wall-clock read makes results machine-dependent |
+//! | `thread-spawn` | threads are created only by `campaign/pool.rs` — the pooled worker protocol is what the determinism argument (serial merge in component-id order) is proven against |
+//! | `hash-iter-float-reduce` | no float `sum`/`fold` over hash-map iterators — float addition is not associative, so a hash-ordered reduction varies across processes; reduce over a sorted/dense order (integer reductions are order-independent: allowlist them) |
+//! | `f32-rate` | no `f32` in `fabric/`/`campaign/` — rate arithmetic is `f64` end-to-end; a single `f32` round-trip breaks the 1e-9 oracle-equivalence tolerance |
+//!
+//! The offline vendored registry rules out `syn`, so this is a
+//! line-oriented scanner, not a parser. Three mechanics keep it honest:
+//! string-literal and comment contents are stripped before matching (a
+//! panic message or doc comment naming `thread::spawn` is not a
+//! violation — and the stripping is also why this file can name its own
+//! needles), identifier matching is token-bounded (`FxHashMap` does not
+//! match `HashMap`), and everything from a `#[cfg(test)]` line to the
+//! end of the file is skipped (test modules sit at the bottom of every
+//! file in this repo; test-local std containers can't perturb report
+//! bytes). Known limitation: a statement split across lines is only
+//! matched line-by-line — the rules target tokens (imports, calls,
+//! types) that sit on one line in idiomatic code.
+//!
+//! Intentional exceptions live in `ci/detlint_allow.txt`, one per line:
+//! `rule|path-suffix|line-needle|reason`. An exception must name the
+//! rule, the file, and a substring of the exact offending line — so an
+//! allowlist entry can never silently cover new code.
+
+use std::fs;
+use std::path::Path;
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct LintDiag {
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub text: String,
+    /// Which determinism contract the rule protects.
+    pub note: &'static str,
+}
+
+impl LintDiag {
+    pub fn render(&self) -> String {
+        format!(
+            "detlint[{}] {}:{}: {}\n    {}",
+            self.rule, self.path, self.line, self.text, self.note
+        )
+    }
+}
+
+/// Parsed `ci/detlint_allow.txt`: explicit, reviewed exceptions.
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    /// (rule, path suffix, line needle) — the reason column is for
+    /// reviewers and not matched against.
+    entries: Vec<(String, String, String)>,
+}
+
+impl Allowlist {
+    /// Parse the `rule|path-suffix|line-needle|reason` format. `#`
+    /// comment lines and blank lines are skipped; a malformed entry
+    /// (fewer than 3 fields) is ignored rather than silently permitting
+    /// anything.
+    pub fn parse(text: &str) -> Self {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(4, '|').map(str::trim);
+            if let (Some(rule), Some(path), Some(needle)) =
+                (parts.next(), parts.next(), parts.next())
+            {
+                if !rule.is_empty() && !path.is_empty() && !needle.is_empty()
+                {
+                    entries.push((
+                        rule.to_string(),
+                        path.to_string(),
+                        needle.to_string(),
+                    ));
+                }
+            }
+        }
+        Self { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Does some entry permit this (rule, file, line)? The raw line is
+    /// matched (not the sanitized one), so the needle can quote the
+    /// code exactly as written.
+    pub fn permits(&self, rule: &str, path: &str, raw_line: &str) -> bool {
+        self.entries.iter().any(|(r, p, n)| {
+            r == rule && path.ends_with(p.as_str()) && raw_line.contains(n)
+        })
+    }
+}
+
+/// Strip string-literal contents, char literals and `//` comments from
+/// one line, so needles only match real code tokens. Lifetimes (`'t`)
+/// are preserved; `"..."` bodies become spaces; everything from the
+/// first remaining `//` is dropped.
+fn sanitize(line: &str) -> String {
+    let b = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                // string literal: skip to the closing quote
+                out.push(' ');
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            b'\'' => {
+                // char literal ('x', '\n', '\'') vs lifetime ('t in
+                // generics): a char literal closes with a quote within
+                // a few bytes
+                let close = if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    // escaped char: '\x' or '\u{..}' — find the quote
+                    (i + 2..b.len().min(i + 12)).find(|&j| b[j] == b'\'')
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                    Some(i + 2)
+                } else {
+                    None
+                };
+                match close {
+                    Some(j) => {
+                        out.push(' ');
+                        i = j + 1;
+                    }
+                    None => {
+                        out.push('\'');
+                        i += 1;
+                    }
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => break,
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `hay` contain `tok` as a whole identifier (not as a substring
+/// of a longer identifier — `FxHashMap` must not match `HashMap`)?
+fn contains_token(hay: &str, tok: &str) -> bool {
+    let ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let h = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(tok) {
+        let s = from + pos;
+        let e = s + tok.len();
+        let pre = s == 0 || !ident(h[s - 1]);
+        let post = e == h.len() || !ident(h[e]);
+        if pre && post {
+            return true;
+        }
+        from = s + 1;
+    }
+    false
+}
+
+const NOTE_HASH: &str = "std hash containers iterate in per-process \
+     random order (RandomState); campaign bytes must not depend on it — \
+     use FxHashMap behind sorted/dense commit order, or BTreeMap";
+const NOTE_CLOCK: &str = "simulated time is the only clock; a wall-clock \
+     read makes results machine-dependent";
+const NOTE_SPAWN: &str = "threads are created only by campaign/pool.rs — \
+     the pooled worker protocol the determinism proof covers";
+const NOTE_REDUCE: &str = "float reduction over a hash-map iterator is \
+     order-dependent (float addition is not associative); reduce over a \
+     sorted or dense order — integer reductions are order-independent \
+     and belong in ci/detlint_allow.txt";
+const NOTE_F32: &str = "rate arithmetic is f64 end-to-end; an f32 \
+     round-trip breaks the 1e-9 oracle-equivalence tolerance";
+
+/// Scan one file's source. `rel` is the path relative to the source
+/// root (`fabric/des.rs`), used for rule scoping and diagnostics.
+pub fn scan_source(
+    rel: &str,
+    source: &str,
+    allow: &Allowlist,
+    diags: &mut Vec<LintDiag>,
+) {
+    let det_scope =
+        rel.starts_with("fabric/") || rel.starts_with("campaign/");
+    let pool_exempt = rel == "campaign/pool.rs";
+    let mut push = |diags: &mut Vec<LintDiag>,
+                    rule: &'static str,
+                    note: &'static str,
+                    lineno: usize,
+                    raw: &str| {
+        if !allow.permits(rule, rel, raw) {
+            diags.push(LintDiag {
+                rule,
+                path: rel.to_string(),
+                line: lineno,
+                text: raw.trim().to_string(),
+                note,
+            });
+        }
+    };
+    for (idx, raw) in source.lines().enumerate() {
+        let lineno = idx + 1;
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            // test modules sit at the bottom; test-local containers
+            // cannot perturb report bytes
+            break;
+        }
+        let line = sanitize(raw);
+        if line.trim().is_empty() {
+            continue;
+        }
+
+        // R1 std-hash-container: std::collections::{HashMap,HashSet}
+        // anywhere in the deterministic-order scope
+        if det_scope
+            && line.contains("std::collections::")
+            && (contains_token(&line, "HashMap")
+                || contains_token(&line, "HashSet"))
+        {
+            push(diags, "std-hash-container", NOTE_HASH, lineno, raw);
+        }
+
+        // R2 wall-clock: Instant / SystemTime anywhere in src/
+        if contains_token(&line, "Instant")
+            || contains_token(&line, "SystemTime")
+        {
+            push(diags, "wall-clock", NOTE_CLOCK, lineno, raw);
+        }
+
+        // R3 thread-spawn: only campaign/pool.rs may create threads
+        if !pool_exempt
+            && (line.contains("thread::spawn")
+                || line.contains("thread::Builder"))
+        {
+            push(diags, "thread-spawn", NOTE_SPAWN, lineno, raw);
+        }
+
+        // R4 hash-iter-float-reduce: sum/fold over a hash-map iterator
+        let hash_iter = line.contains(".values()")
+            || line.contains(".keys()")
+            || (line.contains(".iter()")
+                && (contains_token(&line, "FxHashMap")
+                    || contains_token(&line, "HashMap")
+                    || contains_token(&line, "FxHashSet")
+                    || contains_token(&line, "HashSet")));
+        if det_scope
+            && hash_iter
+            && !line.contains("BTree")
+            && (contains_token(&line, "sum") || contains_token(&line, "fold"))
+        {
+            push(diags, "hash-iter-float-reduce", NOTE_REDUCE, lineno, raw);
+        }
+
+        // R5 f32-rate: no f32 in the rate-arithmetic scope
+        if det_scope && contains_token(&line, "f32") {
+            push(diags, "f32-rate", NOTE_F32, lineno, raw);
+        }
+    }
+}
+
+/// Result of a whole-tree scan.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub diags: Vec<LintDiag>,
+    pub files: usize,
+}
+
+/// Recursively scan every `.rs` file under `src_root` (sorted walk, so
+/// diagnostics come out in a stable order).
+pub fn scan_tree(src_root: &Path, allow: &Allowlist) -> ScanResult {
+    let mut out = ScanResult::default();
+    let mut stack = vec![src_root.to_path_buf()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = fs::read_dir(&dir) else { continue };
+        let mut entries: Vec<_> =
+            rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                files.push(p);
+            }
+        }
+    }
+    files.sort();
+    for p in files {
+        let Ok(source) = fs::read_to_string(&p) else { continue };
+        let rel = p
+            .strip_prefix(src_root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        scan_source(&rel, &source, allow, &mut out.diags);
+        out.files += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_str(rel: &str, src: &str) -> Vec<LintDiag> {
+        let mut d = Vec::new();
+        scan_source(rel, src, &Allowlist::default(), &mut d);
+        d
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_fire() {
+        let src = "// would otherwise pay a thread::spawn each\n\
+                   fn f() { panic!(\"no std::collections::HashMap here\"); }\n";
+        assert!(scan_str("fabric/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fx_alias_does_not_match_hash_token() {
+        let src = "use rustc_hash::FxHashMap;\n\
+                   fn f(m: &FxHashMap<u32, f64>) -> usize { m.len() }\n";
+        assert!(scan_str("fabric/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_module_tail_is_skipped() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use std::collections::HashSet;\n\
+                   }\n";
+        assert!(scan_str("fabric/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scope_excludes_non_fabric_dirs() {
+        let src = "use std::collections::HashMap;\nlet x: f32 = 0.0;\n";
+        assert!(scan_str("runtime/x.rs", src).is_empty());
+        assert_eq!(scan_str("fabric/x.rs", src).len(), 2);
+    }
+
+    #[test]
+    fn pool_is_exempt_from_thread_spawn() {
+        let src = "std::thread::spawn(move || worker_loop(&sh, me));\n";
+        assert!(scan_str("campaign/pool.rs", src).is_empty());
+        assert_eq!(scan_str("campaign/other.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn allowlist_permits_exact_rule_path_and_needle() {
+        let allow = Allowlist::parse(
+            "# comment\n\
+             \n\
+             hash-iter-float-reduce|fabric/x.rs|total: u64|integer sum\n",
+        );
+        assert_eq!(allow.len(), 1);
+        let src = "let total: u64 = m.values().sum();\n";
+        let mut d = Vec::new();
+        scan_source("fabric/x.rs", src, &allow, &mut d);
+        assert!(d.is_empty(), "allowlisted line must be permitted");
+        // same line, different file: still fires
+        let mut d2 = Vec::new();
+        scan_source("fabric/y.rs", src, &allow, &mut d2);
+        assert_eq!(d2.len(), 1);
+    }
+
+    #[test]
+    fn render_names_rule_file_and_line() {
+        let d = scan_str("fabric/x.rs", "let t = x as f32;\n");
+        assert_eq!(d.len(), 1);
+        let r = d[0].render();
+        assert!(r.contains("detlint[f32-rate] fabric/x.rs:1"), "{r}");
+    }
+}

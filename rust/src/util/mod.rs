@@ -1,5 +1,6 @@
 //! Self-contained utilities (this repo builds offline; no clap/serde/rand).
 
+pub mod detlint;
 pub mod json;
 pub mod rng;
 

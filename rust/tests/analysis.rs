@@ -1,0 +1,254 @@
+//! PR-8 workload verifier: corrupt DAGs are rejected with structured
+//! diagnostics *before* any solve (both through `WorkloadAnalyzer`
+//! directly and through the debug-build executor hooks), the
+//! `mpi::coll` round generators satisfy their closed-form
+//! byte-conservation identities, and every campaign scenario lints
+//! clean end to end.
+
+use std::panic::AssertUnwindSafe;
+
+use aurorasim::campaign::{Campaign, Scenario, Workload};
+use aurorasim::config::AuroraConfig;
+use aurorasim::fabric::des::{DesOpts, DesScratch, DesSim};
+use aurorasim::fabric::{
+    check_collective_rounds, workload, Collective, Flow, RoundSource, Router,
+    RoutedFlow, RpcClass, Severity, StreamNode, WorkloadAnalyzer,
+};
+use aurorasim::fabric::workload::{DagKind, DagNode, DagWorkload, NO_KEY};
+use aurorasim::mpi::{coll, Comm};
+use aurorasim::topology::Topology;
+
+fn topo() -> Topology {
+    Topology::new(&AuroraConfig::small(4, 4))
+}
+
+fn routed(r: &mut Router, s: u32, d: u32, bytes: u64) -> RoutedFlow {
+    let f = Flow::new(s, d, bytes);
+    RoutedFlow { path: r.route(&f), flow: f }
+}
+
+/// A two-node dependency cycle, built by bypassing `DagWorkload::push`
+/// (whose `deps < id` assert already stops forward deps) straight into
+/// the `pub nodes` escape hatch.
+fn cyclic_dag(t: &Topology) -> DagWorkload {
+    let mut r = Router::new(t);
+    let nics = workload::spread_nics(t, 4);
+    let mut wl = DagWorkload::new();
+    wl.nodes.push(DagNode {
+        kind: DagKind::Xfer(routed(&mut r, nics[0], nics[1], 1 << 20)),
+        deps: vec![1],
+        start: 0.0,
+    });
+    wl.nodes.push(DagNode {
+        kind: DagKind::Xfer(routed(&mut r, nics[2], nics[3], 1 << 20)),
+        deps: vec![0],
+        start: 0.0,
+    });
+    wl
+}
+
+/// The analyzer names the cycle with a structured diagnostic: an
+/// `Error`-severity `cycle` check carrying a member node id.
+#[test]
+fn analyzer_rejects_cycle_with_structured_diagnostic() {
+    let wl = cyclic_dag(&topo());
+    let rep = WorkloadAnalyzer::new().analyze_dag(&wl);
+    assert!(!rep.is_clean());
+    let d = rep
+        .diags
+        .iter()
+        .find(|d| d.check == "cycle")
+        .expect("a cycle diagnostic");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(d.node.is_some(), "cycle diagnostic names a member node");
+    assert!(rep.render().contains("cycle"));
+}
+
+/// Acceptance: in a debug build the executor refuses a cyclic DAG
+/// before solving anything — `run_dag` panics with the rendered report.
+#[test]
+#[cfg(debug_assertions)]
+fn run_dag_rejects_cyclic_workload_before_solving() {
+    let t = topo();
+    let wl = cyclic_dag(&t);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        sim.run_dag(&wl);
+    }))
+    .expect_err("cyclic DAG must be rejected");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic carries the rendered report");
+    assert!(
+        msg.contains("workload verifier rejected") && msg.contains("cycle"),
+        "got {msg:?}"
+    );
+}
+
+/// A round source that emits one half-sentinel node (`a` keyed, `b`
+/// `NO_KEY`) — the exact misuse that silently breaks streamed/staged
+/// equivalence.
+struct HalfSentinel {
+    t: Topology,
+    fired: bool,
+}
+
+impl RoundSource for HalfSentinel {
+    fn next_round(&mut self) -> Option<Vec<StreamNode>> {
+        if self.fired {
+            return None;
+        }
+        self.fired = true;
+        let mut r = Router::new(&self.t);
+        let nics = workload::spread_nics(&self.t, 2);
+        Some(vec![StreamNode::Xfer {
+            a: 7,
+            b: NO_KEY,
+            rf: routed(&mut r, nics[0], nics[1], 4096),
+            start: 0.0,
+        }])
+    }
+
+    fn next_round_not_before(&mut self) -> f64 {
+        0.0
+    }
+}
+
+/// Acceptance: key misuse in a streamed round is rejected by the
+/// debug-build per-round hook before the round is priced.
+#[test]
+#[cfg(debug_assertions)]
+fn streamed_half_sentinel_is_rejected_before_solving() {
+    let t = topo();
+    let sim = DesSim::new(&t, DesOpts::default());
+    let mut src = HalfSentinel { t: topo(), fired: false };
+    let mut scratch = DesScratch::new();
+    let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        sim.session(&mut scratch).stream(&mut src);
+    }))
+    .expect_err("half-sentinel round must be rejected");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic carries the rendered report");
+    assert!(
+        msg.contains("rejected streamed round")
+            && msg.contains("no-key-misuse"),
+        "got {msg:?}"
+    );
+}
+
+// --------------------------------------- collective byte conservation
+
+/// Every `mpi::coll` generator satisfies its closed-form identity at
+/// power-of-two, odd, and remainder rank counts.
+#[test]
+fn coll_generators_satisfy_closed_form_budgets() {
+    for p in [4usize, 5, 8, 12] {
+        let comm = Comm::world(p);
+        let bytes = 1u64 << 20;
+        let cases: Vec<(Collective, Vec<Vec<(usize, usize, u64)>>)> = vec![
+            (Collective::AllreduceRing, coll::allreduce_ring_rounds(&comm, bytes)),
+            (Collective::AllreduceTree, coll::allreduce_tree_rounds(&comm, bytes)),
+            (Collective::Alltoall, coll::alltoall_rounds(&comm, bytes)),
+            (Collective::Allgather, coll::allgather_rounds(&comm, bytes)),
+            (Collective::ReduceScatter, coll::reduce_scatter_rounds(&comm, bytes)),
+            (Collective::Bcast, coll::bcast_rounds(&comm, 0, bytes)),
+        ];
+        for (kind, rounds) in cases {
+            let rep = check_collective_rounds(kind, p, bytes, &rounds);
+            assert!(
+                rep.is_clean(),
+                "{kind:?} P={p}: generator fails its own identity:\n{}",
+                rep.render()
+            );
+        }
+    }
+}
+
+/// The identity is live: dropping one message or doubling one payload
+/// breaks conservation and the check says so.
+#[test]
+fn coll_check_catches_dropped_and_inflated_messages() {
+    let comm = Comm::world(8);
+    let bytes = 1u64 << 20;
+
+    let mut dropped = coll::allreduce_ring_rounds(&comm, bytes);
+    dropped[3].pop();
+    let rep =
+        check_collective_rounds(Collective::AllreduceRing, 8, bytes, &dropped);
+    assert!(rep.errors() > 0, "a dropped message must break the budget");
+    assert!(rep.diags.iter().any(|d| d.check == "coll-bytes"));
+
+    let mut inflated = coll::allreduce_ring_rounds(&comm, bytes);
+    inflated[0][0].2 *= 2;
+    let rep =
+        check_collective_rounds(Collective::AllreduceRing, 8, bytes, &inflated);
+    assert!(rep.errors() > 0, "a doubled payload must break the budget");
+
+    let mut doubled = coll::alltoall_rounds(&comm, bytes);
+    let extra = doubled[0][0];
+    doubled[1].push(extra);
+    let rep =
+        check_collective_rounds(Collective::Alltoall, 8, bytes, &doubled);
+    assert!(
+        rep.diags.iter().any(|d| {
+            d.check == "coll-permutation" || d.check == "coll-bytes"
+        }),
+        "a repeated ordered pair must be flagged:\n{}",
+        rep.render()
+    );
+}
+
+// ----------------------------------------------- campaign lint surface
+
+/// `Scenario::lint` (the `aurorasim lint` verb's engine) reports zero
+/// errors on every standard-campaign scenario: the severity calibration
+/// keeps real workloads warning-only.
+#[test]
+fn standard_campaign_lints_clean() {
+    let c = Campaign::standard(&AuroraConfig::small(8, 4), 42);
+    assert!(!c.scenarios.is_empty());
+    for s in &c.scenarios {
+        let t = Topology::new(&s.cfg);
+        let rep = s.lint(&t, 16);
+        assert_eq!(
+            rep.errors(),
+            0,
+            "scenario {}: lint found errors:\n{}",
+            s.name,
+            rep.render()
+        );
+        assert!(rep.nodes > 0, "scenario {}: lint saw no nodes", s.name);
+    }
+}
+
+/// The open-loop (streaming) lint path: a small OpenLoop scenario
+/// analyzes its own arrival stream prefix without errors.
+#[test]
+fn open_loop_scenario_lints_clean_via_round_source() {
+    let s = Scenario::new(
+        "ol_lint",
+        AuroraConfig::small(4, 4),
+        DesOpts::default(),
+        Workload::OpenLoop {
+            arrivals: 500,
+            rate: 50_000.0,
+            endpoints: 64,
+            mix: vec![
+                RpcClass { bytes: 4 << 10, weight: 0.7 },
+                RpcClass { bytes: 64 << 10, weight: 0.3 },
+            ],
+            quantum: 1e-3,
+            window: 10e-3,
+            bw_multiplier: 1.0,
+            link_fraction: 0.0,
+        },
+        9,
+    );
+    let t = Topology::new(&s.cfg);
+    let rep = s.lint(&t, 64);
+    assert_eq!(rep.errors(), 0, "open-loop lint errors:\n{}", rep.render());
+    assert!(rep.rounds > 0, "the streaming path analyzed no rounds");
+}

@@ -24,7 +24,7 @@ use aurorasim::fabric::workload::{self, DagWorkload};
 use aurorasim::fabric::{Flow, RoutedFlow, Router};
 use aurorasim::topology::Topology;
 use aurorasim::util::Pcg;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 const REL_TOL: f64 = 1e-9;
 
@@ -123,7 +123,7 @@ fn mixed_case(
     }
     let mut opts = DesOpts::default();
     if degrade {
-        let mut degraded = HashMap::new();
+        let mut degraded = BTreeMap::new();
         for tf in timed.iter().step_by(3) {
             for l in &tf.rf.path.links {
                 degraded.insert(*l, 0.25 + 0.5 * rng.gen_f64());
@@ -245,7 +245,7 @@ fn closed_loop_case(
     }
     let mut opts = DesOpts::default();
     if degrade {
-        let mut degraded = HashMap::new();
+        let mut degraded = BTreeMap::new();
         for node in wl.nodes.iter().step_by(3) {
             if let aurorasim::fabric::DagKind::Xfer(rf) = &node.kind {
                 for l in &rf.path.links {
@@ -583,7 +583,7 @@ fn route_cache_does_not_leak_capacities_across_des_opts() {
     assert!(cached.route_cache_hits() > 0);
     let clean = DesSim::new(&topo, DesOpts::default()).run_dag(&dag);
     // degrade every used link to 25% and reprice the SAME cached routes
-    let mut degraded = HashMap::new();
+    let mut degraded = BTreeMap::new();
     for node in &dag.nodes {
         if let DagKind::Xfer(rf) = &node.kind {
             for l in &rf.path.links {
@@ -963,7 +963,7 @@ fn world_set_degraded_reprices_both_layers() {
     let t_clean = coll::allreduce_ring_time(&mut clean, &comm, 8 << 20);
     let mut slow =
         World::new(&m.topo, m.place_job(0, 32, 1)).des_fabric();
-    let degraded: HashMap<_, _> = slow
+    let degraded: BTreeMap<_, _> = slow
         .nics
         .iter()
         .map(|&n| (LinkId::NicUp(n), 0.1))

@@ -1,0 +1,143 @@
+//! The determinism lint as a test: `cargo test` fails whenever
+//! `rust/src/` violates a detlint rule (same engine and allowlist as
+//! the `detlint` binary / CI job), and the fixture sweep proves every
+//! rule class actually fires on deliberately-violating code — a lint
+//! that can't catch its own fixtures is decoration.
+
+use aurorasim::util::detlint::{scan_source, scan_tree, Allowlist};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn manifest() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_allowlist() -> Allowlist {
+    let p = manifest().join("..").join("ci").join("detlint_allow.txt");
+    Allowlist::parse(&fs::read_to_string(p).expect("ci/detlint_allow.txt"))
+}
+
+fn scan_fixture(name: &str) -> Vec<String> {
+    let p = manifest()
+        .join("tests")
+        .join("fixtures")
+        .join("detlint")
+        .join(name);
+    let src = fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("fixture {name}: {e}"));
+    // fixtures are scanned as if they lived in the strictest scope
+    let mut diags = Vec::new();
+    scan_source(
+        &format!("fabric/{name}"),
+        &src,
+        &Allowlist::default(),
+        &mut diags,
+    );
+    diags.iter().map(|d| d.rule.to_string()).collect()
+}
+
+/// The tree is lint-clean modulo the reviewed allowlist — the same
+/// check the blocking CI job runs.
+#[test]
+fn src_tree_is_clean_under_allowlist() {
+    let res = scan_tree(&manifest().join("src"), &repo_allowlist());
+    assert!(res.files > 30, "walked only {} files", res.files);
+    let rendered: Vec<String> =
+        res.diags.iter().map(|d| d.render()).collect();
+    assert!(
+        res.diags.is_empty(),
+        "detlint violations in src/:\n{}",
+        rendered.join("\n")
+    );
+}
+
+/// The allowlist is live, minimal and exact: with it removed, scanning
+/// the tree yields findings that are ALL covered by entries — no stale
+/// entry permits nothing, no finding lacks an entry.
+#[test]
+fn allowlist_is_live_and_minimal() {
+    let allow = repo_allowlist();
+    assert!(!allow.is_empty(), "expected at least one reviewed exception");
+    let res = scan_tree(&manifest().join("src"), &Allowlist::default());
+    assert!(
+        !res.diags.is_empty(),
+        "allowlist has entries but an unfiltered scan finds nothing — \
+         delete the stale entries"
+    );
+    for d in &res.diags {
+        assert!(
+            allow.permits(d.rule, &d.path, &d.text),
+            "unfiltered finding not covered by ci/detlint_allow.txt:\n{}",
+            d.render()
+        );
+    }
+}
+
+/// Every rule class fires on its deliberately-violating fixture.
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    for (fixture, rule, min_hits) in [
+        ("std_hash_container.rs", "std-hash-container", 2),
+        ("wall_clock.rs", "wall-clock", 2),
+        ("thread_spawn.rs", "thread-spawn", 1),
+        ("hash_iter_float_reduce.rs", "hash-iter-float-reduce", 3),
+        ("f32_rate.rs", "f32-rate", 2),
+    ] {
+        let rules = scan_fixture(fixture);
+        let hits = rules.iter().filter(|r| r.as_str() == rule).count();
+        assert!(
+            hits >= min_hits,
+            "{fixture}: expected >= {min_hits} {rule} hit(s), got {hits} \
+             (all: {rules:?})"
+        );
+    }
+}
+
+/// Outside the `fabric/`/`campaign/` scope the scoped rules stay quiet
+/// (the fixtures only violate when placed in the strict scope), while
+/// the everywhere-rules still fire.
+#[test]
+fn scoped_rules_respect_directory_scope() {
+    let p = manifest()
+        .join("tests")
+        .join("fixtures")
+        .join("detlint")
+        .join("f32_rate.rs");
+    let src = fs::read_to_string(p).unwrap();
+    let mut diags = Vec::new();
+    scan_source("runtime/f32_rate.rs", &src, &Allowlist::default(), &mut diags);
+    assert!(
+        diags.is_empty(),
+        "f32 outside fabric//campaign/ must not fire: {:?}",
+        diags.iter().map(|d| d.rule).collect::<Vec<_>>()
+    );
+}
+
+/// The binary's allowlist path resolves from the crate manifest — keep
+/// the file parseable (comments + format discipline).
+#[test]
+fn allowlist_file_parses_every_entry() {
+    let p = manifest().join("..").join("ci").join("detlint_allow.txt");
+    let text = fs::read_to_string(p).unwrap();
+    let parsed = Allowlist::parse(&text);
+    let non_comment = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .count();
+    assert_eq!(
+        parsed.len(),
+        non_comment,
+        "every non-comment allowlist line must parse as rule|path|needle"
+    );
+}
+
+/// Fixture hygiene: the fixture directory exists and is never reachable
+/// by the src tree walk (fixtures must not make the clean-tree check
+/// fail).
+#[test]
+fn fixtures_live_outside_the_scanned_tree() {
+    let fixtures = manifest().join("tests").join("fixtures").join("detlint");
+    assert!(fixtures.is_dir());
+    assert!(!fixtures.starts_with(Path::new(&manifest().join("src"))));
+}

@@ -1,0 +1,6 @@
+// detlint fixture: R5 f32-rate must fire (never compiled).
+pub fn share(bytes: u64, dt: f64) -> f32 {
+    let rate = bytes as f32 / dt as f32;
+    let cap: f32 = 25.0e9;
+    rate.min(cap)
+}

@@ -1,0 +1,9 @@
+// detlint fixture: R4 hash-iter-float-reduce must fire (never compiled).
+use rustc_hash::FxHashMap;
+
+pub fn total_rate(rates: &FxHashMap<u32, f64>) -> f64 {
+    let direct: f64 = rates.values().sum();
+    let folded = rates.values().fold(0.0, |a, b| a + b);
+    let keyed: f64 = rates.keys().map(|&k| k as f64).sum();
+    direct + folded + keyed
+}

@@ -1,0 +1,9 @@
+// detlint fixture: R1 std-hash-container must fire (scanned as if at
+// fabric/<this file> by tests/detlint.rs; never compiled).
+use std::collections::HashMap;
+
+pub fn link_loads() -> HashMap<u32, f64> {
+    let mut m = std::collections::HashMap::new();
+    m.insert(0u32, 1.0f64);
+    m
+}

@@ -1,0 +1,9 @@
+// detlint fixture: R3 thread-spawn must fire outside campaign/pool.rs
+// (never compiled).
+pub fn fan_out(n: usize) {
+    let handles: Vec<_> =
+        (0..n).map(|i| std::thread::spawn(move || i * 2)).collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+// detlint fixture: R2 wall-clock must fire (never compiled).
+use std::time::Instant;
+
+pub fn solve_timed() -> f64 {
+    let t0 = Instant::now();
+    let since_epoch = std::time::SystemTime::now();
+    let _ = since_epoch;
+    t0.elapsed().as_secs_f64()
+}

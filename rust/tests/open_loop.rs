@@ -19,7 +19,7 @@ use aurorasim::fabric::arrivals::OpenLoopSource;
 use aurorasim::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
 use aurorasim::fabric::{
     run_open_loop, workload, Arrival, ArrivalSource, Flow, PoissonArrivals,
-    Router, RoutedFlow, RpcClass, TraceArrivals,
+    RoundSource, Router, RoutedFlow, RpcClass, StreamNode, TraceArrivals,
 };
 use aurorasim::topology::Topology;
 
@@ -159,4 +159,138 @@ fn open_loop_scenario_json_is_identical_across_solver_threads() {
     );
     assert!(serial.contains("\"p999_s\""));
     assert!(serial.contains("\"peak_live\""));
+}
+
+// ------------------------------------------- trace parser diagnostics
+
+/// Drain a trace through the parser and return the panic message it
+/// dies with. Builds the reader inside the closure so the unwind can't
+/// leave a poisoned source behind.
+fn parse_panic(trace: &'static str, bound: Option<u32>) -> String {
+    let err = std::panic::catch_unwind(|| {
+        let mut src = TraceArrivals::new(trace.as_bytes());
+        if let Some(b) = bound {
+            src = src.with_endpoint_bound(b);
+        }
+        while src.next_arrival().is_some() {}
+    })
+    .expect_err("malformed trace must be rejected");
+    err.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .expect("panic payload is a message")
+}
+
+/// Every malformed-trace class dies with a message naming the 1-based
+/// physical line (comments and blanks count) and the offending field —
+/// a corrupt trace must fail loudly at parse time, never misprice.
+#[test]
+fn trace_parse_errors_name_the_line_and_field() {
+    for (trace, expect) in [
+        // truncated record: dst missing
+        ("0.5 3\n", "trace line 1: missing dst"),
+        // non-numeric bytes field
+        ("0.5 3 4 lots\n", "trace line 1: bad bytes"),
+        // NaN parses as a valid f64 but is not a valid timestamp
+        ("NaN 3 4 1024\n", "trace line 1: non-finite timestamp NaN"),
+        // negative start: decreases below the initial floor of 0
+        ("-1 3 4 64\n", "trace line 1: timestamp -1 decreases (last 0)"),
+        // time travel on the second record
+        (
+            "1.0 0 1 64\n0.5 0 1 64\n",
+            "trace line 2: timestamp 0.5 decreases (last 1)",
+        ),
+        // self-flow
+        ("0.0 5 5 64\n", "trace line 1: src == dst"),
+        // line numbers are physical: header + blank push this to line 3
+        (
+            "# t src dst bytes\n\n2.0 1 1 64\n",
+            "trace line 3: src == dst",
+        ),
+    ] {
+        let msg = parse_panic(trace, None);
+        assert!(
+            msg.contains(expect),
+            "trace {trace:?}: expected {expect:?} in panic, got {msg:?}"
+        );
+    }
+}
+
+/// With an endpoint bound installed (the topology's compute-endpoint
+/// count), a rank-mangled trace fails at its line instead of panicking
+/// deep inside the router.
+#[test]
+fn trace_endpoint_bound_rejects_out_of_range_ranks() {
+    let msg = parse_panic("0.0 7 999 64\n", Some(64));
+    assert!(
+        msg.contains("trace line 1: dst 999 out of range (endpoints < 64)"),
+        "got {msg:?}"
+    );
+    // in-range ids pass under the same bound
+    let mut ok = TraceArrivals::new("0.0 7 63 64\n".as_bytes())
+        .with_endpoint_bound(64);
+    let a = ok.next_arrival().unwrap();
+    assert_eq!((a.src, a.dst, a.bytes), (7, 63, 64));
+    assert!(ok.next_arrival().is_none());
+}
+
+// ------------------------------------- sparse-window deadlock freedom
+
+/// Arrival gaps thousands of quanta wide must not produce empty
+/// rounds: `OpenLoopSource` anchors each round on a real arrival and
+/// `next_round_not_before` jumps straight to the next occupied window.
+/// (An empty throttled round would spin `materialize_next_round`
+/// without advancing time — the exact hazard the workload verifier
+/// flags as an `empty-round` error.)
+#[test]
+fn sparse_arrivals_skip_empty_windows_without_deadlock() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let mut router = Router::with_seed(&t, 5);
+    // four arrivals, 1 ms quantum: ~10 000 empty windows between each
+    // cluster; the middle two share one window
+    let trace = "1e-4 0 1 4096\n10.0 2 3 4096\n10.00005 4 5 4096\n\
+                 20.0 6 7 4096\n";
+    let src = TraceArrivals::new(trace.as_bytes());
+    let mut ol = OpenLoopSource::new(src, &mut router, 1e-3);
+    let mut windows = Vec::new();
+    let mut nodes = 0usize;
+    loop {
+        let nb = ol.next_round_not_before();
+        let Some(round) = ol.next_round() else { break };
+        assert!(!round.is_empty(), "rounds anchor on a real arrival");
+        for n in &round {
+            let start = match n {
+                StreamNode::Compute { start, .. }
+                | StreamNode::Xfer { start, .. } => *start,
+            };
+            assert!(
+                start >= nb,
+                "floor {start} precedes its announced window {nb}"
+            );
+        }
+        windows.push(nb);
+        nodes += round.len();
+    }
+    assert_eq!(nodes, 4, "every arrival materializes exactly once");
+    assert_eq!(
+        windows,
+        vec![0.0, 10.0, 20.0],
+        "not-before jumps occupied window to occupied window"
+    );
+    assert_eq!(
+        ol.next_round_not_before(),
+        0.0,
+        "exhausted source reports no deferral"
+    );
+
+    // end-to-end: the same sparse trace runs through the streaming
+    // executor with zero late releases
+    let mut router = Router::with_seed(&t, 5);
+    let src = TraceArrivals::new(trace.as_bytes()).with_endpoint_bound(64);
+    let sim = DesSim::new(&t, DesOpts::default());
+    let mut ol = OpenLoopSource::new(src, &mut router, 1e-3);
+    let res = sim.session(&mut DesScratch::new()).stream(&mut ol);
+    assert_eq!(res.total_nodes, 4);
+    assert_eq!(res.late_releases, 0, "sparse windows never release late");
+    assert!(res.makespan > 20.0, "the final arrival at t=20 s completes");
 }

@@ -174,7 +174,7 @@ fn property_degraded_links_monotone() {
     let base = DesSim::new(&topo, DesOpts::default())
         .run_simultaneous(&flows);
     for lanes in [3u8, 2, 1] {
-        let mut degraded = std::collections::HashMap::new();
+        let mut degraded = std::collections::BTreeMap::new();
         for rf in &flows {
             for l in &rf.path.links {
                 degraded.insert(*l, lanes as f64 / 4.0);
