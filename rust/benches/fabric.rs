@@ -202,6 +202,65 @@ fn main() {
         rep.ratio("des_dag_speedup_ring_32x16", ora / inc);
     }
 
+    // fault-injection hook overhead: the same closed-loop ring priced
+    // healthy vs with a fault timeline armed whose only event sits far
+    // beyond the makespan. Arming a non-empty schedule turns on the
+    // whole fault path — the EV_FAULT heap entry and the per-batch
+    // fault sweep — but no capacity ever changes, so the two runs must
+    // agree bit-for-bit and the gated ratio (healthy time / armed
+    // time, floor 0.95) bounds the bookkeeping cost of carrying a
+    // timeline at ~5%.
+    {
+        use aurorasim::fabric::faults::{
+            FaultKind, FaultPolicy, FaultSchedule,
+        };
+        use aurorasim::topology::LinkId;
+        let nics = workload::spread_nics(&small, 32);
+        let mut router = Router::with_seed(&small, 59);
+        let rr = workload::ring_rounds(&nics, 16, 1 << 20);
+        let dag = workload::dag_from_rounds(&mut router, &rr, 0.0);
+        let fs = FaultSchedule::new(FaultPolicy::Reroute).at(
+            1e6, // far beyond any makespan here: the hook stays idle
+            FaultKind::LinkDegrade {
+                link: LinkId::NicUp(0),
+                multiplier: 0.5,
+            },
+        );
+        let armed_opts = DesOpts { faults: Some(fs), ..DesOpts::default() };
+        let rh = DesSim::new(&small, DesOpts::default()).run_dag(&dag);
+        let ra = DesSim::new(&small, armed_opts.clone()).run_dag(&dag);
+        assert_eq!(
+            rh.node_finish.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ra.node_finish.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "an armed-but-idle fault timeline must not perturb results"
+        );
+        assert_eq!(ra.failed_flows, 0);
+        let healthy = rep.timed(
+            "des_dag_ring_32x16_no_faults",
+            "des/dag ring 32x16, no fault timeline",
+            5,
+            || {
+                let sim = DesSim::new(&small, DesOpts::default());
+                std::hint::black_box(sim.run_dag(&dag));
+            },
+        );
+        let armed = rep.timed(
+            "des_dag_ring_32x16_faults_armed",
+            "des/dag ring 32x16, fault timeline armed",
+            5,
+            || {
+                let sim = DesSim::new(&small, armed_opts.clone());
+                std::hint::black_box(sim.run_dag(&dag));
+            },
+        );
+        let overhead = healthy / armed;
+        println!(
+            "des/fault hook overhead (armed/healthy)          {:>10.2}x",
+            armed / healthy
+        );
+        rep.ratio("fault_overhead", overhead);
+    }
+
     // streaming closed-loop executor at Fig 14 scale: 2,048 endpoints of
     // dependency-released ring-allreduce rounds. The scale win is gated
     // machine-independently through the live-node headroom ratio

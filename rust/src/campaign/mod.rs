@@ -27,7 +27,9 @@ pub use scenario::{PhaseApp, Scenario, ScenarioResult, Workload};
 use crate::config::AuroraConfig;
 use crate::fabric::arrivals::RpcClass;
 use crate::fabric::des::DesOpts;
+use crate::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
 use crate::metrics::table;
+use crate::topology::{LinkId, Topology};
 use crate::runtime::manifest::RunInfo;
 use crate::util::Json;
 use anyhow::Result;
@@ -39,9 +41,12 @@ use anyhow::Result;
 /// gains a `steady_state` member — an object (arrivals, completed,
 /// duration_s, throughput, p50/p99/p999, per-class max_backlog,
 /// peak_live, windows) for open-loop *service* scenarios
-/// ([`Workload::OpenLoop`]), `null` for batch and closed-loop rows; see
-/// EXPERIMENTS.md §Campaign schema.
-pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v3";
+/// ([`Workload::OpenLoop`]), `null` for batch and closed-loop rows.
+/// v4: every row gains `failed_flows` and `aborted_nodes` counters and
+/// a nullable `faults` block — `{policy, events: [{t_s, kind,
+/// target}]}` — describing the fault timeline the scenario priced
+/// (`null` when fault-free); see EXPERIMENTS.md §Campaign schema.
+pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v4";
 
 /// The RPC size mix shared by the open-loop service scenarios: mostly
 /// small control-plane messages, some medium payloads, a thin tail of
@@ -78,14 +83,54 @@ impl Campaign {
     /// multi-job, degraded-lane collective, the HACC / AMR-Wind /
     /// LAMMPS step traces, and the multi-group halo+allreduce step —
     /// plus the open-loop *service* scenarios (Poisson RPC mixes on the
-    /// bounded-memory streaming tier, healthy and degraded-link) —
-    /// 19 scenarios on the given config (needs >= 4 compute groups).
+    /// bounded-memory streaming tier, healthy and degraded-link), plus
+    /// the chaos scenarios (deterministic mid-run fault timelines:
+    /// a flapping global link under the closed-loop halo+allreduce
+    /// step, a NIC outage mid-ring priced through retry-backoff, and a
+    /// random-flap open-loop service day whose p99 reads against
+    /// `open_loop_rpc`'s healthy baseline) —
+    /// 22 scenarios on the given config (needs >= 4 compute groups).
     pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
         let on = DesOpts::default();
         let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
         let mk = |name: &str, opts: &DesOpts, w: Workload| {
             Scenario::new(name, cfg.clone(), opts.clone(), w, seed)
         };
+        // ---- chaos fault timelines (campaign schema v4) ----
+        // flapping inter-group link: two down/recover cycles on the
+        // first parallel global link between groups 0 and 1, rerouting
+        // in-flight flows onto the surviving parallel link
+        let flap_link = LinkId::Global { src: 0, dst: 1, idx: 0 };
+        let flapping = FaultSchedule::new(FaultPolicy::Reroute)
+            .at(50e-6, FaultKind::LinkDown { link: flap_link })
+            .at(150e-6, FaultKind::LinkRecover { link: flap_link })
+            .at(250e-6, FaultKind::LinkDown { link: flap_link })
+            .at(350e-6, FaultKind::LinkRecover { link: flap_link });
+        let chaos_flap = DesOpts { faults: Some(flapping), ..on.clone() };
+        // NIC outage mid-ring: endpoint 5's NIC dies and comes back;
+        // the two ring flows touching it re-arrive via retry-backoff
+        // (3 attempts at 25/50/100 us clear the 100 us outage)
+        let nic_outage = FaultSchedule::new(FaultPolicy::RetryBackoff {
+            timeout: 25e-6,
+            backoff: 2.0,
+            max_retries: 10,
+        })
+        .at(100e-6, FaultKind::NicDown { endpoint: 5 })
+        .at(200e-6, FaultKind::LinkRecover { link: LinkId::NicUp(5) })
+        .at(200e-6, FaultKind::LinkRecover { link: LinkId::NicDown(5) });
+        let chaos_nic = DesOpts { faults: Some(nic_outage), ..on.clone() };
+        // random global-link flaps over the first ~0.8 s of a 1 s
+        // service run (seeded on the dedicated fault stream)
+        let topo = Topology::new(cfg);
+        let flaps = FaultSchedule::random_flaps(
+            &topo,
+            6,
+            0.8,
+            0.05,
+            seed,
+            FaultPolicy::Reroute,
+        );
+        let chaos_service = DesOpts { faults: Some(flaps), ..on.clone() };
         Self {
             scenarios: vec![
                 mk("gpcnet_isolated", &on,
@@ -190,8 +235,85 @@ impl Campaign {
                        bw_multiplier: 0.5,
                        link_fraction: 0.25,
                    }),
+                // ---- chaos: deterministic mid-run fault timelines ----
+                mk("chaos_flap_halo_closed", &chaos_flap,
+                   Workload::HaloAllreduce {
+                       groups: 4,
+                       ranks_per_group: 8,
+                       halo_rounds: 3,
+                       bytes: 1 << 20,
+                       leader_rounds: 4,
+                       leader_bytes: 2 << 20,
+                   }),
+                mk("chaos_nic_retry_ring", &chaos_nic,
+                   Workload::Ring { ranks: 64, bytes: 8 << 20 }),
+                mk("chaos_service_flaps", &chaos_service,
+                   Workload::OpenLoop {
+                       arrivals: 60_000,
+                       rate: 60_000.0,
+                       endpoints: 256,
+                       mix: rpc_mix(),
+                       quantum: 1e-3,
+                       window: 50e-3,
+                       bw_multiplier: 1.0,
+                       link_fraction: 0.0,
+                   }),
             ],
         }
+    }
+
+    /// The chaos sweep behind the `aurorasim chaos` CLI verb: fault
+    /// rate (flap count over a fixed horizon) x [`FaultPolicy`] on the
+    /// closed-loop multi-group halo+allreduce step — 9 scenarios whose
+    /// reports surface how each policy prices the same outage pattern
+    /// (reroute absorbs it, retry-backoff delays it, abort gives up and
+    /// reports `failed_flows`/`aborted_nodes`). Every cell's fault
+    /// schedule is seeded from the campaign seed and the cell name, so
+    /// the sweep is deterministic and byte-identical across
+    /// `DES_THREADS` settings.
+    pub fn chaos(cfg: &AuroraConfig, seed: u64) -> Self {
+        let topo = Topology::new(cfg);
+        let policies = [
+            FaultPolicy::Reroute,
+            FaultPolicy::RetryBackoff {
+                timeout: 25e-6,
+                backoff: 2.0,
+                max_retries: 8,
+            },
+            FaultPolicy::Abort,
+        ];
+        let mut c = Self::new();
+        for policy in policies {
+            for flaps in [2usize, 6, 12] {
+                let name =
+                    format!("chaos_{}_{}flaps", policy.name(), flaps);
+                let fs = FaultSchedule::random_flaps(
+                    &topo,
+                    flaps,
+                    400e-6,
+                    100e-6,
+                    seed ^ scenario::fnv1a(&name),
+                    policy,
+                );
+                let opts =
+                    DesOpts { faults: Some(fs), ..DesOpts::default() };
+                c.push(Scenario::new(
+                    &name,
+                    cfg.clone(),
+                    opts,
+                    Workload::HaloAllreduce {
+                        groups: 4,
+                        ranks_per_group: 8,
+                        halo_rounds: 3,
+                        bytes: 1 << 20,
+                        leader_rounds: 4,
+                        leader_bytes: 2 << 20,
+                    },
+                    seed,
+                ));
+            }
+        }
+        c
     }
 
     /// The full-Aurora-scale open-loop service sweep (ROADMAP item 2's

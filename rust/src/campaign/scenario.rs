@@ -12,6 +12,7 @@ use crate::fabric::arrivals::{
     run_open_loop, OpenLoopSource, PoissonArrivals, RpcClass, SteadyState,
 };
 use crate::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
+use crate::fabric::faults::{FaultEvent, FaultKind, FaultSchedule};
 use crate::fabric::rounds::CostModel;
 use crate::fabric::workload::{self, DagBuilder, DagKind, DagWorkload};
 use crate::fabric::{Flow, RoutedFlow, Router};
@@ -144,8 +145,10 @@ pub struct Scenario {
     pub seed: u64,
 }
 
-/// FNV-1a, used to fold scenario names into seeds.
-fn fnv1a(name: &str) -> u64 {
+/// FNV-1a, used to fold scenario names into seeds (and, in
+/// [`super::Campaign::chaos`], chaos-sweep cell names into fault-schedule
+/// seeds).
+pub(crate) fn fnv1a(name: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for b in name.as_bytes() {
         h ^= *b as u64;
@@ -207,8 +210,14 @@ impl Scenario {
         topo: &Topology,
     ) -> Option<(DagWorkload, DesOpts)> {
         let out = self.materialize_dag_unchecked(topo);
-        if let Some((dag, _)) = &out {
-            let rep = WorkloadAnalyzer::new().analyze_dag(dag);
+        if let Some((dag, opts)) = &out {
+            let analyzer = WorkloadAnalyzer::new();
+            let mut rep = analyzer.analyze_dag(dag);
+            // the fault timeline rides in the same options: validate it
+            // with the same fail-fast posture before it reaches the heap
+            if let Some(fs) = &opts.faults {
+                rep.merge(analyzer.analyze_faults(fs, topo));
+            }
             assert!(
                 rep.is_clean(),
                 "scenario {}: workload verifier rejected the DAG:\n{}",
@@ -540,10 +549,14 @@ impl Scenario {
             // rounds_upper for closed-loop rows)
             let cp = dag.critical_path_makespan(&CostModel::new(&topo));
             let res = DesSim::new(&topo, opts).run_dag_with(&dag, scratch);
+            // failed/aborted transfers finish at NaN (fault injection,
+            // schema v4) — they are counted in failed_flows/aborted_nodes,
+            // not in the completion-time statistics
             let finishes: Vec<f64> = dag
                 .xfer_ids()
                 .iter()
                 .map(|&i| res.node_finish[i])
+                .filter(|f| f.is_finite())
                 .collect();
             return ScenarioResult {
                 name: self.name.clone(),
@@ -565,6 +578,9 @@ impl Scenario {
                 rounds_upper: 0.0,
                 critical_path: cp,
                 steady_state: None,
+                failed_flows: res.failed_flows,
+                aborted_nodes: res.aborted_nodes,
+                faults: self.opts.faults.clone(),
             };
         }
         let (timed, opts) = self.materialize(&topo);
@@ -574,20 +590,31 @@ impl Scenario {
             CostModel::new(&topo).eval_timed(&timed, &opts.degraded).makespan
         };
         let res = DesSim::new(&topo, opts).run_with(&timed, scratch);
+        // failed flows finish at NaN — excluded from the statistics,
+        // surfaced in failed_flows (schema v4)
+        let finishes: Vec<f64> = res
+            .finish
+            .iter()
+            .copied()
+            .filter(|f| f.is_finite())
+            .collect();
         ScenarioResult {
             name: self.name.clone(),
             flows: timed.len(),
             total_bytes: timed.iter().map(|tf| tf.rf.flow.bytes).sum(),
             makespan: res.makespan,
-            mean_finish: if res.finish.is_empty() { 0.0 }
-                         else { mean(&res.finish) },
-            p99_finish: if res.finish.is_empty() { 0.0 }
-                        else { percentile(&res.finish, 99.0) },
+            mean_finish: if finishes.is_empty() { 0.0 }
+                         else { mean(&finishes) },
+            p99_finish: if finishes.is_empty() { 0.0 }
+                        else { percentile(&finishes, 99.0) },
             contributors: res.contributors,
             victims: res.victims,
             rounds_upper,
             critical_path: 0.0,
             steady_state: None,
+            failed_flows: res.failed_flows,
+            aborted_nodes: 0,
+            faults: self.opts.faults.clone(),
         }
     }
 
@@ -679,6 +706,9 @@ impl Scenario {
             rounds_upper: 0.0,
             critical_path: 0.0,
             steady_state: Some(ss),
+            failed_flows: res.failed_flows,
+            aborted_nodes: res.aborted_nodes,
+            faults: self.opts.faults.clone(),
         }
     }
 
@@ -692,11 +722,19 @@ impl Scenario {
     /// report.
     pub fn lint(&self, topo: &Topology, max_rounds: usize) -> AnalysisReport {
         let analyzer = WorkloadAnalyzer::new();
+        // the fault timeline is linted for every workload shape — it is
+        // part of the scenario regardless of how the workload executes
+        let mut fault_rep = AnalysisReport::default();
+        if let Some(fs) = &self.opts.faults {
+            fault_rep = analyzer.analyze_faults(fs, topo);
+        }
         if self.is_closed_loop() {
             let (dag, _) = self
                 .materialize_dag_unchecked(topo)
                 .expect("closed-loop scenarios materialize a DAG");
-            return analyzer.analyze_dag(&dag);
+            let mut rep = analyzer.analyze_dag(&dag);
+            rep.merge(fault_rep);
+            return rep;
         }
         if let Workload::OpenLoop {
             arrivals,
@@ -721,10 +759,14 @@ impl Scenario {
                 mix.clone(),
             );
             let mut src = OpenLoopSource::new(arrivals, &mut router, *quantum);
-            return analyzer.analyze_source(&mut src, max_rounds);
+            let mut rep = analyzer.analyze_source(&mut src, max_rounds);
+            rep.merge(fault_rep);
+            return rep;
         }
         let (timed, _) = self.materialize(topo);
-        analyzer.analyze_dag(&DagWorkload::from_timed(&timed))
+        let mut rep = analyzer.analyze_dag(&DagWorkload::from_timed(&timed));
+        rep.merge(fault_rep);
+        rep
     }
 }
 
@@ -754,6 +796,42 @@ pub struct ScenarioResult {
     /// open-loop *service* scenarios ([`Workload::OpenLoop`]),
     /// serialized as `null` for every batch/closed-loop row.
     pub steady_state: Option<SteadyState>,
+    /// Flows the fault policy gave up on (campaign schema v4): reroute
+    /// with no surviving path, retry past its cap, or abort. 0 on a
+    /// healthy run.
+    pub failed_flows: usize,
+    /// Closed-loop/stream nodes that never ran because a failed flow's
+    /// dependents could not release. 0 on a healthy run and for flat
+    /// batch scenarios.
+    pub aborted_nodes: usize,
+    /// The fault timeline this scenario priced (campaign schema v4):
+    /// serialized as a `faults` block — `{policy, events}` — or `null`
+    /// for fault-free scenarios.
+    pub faults: Option<FaultSchedule>,
+}
+
+/// Serialize one fault event for the campaign report's `faults` block
+/// (schema v4). `target` is human-readable; `t_s` + `kind` are the
+/// machine-stable parts.
+fn fault_event_json(e: &FaultEvent) -> Json {
+    let (kind, target) = match &e.kind {
+        FaultKind::LinkDegrade { link, multiplier } => {
+            ("link_degrade", format!("{link:?} x{multiplier}"))
+        }
+        FaultKind::LinkDown { link } => ("link_down", format!("{link:?}")),
+        FaultKind::LinkRecover { link } => {
+            ("link_recover", format!("{link:?}"))
+        }
+        FaultKind::NicDown { endpoint } => {
+            ("nic_down", format!("nic {endpoint}"))
+        }
+        FaultKind::NodeDown { node } => ("node_down", format!("node {node}")),
+    };
+    Json::obj(vec![
+        ("t_s", Json::num(e.t)),
+        ("kind", Json::str(kind.to_string())),
+        ("target", Json::str(target)),
+    ])
 }
 
 impl ScenarioResult {
@@ -782,6 +860,18 @@ impl ScenarioResult {
                 ("windows", Json::num(ss.windows as f64)),
             ]),
         };
+        let faults = match &self.faults {
+            None => Json::Null,
+            Some(fs) => Json::obj(vec![
+                ("policy", Json::str(fs.policy.name().to_string())),
+                (
+                    "events",
+                    Json::arr(
+                        fs.events.iter().map(fault_event_json).collect(),
+                    ),
+                ),
+            ]),
+        };
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
             ("flows", Json::num(self.flows as f64)),
@@ -794,6 +884,9 @@ impl ScenarioResult {
             ("rounds_upper_s", Json::num(self.rounds_upper)),
             ("critical_path_s", Json::num(self.critical_path)),
             ("steady_state", steady),
+            ("failed_flows", Json::num(self.failed_flows as f64)),
+            ("aborted_nodes", Json::num(self.aborted_nodes as f64)),
+            ("faults", faults),
         ])
     }
 }

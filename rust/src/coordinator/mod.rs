@@ -134,7 +134,11 @@ impl<'m> Launcher<'m> {
     /// the campaign completes. Scenarios execute in parallel on up to
     /// `threads` workers (deterministic output; see [`crate::campaign`]).
     /// Returns the report plus the nodes the epilog offlined (the
-    /// campaign analogue of [`JobReport::offlined_nodes`]).
+    /// campaign analogue of [`JobReport::offlined_nodes`]): the
+    /// validator's own findings merged with every node a scenario's
+    /// fault timeline took down (`NodeDown` is terminal, so a node down
+    /// at any point in a priced schedule is down at epilog time) — the
+    /// epilog reports what the DES actually priced, not a static list.
     pub fn launch_campaign(
         &mut self,
         campaign: &Campaign,
@@ -150,7 +154,18 @@ impl<'m> Launcher<'m> {
             );
         }
         let report = campaign.run(threads.max(1));
-        let offlined = self.validator.epilog(&healthy);
+        let mut offlined = self.validator.epilog(&healthy);
+        for s in &campaign.scenarios {
+            if let Some(fs) = &s.opts.faults {
+                offlined.extend(
+                    fs.nodes_down_at(f64::INFINITY)
+                        .into_iter()
+                        .map(|n| n as usize),
+                );
+            }
+        }
+        offlined.sort_unstable();
+        offlined.dedup();
         Ok((report, offlined))
     }
 }
@@ -221,6 +236,31 @@ mod tests {
         assert!(rep.results.iter().all(|r| r.makespan > 0.0));
         // a healthy machine offlines nothing
         assert!(offlined.is_empty(), "{offlined:?}");
+    }
+
+    #[test]
+    fn campaign_epilog_offlines_fault_scheduled_nodes() {
+        use crate::campaign::{Campaign, Scenario, Workload};
+        use crate::fabric::des::DesOpts;
+        use crate::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
+        let m = machine();
+        let mut l = Launcher::new(&m);
+        // NodeDown fires long after the ring completes: it must not
+        // perturb the result, but the epilog still reports the node
+        // because the schedule priced it as terminally down.
+        let fs = FaultSchedule::new(FaultPolicy::Reroute)
+            .at(1.0, FaultKind::NodeDown { node: 3 });
+        let mut c = Campaign::new();
+        c.push(Scenario::new(
+            "node-down-epilog",
+            m.cfg.clone(),
+            DesOpts { faults: Some(fs), ..DesOpts::default() },
+            Workload::Ring { ranks: 8, bytes: 1 << 20 },
+            7,
+        ));
+        let (rep, offlined) = l.launch_campaign(&c, 1).unwrap();
+        assert_eq!(rep.results.len(), 1);
+        assert_eq!(offlined, vec![3]);
     }
 
     #[test]

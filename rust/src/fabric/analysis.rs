@@ -37,7 +37,12 @@
 //!   ([`check_collective_rounds`]): the ring allreduce must move
 //!   exactly `2*(P-1)*max(bytes/P, 1)` bytes per rank, the pairwise
 //!   all2all every ordered pair exactly once, and so on — checked
-//!   against `mpi::coll::*_rounds` output by `tests/analysis.rs`.
+//!   against `mpi::coll::*_rounds` output by `tests/analysis.rs`;
+//! * fault timelines ([`WorkloadAnalyzer::analyze_faults`]): fire
+//!   times finite and non-decreasing, link/endpoint/node ids present
+//!   in the topology, degrade multipliers in (0.0, 1.0], recoveries
+//!   anchored to a prior down — validated before a
+//!   [`super::faults::FaultSchedule`] reaches the event heap.
 //!
 //! Wiring: `Scenario::materialize_dag` fails fast on an invalid
 //! workload, the `aurorasim lint [scenario|--all]` CLI verb sweeps
@@ -45,8 +50,10 @@
 //! every `run_dag`/`run_stream` entry (`des.rs`), so the whole test
 //! suite exercises the verifier for free.
 
+use super::faults::{FaultKind, FaultSchedule};
 use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode, NO_KEY};
-use rustc_hash::FxHashMap;
+use crate::topology::{LinkId, Topology};
+use rustc_hash::{FxHashMap, FxHashSet};
 
 /// How bad a finding is. `Error` means the workload violates an
 /// executor contract and must not run; `Warning` flags legal but
@@ -95,6 +102,15 @@ impl AnalysisReport {
     /// No errors (warnings and infos are allowed).
     pub fn is_clean(&self) -> bool {
         self.errors() == 0
+    }
+
+    /// Fold another report's diagnostics and counters into this one —
+    /// used by `Scenario::lint` to combine the workload pass with the
+    /// fault-schedule pass into one report.
+    pub fn merge(&mut self, other: AnalysisReport) {
+        self.diags.extend(other.diags);
+        self.nodes += other.nodes;
+        self.rounds += other.rounds;
     }
 
     fn push(
@@ -578,6 +594,175 @@ impl WorkloadAnalyzer {
                 node,
                 round,
                 format!("zero-byte transfer {src}->{dst}"),
+            );
+        }
+    }
+
+    /// Validate a fault timeline against a topology before any solve
+    /// runs (the same fail-fast posture as the workload passes): fire
+    /// times must be finite and non-decreasing ([`FaultSchedule::at`]
+    /// keeps them sorted, but `events` is public and hand-built
+    /// schedules are not), every link/endpoint/node id must exist in
+    /// the topology, degrade multipliers must sit in (0.0, 1.0] — a
+    /// recovery "multiplier" above 1.0 would mint bandwidth — and a
+    /// `LinkRecover` whose link was never taken down (by a prior
+    /// `LinkDown`, `NicDown` or `NodeDown` expansion, or a degrade) is
+    /// flagged as a warning: legal (it resets the multiplier to 1.0,
+    /// a no-op on a healthy link) but almost always a typo'd link id.
+    /// `node` in the diagnostics is the event's index in the schedule.
+    pub fn analyze_faults(
+        &self,
+        fs: &FaultSchedule,
+        topo: &Topology,
+    ) -> AnalysisReport {
+        let mut rep = AnalysisReport {
+            nodes: fs.len(),
+            ..Default::default()
+        };
+        let nics = topo.cfg.compute_endpoints() as u32;
+        let nodes = (topo.cfg.compute_endpoints()
+            / topo.cfg.nics_per_node) as u32;
+        let mut last_t = f64::NEG_INFINITY;
+        // links taken down (or degraded) so far, to anchor recoveries
+        let mut downed: FxHashSet<LinkId> = FxHashSet::default();
+        let mut expand: Vec<(LinkId, f64)> = Vec::new();
+        for (i, ev) in fs.events.iter().enumerate() {
+            let id = i as u32;
+            if !ev.t.is_finite() {
+                rep.push(
+                    Severity::Error,
+                    "bad-fault-time",
+                    Some(id),
+                    None,
+                    format!("non-finite fire time {}", ev.t),
+                );
+            } else {
+                if ev.t < last_t {
+                    rep.push(
+                        Severity::Error,
+                        "fault-time-order",
+                        Some(id),
+                        None,
+                        format!(
+                            "fire time {} before previous event at {last_t} \
+                             (the DES heap fires them out of schedule \
+                             order; build with FaultSchedule::at)",
+                            ev.t
+                        ),
+                    );
+                }
+                last_t = last_t.max(ev.t);
+            }
+            match &ev.kind {
+                FaultKind::LinkDegrade { link, multiplier } => {
+                    self.check_fault_link(&mut rep, topo, link, id);
+                    let m = *multiplier;
+                    if !m.is_finite() || m < 0.0 || m > 1.0 {
+                        rep.push(
+                            Severity::Error,
+                            "bad-multiplier",
+                            Some(id),
+                            None,
+                            format!(
+                                "degrade multiplier {m} outside (0.0, 1.0] \
+                                 (above 1.0 would mint bandwidth)"
+                            ),
+                        );
+                    } else if m == 0.0 {
+                        rep.push(
+                            Severity::Warning,
+                            "degrade-to-zero",
+                            Some(id),
+                            None,
+                            format!(
+                                "LinkDegrade to 0.0 on {link:?}: prefer \
+                                 LinkDown, which states the intent"
+                            ),
+                        );
+                    }
+                    downed.insert(*link);
+                }
+                FaultKind::LinkDown { link } => {
+                    self.check_fault_link(&mut rep, topo, link, id);
+                    downed.insert(*link);
+                }
+                FaultKind::LinkRecover { link } => {
+                    self.check_fault_link(&mut rep, topo, link, id);
+                    if !downed.contains(link) {
+                        rep.push(
+                            Severity::Warning,
+                            "recover-without-down",
+                            Some(id),
+                            None,
+                            format!(
+                                "LinkRecover on {link:?} with no prior \
+                                 LinkDown/degrade of that link (no-op on \
+                                 a healthy link — typo'd id?)"
+                            ),
+                        );
+                    }
+                }
+                FaultKind::NicDown { endpoint } => {
+                    if *endpoint >= nics {
+                        rep.push(
+                            Severity::Error,
+                            "unknown-endpoint",
+                            Some(id),
+                            None,
+                            format!(
+                                "endpoint {endpoint} beyond the \
+                                 topology's {nics} compute NICs"
+                            ),
+                        );
+                    } else {
+                        expand.clear();
+                        ev.kind.link_multipliers(
+                            topo.cfg.nics_per_node,
+                            &mut expand,
+                        );
+                        downed.extend(expand.iter().map(|(l, _)| *l));
+                    }
+                }
+                FaultKind::NodeDown { node } => {
+                    if *node >= nodes {
+                        rep.push(
+                            Severity::Error,
+                            "unknown-node",
+                            Some(id),
+                            None,
+                            format!(
+                                "node {node} beyond the topology's \
+                                 {nodes} compute nodes"
+                            ),
+                        );
+                    } else {
+                        expand.clear();
+                        ev.kind.link_multipliers(
+                            topo.cfg.nics_per_node,
+                            &mut expand,
+                        );
+                        downed.extend(expand.iter().map(|(l, _)| *l));
+                    }
+                }
+            }
+        }
+        rep
+    }
+
+    fn check_fault_link(
+        &self,
+        rep: &mut AnalysisReport,
+        topo: &Topology,
+        link: &LinkId,
+        id: u32,
+    ) {
+        if !topo.contains_link(link) {
+            rep.push(
+                Severity::Error,
+                "unknown-link",
+                Some(id),
+                None,
+                format!("{link:?} is not a link of this topology"),
             );
         }
     }
@@ -1177,6 +1362,80 @@ mod tests {
             "{}",
             rep.render()
         );
+    }
+
+    #[test]
+    fn fault_timeline_checks_fire() {
+        use crate::fabric::faults::{FaultEvent, FaultPolicy};
+        let t = topo();
+        let mut fs = FaultSchedule::new(FaultPolicy::Reroute);
+        // hand-built events list bypassing `at` (the field is public),
+        // packing one instance of every defect
+        fs.events = vec![
+            FaultEvent {
+                t: 1.0,
+                kind: FaultKind::LinkDegrade {
+                    link: LinkId::NicUp(0),
+                    multiplier: 1.5,
+                },
+            },
+            FaultEvent {
+                t: 0.5, // before the previous event
+                kind: FaultKind::LinkRecover { link: LinkId::NicUp(1) },
+            },
+            FaultEvent {
+                t: f64::NAN,
+                kind: FaultKind::NicDown { endpoint: 1 << 30 },
+            },
+            FaultEvent {
+                t: 2.0,
+                kind: FaultKind::LinkDown {
+                    link: LinkId::Global { src: 40, dst: 41, idx: 0 },
+                },
+            },
+            FaultEvent {
+                t: 3.0,
+                kind: FaultKind::NodeDown { node: 1 << 30 },
+            },
+        ];
+        let rep = WorkloadAnalyzer::new().analyze_faults(&fs, &t);
+        for check in [
+            "bad-multiplier",
+            "fault-time-order",
+            "bad-fault-time",
+            "unknown-endpoint",
+            "unknown-link",
+            "unknown-node",
+        ] {
+            assert!(
+                rep.diags.iter().any(|d| d.check == check
+                    && d.severity == Severity::Error),
+                "missing {check}: {}",
+                rep.render()
+            );
+        }
+        assert!(
+            rep.diags.iter().any(|d| d.check == "recover-without-down"
+                && d.severity == Severity::Warning),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn clean_fault_schedule_passes() {
+        use crate::fabric::faults::FaultPolicy;
+        let t = topo();
+        let fs = FaultSchedule::new(FaultPolicy::Abort)
+            .at(0.0, FaultKind::LinkDown { link: LinkId::NicUp(0) })
+            .at(1.0, FaultKind::LinkRecover { link: LinkId::NicUp(0) })
+            .at(2.0, FaultKind::NicDown { endpoint: 3 })
+            // recovery of a link the NicDown expansion took down
+            .at(3.0, FaultKind::LinkRecover { link: LinkId::NicDown(3) });
+        let rep = WorkloadAnalyzer::new().analyze_faults(&fs, &t);
+        assert!(rep.is_clean(), "{}", rep.render());
+        assert_eq!(rep.warnings(), 0, "{}", rep.render());
+        assert_eq!(rep.nodes, fs.len());
     }
 
     #[test]

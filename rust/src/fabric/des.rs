@@ -52,7 +52,8 @@
 
 use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode, NO_KEY};
 use super::{FlowTimes, RoutedFlow};
-use crate::topology::{LinkId, Topology};
+use super::faults::{FaultPolicy, FaultSchedule};
+use crate::topology::{LinkId, Path, Topology};
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -90,6 +91,16 @@ pub struct DesOpts {
     /// (EXPERIMENTS.md §Raw speed) — so this is purely a wall-time knob,
     /// kept togglable for the equivalence suite and the bench baseline.
     pub single_bottleneck_fastpath: bool,
+    /// Mid-run fault timeline ([`super::faults`]): time-ordered capacity
+    /// events executed inside the event heap (`EV_FAULT`), with the
+    /// schedule's [`super::FaultPolicy`] applied to in-flight flows
+    /// crossing a link that goes down. `None` (and an empty schedule)
+    /// is the healthy fabric — the hook costs nothing when unused
+    /// (`fault_overhead` bench gate). A schedule firing everything at
+    /// `t = 0` is bit-identical to the same multipliers installed
+    /// statically via [`DesOpts::degraded`]
+    /// (`tests/des_equivalence.rs`).
+    pub faults: Option<super::faults::FaultSchedule>,
 }
 
 impl Default for DesOpts {
@@ -102,6 +113,7 @@ impl Default for DesOpts {
             queue_cap_bytes: 256.0 * 1024.0,
             solver_threads: 1,
             single_bottleneck_fastpath: true,
+            faults: None,
         }
     }
 }
@@ -140,6 +152,10 @@ pub struct DesResult {
     /// [`DesOpts::single_bottleneck_fastpath`]). Diagnostic only —
     /// rates are bit-identical either way.
     pub fastpath_components: usize,
+    /// Flows failed by the fault policy (exhausted retries, no viable
+    /// reroute, or [`super::FaultPolicy::Abort`]); their `finish` entry
+    /// is `NaN` and they are excluded from `makespan`.
+    pub failed_flows: usize,
 }
 
 /// Result of executing a [`DagWorkload`] (closed-loop simulation).
@@ -163,6 +179,13 @@ pub struct DagResult {
     /// Components serviced by the single-bottleneck fast path (see
     /// [`DesResult::fastpath_components`]).
     pub fastpath_components: usize,
+    /// Flows failed by the fault policy; their DAG nodes (and every
+    /// transitive dependent) never complete.
+    pub failed_flows: usize,
+    /// Nodes that never completed because a failed flow's dependents
+    /// were never released; their `node_finish` entry is `NaN` and they
+    /// are excluded from `makespan`.
+    pub aborted_nodes: usize,
 }
 
 /// Result of a streaming ([`DesSim::run_stream`]) closed-loop run.
@@ -197,6 +220,13 @@ pub struct StreamResult {
     /// Components serviced by the single-bottleneck fast path (see
     /// [`DesResult::fastpath_components`]).
     pub fastpath_components: usize,
+    /// Flows failed by the fault policy (see
+    /// [`DagResult::failed_flows`]).
+    pub failed_flows: usize,
+    /// Of the nodes *materialized*, how many never completed (failed
+    /// flows and their never-released dependents). Rounds the source
+    /// never materialized because of the stall are not counted.
+    pub aborted_nodes: usize,
 }
 
 pub struct DesSim<'t> {
@@ -314,6 +344,7 @@ impl DesScratch {
         d.link_ids.capacity()
             + d.link_uids.capacity()
             + d.cap.capacity()
+            + d.nic_min.capacity()
             + d.flow_links.capacity()
             + d.flow_len.capacity()
             + d.flow_cap.capacity()
@@ -326,6 +357,7 @@ impl DesScratch {
             + st.active.capacity()
             + st.done.capacity()
             + st.epoch.capacity()
+            + st.retry.capacity()
             + st.link_flows.capacity()
             + st.link_flows.iter().map(Vec::capacity).sum::<usize>()
             + st.eject_count.capacity()
@@ -703,8 +735,21 @@ struct Dense {
     /// Universe slot each interned link was minted from (resets the
     /// [`LinkMap`] without re-deriving indices).
     link_uids: Vec<u32>,
-    /// Static effective capacity per link (degraded bw + NIC-eff caps).
+    /// Effective capacity per link (degraded bw + NIC-eff caps,
+    /// rescaled in place when a fault event fires).
     cap: Vec<f64>,
+    /// Running min of every NIC-eff cap applied to this link
+    /// (`INFINITY` when none): lets a fault recompute
+    /// `cap = (bw * multipliers).min(nic_min)` without replaying the
+    /// flow set. `min` is order-independent and exact in f64, so the
+    /// recomputed value equals the from-scratch interning bit for bit.
+    nic_min: Vec<f64>,
+    /// Live fault multiplier per link (`fabric::faults`): consulted when
+    /// a link is interned mid-run (streaming materialization, reroute)
+    /// so new flows see post-fault capacities. A `BTreeMap` for the
+    /// same reason as [`DesOpts::degraded`] (detlint R1). Empty in
+    /// fault-free runs — the intern path never touches it.
+    fault_mult: BTreeMap<LinkId, f64>,
     /// Per flow: dense link ids along its path, [`MAX_PATH_LINKS`]
     /// slots per flow (only the first `flow_len` are meaningful).
     flow_links: Vec<u32>,
@@ -729,6 +774,8 @@ impl Dense {
         self.link_ids.clear();
         self.link_uids.clear();
         self.cap.clear();
+        self.nic_min.clear();
+        self.fault_mult.clear();
         self.flow_links.clear();
         self.flow_len.clear();
         self.flow_cap.clear();
@@ -752,6 +799,9 @@ struct SolveState {
     active: Vec<bool>,
     done: Vec<bool>,
     epoch: Vec<u32>,
+    /// Retry attempts consumed so far ([`super::FaultPolicy`]'s
+    /// `RetryBackoff`); zero outside fault runs.
+    retry: Vec<u32>,
     /// Per-link list of active flows (the incremental component index).
     link_flows: Vec<Vec<u32>>,
     eject_count: Vec<u32>,
@@ -793,6 +843,7 @@ impl SolveState {
         self.active.clear();
         self.done.clear();
         self.epoch.clear();
+        self.retry.clear();
         self.flow_seen.clear();
         for v in &mut self.link_flows {
             v.clear();
@@ -833,6 +884,7 @@ impl SolveState {
         self.active.push(false);
         self.done.push(false);
         self.epoch.push(0);
+        self.retry.push(0);
         self.flow_seen.push(0);
         i
     }
@@ -854,6 +906,7 @@ impl SolveState {
         self.active[i] = false;
         self.done[i] = false;
         self.epoch[i] = self.epoch[i].wrapping_add(1);
+        self.retry[i] = 0;
     }
 
     /// Grow per-link state after new links were interned.
@@ -884,6 +937,28 @@ impl SolveState {
             self.link_flows[l as usize].push(fi as u32);
         }
         self.eject_count[d.flow_last[fi] as usize] += 1;
+    }
+
+    /// Pull flow `fi` off the fabric mid-transfer (fault policy sweep):
+    /// sync the bytes delivered so far, drop it from the link index and
+    /// invalidate its projected completion. Unlike [`Self::complete`]
+    /// the flow is *not* done — it may re-arrive (reroute, retry) with
+    /// its remaining bytes intact, or be marked failed by the caller.
+    fn detach(&mut self, d: &Dense, fi: usize, now: f64) {
+        self.remaining[fi] = (self.remaining[fi]
+            - self.rate[fi] * (now - self.last_sync[fi]))
+            .max(0.0);
+        self.last_sync[fi] = now;
+        self.rate[fi] = 0.0;
+        self.active[fi] = false;
+        self.epoch[fi] = self.epoch[fi].wrapping_add(1);
+        for &l in d.links_of(fi) {
+            let lf = &mut self.link_flows[l as usize];
+            if let Some(pos) = lf.iter().position(|&x| x == fi as u32) {
+                lf.swap_remove(pos);
+            }
+        }
+        self.eject_count[d.flow_last[fi] as usize] -= 1;
     }
 }
 
@@ -1014,10 +1089,19 @@ impl<'t> DesSim<'t> {
                 map.ids[u] = id;
                 d.link_ids.push(*l);
                 d.link_uids.push(u as u32);
-                d.cap.push(self.link_cap(l));
+                let mut c = self.link_cap(l);
+                // mid-run interning (streaming, reroute) sees the live
+                // fault overlay; empty in fault-free runs, so the
+                // healthy intern path is untouched bit for bit
+                if let Some(&m) = d.fault_mult.get(l) {
+                    c *= m;
+                }
+                d.cap.push(c);
+                d.nic_min.push(f64::INFINITY);
             }
             if matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)) {
                 d.cap[id as usize] = d.cap[id as usize].min(eff);
+                d.nic_min[id as usize] = d.nic_min[id as usize].min(eff);
             }
             ls[k] = id;
         }
@@ -1039,6 +1123,189 @@ impl<'t> DesSim<'t> {
                 d.flow_len.len() - 1
             }
         }
+    }
+
+    /// Deterministic route repair for the `Reroute` fault policy: the
+    /// first minimal candidate (stable candidate order) whose links are
+    /// all up — down means a live fault multiplier of `0.0` (a
+    /// statically-degraded-to-zero link counts too). `None` when every
+    /// candidate crosses a down link (e.g. the flow's own NIC died).
+    fn reroute_path(&self, d: &Dense, rf: &RoutedFlow) -> Option<Path> {
+        let link_up = |l: &LinkId| {
+            self.link_cap(l) * d.fault_mult.get(l).copied().unwrap_or(1.0)
+                > 0.0
+        };
+        self.topo
+            .minimal_candidates(rf.flow.src_nic, rf.flow.dst_nic)
+            .into_iter()
+            .find(|p| p.links.iter().all(link_up))
+    }
+
+    /// One retry-backoff step for flow `fu`: re-arm the timer at
+    /// `timeout * backoff^attempt` (consuming one attempt), or mark the
+    /// flow failed once `max_retries` attempts are spent. The scheduled
+    /// [`EV_RETRY`] carries the post-detach epoch, so it stays valid
+    /// exactly until the flow moves again.
+    fn retry_or_fail(
+        &self,
+        policy: &FaultPolicy,
+        st: &mut SolveState,
+        heap: &mut BinaryHeap<Reverse<Ev>>,
+        now: f64,
+        fu: u32,
+        failed: &mut Vec<u32>,
+    ) {
+        let (timeout, backoff, max_retries) = match *policy {
+            FaultPolicy::RetryBackoff { timeout, backoff, max_retries } => {
+                (timeout, backoff, max_retries)
+            }
+            _ => unreachable!("retry events only exist under RetryBackoff"),
+        };
+        let fi = fu as usize;
+        if st.retry[fi] >= max_retries {
+            st.done[fi] = true;
+            failed.push(fu);
+        } else {
+            let wait = timeout * backoff.powi(st.retry[fi] as i32);
+            st.retry[fi] += 1;
+            heap.push(Reverse(Ev {
+                t: now + wait,
+                kind: EV_RETRY,
+                flow: fu,
+                epoch: st.epoch[fi],
+            }));
+        }
+    }
+
+    /// Execute every fault event and retry wake-up due at `now` — the
+    /// [`EV_FAULT`] hook shared by all three executors.
+    ///
+    /// In order: (1) each due fault (schedule order) rescales its links'
+    /// dense capacities through the overlay, `cap = (bw * static *
+    /// fault).min(nic_min)`; (2) in-flight flows crossing a link that is
+    /// now down are swept under the schedule's [`FaultPolicy`] —
+    /// detached, then rerouted (re-arriving now), re-armed for retry, or
+    /// failed (`st.done`, pushed to `failed` for the caller's result
+    /// bookkeeping); (3) due retries re-check their path against the
+    /// *post*-fault capacities (a recovery sharing the timestamp lets
+    /// the retry through). Tie-break with completions: a flow whose
+    /// completion event shares the fault's timestamp is skipped by the
+    /// sweep and completes — delivered bytes are never retroactively
+    /// destroyed. `faulted` receives the re-solve seeds; `rf_of(fi)`
+    /// recovers flow `fi`'s routed flow for the reroute policy.
+    #[allow(clippy::too_many_arguments)]
+    fn fault_tick(
+        &self,
+        fs: &FaultSchedule,
+        due: &[u32],
+        retry_due: &[u32],
+        d: &mut Dense,
+        map: &mut LinkMap,
+        st: &mut SolveState,
+        heap: &mut BinaryHeap<Reverse<Ev>>,
+        now: f64,
+        completions: &[usize],
+        arrivals: &mut Vec<usize>,
+        faulted: &mut Vec<usize>,
+        failed: &mut Vec<u32>,
+        rf_of: &mut dyn FnMut(usize) -> RoutedFlow,
+    ) {
+        // ---- (1) capacity changes, in schedule order ----
+        let mut mults: Vec<(LinkId, f64)> = Vec::new();
+        let mut changed: Vec<u32> = Vec::new();
+        for &ei in due {
+            mults.clear();
+            fs.events[ei as usize]
+                .kind
+                .link_multipliers(self.topo.cfg.nics_per_node, &mut mults);
+            for &(l, m) in &mults {
+                d.fault_mult.insert(l, m);
+                let id = map.ids[self.topo.link_index(&l) as usize];
+                if id == u32::MAX {
+                    continue; // no flow ever crossed it: overlay only
+                }
+                let c = (self.link_cap(&l) * m)
+                    .min(d.nic_min[id as usize]);
+                if c.to_bits() != d.cap[id as usize].to_bits() {
+                    d.cap[id as usize] = c;
+                    changed.push(id);
+                }
+            }
+        }
+        changed.sort_unstable();
+        changed.dedup();
+
+        // ---- (2) policy sweep over in-flight flows on down links ----
+        let mut hits: Vec<u32> = Vec::new();
+        for &id in &changed {
+            if d.cap[id as usize] == 0.0 {
+                hits.extend_from_slice(&st.link_flows[id as usize]);
+            }
+        }
+        hits.sort_unstable();
+        hits.dedup();
+        for &fu in &hits {
+            let fi = fu as usize;
+            if st.done[fi] || !st.active[fi] || completions.contains(&fi) {
+                continue; // completion at this instant wins (tie-break)
+            }
+            st.detach(d, fi, now);
+            // survivors sharing the swept flow's links re-share its
+            // freed capacity: seed their components
+            for &l in d.links_of(fi) {
+                faulted.extend(
+                    st.link_flows[l as usize].iter().map(|&x| x as usize),
+                );
+            }
+            match fs.policy {
+                FaultPolicy::Abort => {
+                    st.done[fi] = true;
+                    failed.push(fu);
+                }
+                FaultPolicy::RetryBackoff { .. } => {
+                    self.retry_or_fail(&fs.policy, st, heap, now, fu, failed);
+                }
+                FaultPolicy::Reroute => {
+                    let rf0 = rf_of(fi);
+                    match self.reroute_path(d, &rf0) {
+                        Some(path) => {
+                            let rf = RoutedFlow { flow: rf0.flow, path };
+                            self.push_flow(d, map, &rf, Some(fi));
+                            st.grow_links(d.cap.len());
+                            arrivals.push(fi);
+                        }
+                        None => {
+                            st.done[fi] = true;
+                            failed.push(fu);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- (3) retry wake-ups, against post-fault capacities ----
+        for &fu in retry_due {
+            let fi = fu as usize;
+            let still_down = d
+                .links_of(fi)
+                .iter()
+                .any(|&l| d.cap[l as usize] == 0.0);
+            if still_down {
+                self.retry_or_fail(&fs.policy, st, heap, now, fu, failed);
+            } else {
+                arrivals.push(fi);
+            }
+        }
+
+        // ---- every flow still attached to a changed link re-solves
+        // its component (degrades, recoveries, freed shares) ----
+        for &id in &changed {
+            faulted.extend(
+                st.link_flows[id as usize].iter().map(|&x| x as usize),
+            );
+        }
+        faulted.sort_unstable();
+        faulted.dedup();
     }
 
     /// Build the dense (interned-link) representation used by the solver.
@@ -1087,6 +1354,7 @@ impl<'t> DesSim<'t> {
         now: f64,
         completions: &[usize],
         arrivals: &[usize],
+        faulted: &[usize],
         full_resolve: bool,
     ) {
         // ---- partition the affected flows into link-disjoint
@@ -1108,7 +1376,16 @@ impl<'t> DesSim<'t> {
             // whose region was already visited contribute nothing, so
             // partitions are link-disjoint by construction — two flows
             // sharing a link always land in the same partition.
-            for &seed in completions.iter().chain(arrivals.iter()) {
+            // `faulted` seeds (flows still attached to a link whose
+            // capacity a fault event just changed, plus the survivors
+            // sharing links with a swept flow) walk the same closure as
+            // completions/arrivals — exactly the components whose
+            // capacities changed are re-solved, nothing else.
+            for &seed in completions
+                .iter()
+                .chain(arrivals.iter())
+                .chain(faulted.iter())
+            {
                 let start = st.comp.len();
                 for &l in d.links_of(seed) {
                     if st.link_seen[l as usize] != stamp {
@@ -1500,6 +1777,13 @@ impl<'t> DesSim<'t> {
     /// every event. O(events x flows x links) — correct and simple; the
     /// reference the incremental solver is validated against.
     pub fn run_oracle(&self, flows: &[TimedFlow]) -> DesResult {
+        // the flat oracle has no event heap to fire a timeline through;
+        // closed-loop oracle runs (`run_dag_oracle`) share the
+        // heap-driven implementation and support faults fully
+        assert!(
+            self.opts.faults.as_ref().map_or(true, |f| f.is_empty()),
+            "run_oracle does not support fault schedules"
+        );
         let n = flows.len();
         let d = self.build_dense(flows);
         let n_links = d.link_ids.len();
@@ -1662,6 +1946,7 @@ impl<'t> DesSim<'t> {
             solve_batches: 0,
             components_solved: 0,
             fastpath_components: 0,
+            failed_flows: 0,
         }
     }
 
@@ -1750,6 +2035,7 @@ impl<'t> DesSim<'t> {
                 solve_batches: 0,
                 components_solved: 0,
                 fastpath_components: 0,
+                failed_flows: 0,
             };
         }
         for tf in flows {
@@ -1768,6 +2054,22 @@ impl<'t> DesSim<'t> {
                 epoch: 0,
             }));
         }
+        let fsched = self.opts.faults.as_ref().filter(|f| !f.is_empty());
+        if let Some(fs) = fsched {
+            for (i, fe) in fs.events.iter().enumerate() {
+                s.heap.push(Reverse(Ev {
+                    t: fe.t.max(0.0),
+                    kind: EV_FAULT,
+                    flow: i as u32,
+                    epoch: 0,
+                }));
+            }
+        }
+        let mut faults_due: Vec<u32> = Vec::new();
+        let mut retry_due: Vec<u32> = Vec::new();
+        let mut faulted: Vec<usize> = Vec::new();
+        let mut failed: Vec<u32> = Vec::new();
+        let mut failed_flows = 0usize;
 
         let mut n_done = 0usize;
 
@@ -1781,25 +2083,63 @@ impl<'t> DesSim<'t> {
             // before arrivals, mirroring the oracle loop structure
             s.completions.clear();
             s.arrivals.clear();
+            faults_due.clear();
+            retry_due.clear();
+            faulted.clear();
             while let Some(&Reverse(ev)) = s.heap.peek() {
                 if ev.t != now {
                     break;
                 }
                 s.heap.pop();
                 let fi = ev.flow as usize;
-                if ev.kind == EV_COMPLETION {
-                    // stale completion events are invalidated by epoch bumps
-                    if !s.st.done[fi]
-                        && s.st.active[fi]
-                        && ev.epoch == s.st.epoch[fi]
-                    {
-                        s.completions.push(fi);
+                match ev.kind {
+                    EV_COMPLETION => {
+                        // stale completion events are invalidated by
+                        // epoch bumps
+                        if !s.st.done[fi]
+                            && s.st.active[fi]
+                            && ev.epoch == s.st.epoch[fi]
+                        {
+                            s.completions.push(fi);
+                        }
                     }
-                } else if !s.st.done[fi] && !s.st.active[fi] {
-                    s.arrivals.push(fi);
+                    EV_ARRIVAL => {
+                        if !s.st.done[fi] && !s.st.active[fi] {
+                            s.arrivals.push(fi);
+                        }
+                    }
+                    EV_FAULT => faults_due.push(ev.flow),
+                    EV_RETRY => {
+                        if !s.st.done[fi]
+                            && !s.st.active[fi]
+                            && ev.epoch == s.st.epoch[fi]
+                        {
+                            retry_due.push(ev.flow);
+                        }
+                    }
+                    _ => unreachable!("unexpected event kind in flat run"),
                 }
             }
-            if s.completions.is_empty() && s.arrivals.is_empty() {
+            if !faults_due.is_empty() || !retry_due.is_empty() {
+                let fs = fsched.expect("fault events imply a schedule");
+                let DesScratch { d, map, st, heap, completions, arrivals, .. } =
+                    s;
+                self.fault_tick(
+                    fs, &faults_due, &retry_due, d, map, st, heap, now,
+                    completions, arrivals, &mut faulted, &mut failed,
+                    &mut |fi| flows[fi].rf.clone(),
+                );
+                for &fu in &failed {
+                    finish[fu as usize] = f64::NAN;
+                    n_done += 1;
+                    failed_flows += 1;
+                }
+                failed.clear();
+            }
+            if s.completions.is_empty()
+                && s.arrivals.is_empty()
+                && faulted.is_empty()
+            {
                 continue;
             }
 
@@ -1821,9 +2161,10 @@ impl<'t> DesSim<'t> {
             self.solve_batch(
                 &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
                 &mut s.par_pool, &mut s.heap, now, &s.completions,
-                &s.arrivals, false,
+                &s.arrivals, &faulted, false,
             );
         }
+        // f64::max ignores NaN, so failed flows never set the makespan
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
         DesResult {
             finish,
@@ -1833,6 +2174,7 @@ impl<'t> DesSim<'t> {
             solve_batches: s.st.batches,
             components_solved: s.st.components,
             fastpath_components: s.st.fastpath,
+            failed_flows,
         }
     }
 
@@ -1898,6 +2240,8 @@ impl<'t> DesSim<'t> {
                 solve_batches: 0,
                 components_solved: 0,
                 fastpath_components: 0,
+                failed_flows: 0,
+                aborted_nodes: 0,
             };
         }
         // ---- transfer nodes -> dense flow set (no RoutedFlow clones:
@@ -1950,11 +2294,31 @@ impl<'t> DesSim<'t> {
             }
         }
 
+        let fsched = self.opts.faults.as_ref().filter(|f| !f.is_empty());
+        if let Some(fs) = fsched {
+            for (i, fe) in fs.events.iter().enumerate() {
+                s.heap.push(Reverse(Ev {
+                    t: fe.t.max(0.0),
+                    kind: EV_FAULT,
+                    flow: i as u32,
+                    epoch: 0,
+                }));
+            }
+        }
+        let mut faults_due: Vec<u32> = Vec::new();
+        let mut retry_due: Vec<u32> = Vec::new();
+        let mut faulted: Vec<usize> = Vec::new();
+        let mut failed: Vec<u32> = Vec::new();
+        let mut failed_flows = 0usize;
+
         let mut finished_nodes: Vec<u32> = Vec::new();
 
         while nodes_done < n_nodes {
             let now = match s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
+                // a failed flow's dependents never release: once the
+                // heap drains, the rest of the DAG is aborted
+                None if failed_flows > 0 => break,
                 None => panic!(
                     "deadlock in closed-loop DES: {} of {n_nodes} nodes \
                      never released",
@@ -1964,6 +2328,9 @@ impl<'t> DesSim<'t> {
             assert!(now.is_finite(), "deadlock in closed-loop DES");
             s.completions.clear();
             s.arrivals.clear();
+            faults_due.clear();
+            retry_due.clear();
+            faulted.clear();
             finished_nodes.clear();
             while let Some(&Reverse(ev)) = s.heap.peek() {
                 if ev.t != now {
@@ -1985,9 +2352,42 @@ impl<'t> DesSim<'t> {
                             s.arrivals.push(fi);
                         }
                     }
+                    EV_FAULT => faults_due.push(ev.flow),
+                    EV_RETRY => {
+                        if !s.st.done[fi]
+                            && !s.st.active[fi]
+                            && ev.epoch == s.st.epoch[fi]
+                        {
+                            retry_due.push(ev.flow);
+                        }
+                    }
                     // EV_NODE: `flow` carries the DAG node id
                     _ => finished_nodes.push(ev.flow),
                 }
+            }
+
+            // ---- fault timeline: capacity changes + policy sweep,
+            // before completions/arrivals (tie-break contract) ----
+            if !faults_due.is_empty() || !retry_due.is_empty() {
+                let fs = fsched.expect("fault events imply a schedule");
+                let DesScratch {
+                    d, map, st, heap, completions, arrivals, flow_node, ..
+                } = s;
+                let mut rf_of = |fi: usize| {
+                    match &wl.nodes[flow_node[fi] as usize].kind {
+                        DagKind::Xfer(rf) => rf.clone(),
+                        DagKind::Compute(_) => {
+                            unreachable!("flow slot maps to a transfer node")
+                        }
+                    }
+                };
+                self.fault_tick(
+                    fs, &faults_due, &retry_due, d, map, st, heap, now,
+                    completions, arrivals, &mut faulted, &mut failed,
+                    &mut rf_of,
+                );
+                failed_flows += failed.len();
+                failed.clear();
             }
 
             // ---- flow completions (the closed-loop completion hook):
@@ -2072,15 +2472,19 @@ impl<'t> DesSim<'t> {
             for &fi in &s.arrivals {
                 s.st.arrive(&s.d, fi, now);
             }
-            if s.completions.is_empty() && s.arrivals.is_empty() {
+            if s.completions.is_empty()
+                && s.arrivals.is_empty()
+                && faulted.is_empty()
+            {
                 continue; // pure node bookkeeping: no rate change
             }
             self.solve_batch(
                 &s.d, &mut s.st, &mut s.cscratch, &mut s.par_cscratch,
                 &mut s.par_pool, &mut s.heap, now, &s.completions,
-                &s.arrivals, full_resolve,
+                &s.arrivals, &faulted, full_resolve,
             );
         }
+        // f64::max ignores NaN: aborted nodes never set the makespan
         let makespan = node_finish.iter().cloned().fold(0.0, f64::max);
         DagResult {
             node_finish,
@@ -2090,6 +2494,8 @@ impl<'t> DesSim<'t> {
             solve_batches: s.st.batches,
             components_solved: s.st.components,
             fastpath_components: s.st.fastpath,
+            failed_flows,
+            aborted_nodes: n_nodes - nodes_done,
         }
     }
 
@@ -2179,6 +2585,17 @@ impl<'t> DesSim<'t> {
     ) -> StreamResult {
         scratch.reset();
         scratch.map.ensure(self.topo.link_universe());
+        let fsched = self.opts.faults.as_ref().filter(|f| !f.is_empty());
+        if let Some(fs) = fsched {
+            for (i, fe) in fs.events.iter().enumerate() {
+                scratch.heap.push(Reverse(Ev {
+                    t: fe.t.max(0.0),
+                    kind: EV_FAULT,
+                    flow: i as u32,
+                    epoch: 0,
+                }));
+            }
+        }
         let cm = super::rounds::CostModel::new(self.topo);
         let mut ex = StreamExec {
             sim: self,
@@ -2242,11 +2659,19 @@ impl<'t> DesSim<'t> {
 
         let mut finished_nodes: Vec<u32> = Vec::new();
         let mut freed: Vec<u32> = Vec::new();
+        let mut faults_due: Vec<u32> = Vec::new();
+        let mut retry_due: Vec<u32> = Vec::new();
+        let mut faulted: Vec<usize> = Vec::new();
+        let mut failed: Vec<u32> = Vec::new();
+        let mut failed_flows = 0usize;
         let mut makespan = 0.0f64;
 
         while ex.nodes_done < ex.total_nodes || ex.round_ev_pending {
             let now = match ex.s.heap.peek() {
                 Some(&Reverse(ev)) => ev.t,
+                // a failed flow stalls its node (and dependents) for
+                // good: once the heap drains, the remainder is aborted
+                None if failed_flows > 0 => break,
                 None => panic!(
                     "deadlock in streaming DES: {} of {} live nodes never \
                      released",
@@ -2257,6 +2682,9 @@ impl<'t> DesSim<'t> {
             assert!(now.is_finite(), "deadlock in streaming DES");
             ex.s.completions.clear();
             ex.s.arrivals.clear();
+            faults_due.clear();
+            retry_due.clear();
+            faulted.clear();
             finished_nodes.clear();
             freed.clear();
             let mut rounds_due = false;
@@ -2281,9 +2709,35 @@ impl<'t> DesSim<'t> {
                         }
                     }
                     EV_ROUND => rounds_due = true,
+                    EV_FAULT => faults_due.push(ev.flow),
+                    EV_RETRY => {
+                        if !ex.s.st.done[fi]
+                            && !ex.s.st.active[fi]
+                            && ev.epoch == ex.s.st.epoch[fi]
+                        {
+                            retry_due.push(ev.flow);
+                        }
+                    }
                     // EV_NODE: `flow` carries the global node id
                     _ => finished_nodes.push(ev.flow),
                 }
+            }
+
+            // ---- fault timeline: capacity changes + policy sweep,
+            // before completions/arrivals (tie-break contract) ----
+            if !faults_due.is_empty() || !retry_due.is_empty() {
+                let fs = fsched.expect("fault events imply a schedule");
+                let DesScratch {
+                    d, map, st, heap, completions, arrivals, flow_rf, ..
+                } = &mut *ex.s;
+                let mut rf_of = |fi: usize| flow_rf[fi].clone();
+                self.fault_tick(
+                    fs, &faults_due, &retry_due, d, map, st, heap, now,
+                    completions, arrivals, &mut faulted, &mut failed,
+                    &mut rf_of,
+                );
+                failed_flows += failed.len();
+                failed.clear();
             }
 
             // ---- deferred rounds whose wake-up is due: materialize every
@@ -2435,12 +2889,15 @@ impl<'t> DesSim<'t> {
             for &fi in &ex.s.arrivals {
                 ex.s.st.arrive(&ex.s.d, fi, now);
             }
-            if !(ex.s.completions.is_empty() && ex.s.arrivals.is_empty()) {
+            if !(ex.s.completions.is_empty()
+                && ex.s.arrivals.is_empty()
+                && faulted.is_empty())
+            {
                 self.solve_batch(
                     &ex.s.d, &mut ex.s.st, &mut ex.s.cscratch,
                     &mut ex.s.par_cscratch, &mut ex.s.par_pool,
                     &mut ex.s.heap, now, &ex.s.completions,
-                    &ex.s.arrivals, false,
+                    &ex.s.arrivals, &faulted, false,
                 );
             }
             // recycle flow slots only after the solve: the component walk
@@ -2459,6 +2916,8 @@ impl<'t> DesSim<'t> {
             solve_batches: ex.s.st.batches,
             components_solved: ex.s.st.components,
             fastpath_components: ex.s.st.fastpath,
+            failed_flows,
+            aborted_nodes: ex.total_nodes - ex.nodes_done,
         }
     }
 
@@ -2681,6 +3140,18 @@ impl<'a, 's, 't> DesSession<'a, 's, 't> {
         self
     }
 
+    /// Install a mid-run fault timeline for this session only
+    /// (composes with [`DesSession::opts`] in either order).
+    pub fn faults(mut self, schedule: super::faults::FaultSchedule) -> Self {
+        let mut o = self
+            .opts
+            .take()
+            .unwrap_or_else(|| self.sim.opts.clone());
+        o.faults = Some(schedule);
+        self.opts = Some(o);
+        self
+    }
+
     /// The simulator this session runs on: the borrowed one, or a
     /// same-topology twin carrying the session's [`DesOpts`] override.
     fn effective(&self) -> DesSim<'t> {
@@ -2746,6 +3217,20 @@ const EV_NODE: u8 = 2;
 /// correctness (materialization happens after the pop loop either way)
 /// but keeps the heap order stable.
 const EV_ROUND: u8 = 3;
+/// Mid-run fault timeline entry ([`DesOpts::faults`]): `Ev::flow`
+/// carries the *index into the schedule's event list* (epoch 0). Heap
+/// position within an instant is irrelevant — the batch pop collects
+/// every event at `now` and [`DesSim::fault_tick`] runs before the
+/// completion/arrival processing, so the fault applies first; the one
+/// exception is a flow whose completion event shares the timestamp,
+/// which still completes (see `fabric::faults`).
+const EV_FAULT: u8 = 4;
+/// Retry-backoff re-arrival ([`super::FaultPolicy::RetryBackoff`]):
+/// `Ev::flow` is the flow slot, `Ev::epoch` the slot epoch at schedule
+/// time. At fire time the flow re-checks its path against the live
+/// capacities — still down re-arms the backoff (or fails past the
+/// retry cap), healthy re-attaches as a normal arrival.
+const EV_RETRY: u8 = 5;
 
 /// Heap event for the incremental solver (min-heap through `Reverse`):
 /// ordered by time, completions before arrivals at equal times.
@@ -2976,6 +3461,201 @@ mod tests {
             })
             .collect();
         assert_equivalent(DesOpts::default(), &t, &timed);
+    }
+
+    #[test]
+    fn fault_t0_degrade_matches_static_degraded_bitwise() {
+        let t = setup();
+        let bytes = 64u64 << 20;
+        let fl = routed(
+            &t,
+            vec![Flow::new(0, 200, bytes), Flow::new(8, 208, bytes)],
+        );
+        let timed: Vec<TimedFlow> = fl
+            .iter()
+            .map(|rf| TimedFlow { rf: rf.clone(), start: 0.0 })
+            .collect();
+        let mut degraded = BTreeMap::new();
+        let mut sched = FaultSchedule::new(FaultPolicy::Reroute);
+        for l in &fl[0].path.links {
+            degraded.insert(*l, 0.5);
+            sched = sched.at(
+                0.0,
+                super::super::faults::FaultKind::LinkDegrade {
+                    link: *l,
+                    multiplier: 0.5,
+                },
+            );
+        }
+        let st = DesSim::new(&t, DesOpts { degraded, ..DesOpts::default() })
+            .run(&timed);
+        let dy = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run(&timed);
+        for (i, (a, b)) in st.finish.iter().zip(&dy.finish).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "flow {i}: static {a} vs t=0 fault {b}"
+            );
+        }
+        assert_eq!(dy.failed_flows, 0);
+    }
+
+    #[test]
+    fn mid_run_nic_down_abort_fails_flow() {
+        use super::super::faults::FaultKind;
+        let t = setup();
+        let bytes = 256u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let healthy =
+            DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        let sched = FaultSchedule::new(FaultPolicy::Abort)
+            .at(healthy.makespan * 0.5, FaultKind::NicDown { endpoint: 0 });
+        let timed = vec![TimedFlow { rf: fl[0].clone(), start: 0.0 }];
+        let res = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run(&timed);
+        assert_eq!(res.failed_flows, 1);
+        assert!(res.finish[0].is_nan(), "aborted flow must not finish");
+        assert_eq!(res.makespan, 0.0, "NaN finishes never set the makespan");
+    }
+
+    #[test]
+    fn retry_backoff_resumes_after_recovery() {
+        use super::super::faults::FaultKind;
+        let t = setup();
+        let bytes = 256u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let healthy =
+            DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        let t_down = healthy.makespan * 0.5;
+        let outage = healthy.makespan * 0.2;
+        // the flow's source NIC dies and comes back: the retry timer
+        // (5%, then 10% of the healthy makespan) crosses the recovery
+        // on its third attempt
+        let sched = FaultSchedule::new(FaultPolicy::RetryBackoff {
+            timeout: healthy.makespan * 0.05,
+            backoff: 2.0,
+            max_retries: 10,
+        })
+        .at(t_down, FaultKind::NicDown { endpoint: 0 })
+        .at(t_down + outage, FaultKind::LinkRecover { link: LinkId::NicUp(0) })
+        .at(
+            t_down + outage,
+            FaultKind::LinkRecover { link: LinkId::NicDown(0) },
+        );
+        let timed = vec![TimedFlow { rf: fl[0].clone(), start: 0.0 }];
+        let res = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run(&timed);
+        assert_eq!(res.failed_flows, 0);
+        assert!(res.finish[0].is_finite());
+        assert!(
+            res.finish[0] > healthy.makespan,
+            "outage must cost time: {} vs healthy {}",
+            res.finish[0],
+            healthy.makespan
+        );
+    }
+
+    #[test]
+    fn retry_exhaustion_fails_flow() {
+        use super::super::faults::FaultKind;
+        let t = setup();
+        let bytes = 256u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let healthy =
+            DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        // NIC never recovers: both retries burn out -> failed
+        let sched = FaultSchedule::new(FaultPolicy::RetryBackoff {
+            timeout: healthy.makespan * 0.1,
+            backoff: 2.0,
+            max_retries: 2,
+        })
+        .at(healthy.makespan * 0.5, FaultKind::NicDown { endpoint: 0 });
+        let timed = vec![TimedFlow { rf: fl[0].clone(), start: 0.0 }];
+        let res = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run(&timed);
+        assert_eq!(res.failed_flows, 1);
+        assert!(res.finish[0].is_nan());
+    }
+
+    #[test]
+    fn reroute_survives_mid_run_global_link_down() {
+        use super::super::faults::FaultKind;
+        let t = setup();
+        let bytes = 256u64 << 20;
+        let fl = routed(&t, vec![Flow::new(0, 200, bytes)]);
+        let glob = *fl[0]
+            .path
+            .links
+            .iter()
+            .find(|l| matches!(l, LinkId::Global { .. }))
+            .expect("0 -> 200 crosses groups");
+        let healthy =
+            DesSim::new(&t, DesOpts::default()).run_simultaneous(&fl);
+        let sched = FaultSchedule::new(FaultPolicy::Reroute)
+            .at(healthy.makespan * 0.5, FaultKind::LinkDown { link: glob });
+        let timed = vec![TimedFlow { rf: fl[0].clone(), start: 0.0 }];
+        let res = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run(&timed);
+        assert_eq!(res.failed_flows, 0, "a parallel global link exists");
+        assert!(res.finish[0].is_finite());
+        // the alternate minimal path has the same structure and no
+        // contention: the mid-run reroute is free to fp noise
+        let rel = (res.finish[0] - healthy.makespan).abs()
+            / healthy.makespan;
+        assert!(rel < 1e-6, "reroute cost {rel}");
+    }
+
+    #[test]
+    fn dag_abort_reports_aborted_dependents() {
+        use super::super::faults::FaultKind;
+        use super::super::workload::DagWorkload;
+        let t = setup();
+        let mut r = Router::new(&t);
+        let bytes = 256u64 << 20;
+        let fa = Flow::new(0, 200, bytes);
+        let pa = r.route(&fa);
+        let fb = Flow::new(200, 64, bytes);
+        let pb = r.route(&fb);
+        let fc = Flow::new(8, 72, bytes);
+        let pc = r.route(&fc);
+        let mut wl = DagWorkload::new();
+        let a = wl.xfer(RoutedFlow { flow: fa, path: pa }, Vec::new());
+        let _b = wl.xfer(RoutedFlow { flow: fb, path: pb }, vec![a]);
+        // an independent chain elsewhere survives the abort
+        let _c = wl.xfer(RoutedFlow { flow: fc, path: pc }, Vec::new());
+        let healthy = DesSim::new(&t, DesOpts::default()).run_dag(&wl);
+        assert_eq!(healthy.aborted_nodes, 0);
+        let sched = FaultSchedule::new(FaultPolicy::Abort).at(
+            healthy.node_finish[a as usize] * 0.25,
+            FaultKind::NicDown { endpoint: 0 },
+        );
+        let res = DesSim::new(
+            &t,
+            DesOpts { faults: Some(sched), ..DesOpts::default() },
+        )
+        .run_dag(&wl);
+        assert_eq!(res.failed_flows, 1, "only the first chain's head fails");
+        assert_eq!(res.aborted_nodes, 2, "head + released dependent");
+        assert!(res.node_finish[0].is_nan());
+        assert!(res.node_finish[1].is_nan());
+        assert!(res.node_finish[2].is_finite(), "independent chain runs");
+        assert!(res.makespan > 0.0);
     }
 
     #[test]

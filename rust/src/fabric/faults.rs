@@ -1,0 +1,297 @@
+//! Deterministic mid-run fault injection (EXPERIMENTS.md §Fault
+//! injection).
+//!
+//! At Aurora's component count (~85k Cassini NICs, 5,600 Rosetta
+//! switches) link flaps, degraded lanes and NIC/node failures are
+//! steady-state events, not exceptions. A [`FaultSchedule`] is a
+//! time-ordered list of [`FaultEvent`]s executed *inside* the DES event
+//! heap (`EV_FAULT` in `fabric::des`): at fire time the effective
+//! capacity of every touched link is recomputed, exactly the components
+//! whose links changed are re-solved, and a [`FaultPolicy`] decides
+//! what happens to in-flight flows crossing a link that went down.
+//!
+//! Determinism contract: the schedule is plain data (sorted `Vec`, no
+//! hash iteration, no clocks); [`FaultSchedule::random_flaps`] draws
+//! from its own seeded [`Pcg`] stream, so identical seeds produce
+//! identical timelines on every host and the campaign byte-diff gates
+//! extend to chaos scenarios unchanged. A schedule firing every event
+//! at `t = 0` is bit-identical to installing the same multipliers
+//! statically via `DesOpts::degraded` (pinned by
+//! `tests/des_equivalence.rs`).
+
+use crate::topology::{LinkId, Topology};
+use crate::util::Pcg;
+
+/// Dedicated Pcg stream for [`FaultSchedule::random_flaps`] — disjoint
+/// from the workload (`0x5ce0`) and router (`seed ^ 0x707e`) streams.
+pub const FAULT_RNG_STREAM: u64 = 0xFA17;
+
+/// One fault. Multipliers scale the link's per-direction bandwidth
+/// (§3.4 lane disable prices a degraded link the same way); `LinkDown`
+/// is multiplier `0.0`, `LinkRecover` restores `1.0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Scale one link's bandwidth by `multiplier` (0.0 < m <= 1.0).
+    LinkDegrade { link: LinkId, multiplier: f64 },
+    /// Take one link fully down (multiplier 0.0): in-flight flows
+    /// crossing it are handled by the schedule's [`FaultPolicy`].
+    LinkDown { link: LinkId },
+    /// Restore one link to full bandwidth (multiplier 1.0).
+    LinkRecover { link: LinkId },
+    /// Take one endpoint's NIC down: both its injection (`NicUp`) and
+    /// ejection (`NicDown`) links go to multiplier 0.0.
+    NicDown { endpoint: u32 },
+    /// Take a whole node down: every NIC link of the node's
+    /// `nics_per_node` endpoints goes to 0.0. Terminal — there is no
+    /// `NodeRecover`; [`FaultSchedule::nodes_down_at`] treats the node
+    /// as down from the fire time on.
+    NodeDown { node: u32 },
+}
+
+impl FaultKind {
+    /// Expand this fault into `(link, multiplier)` pairs.
+    /// `nics_per_node` resolves `NodeDown` to its endpoints' NIC links.
+    pub fn link_multipliers(
+        &self,
+        nics_per_node: usize,
+        out: &mut Vec<(LinkId, f64)>,
+    ) {
+        match *self {
+            FaultKind::LinkDegrade { link, multiplier } => {
+                out.push((link, multiplier));
+            }
+            FaultKind::LinkDown { link } => out.push((link, 0.0)),
+            FaultKind::LinkRecover { link } => out.push((link, 1.0)),
+            FaultKind::NicDown { endpoint } => {
+                out.push((LinkId::NicUp(endpoint), 0.0));
+                out.push((LinkId::NicDown(endpoint), 0.0));
+            }
+            FaultKind::NodeDown { node } => {
+                let base = node as usize * nics_per_node;
+                for nic in base..base + nics_per_node {
+                    out.push((LinkId::NicUp(nic as u32), 0.0));
+                    out.push((LinkId::NicDown(nic as u32), 0.0));
+                }
+            }
+        }
+    }
+}
+
+/// A fault at a simulated time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Fire time (seconds of simulated time, `>= 0`, finite).
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// What the DES does to an in-flight flow crossing a link that went
+/// down (tie-break contract: at a shared timestamp the fault applies
+/// first, but a flow whose remaining bytes already reached zero during
+/// the preceding interval still completes — delivered bytes are never
+/// retroactively destroyed; see EXPERIMENTS.md §Fault injection).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultPolicy {
+    /// Remaining bytes re-route onto the first minimal candidate path
+    /// avoiding every down link (deterministic candidate order); if no
+    /// such path exists the flow is marked failed.
+    Reroute,
+    /// The flow detaches and re-arrives after a priced timeout of
+    /// `timeout * backoff^attempt`; after `max_retries` exhausted
+    /// attempts it is marked failed.
+    RetryBackoff { timeout: f64, backoff: f64, max_retries: u32 },
+    /// The flow fails immediately; its DAG dependents never release
+    /// (surfaced as `aborted_nodes`).
+    Abort,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy::Reroute
+    }
+}
+
+impl FaultPolicy {
+    /// Stable lowercase name for reports (campaign schema v4).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPolicy::Reroute => "reroute",
+            FaultPolicy::RetryBackoff { .. } => "retry_backoff",
+            FaultPolicy::Abort => "abort",
+        }
+    }
+}
+
+/// A deterministic fault timeline plus the policy for down-link flows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// Time-ordered events (non-decreasing `t`; the builders maintain
+    /// the order, `WorkloadAnalyzer::analyze_faults` checks it).
+    /// Events sharing a timestamp apply in list order.
+    pub events: Vec<FaultEvent>,
+    pub policy: FaultPolicy,
+}
+
+impl FaultSchedule {
+    pub fn new(policy: FaultPolicy) -> Self {
+        FaultSchedule { events: Vec::new(), policy }
+    }
+
+    /// Add one fault, keeping `events` sorted by fire time (an event
+    /// inserted at an occupied timestamp lands after the existing
+    /// events at that time, so builder order is apply order).
+    pub fn at(mut self, t: f64, kind: FaultKind) -> Self {
+        let pos = self
+            .events
+            .partition_point(|e| e.t.total_cmp(&t).is_le());
+        self.events.insert(pos, FaultEvent { t, kind });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Seeded flapping-link generator on the dedicated
+    /// [`FAULT_RNG_STREAM`]: `flaps` independent global-link outages
+    /// with start times uniform in `[0, horizon_s)` and durations
+    /// `mean_outage_s * [0.5, 1.5)`, each paired with its
+    /// `LinkRecover`. Only compute-group global links flap (they are
+    /// the shared, adaptively-routed resources; NIC faults are modeled
+    /// explicitly via `NicDown`/`NodeDown`).
+    pub fn random_flaps(
+        topo: &Topology,
+        flaps: usize,
+        horizon_s: f64,
+        mean_outage_s: f64,
+        seed: u64,
+        policy: FaultPolicy,
+    ) -> Self {
+        let mut rng = Pcg::with_stream(seed, FAULT_RNG_STREAM);
+        let groups = topo.cfg.compute_groups as u64;
+        let par = topo.cfg.global_links_compute as u64;
+        let mut s = FaultSchedule::new(policy);
+        for _ in 0..flaps {
+            let src = rng.gen_range(groups) as u16;
+            let dst =
+                ((src as u64 + 1 + rng.gen_range(groups - 1)) % groups) as u16;
+            let idx = rng.gen_range(par) as u8;
+            let link = LinkId::Global { src, dst, idx };
+            let t0 = horizon_s * rng.gen_f64();
+            let outage = mean_outage_s * (0.5 + rng.gen_f64());
+            s = s
+                .at(t0, FaultKind::LinkDown { link })
+                .at(t0 + outage, FaultKind::LinkRecover { link });
+        }
+        s
+    }
+
+    /// Every link any event touches (sorted, deduplicated) — the set a
+    /// router must invalidate before pricing this schedule.
+    pub fn touched_links(&self, nics_per_node: usize) -> Vec<LinkId> {
+        let mut out = Vec::new();
+        for ev in &self.events {
+            ev.kind.link_multipliers(nics_per_node, &mut out);
+        }
+        let mut links: Vec<LinkId> = out.into_iter().map(|(l, _)| l).collect();
+        links.sort_unstable();
+        links.dedup();
+        links
+    }
+
+    /// Nodes down at time `t` (sorted, deduplicated). `NodeDown` is
+    /// terminal, so this is every `NodeDown` fired at or before `t`;
+    /// pass `f64::INFINITY` for the end-of-run (epilog) state.
+    pub fn nodes_down_at(&self, t: f64) -> Vec<u32> {
+        let mut down: Vec<u32> = self
+            .events
+            .iter()
+            .filter(|e| e.t.total_cmp(&t).is_le())
+            .filter_map(|e| match e.kind {
+                FaultKind::NodeDown { node } => Some(node),
+                _ => None,
+            })
+            .collect();
+        down.sort_unstable();
+        down.dedup();
+        down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AuroraConfig;
+
+    #[test]
+    fn builder_keeps_events_time_ordered() {
+        let l = LinkId::Global { src: 0, dst: 1, idx: 0 };
+        let s = FaultSchedule::new(FaultPolicy::Abort)
+            .at(2.0, FaultKind::LinkRecover { link: l })
+            .at(0.5, FaultKind::LinkDown { link: l })
+            .at(2.0, FaultKind::LinkDegrade { link: l, multiplier: 0.5 })
+            .at(1.0, FaultKind::NicDown { endpoint: 3 });
+        let ts: Vec<f64> = s.events.iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![0.5, 1.0, 2.0, 2.0]);
+        // equal timestamps keep builder order: recover before degrade
+        assert!(matches!(s.events[2].kind, FaultKind::LinkRecover { .. }));
+        assert!(matches!(s.events[3].kind, FaultKind::LinkDegrade { .. }));
+    }
+
+    #[test]
+    fn random_flaps_is_seed_deterministic_and_paired() {
+        let topo = Topology::new(&AuroraConfig::small(6, 4));
+        let a = FaultSchedule::random_flaps(
+            &topo, 8, 1.0, 0.1, 42, FaultPolicy::Reroute,
+        );
+        let b = FaultSchedule::random_flaps(
+            &topo, 8, 1.0, 0.1, 42, FaultPolicy::Reroute,
+        );
+        assert_eq!(a, b, "same seed must reproduce the timeline");
+        let c = FaultSchedule::random_flaps(
+            &topo, 8, 1.0, 0.1, 43, FaultPolicy::Reroute,
+        );
+        assert_ne!(a, c, "seed must matter");
+        assert_eq!(a.len(), 16, "each flap pairs a down with a recover");
+        let downs = a
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::LinkDown { .. }))
+            .count();
+        assert_eq!(downs, 8);
+        for ev in &a.events {
+            assert!(ev.t.is_finite() && ev.t >= 0.0);
+            let link = match ev.kind {
+                FaultKind::LinkDown { link }
+                | FaultKind::LinkRecover { link } => link,
+                _ => panic!("flaps only emit down/recover"),
+            };
+            assert!(topo.contains_link(&link), "{link:?} outside topology");
+        }
+        for w in a.events.windows(2) {
+            assert!(w[0].t <= w[1].t, "events must be time-ordered");
+        }
+    }
+
+    #[test]
+    fn node_down_expands_to_every_nic_link_and_is_terminal() {
+        let topo = Topology::new(&AuroraConfig::small(4, 4));
+        let npn = topo.cfg.nics_per_node;
+        let s = FaultSchedule::new(FaultPolicy::Abort)
+            .at(1.0, FaultKind::NodeDown { node: 2 })
+            .at(3.0, FaultKind::NodeDown { node: 5 });
+        let links = s.touched_links(npn);
+        assert_eq!(links.len(), 2 * npn * 2, "up+down per NIC, two nodes");
+        for nic in (2 * npn)..(3 * npn) {
+            assert!(links.contains(&LinkId::NicUp(nic as u32)));
+            assert!(links.contains(&LinkId::NicDown(nic as u32)));
+        }
+        assert_eq!(s.nodes_down_at(0.5), Vec::<u32>::new());
+        assert_eq!(s.nodes_down_at(1.0), vec![2]);
+        assert_eq!(s.nodes_down_at(f64::INFINITY), vec![2, 5]);
+    }
+}

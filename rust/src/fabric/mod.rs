@@ -33,11 +33,17 @@
 //! diagnostics (cycles, sentinel misuse, aliasing, collective byte
 //! budgets) over any workload before it reaches an executor — the
 //! paper's validate-before-scale posture applied to inputs.
+//!
+//! [`faults`] is deterministic mid-run fault injection: a time-ordered
+//! [`FaultSchedule`] executed inside the DES event heap (`EV_FAULT`),
+//! with reroute / retry-backoff / abort semantics for in-flight flows
+//! crossing a link that goes down.
 
 pub mod analysis;
 pub mod analytic;
 pub mod arrivals;
 pub mod des;
+pub mod faults;
 pub mod load;
 pub mod qos;
 pub mod routing;
@@ -56,6 +62,7 @@ pub use des::{
     DagResult, DesOpts, DesScratch, DesSession, DesSim, StreamResult,
     TimedFlow,
 };
+pub use faults::{FaultEvent, FaultKind, FaultPolicy, FaultSchedule};
 pub use load::{LoadMap, SparseLoadMap};
 pub use qos::TrafficClass;
 pub use routing::Router;

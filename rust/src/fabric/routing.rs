@@ -12,7 +12,7 @@
 use super::{Flow, LoadMap, TrafficClass};
 use crate::topology::{LinkId, Path, Topology};
 use crate::util::Pcg;
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 /// Key of one route-cache entry: repeated-structure traffic (collective
 /// rings, app halo loops) re-sends the same (src, dst) pair with the same
@@ -56,6 +56,14 @@ pub struct Router<'t> {
     /// cache hits) — the machine-independent numerator/denominator of the
     /// `des_route_cache_*` bench ratio.
     pub decisions: usize,
+    /// Fallback flag: when set, [`Router::set_degraded`] drops *every*
+    /// stored decision (the pre-scoped behaviour) instead of only the
+    /// decisions whose path crosses a changed link. Scoped invalidation
+    /// is the default; flip this when an experiment needs every pair to
+    /// re-decide against the new fabric (e.g. to re-balance around a
+    /// recovered link that untouched paths would otherwise ignore until
+    /// their own next re-decision).
+    pub full_flush: bool,
 }
 
 impl<'t> Router<'t> {
@@ -74,23 +82,73 @@ impl<'t> Router<'t> {
             nonminimal_count: 0,
             total_routed: 0,
             decisions: 0,
+            full_flush: false,
         }
     }
 
     /// Install the §3.4 degraded-link multipliers (replacing any previous
-    /// set) and invalidate every stored decision: the route cache and the
-    /// pinned-route map hold *paths only*, so a decision made against the
-    /// old bandwidths must not replay against the new ones. Pass the same
-    /// map as [`crate::fabric::des::DesOpts::degraded`] so routing and
-    /// DES pricing see one fabric.
+    /// set) and invalidate the stored decisions the change can actually
+    /// stale: the route cache and the pinned-route map hold *paths only*,
+    /// so a decision whose path crosses a link whose effective multiplier
+    /// changed must not replay against the new bandwidths. Decisions on
+    /// untouched paths keep both their cache entry and their pin (their
+    /// own service times are unchanged; they re-score alternatives at
+    /// their next natural re-decision) — set [`Router::full_flush`] to
+    /// restore the drop-everything behaviour. Pass the same map as
+    /// [`crate::fabric::des::DesOpts::degraded`] so routing and DES
+    /// pricing see one fabric.
     pub fn set_degraded<I>(&mut self, degraded: I)
     where
         I: IntoIterator<Item = (LinkId, f64)>,
     {
-        self.degraded = degraded.into_iter().collect();
-        self.pinned.clear();
+        let new: FxHashMap<LinkId, f64> = degraded.into_iter().collect();
+        if self.full_flush {
+            self.degraded = new;
+            self.pinned.clear();
+            if let Some(c) = &mut self.cache {
+                c.map.clear(); // keep the hit counter: it counts history
+            }
+            return;
+        }
+        // effective multiplier defaults to 1.0 on both sides, so an
+        // entry appearing or vanishing only counts when it moves the
+        // effective value; bitwise compare keeps this exact
+        let one = 1.0f64.to_bits();
+        let mut changed: Vec<LinkId> = Vec::new();
+        for (l, m) in &new {
+            let old = self.degraded.get(l).copied().unwrap_or(1.0);
+            if old.to_bits() != m.to_bits() {
+                changed.push(*l);
+            }
+        }
+        for (l, m) in &self.degraded {
+            if !new.contains_key(l) && m.to_bits() != one {
+                changed.push(*l);
+            }
+        }
+        self.degraded = new;
+        self.invalidate_links(changed);
+    }
+
+    /// Drop every stored decision (route-cache entry or pinned ordered
+    /// route) whose path crosses one of `links`; decisions on untouched
+    /// paths survive. The scoped half of [`Router::set_degraded`], public
+    /// so fault injection ([`crate::fabric::faults::FaultSchedule`] via
+    /// `World::inject_faults`) can invalidate exactly the routes a fault
+    /// timeline touches.
+    pub fn invalidate_links<I>(&mut self, links: I)
+    where
+        I: IntoIterator<Item = LinkId>,
+    {
+        let set: FxHashSet<LinkId> = links.into_iter().collect();
+        if set.is_empty() {
+            return;
+        }
+        self.pinned
+            .retain(|_, p| !p.links.iter().any(|l| set.contains(l)));
         if let Some(c) = &mut self.cache {
-            c.map.clear(); // keep the hit counter: it counts history
+            c.map
+                .retain(|_, p| !p.links.iter().any(|l| set.contains(l)));
         }
     }
 
@@ -490,9 +548,11 @@ mod tests {
     }
 
     #[test]
-    fn set_degraded_invalidates_cache_and_pinned_routes() {
-        // cache and pin store paths only: a decision made against the
-        // old bandwidths must not replay after the fabric degrades
+    fn set_degraded_invalidation_is_scoped_to_changed_links() {
+        // cache and pin store paths only: a decision whose path crosses
+        // the changed link must not replay — but untouched (src,dst)
+        // pairs keep their cached path and pin, and `decisions` must
+        // not move for them
         let t = topo();
         let mut r = Router::new(&t);
         r.enable_route_cache();
@@ -505,22 +565,68 @@ mod tests {
         r.route(&ord);
         r.route(&ord);
         assert_eq!(r.decisions, 2, "pin replay is not a decision");
+        // degrade (0,200)'s injection link: the cached (0,200) entry
+        // crosses it and must re-decide; (8,208) injects on NicUp(8)
+        // and its pin must survive
         r.set_degraded([(LinkId::NicUp(0), 0.5)]);
         r.route(&f);
         assert_eq!(
             r.decisions, 3,
-            "cached path must not replay across set_degraded"
+            "cached path crossing the changed link must re-decide"
         );
         r.route(&ord);
         assert_eq!(
-            r.decisions, 4,
-            "pinned path must not replay across set_degraded"
+            r.decisions, 3,
+            "(8,208) does not cross NicUp(0): pin must replay untouched"
         );
-        // the refreshed decisions memoize / pin again
+        // the refreshed (0,200) decision memoizes again
+        r.route(&f);
+        assert_eq!(r.decisions, 3);
+        assert_eq!(r.route_cache_hits(), 2);
+        // clearing the degrade changes NicUp(0)'s effective multiplier
+        // back (0.5 -> 1.0): (0,200) invalidated again, (8,208) not
+        r.set_degraded([]);
         r.route(&f);
         r.route(&ord);
-        assert_eq!(r.decisions, 4);
-        assert_eq!(r.route_cache_hits(), 2);
+        assert_eq!(r.decisions, 4, "only the recovered link's pair moves");
+    }
+
+    #[test]
+    fn set_degraded_full_flush_flag_restores_global_invalidation() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        r.full_flush = true;
+        r.enable_route_cache();
+        let f = Flow::new(0, 200, 1 << 20);
+        let ord = Flow::new(8, 208, 4096).ordered();
+        r.route(&f);
+        r.route(&ord);
+        assert_eq!(r.decisions, 2);
+        r.set_degraded([(LinkId::NicUp(0), 0.5)]);
+        r.route(&f);
+        r.route(&ord);
+        assert_eq!(r.decisions, 4, "full flush drops every stored decision");
+    }
+
+    #[test]
+    fn invalidate_links_drops_only_crossing_routes() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        r.enable_route_cache();
+        let f = Flow::new(0, 200, 1 << 20);
+        let ord = Flow::new(8, 208, 4096).ordered();
+        r.route(&f);
+        r.route(&ord);
+        assert_eq!(r.decisions, 2);
+        r.invalidate_links([LinkId::NicUp(0)]);
+        r.route(&ord);
+        assert_eq!(r.decisions, 2, "(8,208) pin survives");
+        r.route(&f);
+        assert_eq!(r.decisions, 3, "(0,200) cache entry dropped");
+        r.invalidate_links([]);
+        r.route(&f);
+        r.route(&ord);
+        assert_eq!(r.decisions, 3, "empty set is a no-op");
     }
 
     #[test]

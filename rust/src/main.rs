@@ -9,6 +9,7 @@
 //! repro launch <nodes> <ppn> <app>   run a benchmark via the launcher
 //! repro campaign [threads] [out]     parallel scenario sweep (JSON report)
 //! repro openloop [threads] [out]     1M-arrival open-loop service run
+//! repro chaos [threads] [out]        fault-rate x policy chaos sweep
 //! repro lint [scenario|--all]        pre-execution workload verifier
 //! ```
 //!
@@ -29,7 +30,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: repro \
          <spec|list|reproduce|functional|validate|launch|campaign|openloop\
-         |lint> ..."
+         |chaos|lint> ..."
     );
     std::process::exit(2);
 }
@@ -187,6 +188,47 @@ fn main() -> Result<()> {
             }
             let rep = c.run(threads);
             println!("{}", rep.render_table());
+            if let Some(out) = args.get(2) {
+                rep.write(out)?;
+                println!("report written to {out}");
+            }
+        }
+        "chaos" => {
+            // repro chaos [threads] [out.json] — the fault-injection
+            // sweep: fault rate (flap count over a fixed horizon) x
+            // recovery policy (reroute / retry-backoff / abort) on the
+            // multi-group halo+allreduce step. Every cell's fault
+            // schedule is derived from the campaign seed and the cell
+            // name, so the report is deterministic; the CI
+            // campaign-determinism job byte-diffs it across
+            // DES_THREADS=1 and DES_THREADS=8.
+            let threads: usize = args
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or_else(pool::default_threads);
+            let cfg = AuroraConfig::small(4, 4);
+            let mut c =
+                Campaign::chaos(&cfg, aurorasim::reproduce::CAMPAIGN_SEED);
+            if let Some(n) = std::env::var("DES_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                for s in &mut c.scenarios {
+                    s.opts.solver_threads = n.max(1);
+                }
+            }
+            let rep = c.run(threads);
+            println!("{}", rep.render_table());
+            let failed: usize =
+                rep.results.iter().map(|r| r.failed_flows).sum();
+            let aborted: usize =
+                rep.results.iter().map(|r| r.aborted_nodes).sum();
+            println!(
+                "chaos: {} scenario(s), {failed} failed flow(s), \
+                 {aborted} aborted dag node(s)",
+                rep.results.len()
+            );
             if let Some(out) = args.get(2) {
                 rep.write(out)?;
                 println!("report written to {out}");

@@ -364,6 +364,27 @@ impl<'t> World<'t> {
         self.des_opts.degraded = degraded;
     }
 
+    /// Install a deterministic mid-run fault timeline
+    /// ([`crate::fabric::faults::FaultSchedule`]) on this world's DES
+    /// options: every subsequent Des-tier exchange, superstep flush and
+    /// [`World::open_loop_service`] prices the schedule's events inside
+    /// its event heap. Cached and pinned routes whose path crosses a
+    /// link the timeline touches are invalidated (scoped, see
+    /// [`Router::invalidate_links`]) — a decision made against the
+    /// healthy fabric must not replay across a planned outage. Pass
+    /// `None` to clear.
+    pub fn inject_faults(
+        &mut self,
+        faults: Option<crate::fabric::faults::FaultSchedule>,
+    ) {
+        if let Some(fs) = &faults {
+            self.router.invalidate_links(
+                fs.touched_links(self.topo.cfg.nics_per_node),
+            );
+        }
+        self.des_opts.faults = faults;
+    }
+
     /// Run an open-loop Poisson RPC service over this world's rank NICs
     /// on the bounded-memory streaming tier ([`crate::fabric::arrivals`]):
     /// `arrivals` flows at `rate`/s, sizes drawn from `mix`, batched

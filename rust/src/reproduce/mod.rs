@@ -485,8 +485,10 @@ fn campaign_experiment() -> String {
         "§3.8.2 GPCNet isolated/congested, §3.1 incast fan-ins, §3.4 \
          degraded lanes, §5.1 collective rounds, plus closed-loop \
          dependency-released rounds (collective-vs-incast, multi-job \
-         phase stagger, HACC/AMR-Wind/LAMMPS step traces) and the \
-         open-loop Poisson RPC service scenarios (healthy and degraded)",
+         phase stagger, HACC/AMR-Wind/LAMMPS step traces), the \
+         open-loop Poisson RPC service scenarios (healthy and degraded) \
+         and the mid-run fault-injection scenarios (link flap under \
+         reroute, NIC outage under retry-backoff, random service flaps)",
     );
     s.push_str(&rep.render_table());
     s

@@ -247,6 +247,31 @@ impl Topology {
         idx
     }
 
+    /// Whether `link` names a real link of this topology — the
+    /// non-panicking validity check behind the fault-schedule analyzer
+    /// (`WorkloadAnalyzer::analyze_faults`): every id component must
+    /// lie inside the range [`Topology::link_index`] mints from.
+    pub fn contains_link(&self, link: &LinkId) -> bool {
+        let e = self.cfg.compute_endpoints();
+        let s = self.cfg.switches_per_group;
+        let g = self.cfg.total_groups();
+        match *link {
+            LinkId::NicUp(n) | LinkId::NicDown(n) => (n as usize) < e,
+            LinkId::Local { group, a, b } => {
+                (group as usize) < g
+                    && (a as usize) < s
+                    && (b as usize) < s
+                    && a != b
+            }
+            LinkId::Global { src, dst, idx } => {
+                (src as usize) < g
+                    && (dst as usize) < g
+                    && src != dst
+                    && (idx as usize) < self.max_global_links()
+            }
+        }
+    }
+
     /// The arithmetic behind [`Topology::link_index`] as a `Copy` value:
     /// long-lived dense link-keyed stores (the router's
     /// [`crate::fabric::LoadMap`]) capture it once and mint ids without

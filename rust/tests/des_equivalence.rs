@@ -16,6 +16,13 @@
 //! DAGs with congestors, incast interference, degraded links and the
 //! HACC / AMR-Wind / LAMMPS step traces — plus the open-loop
 //! degeneration (`DagWorkload::from_timed` reproduces `run`).
+//!
+//! Fault-timeline extension (EXPERIMENTS.md §Fault injection): a t=0
+//! `FaultSchedule` must price bit-identically to static
+//! `DesOpts::degraded` at every solver thread count, and a fault event
+//! sharing a timestamp with a flow completion resolves deterministically
+//! (the fault sweep runs first but never fails flows that complete in
+//! the same batch).
 
 use aurorasim::campaign::{Campaign, Scenario, Workload};
 use aurorasim::config::AuroraConfig;
@@ -825,6 +832,95 @@ fn partitioned_solve_matches_oracle_on_multi_component_case() {
         &DesOpts { congestion_mgmt: false, ..DesOpts::default() },
         &dag,
         "multi-component halo+allreduce+incast nocm",
+    );
+}
+
+// ---------------------------------------------------------- fault timeline
+
+/// Fault-injection acceptance (EXPERIMENTS.md §Fault injection): a
+/// fault timeline that degrades links at t=0 must price bit-identically
+/// to the same degradation installed statically via `DesOpts::degraded`
+/// — at every solver thread count. The t=0 fire path multiplies
+/// pristine capacities exactly once, so `(bw * 1.0) * m == bw * m`
+/// holds bitwise and the two runs share every intermediate.
+#[test]
+fn fault_t0_timeline_bit_identical_to_static_degraded_across_threads() {
+    use aurorasim::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
+    let topo = Topology::new(&AuroraConfig::small(6, 4));
+    let mut rng = Pcg::new(0xFA17);
+    let (wl, opts) = closed_loop_case(&topo, &mut rng, 12, 4, 6, 5, true);
+    assert!(!opts.degraded.is_empty(), "case must degrade some links");
+    let mut fs = FaultSchedule::new(FaultPolicy::Reroute);
+    for (l, m) in &opts.degraded {
+        fs = fs
+            .at(0.0, FaultKind::LinkDegrade { link: *l, multiplier: *m });
+    }
+    for &threads in &[1usize, 2, 8] {
+        let mut static_opts = opts.clone();
+        static_opts.solver_threads = threads;
+        let mut fault_opts = opts.clone();
+        fault_opts.degraded = BTreeMap::new();
+        fault_opts.faults = Some(fs.clone());
+        fault_opts.solver_threads = threads;
+        let rs = DesSim::new(&topo, static_opts).run_dag(&wl);
+        let rf = DesSim::new(&topo, fault_opts).run_dag(&wl);
+        assert_eq!(rs.failed_flows, 0);
+        assert_eq!(rf.failed_flows, 0);
+        assert_eq!(
+            rs.node_finish.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            rf.node_finish.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "threads = {threads}: t=0 timeline vs static degraded"
+        );
+        assert_eq!(rs.makespan.to_bits(), rf.makespan.to_bits());
+        assert_eq!(rs.contributors, rf.contributors);
+        assert_eq!(rs.victims, rf.victims);
+    }
+}
+
+/// A fault event and a flow completion sharing an exact timestamp: the
+/// fault sweep runs first within the batch but must skip flows in the
+/// batch's completion set — delivered bytes are never destroyed — so
+/// the completing flow finishes at exactly its healthy time while a
+/// still-in-flight flow crossing a downed link is failed by `Abort`.
+#[test]
+fn fault_and_completion_same_timestamp_tie_break() {
+    use aurorasim::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
+    use aurorasim::topology::LinkId;
+    let topo = Topology::new(&AuroraConfig::small(4, 4));
+    let mut router = Router::with_seed(&topo, 61);
+    // disjoint NIC-capped flows, B carrying twice A's bytes: B is
+    // exactly half done when A completes
+    let flows = [Flow::new(0, 200, 32 << 20), Flow::new(8, 208, 64 << 20)];
+    let timed: Vec<TimedFlow> = flows
+        .into_iter()
+        .map(|f| TimedFlow {
+            rf: RoutedFlow { path: router.route(&f), flow: f },
+            start: 0.0,
+        })
+        .collect();
+    let healthy = DesSim::new(&topo, DesOpts::default()).run(&timed);
+    let t_c = healthy.finish[0];
+    assert!(healthy.finish[1] > t_c, "B must still be in flight at t_c");
+    // both uplinks go down at exactly A's completion time
+    let fs = FaultSchedule::new(FaultPolicy::Abort)
+        .at(t_c, FaultKind::LinkDown { link: LinkId::NicUp(0) })
+        .at(t_c, FaultKind::LinkDown { link: LinkId::NicUp(8) });
+    let res = DesSim::new(
+        &topo,
+        DesOpts { faults: Some(fs), ..DesOpts::default() },
+    )
+    .run(&timed);
+    assert_eq!(res.failed_flows, 1, "only the in-flight flow fails");
+    assert_eq!(
+        res.finish[0].to_bits(),
+        t_c.to_bits(),
+        "a completion sharing the fault timestamp must still complete"
+    );
+    assert!(res.finish[1].is_nan(), "aborted flow reports NaN");
+    assert_eq!(
+        res.makespan.to_bits(),
+        t_c.to_bits(),
+        "failed flows are excluded from the makespan"
     );
 }
 
