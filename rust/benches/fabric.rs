@@ -684,6 +684,77 @@ fn main() {
         rep.ratio("open_loop_live_headroom", headroom);
     }
 
+    // graceful-degradation hook overhead: the same open-loop service run
+    // priced with no policy vs an armed-but-inert ServicePolicy (every
+    // knob off). Arming turns on the whole degradation path — per-class
+    // tagging, the admission check per arrival, the budget plumbing —
+    // but an inert policy schedules no EV_DEADLINE/EV_HEDGE events and
+    // sheds nothing, so the two runs must agree bit-for-bit and the
+    // gated ratio (no-policy time / armed time, floor 0.95) bounds the
+    // bookkeeping cost of carrying a policy at ~5%.
+    {
+        use aurorasim::fabric::arrivals::{
+            run_open_loop, PoissonArrivals, RpcClass,
+        };
+        use aurorasim::fabric::{ClassPolicy, DesScratch, ServicePolicy};
+        let nics = workload::spread_nics(&small, 64);
+        let mix = vec![
+            RpcClass { bytes: 4 << 10, weight: 0.70 },
+            RpcClass { bytes: 64 << 10, weight: 0.25 },
+            RpcClass { bytes: 1 << 20, weight: 0.05 },
+        ];
+        let inert = ServicePolicy::uniform(mix.len(), ClassPolicy::OFF);
+        assert!(inert.is_inert());
+        let sim_none = DesSim::new(&small, DesOpts::default());
+        let sim_armed = DesSim::new(
+            &small,
+            DesOpts { policies: Some(inert), ..DesOpts::default() },
+        );
+        let mut scratch = DesScratch::new();
+        let run = |sim: &DesSim, scratch: &mut DesScratch| {
+            let mut router = Router::with_seed(&small, 71);
+            let src = PoissonArrivals::new(
+                71,
+                80_000.0,
+                40_000,
+                nics.clone(),
+                mix.clone(),
+            );
+            run_open_loop(sim, scratch, src, &mut router, 1e-3, 25e-3)
+        };
+        let (rn, sn) = run(&sim_none, &mut scratch); // also the warmup
+        let (ra, sa) = run(&sim_armed, &mut scratch);
+        assert_eq!(
+            (sn.p50.to_bits(), sn.p99.to_bits(), rn.makespan.to_bits()),
+            (sa.p50.to_bits(), sa.p99.to_bits(), ra.makespan.to_bits()),
+            "an armed-but-inert service policy must not perturb results"
+        );
+        assert_eq!(sn.completed, sa.completed);
+        assert!(sa.shed.iter().all(|&v| v == 0));
+        assert_eq!(ra.abandoned_flows + ra.hedged_flows, 0);
+        let none = rep.timed(
+            "des_open_loop_no_policy",
+            "des/open-loop 40k arrivals, no service policy",
+            3,
+            || {
+                std::hint::black_box(run(&sim_none, &mut scratch));
+            },
+        );
+        let armed = rep.timed(
+            "des_open_loop_policy_armed",
+            "des/open-loop 40k arrivals, inert policy armed",
+            3,
+            || {
+                std::hint::black_box(run(&sim_armed, &mut scratch));
+            },
+        );
+        println!(
+            "des/degrade hook overhead (armed/none)           {:>10.2}x",
+            armed / none
+        );
+        rep.ratio("degrade_overhead", none / armed);
+    }
+
     // incast + congestion classification
     let mut router = Router::new(&small);
     let incast: Vec<RoutedFlow> = (0..64)

@@ -26,6 +26,7 @@ pub use scenario::{PhaseApp, Scenario, ScenarioResult, Workload};
 
 use crate::config::AuroraConfig;
 use crate::fabric::arrivals::RpcClass;
+use crate::fabric::degrade::{brownout_policy, ServicePolicy};
 use crate::fabric::des::DesOpts;
 use crate::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
 use crate::metrics::table;
@@ -45,8 +46,14 @@ use anyhow::Result;
 /// v4: every row gains `failed_flows` and `aborted_nodes` counters and
 /// a nullable `faults` block — `{policy, events: [{t_s, kind,
 /// target}]}` — describing the fault timeline the scenario priced
-/// (`null` when fault-free); see EXPERIMENTS.md §Campaign schema.
-pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v4";
+/// (`null` when fault-free). v5: `steady_state` gains a per-class
+/// `failed` array (fault-failed requests retired from the backlog,
+/// excluded from the quantiles) and every row gains a nullable
+/// `degradation` block — `{policy, accepted, shed, abandoned, failed,
+/// hedged, deadline_met, goodput_flows_per_s}` — present exactly when
+/// the scenario armed a [`crate::fabric::ServicePolicy`]; see
+/// EXPERIMENTS.md §Campaign schema.
+pub const CAMPAIGN_SCHEMA: &str = "aurorasim.campaign/v5";
 
 /// The RPC size mix shared by the open-loop service scenarios: mostly
 /// small control-plane messages, some medium payloads, a thin tail of
@@ -88,8 +95,11 @@ impl Campaign {
     /// a flapping global link under the closed-loop halo+allreduce
     /// step, a NIC outage mid-ring priced through retry-backoff, and a
     /// random-flap open-loop service day whose p99 reads against
-    /// `open_loop_rpc`'s healthy baseline) —
-    /// 22 scenarios on the given config (needs >= 4 compute groups).
+    /// `open_loop_rpc`'s healthy baseline), plus the brownout twin of
+    /// that service day (same fault timeline with a shed+deadline+budget
+    /// [`ServicePolicy`] armed — schema v5's `degradation` block reads
+    /// directly against `chaos_service_flaps`) —
+    /// 23 scenarios on the given config (needs >= 4 compute groups).
     pub fn standard(cfg: &AuroraConfig, seed: u64) -> Self {
         let on = DesOpts::default();
         let off = DesOpts { congestion_mgmt: false, ..DesOpts::default() };
@@ -130,7 +140,16 @@ impl Campaign {
             seed,
             FaultPolicy::Reroute,
         );
-        let chaos_service = DesOpts { faults: Some(flaps), ..on.clone() };
+        let chaos_service =
+            DesOpts { faults: Some(flaps.clone()), ..on.clone() };
+        // the brownout twin arms a shed+deadline+budget policy over the
+        // *same* fault timeline: the v5 degradation block of this row
+        // reads directly against chaos_service_flaps' unprotected one
+        let chaos_brownout = DesOpts {
+            faults: Some(flaps),
+            policies: Some(brownout_policy(&rpc_mix(), 1024, 20e-3, 10_000.0)),
+            ..on.clone()
+        };
         Self {
             scenarios: vec![
                 mk("gpcnet_isolated", &on,
@@ -258,6 +277,17 @@ impl Campaign {
                        bw_multiplier: 1.0,
                        link_fraction: 0.0,
                    }),
+                mk("chaos_service_brownout", &chaos_brownout,
+                   Workload::OpenLoop {
+                       arrivals: 60_000,
+                       rate: 60_000.0,
+                       endpoints: 256,
+                       mix: rpc_mix(),
+                       quantum: 1e-3,
+                       window: 50e-3,
+                       bw_multiplier: 1.0,
+                       link_fraction: 0.0,
+                   }),
             ],
         }
     }
@@ -308,6 +338,71 @@ impl Campaign {
                         bytes: 1 << 20,
                         leader_rounds: 4,
                         leader_bytes: 2 << 20,
+                    },
+                    seed,
+                ));
+            }
+        }
+        c
+    }
+
+    /// The brownout sweep behind the `aurorasim brownout` CLI verb:
+    /// fault rate (flap count over the service run) x overload policy on
+    /// the same Poisson RPC service — 9 scenarios (3 flap counts x
+    /// {`off`, `shed`, `full`}) whose schema-v5 `degradation` blocks
+    /// show what each control family buys as the fault rate climbs:
+    /// `off` arms nothing (the unprotected baseline whose backlog grows
+    /// with the outage), `shed` arms admission control only (backlog
+    /// threshold), `full` arms shed + deadline + retry budget
+    /// ([`brownout_policy`]). Faults run under retry-backoff so the
+    /// budget is actually consumed. Every cell's fault schedule is
+    /// seeded from the campaign seed and the cell name — deterministic
+    /// and byte-identical across `DES_THREADS` settings, which the
+    /// campaign-determinism CI job asserts.
+    pub fn brownout(cfg: &AuroraConfig, seed: u64) -> Self {
+        let topo = Topology::new(cfg);
+        let mix = rpc_mix();
+        let policies: [(&str, Option<ServicePolicy>); 3] = [
+            ("off", None),
+            ("shed", Some(brownout_policy(
+                &mix, 256, f64::INFINITY, f64::INFINITY,
+            ))),
+            ("full", Some(brownout_policy(&mix, 256, 10e-3, 2_000.0))),
+        ];
+        let mut c = Self::new();
+        for (pname, policy) in &policies {
+            for flaps in [2usize, 6, 12] {
+                let name = format!("brownout_{pname}_{flaps}flaps");
+                let fs = FaultSchedule::random_flaps(
+                    &topo,
+                    flaps,
+                    0.6,
+                    0.05,
+                    seed ^ scenario::fnv1a(&name),
+                    FaultPolicy::RetryBackoff {
+                        timeout: 25e-6,
+                        backoff: 2.0,
+                        max_retries: 8,
+                    },
+                );
+                let opts = DesOpts {
+                    faults: Some(fs),
+                    policies: policy.clone(),
+                    ..DesOpts::default()
+                };
+                c.push(Scenario::new(
+                    &name,
+                    cfg.clone(),
+                    opts,
+                    Workload::OpenLoop {
+                        arrivals: 40_000,
+                        rate: 50_000.0,
+                        endpoints: 128,
+                        mix: mix.clone(),
+                        quantum: 1e-3,
+                        window: 25e-3,
+                        bw_multiplier: 1.0,
+                        link_fraction: 0.0,
                     },
                     seed,
                 ));
@@ -501,8 +596,32 @@ mod tests {
         ));
         c.push(Scenario::new(
             "d_open_loop",
-            cfg,
+            cfg.clone(),
             DesOpts::default(),
+            Workload::OpenLoop {
+                arrivals: 2_000,
+                rate: 40_000.0,
+                endpoints: 32,
+                mix: rpc_mix(),
+                quantum: 1e-3,
+                window: 10e-3,
+                bw_multiplier: 1.0,
+                link_fraction: 0.0,
+            },
+            9,
+        ));
+        c.push(Scenario::new(
+            "e_brownout",
+            cfg,
+            DesOpts {
+                policies: Some(brownout_policy(
+                    &rpc_mix(),
+                    1024,
+                    20e-3,
+                    1_000.0,
+                )),
+                ..DesOpts::default()
+            },
             Workload::OpenLoop {
                 arrivals: 2_000,
                 rate: 40_000.0,
@@ -568,7 +687,7 @@ mod tests {
             j.get("info").and_then(|i| i.get("schema")).and_then(Json::as_str),
             Some(CAMPAIGN_SCHEMA)
         );
-        assert_eq!(j.get("scenarios").and_then(Json::as_arr).unwrap().len(), 4);
+        assert_eq!(j.get("scenarios").and_then(Json::as_arr).unwrap().len(), 5);
         // the open-loop row carries a steady_state object, batch rows null
         let rows = j.get("scenarios").and_then(Json::as_arr).unwrap();
         assert_eq!(rows[0].get("steady_state"), Some(&Json::Null));
@@ -577,6 +696,54 @@ mod tests {
         assert_eq!(
             ss.get("arrivals").and_then(Json::as_f64),
             Some(2_000.0)
+        );
+        // schema v5: per-class failed counts in steady_state, and a
+        // degradation block exactly on policy-armed rows
+        assert!(ss.get("failed").is_some());
+        assert_eq!(rows[0].get("degradation"), Some(&Json::Null));
+        assert_eq!(rows[3].get("degradation"), Some(&Json::Null));
+        let deg = rows[4].get("degradation").unwrap();
+        assert_ne!(deg, &Json::Null);
+        assert_eq!(
+            deg.get("policy").and_then(Json::as_str),
+            Some("shed-deadline-budget")
+        );
+        assert_eq!(deg.get("accepted").and_then(Json::as_f64), Some(2_000.0));
+        assert!(deg.get("goodput_flows_per_s").is_some());
+        // nothing sheds/abandons on a healthy uncongested run: goodput
+        // equals throughput and the counters stay zero
+        let zeros = |key: &str| {
+            deg.get(key)
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .all(|v| v.as_f64() == Some(0.0))
+        };
+        assert!(zeros("shed") && zeros("abandoned") && zeros("failed"));
+    }
+
+    #[test]
+    fn brownout_sweep_is_a_policy_by_fault_rate_grid() {
+        let c = Campaign::brownout(&AuroraConfig::small(4, 4), 3);
+        assert_eq!(c.scenarios.len(), 9);
+        for s in &c.scenarios {
+            assert!(s.is_open_loop(), "{}", s.name);
+            assert!(s.opts.faults.is_some(), "{}", s.name);
+            let armed = s.opts.policies.is_some();
+            assert_eq!(
+                armed,
+                !s.name.contains("_off_"),
+                "{}: policy presence must follow the cell name",
+                s.name
+            );
+        }
+        // cell fault schedules differ (name-derived seeds)
+        let e0 = &c.scenarios[0].opts.faults.as_ref().unwrap().events;
+        let e1 = &c.scenarios[1].opts.faults.as_ref().unwrap().events;
+        assert_ne!(
+            format!("{e0:?}"),
+            format!("{e1:?}"),
+            "cells must not share one fault timeline"
         );
     }
 

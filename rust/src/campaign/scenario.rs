@@ -11,6 +11,7 @@ use crate::fabric::analysis::{AnalysisReport, WorkloadAnalyzer};
 use crate::fabric::arrivals::{
     run_open_loop, OpenLoopSource, PoissonArrivals, RpcClass, SteadyState,
 };
+use crate::fabric::degrade::ServicePolicy;
 use crate::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
 use crate::fabric::faults::{FaultEvent, FaultKind, FaultSchedule};
 use crate::fabric::rounds::CostModel;
@@ -217,6 +218,11 @@ impl Scenario {
             // with the same fail-fast posture before it reaches the heap
             if let Some(fs) = &opts.faults {
                 rep.merge(analyzer.analyze_faults(fs, topo));
+            }
+            // ... and so does the service policy (no RPC mix on a
+            // closed-loop scenario — only the knob checks apply)
+            if let Some(p) = &opts.policies {
+                rep.merge(analyzer.analyze_policies(p, &[], topo));
             }
             assert!(
                 rep.is_clean(),
@@ -581,6 +587,7 @@ impl Scenario {
                 failed_flows: res.failed_flows,
                 aborted_nodes: res.aborted_nodes,
                 faults: self.opts.faults.clone(),
+                policy: self.opts.policies.clone(),
             };
         }
         let (timed, opts) = self.materialize(&topo);
@@ -615,6 +622,7 @@ impl Scenario {
             failed_flows: res.failed_flows,
             aborted_nodes: 0,
             faults: self.opts.faults.clone(),
+            policy: self.opts.policies.clone(),
         }
     }
 
@@ -643,6 +651,20 @@ impl Scenario {
         else {
             unreachable!("run_service on non-service workload")
         };
+        // open-loop scenarios never pass through materialize_dag, so the
+        // service-policy verifier applies its fail-fast here (schema v5:
+        // a campaign must never arm the executor with a NaN deadline or
+        // an admission bucket that can never admit)
+        if let Some(p) = &self.opts.policies {
+            let rep = WorkloadAnalyzer::new().analyze_policies(p, mix, topo);
+            assert!(
+                rep.is_clean(),
+                "scenario {}: policy verifier rejected the service \
+                 policy:\n{}",
+                self.name,
+                rep.render()
+            );
+        }
         let mut rng = Pcg::with_stream(self.seed, 0x5ce0);
         let mut router = Router::with_seed(topo, self.seed ^ 0x707e);
         let eps = workload::spread_nics(topo, *endpoints);
@@ -709,6 +731,7 @@ impl Scenario {
             failed_flows: res.failed_flows,
             aborted_nodes: res.aborted_nodes,
             faults: self.opts.faults.clone(),
+            policy: self.opts.policies.clone(),
         }
     }
 
@@ -727,6 +750,16 @@ impl Scenario {
         let mut fault_rep = AnalysisReport::default();
         if let Some(fs) = &self.opts.faults {
             fault_rep = analyzer.analyze_faults(fs, topo);
+        }
+        // the service policy is likewise scenario-level state: lint it
+        // against the RPC mix it will govern (empty for non-service
+        // workloads — only the knob checks apply there)
+        if let Some(p) = &self.opts.policies {
+            let mix: &[RpcClass] = match &self.workload {
+                Workload::OpenLoop { mix, .. } => mix,
+                _ => &[],
+            };
+            fault_rep.merge(analyzer.analyze_policies(p, mix, topo));
         }
         if self.is_closed_loop() {
             let (dag, _) = self
@@ -808,6 +841,10 @@ pub struct ScenarioResult {
     /// serialized as a `faults` block — `{policy, events}` — or `null`
     /// for fault-free scenarios.
     pub faults: Option<FaultSchedule>,
+    /// The service policy this scenario armed (campaign schema v5):
+    /// serialized together with the per-class degradation counters as a
+    /// `degradation` block, or `null` for policy-free scenarios.
+    pub policy: Option<ServicePolicy>,
 }
 
 /// Serialize one fault event for the campaign report's `faults` block
@@ -836,6 +873,9 @@ fn fault_event_json(e: &FaultEvent) -> Json {
 
 impl ScenarioResult {
     pub fn to_json(&self) -> Json {
+        let counts = |v: &Vec<u64>| {
+            Json::arr(v.iter().map(|&b| Json::num(b as f64)).collect())
+        };
         let steady = match &self.steady_state {
             None => Json::Null,
             Some(ss) => Json::obj(vec![
@@ -847,18 +887,28 @@ impl ScenarioResult {
                 ("p50_s", Json::num(ss.p50)),
                 ("p99_s", Json::num(ss.p99)),
                 ("p999_s", Json::num(ss.p999)),
-                (
-                    "max_backlog",
-                    Json::arr(
-                        ss.max_backlog
-                            .iter()
-                            .map(|&b| Json::num(b as f64))
-                            .collect(),
-                    ),
-                ),
+                ("max_backlog", counts(&ss.max_backlog)),
+                // per-class fault-failed counts (schema v5): retired
+                // from the backlog, excluded from the quantiles above
+                ("failed", counts(&ss.failed)),
                 ("peak_live", Json::num(ss.peak_inflight as f64)),
                 ("windows", Json::num(ss.windows as f64)),
             ]),
+        };
+        // schema v5: per-class degradation counters, present exactly
+        // when the scenario armed a service policy
+        let degradation = match (&self.policy, &self.steady_state) {
+            (Some(p), Some(ss)) => Json::obj(vec![
+                ("policy", Json::str(p.summary())),
+                ("accepted", Json::num(ss.arrivals as f64)),
+                ("shed", counts(&ss.shed)),
+                ("abandoned", counts(&ss.abandoned)),
+                ("failed", counts(&ss.failed)),
+                ("hedged", counts(&ss.hedged)),
+                ("deadline_met", Json::num(ss.deadline_met as f64)),
+                ("goodput_flows_per_s", Json::num(ss.goodput_flows)),
+            ]),
+            _ => Json::Null,
         };
         let faults = match &self.faults {
             None => Json::Null,
@@ -887,6 +937,7 @@ impl ScenarioResult {
             ("failed_flows", Json::num(self.failed_flows as f64)),
             ("aborted_nodes", Json::num(self.aborted_nodes as f64)),
             ("faults", faults),
+            ("degradation", degradation),
         ])
     }
 }

@@ -42,7 +42,13 @@
 //!   times finite and non-decreasing, link/endpoint/node ids present
 //!   in the topology, degrade multipliers in (0.0, 1.0], recoveries
 //!   anchored to a prior down — validated before a
-//!   [`super::faults::FaultSchedule`] reaches the event heap.
+//!   [`super::faults::FaultSchedule`] reaches the event heap;
+//! * service policies ([`WorkloadAnalyzer::analyze_policies`]):
+//!   deadlines, hedge delays, retry budgets and admission knobs must
+//!   be finite-or-infinite and non-negative, and a deadline shorter
+//!   than its class's *uncongested* critical path (bytes over the
+//!   best-case endpoint bandwidth) can never be met — validated
+//!   before a [`super::degrade::ServicePolicy`] arms the executor.
 //!
 //! Wiring: `Scenario::materialize_dag` fails fast on an invalid
 //! workload, the `aurorasim lint [scenario|--all]` CLI verb sweeps
@@ -50,6 +56,8 @@
 //! every `run_dag`/`run_stream` entry (`des.rs`), so the whole test
 //! suite exercises the verifier for free.
 
+use super::arrivals::RpcClass;
+use super::degrade::ServicePolicy;
 use super::faults::{FaultKind, FaultSchedule};
 use super::workload::{DagKind, DagWorkload, RoundSource, StreamNode, NO_KEY};
 use crate::topology::{LinkId, Topology};
@@ -743,6 +751,103 @@ impl WorkloadAnalyzer {
                         );
                         downed.extend(expand.iter().map(|(l, _)| *l));
                     }
+                }
+            }
+        }
+        rep
+    }
+
+    /// Validate a [`ServicePolicy`] against the RPC mix it will govern
+    /// (same fail-fast posture as the fault pass, run before the policy
+    /// arms the executor). Per class: the deadline, hedge delay and
+    /// retry budget must be non-negative and not NaN (`f64::INFINITY`
+    /// is the documented "off" value); admission rate/burst must be
+    /// positive when finite (a non-positive rate sheds *everything*, a
+    /// burst below one token can never admit). A finite deadline
+    /// shorter than the class's uncongested critical path —
+    /// `bytes / min(rank_issue_bw, nic_eff_bw)`, the best any transfer
+    /// of that size can do on an idle fabric — is a warning: every
+    /// request of the class will be abandoned, healthy or not. `node`
+    /// in the diagnostics is the class id; classes beyond the policy's
+    /// table fall back to the all-off default and need no check.
+    pub fn analyze_policies(
+        &self,
+        policy: &ServicePolicy,
+        mix: &[RpcClass],
+        topo: &Topology,
+    ) -> AnalysisReport {
+        let mut rep = AnalysisReport {
+            nodes: policy.classes.len(),
+            ..Default::default()
+        };
+        let best_bw = topo
+            .cfg
+            .rank_issue_bw_host
+            .min(topo.cfg.nic_eff_bw_host);
+        for (i, cp) in policy.classes.iter().enumerate() {
+            let id = i as u32;
+            for (name, v) in [
+                ("deadline", cp.deadline),
+                ("hedge delay", cp.hedge_delay),
+                ("retry budget", cp.retry_budget),
+            ] {
+                if v.is_nan() || v < 0.0 {
+                    rep.push(
+                        Severity::Error,
+                        "bad-policy-knob",
+                        Some(id),
+                        None,
+                        format!(
+                            "class {i}: {name} {v} must be non-negative \
+                             (f64::INFINITY disables the control)"
+                        ),
+                    );
+                }
+            }
+            if cp.deadline == 0.0 || cp.hedge_delay == 0.0 {
+                rep.push(
+                    Severity::Error,
+                    "bad-policy-knob",
+                    Some(id),
+                    None,
+                    format!(
+                        "class {i}: zero deadline/hedge delay fires at the \
+                         arrival instant — no request can ever run"
+                    ),
+                );
+            }
+            if cp.admit_rate.is_nan()
+                || cp.admit_rate <= 0.0
+                || (cp.admit_rate.is_finite() && cp.admit_burst < 1.0)
+            {
+                rep.push(
+                    Severity::Error,
+                    "bad-admission",
+                    Some(id),
+                    None,
+                    format!(
+                        "class {i}: admission rate {} / burst {} (rate must \
+                         be positive, burst >= 1 token when the rate is \
+                         finite)",
+                        cp.admit_rate, cp.admit_burst
+                    ),
+                );
+            }
+            if let Some(rc) = mix.get(i) {
+                let floor = rc.bytes as f64 / best_bw;
+                if cp.deadline.is_finite() && cp.deadline < floor {
+                    rep.push(
+                        Severity::Warning,
+                        "deadline-unreachable",
+                        Some(id),
+                        None,
+                        format!(
+                            "class {i}: deadline {:.3e}s is below the \
+                             uncongested critical path {floor:.3e}s for \
+                             {} bytes — every request will be abandoned",
+                            cp.deadline, rc.bytes
+                        ),
+                    );
                 }
             }
         }

@@ -24,13 +24,22 @@
 //! throughput and p50/p99/p999 completion latency. All state is O(peak
 //! concurrency + histogram), never O(total arrivals).
 //!
+//! With a [`ServicePolicy`] armed ([`OpenLoopSource::policies`] /
+//! `DesOpts::policies`), the same collector also accounts graceful
+//! degradation: per-class `shed` (admission control), `abandoned`
+//! (deadlines), `failed` (fault policy) and `hedged` counters, plus
+//! goodput — completions within their class deadline — next to raw
+//! throughput. Failed and abandoned requests retire from the backlog
+//! at their failure instant and never enter the latency histogram.
+//!
 //! Determinism: [`PoissonArrivals`] seeds [`Pcg`] with the same
 //! name-derived `fnv1a(name) ^ campaign_seed` convention the campaign
 //! layer uses everywhere else (stream [`ARRIVAL_STREAM`]) — there is no
 //! wall-clock anywhere in the arrival path, so serial and
 //! `DES_THREADS=8` runs produce byte-identical reports.
 
-use super::des::{DesScratch, DesSim, StreamResult};
+use super::degrade::{Admission, ServicePolicy};
+use super::des::{DesScratch, DesSim, FlowOutcome, StreamResult};
 use super::workload::{RoundSource, StreamNode, NO_KEY};
 use super::{Flow, RoutedFlow, Router};
 use crate::util::rng::Pcg;
@@ -276,6 +285,14 @@ pub struct OpenLoopSource<'c, 'r, 't, S: ArrivalSource> {
     pending: Option<Arrival>,
     last_t: f64,
     collector: Option<&'c RefCell<SteadyCollector>>,
+    /// Armed overload-control policy + its token-bucket state: arrivals
+    /// are admission-checked *before* routing, and shed ones never
+    /// materialize (they are counted by the collector instead).
+    policy: Option<(ServicePolicy, Admission)>,
+    /// Service class of each node emitted in the current round, in
+    /// emission order — backs [`RoundSource::node_class`], which the
+    /// executor queries only while a policy is armed.
+    classes: Vec<u8>,
 }
 
 impl<'c, 'r, 't, S: ArrivalSource> OpenLoopSource<'c, 'r, 't, S> {
@@ -288,6 +305,8 @@ impl<'c, 'r, 't, S: ArrivalSource> OpenLoopSource<'c, 'r, 't, S> {
             pending: None,
             last_t: 0.0,
             collector: None,
+            policy: None,
+            classes: Vec::new(),
         }
     }
 
@@ -296,6 +315,27 @@ impl<'c, 'r, 't, S: ArrivalSource> OpenLoopSource<'c, 'r, 't, S> {
     /// node-id order (the executor numbers nodes in emission order).
     pub fn collect(mut self, c: &'c RefCell<SteadyCollector>) -> Self {
         self.collector = Some(c);
+        self
+    }
+
+    /// Arm a [`ServicePolicy`]: per-class token-bucket + backlog-
+    /// threshold admission control runs at arrival time (shed requests
+    /// never touch the router or the executor), and emitted nodes are
+    /// class-tagged for the executor's deadline/hedge/budget controls.
+    /// Backlog thresholds read the attached collector's live per-class
+    /// backlog (no collector: backlog reads as 0). An inert policy
+    /// ([`ServicePolicy::is_inert`]) sheds nothing and leaves the
+    /// emitted stream bit-identical to an unarmed source.
+    ///
+    /// One documented weakening of the bounded-memory throttle: a
+    /// window whose every arrival is shed yields an *empty* round, and
+    /// the executor's empty-round skip then pulls the next window
+    /// without re-consulting `next_round_not_before` — arrival floors
+    /// are still honored exactly, only materialization may run ahead of
+    /// the clock by those fully-shed windows.
+    pub fn policies(mut self, p: ServicePolicy) -> Self {
+        let adm = Admission::new(&p);
+        self.policy = Some((p, adm));
         self
     }
 
@@ -330,17 +370,43 @@ impl<'c, 'r, 't, S: ArrivalSource> OpenLoopSource<'c, 'r, 't, S> {
             start: a.t,
         }
     }
+
+    /// Admission-check `a` against the armed policy (if any): an
+    /// admitted arrival routes and emits, a shed one is only counted.
+    fn admit_emit(&mut self, a: Arrival) -> Option<StreamNode> {
+        if let Some((pol, adm)) = self.policy.as_mut() {
+            let backlog = self
+                .collector
+                .map_or(0, |c| c.borrow().backlog(a.class));
+            if !adm.admit(pol, a.class, a.t, backlog) {
+                if let Some(c) = self.collector {
+                    c.borrow_mut().shed(a);
+                }
+                return None;
+            }
+        }
+        self.classes.push(a.class);
+        Some(self.emit(a))
+    }
 }
 
 impl<S: ArrivalSource> RoundSource for OpenLoopSource<'_, '_, '_, S> {
     fn next_round(&mut self) -> Option<Vec<StreamNode>> {
         let first = self.pull()?;
         let end = self.window_start(first.t) + self.quantum;
-        let mut nodes = vec![self.emit(first)];
+        self.classes.clear();
+        let mut nodes = Vec::new();
+        if let Some(n) = self.admit_emit(first) {
+            nodes.push(n);
+        }
         loop {
             match self.pull() {
                 None => break,
-                Some(a) if a.t < end => nodes.push(self.emit(a)),
+                Some(a) if a.t < end => {
+                    if let Some(n) = self.admit_emit(a) {
+                        nodes.push(n);
+                    }
+                }
                 Some(a) => {
                     self.pending = Some(a);
                     break;
@@ -358,6 +424,10 @@ impl<S: ArrivalSource> RoundSource for OpenLoopSource<'_, '_, '_, S> {
             Some(a) => self.window_start(a.t),
             None => 0.0, // exhausted: the next `next_round` returns None
         }
+    }
+
+    fn node_class(&self, i: usize) -> u8 {
+        self.classes.get(i).copied().unwrap_or(0)
     }
 }
 
@@ -430,11 +500,25 @@ pub struct SteadyCollector {
     meta: VecDeque<NodeMeta>,
     meta_base: u32,
     hist: LatHist,
-    /// Cumulative arrivals / completions per class.
+    /// Cumulative *accepted* arrivals / completions per class (shed
+    /// requests are counted in `shed_c` only).
     arrived: Vec<u64>,
     completed_c: Vec<u64>,
-    /// Max instantaneous per-class backlog (arrived - completed).
+    /// Live per-class backlog: accepted, not yet completed / failed /
+    /// abandoned. The admission layer's backlog threshold reads this.
+    backlog_c: Vec<u64>,
+    /// Max instantaneous per-class backlog.
     max_backlog: Vec<u64>,
+    /// Per-class degradation counts ([`ServicePolicy`] controls).
+    shed_c: Vec<u64>,
+    abandoned_c: Vec<u64>,
+    failed_c: Vec<u64>,
+    hedged_c: Vec<u64>,
+    /// Armed policy, for the goodput cut: a completion is *goodput*
+    /// when its latency is within its class deadline. `None` (or an
+    /// inert policy): every completion is goodput.
+    policy: Option<ServicePolicy>,
+    deadline_met: u64,
     completed: u64,
     completed_bytes: u64,
     last_finish: f64,
@@ -458,7 +542,14 @@ impl SteadyCollector {
             hist: LatHist::new(),
             arrived: Vec::new(),
             completed_c: Vec::new(),
+            backlog_c: Vec::new(),
             max_backlog: Vec::new(),
+            shed_c: Vec::new(),
+            abandoned_c: Vec::new(),
+            failed_c: Vec::new(),
+            hedged_c: Vec::new(),
+            policy: None,
+            deadline_met: 0,
             completed: 0,
             completed_bytes: 0,
             last_finish: 0.0,
@@ -472,22 +563,48 @@ impl SteadyCollector {
         }
     }
 
+    /// Install the run's [`ServicePolicy`] so goodput can be cut
+    /// against per-class deadlines.
+    pub fn with_policy(mut self, p: ServicePolicy) -> Self {
+        self.policy = Some(p);
+        self
+    }
+
     fn class_slot(&mut self, class: u8) {
         let need = class as usize + 1;
         if self.arrived.len() < need {
             self.arrived.resize(need, 0);
             self.completed_c.resize(need, 0);
+            self.backlog_c.resize(need, 0);
             self.max_backlog.resize(need, 0);
+            self.shed_c.resize(need, 0);
+            self.abandoned_c.resize(need, 0);
+            self.failed_c.resize(need, 0);
+            self.hedged_c.resize(need, 0);
         }
     }
 
-    /// Record an arrival at materialization time. Must be called in
-    /// node-id order (the [`OpenLoopSource`] adapter guarantees it).
+    /// Live backlog of `class` (accepted, not yet retired) — what the
+    /// admission layer's backlog threshold sheds against.
+    pub fn backlog(&self, class: u8) -> u64 {
+        self.backlog_c.get(class as usize).copied().unwrap_or(0)
+    }
+
+    /// Count a load-shed arrival (admission control rejected it before
+    /// it reached the router/executor).
+    pub fn shed(&mut self, a: Arrival) {
+        self.class_slot(a.class);
+        self.shed_c[a.class as usize] += 1;
+    }
+
+    /// Record an accepted arrival at materialization time. Must be
+    /// called in node-id order (the [`OpenLoopSource`] adapter
+    /// guarantees it).
     fn arrive(&mut self, a: Arrival) {
         self.class_slot(a.class);
         self.arrived[a.class as usize] += 1;
-        let backlog =
-            self.arrived[a.class as usize] - self.completed_c[a.class as usize];
+        self.backlog_c[a.class as usize] += 1;
+        let backlog = self.backlog_c[a.class as usize];
         let mb = &mut self.max_backlog[a.class as usize];
         *mb = (*mb).max(backlog);
         self.inflight += 1;
@@ -498,6 +615,32 @@ impl SteadyCollector {
             class: a.class,
             done: false,
         });
+    }
+
+    /// Retire node `id`'s in-flight metadata (shared by every terminal
+    /// outcome); returns its [`NodeMeta`], or `None` if the node was
+    /// already retired (idempotence — both hedge twins can fail in one
+    /// fault sweep, notifying twice).
+    fn retire(&mut self, id: u32) -> Option<NodeMeta> {
+        if id < self.meta_base {
+            return None; // retired and popped
+        }
+        let i = (id - self.meta_base) as usize;
+        let m = self.meta[i];
+        if m.done {
+            return None;
+        }
+        self.meta[i].done = true;
+        self.backlog_c[m.class as usize] -= 1;
+        self.inflight -= 1;
+        while let Some(front) = self.meta.front() {
+            if !front.done {
+                break;
+            }
+            self.meta.pop_front();
+            self.meta_base += 1;
+        }
+        Some(m)
     }
 
     /// Bank node `id`'s completion at absolute time `t` (the streaming
@@ -511,25 +654,56 @@ impl SteadyCollector {
             self.win_bytes = 0;
             self.seal += self.window;
         }
-        let i = (id - self.meta_base) as usize;
-        let m = self.meta[i];
-        debug_assert!(!m.done, "node {id} finished twice");
-        self.hist.add(t - m.t_arr);
+        let m = match self.retire(id) {
+            Some(m) => m,
+            None => {
+                debug_assert!(false, "node {id} finished twice");
+                return;
+            }
+        };
+        let lat = t - m.t_arr;
+        self.hist.add(lat);
+        if self
+            .policy
+            .as_ref()
+            .map_or(true, |p| lat <= p.class(m.class).deadline)
+        {
+            self.deadline_met += 1;
+        }
         self.completed += 1;
         self.completed_bytes += m.bytes;
         self.completed_c[m.class as usize] += 1;
         self.win_flows += 1;
         self.win_bytes += m.bytes;
-        self.inflight -= 1;
         self.last_finish = self.last_finish.max(t);
-        self.meta[i].done = true;
-        while let Some(front) = self.meta.front() {
-            if !front.done {
-                break;
-            }
-            self.meta.pop_front();
-            self.meta_base += 1;
+    }
+
+    /// Retire node `id` *without* a completion: the fault policy failed
+    /// it (`abandoned == false`) or a deadline abandoned it
+    /// (`abandoned == true`). No latency sample is banked — failed and
+    /// abandoned requests must not poison the quantiles — and the
+    /// request leaves the backlog (the PR-9 phantom-backlog bugfix).
+    /// Idempotent: a second call for the same node is a no-op.
+    pub fn fail(&mut self, id: u32, _t: f64, abandoned: bool) {
+        let m = match self.retire(id) {
+            Some(m) => m,
+            None => return,
+        };
+        if abandoned {
+            self.abandoned_c[m.class as usize] += 1;
+        } else {
+            self.failed_c[m.class as usize] += 1;
         }
+    }
+
+    /// Count a hedge spawn for in-flight node `id` (informational; the
+    /// node still reaches a terminal outcome later).
+    pub fn hedged(&mut self, id: u32) {
+        if id < self.meta_base {
+            return;
+        }
+        let m = self.meta[(id - self.meta_base) as usize];
+        self.hedged_c[m.class as usize] += 1;
     }
 
     /// Fold the (possibly partial) final window and summarize.
@@ -554,10 +728,20 @@ impl SteadyCollector {
             } else {
                 0.0
             },
+            goodput_flows: if span > 0.0 {
+                self.deadline_met as f64 / span
+            } else {
+                0.0
+            },
+            deadline_met: self.deadline_met,
             p50: self.hist.quantile(0.50),
             p99: self.hist.quantile(0.99),
             p999: self.hist.quantile(0.999),
             max_backlog: self.max_backlog,
+            shed: self.shed_c,
+            abandoned: self.abandoned_c,
+            failed: self.failed_c,
+            hedged: self.hedged_c,
             peak_inflight: self.peak_inflight,
             windows: self.windows,
         }
@@ -570,6 +754,7 @@ impl SteadyCollector {
 /// over the whole run (completions / last completion time).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SteadyState {
+    /// Accepted arrivals (offered load minus `shed`).
     pub arrivals: u64,
     pub completed: u64,
     /// Total payload bytes of completed transfers.
@@ -580,11 +765,29 @@ pub struct SteadyState {
     pub throughput_flows: f64,
     /// Sustained payload bytes per second.
     pub throughput_bytes: f64,
+    /// Sustained *deadline-met* completions per second — the service's
+    /// goodput under a [`ServicePolicy`]. Equals `throughput_flows`
+    /// when no (or an inert) policy is armed; structurally so with
+    /// deadlines armed too, since `EV_DEADLINE` abandons a request the
+    /// instant its SLO expires, so every completion that does land is
+    /// within deadline.
+    pub goodput_flows: f64,
+    /// Completions whose latency was within their class deadline.
+    pub deadline_met: u64,
     pub p50: f64,
     pub p99: f64,
     pub p999: f64,
-    /// Max instantaneous backlog (arrived - completed) per class id.
+    /// Max instantaneous backlog (accepted - retired) per class id.
     pub max_backlog: Vec<u64>,
+    /// Arrivals rejected by admission control, per class id.
+    pub shed: Vec<u64>,
+    /// Requests abandoned by their deadline, per class id.
+    pub abandoned: Vec<u64>,
+    /// Requests failed by the fault policy, per class id (excluded
+    /// from the latency histogram and retired from the backlog).
+    pub failed: Vec<u64>,
+    /// Hedge twins spawned, per class id.
+    pub hedged: Vec<u64>,
     /// Peak concurrently in-flight flows seen by the collector.
     pub peak_inflight: usize,
     /// Metric windows sealed (including the final partial one).
@@ -603,11 +806,25 @@ pub fn run_open_loop<S: ArrivalSource>(
     quantum: f64,
     window: f64,
 ) -> (StreamResult, SteadyState) {
-    let coll = RefCell::new(SteadyCollector::new(window));
+    let mut coll = SteadyCollector::new(window);
+    let policy = sim.opts().policies.clone();
+    if let Some(p) = policy.clone() {
+        coll = coll.with_policy(p);
+    }
+    let coll = RefCell::new(coll);
     let mut src = OpenLoopSource::new(arrivals, router, quantum).collect(&coll);
-    let res = sim
-        .session(scratch)
-        .stream_sink(&mut src, |id, t| coll.borrow_mut().finish(id, t));
+    if let Some(p) = policy {
+        src = src.policies(p);
+    }
+    let res = sim.session(scratch).stream_outcomes(&mut src, |id, t, o| {
+        let mut c = coll.borrow_mut();
+        match o {
+            FlowOutcome::Finished => c.finish(id, t),
+            FlowOutcome::Failed => c.fail(id, t, false),
+            FlowOutcome::Abandoned => c.fail(id, t, true),
+            FlowOutcome::Hedged => c.hedged(id),
+        }
+    });
     drop(src);
     (res, coll.into_inner().into_summary())
 }

@@ -1,0 +1,338 @@
+//! Graceful degradation for the open-loop service tier (EXPERIMENTS.md
+//! §Graceful degradation).
+//!
+//! A production service riding the fabric does not let an outage turn
+//! into an unbounded queue: it *sheds* load it cannot serve, *abandons*
+//! requests that already missed their SLO, *bounds* how much retry
+//! traffic a fault may amplify into, and *hedges* stragglers onto
+//! disjoint paths. A [`ServicePolicy`] is the per-[`RpcClass`]
+//! description of those four controls; the open-loop executor
+//! (`fabric::des` streaming path + `fabric::arrivals`) enforces them:
+//!
+//! * **Admission control** — a deterministic token bucket
+//!   ([`Admission`]) plus a backlog threshold, evaluated by
+//!   `OpenLoopSource` *at arrival time, before routing*: a shed arrival
+//!   never materializes a node, never touches the router and never
+//!   enters the solver. Counted per class as `shed`.
+//! * **Deadlines** — an `EV_DEADLINE` heap event scheduled at
+//!   `arrival + deadline` abandons a request still in flight: its flows
+//!   detach (delivered bytes synced, bandwidth freed for survivors) and
+//!   the affected components re-solve, exactly like the fault sweep.
+//!   Counted per class as `abandoned`; excluded from the latency
+//!   histogram.
+//! * **Retry budgets** — `RetryBackoff` retries consume a per-class
+//!   budget shared across *all* flows of the class; once it is spent, a
+//!   flow that would re-arm its backoff fails instead. A retry storm
+//!   cannot amplify an outage past the budget.
+//! * **Hedging** — an `EV_HEDGE` event duplicates a still-running
+//!   request onto the first minimal candidate route sharing no fabric
+//!   link with the primary (NIC links are necessarily shared). First
+//!   completion wins; the loser is detached and its slot recycled.
+//!
+//! Determinism: a policy is plain data; the token bucket is a pure
+//! function of the (deterministic) arrival sequence; the new heap
+//! events validate against the flow's *node id* so slot recycling can
+//! never mis-deliver one; and an inert policy ([`ServicePolicy::
+//! is_inert`]) schedules no events and sheds nothing, so it is
+//! bit-identical to running with no policy at all (pinned by
+//! `tests/open_loop.rs` and the `degrade_overhead` bench gate).
+
+use super::arrivals::RpcClass;
+
+/// Per-class overload controls. Every knob defaults to *off*
+/// (`INFINITY` / `u64::MAX`), so `ClassPolicy::default()` changes
+/// nothing — the executor schedules no events and the admission layer
+/// sheds nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassPolicy {
+    /// Token-bucket refill rate, admitted arrivals/second
+    /// (`INFINITY` = no rate limit).
+    pub admit_rate: f64,
+    /// Token-bucket depth: the burst the class may admit above its
+    /// sustained rate (`>= 1` whenever `admit_rate` is finite).
+    pub admit_burst: f64,
+    /// Shed every arrival while the class backlog (accepted, not yet
+    /// completed/failed/abandoned) is at or above this
+    /// (`u64::MAX` = no threshold).
+    pub backlog_limit: u64,
+    /// Request SLO: a flow still in flight `deadline` seconds after its
+    /// arrival floor is abandoned (`INFINITY` = no deadline).
+    pub deadline: f64,
+    /// Shared per-class retry budget for the fault policy's
+    /// `RetryBackoff` re-arms (`INFINITY` = unbounded; consumed one
+    /// unit per scheduled retry, across all flows of the class).
+    pub retry_budget: f64,
+    /// Duplicate a request still running `hedge_delay` seconds after
+    /// its arrival floor onto a disjoint minimal route
+    /// (`INFINITY` = never hedge).
+    pub hedge_delay: f64,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> Self {
+        Self::OFF
+    }
+}
+
+impl ClassPolicy {
+    /// The do-nothing policy: admits everything, no deadline, no
+    /// budget, no hedging.
+    pub const OFF: ClassPolicy = ClassPolicy {
+        admit_rate: f64::INFINITY,
+        admit_burst: f64::INFINITY,
+        backlog_limit: u64::MAX,
+        deadline: f64::INFINITY,
+        retry_budget: f64::INFINITY,
+        hedge_delay: f64::INFINITY,
+    };
+
+    /// True when every control is off — this entry can never shed,
+    /// abandon, fail or hedge anything.
+    pub fn is_off(&self) -> bool {
+        self.admit_rate.is_infinite()
+            && self.backlog_limit == u64::MAX
+            && self.deadline.is_infinite()
+            && self.retry_budget.is_infinite()
+            && self.hedge_delay.is_infinite()
+    }
+}
+
+/// Per-[`RpcClass`] overload-control policy for one open-loop run
+/// (installed via `DesOpts::policies` / `DesSession::policies`).
+/// Classes beyond `classes.len()` get [`ClassPolicy::OFF`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServicePolicy {
+    /// Entry `i` governs service class `i` (the index into the
+    /// scenario's RPC mix).
+    pub classes: Vec<ClassPolicy>,
+}
+
+impl ServicePolicy {
+    pub fn new(classes: Vec<ClassPolicy>) -> Self {
+        Self { classes }
+    }
+
+    /// The same policy for `n` classes.
+    pub fn uniform(n: usize, p: ClassPolicy) -> Self {
+        Self { classes: vec![p; n] }
+    }
+
+    /// The policy governing `class` ([`ClassPolicy::OFF`] past the end).
+    pub fn class(&self, class: u8) -> &ClassPolicy {
+        self.classes.get(class as usize).unwrap_or(&ClassPolicy::OFF)
+    }
+
+    /// True when no entry can ever trigger: an inert policy is
+    /// bit-identical to running with no policy installed (the executor
+    /// schedules no degradation events and the admission layer never
+    /// sheds — asserted by the `degrade_overhead` bench).
+    pub fn is_inert(&self) -> bool {
+        self.classes.iter().all(ClassPolicy::is_off)
+    }
+
+    /// Stable short name for reports: which control families any class
+    /// arms, dash-joined (`"shed-deadline"`, `"hedge"`, ... or
+    /// `"inert"`).
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        let any = |f: fn(&ClassPolicy) -> bool| self.classes.iter().any(f);
+        if any(|c| c.admit_rate.is_finite() || c.backlog_limit != u64::MAX) {
+            parts.push("shed");
+        }
+        if any(|c| c.deadline.is_finite()) {
+            parts.push("deadline");
+        }
+        if any(|c| c.retry_budget.is_finite()) {
+            parts.push("budget");
+        }
+        if any(|c| c.hedge_delay.is_finite()) {
+            parts.push("hedge");
+        }
+        if parts.is_empty() {
+            "inert".to_string()
+        } else {
+            parts.join("-")
+        }
+    }
+
+    /// Per-class initial retry budgets, aligned with `classes` (the
+    /// mutable state the executor counts retries down from).
+    pub fn retry_budgets(&self) -> Vec<f64> {
+        self.classes.iter().map(|c| c.retry_budget).collect()
+    }
+}
+
+/// Deterministic per-class token-bucket state for admission control.
+/// Buckets start full; tokens refill linearly with *simulated* arrival
+/// time (never a wall clock), so the admit/shed sequence is a pure
+/// function of the arrival sequence — byte-identical across runs and
+/// solver thread counts.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    tokens: Vec<f64>,
+    last: Vec<f64>,
+}
+
+impl Admission {
+    pub fn new(policy: &ServicePolicy) -> Self {
+        Self {
+            tokens: policy.classes.iter().map(|c| c.admit_burst).collect(),
+            last: vec![0.0; policy.classes.len()],
+        }
+    }
+
+    /// Admit or shed one class-`class` arrival at simulated time `t`
+    /// with the class's current `backlog` (accepted minus retired).
+    /// The backlog threshold is checked first; the token bucket only
+    /// spends a token on arrivals the threshold let through.
+    pub fn admit(
+        &mut self,
+        policy: &ServicePolicy,
+        class: u8,
+        t: f64,
+        backlog: u64,
+    ) -> bool {
+        let p = policy.class(class);
+        if backlog >= p.backlog_limit {
+            return false;
+        }
+        if p.admit_rate.is_infinite() {
+            return true;
+        }
+        let c = class as usize;
+        if c >= self.tokens.len() {
+            return true; // past the policy: OFF
+        }
+        let dt = (t - self.last[c]).max(0.0);
+        self.last[c] = t;
+        self.tokens[c] = (self.tokens[c] + dt * p.admit_rate).min(p.admit_burst);
+        if self.tokens[c] >= 1.0 {
+            self.tokens[c] -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Brownout-grade preset: shed at `backlog_limit`, abandon past
+/// `deadline`, cap retries — the policy shape the brownout sweep and
+/// the acceptance tests use. Hedging stays off (hedges amplify load on
+/// a shared bottleneck; arm [`ClassPolicy::hedge_delay`] explicitly for
+/// path-diverse traffic).
+pub fn brownout_policy(
+    mix: &[RpcClass],
+    backlog_limit: u64,
+    deadline: f64,
+    retry_budget: f64,
+) -> ServicePolicy {
+    ServicePolicy::uniform(
+        mix.len().max(1),
+        ClassPolicy {
+            backlog_limit,
+            deadline,
+            retry_budget,
+            ..ClassPolicy::OFF
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_policy_is_inert_and_clamps_past_the_end() {
+        let p = ServicePolicy::default();
+        assert!(p.is_inert());
+        assert_eq!(p.summary(), "inert");
+        assert_eq!(*p.class(0), ClassPolicy::OFF);
+        assert_eq!(*p.class(200), ClassPolicy::OFF);
+        let q = ServicePolicy::uniform(2, ClassPolicy::OFF);
+        assert!(q.is_inert());
+        assert_eq!(*q.class(7), ClassPolicy::OFF, "past the end: OFF");
+    }
+
+    #[test]
+    fn summary_names_armed_controls() {
+        let mut p = ServicePolicy::uniform(2, ClassPolicy::OFF);
+        p.classes[0].deadline = 0.5;
+        p.classes[1].backlog_limit = 10;
+        assert_eq!(p.summary(), "shed-deadline");
+        p.classes[0].hedge_delay = 0.1;
+        p.classes[1].retry_budget = 8.0;
+        assert_eq!(p.summary(), "shed-deadline-budget-hedge");
+        assert!(!p.is_inert());
+    }
+
+    #[test]
+    fn token_bucket_sheds_above_rate_and_refills() {
+        let p = ServicePolicy::uniform(
+            1,
+            ClassPolicy {
+                admit_rate: 10.0,
+                admit_burst: 2.0,
+                ..ClassPolicy::OFF
+            },
+        );
+        let mut a = Admission::new(&p);
+        // burst of 2 admitted instantly, the third shed
+        assert!(a.admit(&p, 0, 0.0, 0));
+        assert!(a.admit(&p, 0, 0.0, 0));
+        assert!(!a.admit(&p, 0, 0.0, 0));
+        // 0.1 s refills one token at rate 10/s
+        assert!(a.admit(&p, 0, 0.1, 0));
+        assert!(!a.admit(&p, 0, 0.1, 0));
+        // replay is identical (pure function of the arrival sequence)
+        let mut b = Admission::new(&p);
+        let seq = [0.0, 0.0, 0.0, 0.1, 0.1];
+        let first: Vec<bool> =
+            seq.iter().map(|&t| b.admit(&p, 0, t, 0)).collect();
+        let mut c = Admission::new(&p);
+        let second: Vec<bool> =
+            seq.iter().map(|&t| c.admit(&p, 0, t, 0)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn backlog_threshold_sheds_without_spending_tokens() {
+        let p = ServicePolicy::uniform(
+            1,
+            ClassPolicy {
+                admit_rate: 100.0,
+                admit_burst: 1.0,
+                backlog_limit: 5,
+                ..ClassPolicy::OFF
+            },
+        );
+        let mut a = Admission::new(&p);
+        assert!(!a.admit(&p, 0, 0.0, 5), "at the limit: shed");
+        assert!(!a.admit(&p, 0, 0.0, 9), "above the limit: shed");
+        // the threshold sheds consumed no token: the bucket still admits
+        assert!(a.admit(&p, 0, 0.0, 0));
+    }
+
+    #[test]
+    fn inert_admission_admits_everything() {
+        let p = ServicePolicy::uniform(3, ClassPolicy::OFF);
+        let mut a = Admission::new(&p);
+        for i in 0..100u32 {
+            assert!(a.admit(&p, (i % 3) as u8, i as f64, i as u64));
+        }
+    }
+
+    #[test]
+    fn brownout_preset_arms_shed_deadline_budget() {
+        let mix = [
+            RpcClass { bytes: 4096, weight: 0.7 },
+            RpcClass { bytes: 65536, weight: 0.3 },
+        ];
+        let p = brownout_policy(&mix, 64, 0.25, 100.0);
+        assert_eq!(p.classes.len(), 2);
+        assert_eq!(p.summary(), "shed-deadline-budget");
+        assert_eq!(p.class(0).backlog_limit, 64);
+        assert_eq!(p.class(1).deadline, 0.25);
+        assert_eq!(p.retry_budgets(), vec![100.0, 100.0]);
+        assert!(p.class(0).hedge_delay.is_infinite(), "hedging stays off");
+    }
+}

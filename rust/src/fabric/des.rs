@@ -101,6 +101,18 @@ pub struct DesOpts {
     /// statically via [`DesOpts::degraded`]
     /// (`tests/des_equivalence.rs`).
     pub faults: Option<super::faults::FaultSchedule>,
+    /// Overload-control policy for the open-loop service tier
+    /// ([`super::degrade`]): per-class admission shedding, deadlines
+    /// (`EV_DEADLINE`), shared retry budgets and hedged requests
+    /// (`EV_HEDGE`), enforced by the *streaming* executor and the
+    /// `OpenLoopSource` adapter. `None` — and an inert policy
+    /// ([`super::degrade::ServicePolicy::is_inert`]) — is bit-identical
+    /// to the policy-free path: no events are scheduled and nothing is
+    /// shed (`degrade_overhead` bench gate). The batch executors
+    /// (`solve` / `dag`) honor only the retry-budget control (their
+    /// flows are all class 0); deadlines and hedging are
+    /// streaming-tier semantics.
+    pub policies: Option<super::degrade::ServicePolicy>,
 }
 
 impl Default for DesOpts {
@@ -114,6 +126,7 @@ impl Default for DesOpts {
             solver_threads: 1,
             single_bottleneck_fastpath: true,
             faults: None,
+            policies: None,
         }
     }
 }
@@ -226,7 +239,38 @@ pub struct StreamResult {
     /// Of the nodes *materialized*, how many never completed (failed
     /// flows and their never-released dependents). Rounds the source
     /// never materialized because of the stall are not counted.
+    /// Deadline-abandoned nodes are *not* included — they terminate
+    /// (and retire) at their abandon instant and are counted in
+    /// [`StreamResult::abandoned_flows`].
     pub aborted_nodes: usize,
+    /// Requests abandoned by a [`DesOpts::policies`] deadline
+    /// (`EV_DEADLINE`): their in-flight flows detached, bandwidth
+    /// returned to survivors, node terminated at the deadline instant.
+    pub abandoned_flows: usize,
+    /// Requests duplicated onto a disjoint minimal route by a
+    /// [`DesOpts::policies`] hedge (`EV_HEDGE`). First completion wins;
+    /// the loser is cancelled and its slot recycled.
+    pub hedged_flows: usize,
+}
+
+/// What the streaming executor's outcome sink
+/// ([`DesSession::stream_outcomes`]) reports for a node. `Finished` is
+/// terminal-success (the plain `stream_sink` callback); `Failed` and
+/// `Abandoned` are terminal-failure (the node never completes);
+/// `Hedged` is a non-terminal notification that a hedge twin was
+/// spawned for the node's request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowOutcome {
+    /// The node completed at the reported time.
+    Finished,
+    /// The fault policy failed the request for good (exhausted
+    /// retries/budget, no viable reroute, or `Abort`).
+    Failed,
+    /// A [`DesOpts::policies`] deadline abandoned the request.
+    Abandoned,
+    /// A hedge twin was spawned (informational; a terminal outcome for
+    /// the same node follows later).
+    Hedged,
 }
 
 pub struct DesSim<'t> {
@@ -318,6 +362,12 @@ pub struct DesScratch {
     frontier: FxHashMap<u32, FrontierEntry>,
     flow_rf: Vec<RoutedFlow>,
     free_slots: Vec<u32>,
+    /// Flow slot -> service class (streaming; the degradation layer's
+    /// per-class policy lookup, [`RoundSource::node_class`]).
+    flow_class: Vec<u8>,
+    /// Flow slot -> hedge twin slot (`u32::MAX` = none): the pairing
+    /// first-completion-wins cancellation resolves through.
+    hedge_mate: Vec<u32>,
 }
 
 impl DesScratch {
@@ -404,6 +454,8 @@ impl DesScratch {
             + self.frontier.capacity()
             + self.flow_rf.capacity()
             + self.free_slots.capacity()
+            + self.flow_class.capacity()
+            + self.hedge_mate.capacity()
     }
 
     /// Clear every run-local structure while retaining allocations.
@@ -432,6 +484,8 @@ impl DesScratch {
         self.frontier.clear();
         self.flow_rf.clear();
         self.free_slots.clear();
+        self.flow_class.clear();
+        self.hedge_mate.clear();
     }
 }
 
@@ -506,7 +560,7 @@ impl StreamExec<'_, '_> {
         // within the round, everyone sees the pre-round frontier; the
         // staged (key, id) pairs commit afterwards (DagBuilder::end_round)
         let mut staged: Vec<(u32, u32)> = Vec::with_capacity(2 * round.len());
-        for n in round {
+        for (ni, n) in round.into_iter().enumerate() {
             let id = self.base + self.s.nodes.len() as u32;
             let (a, b, start, kind) = match n {
                 StreamNode::Compute { a, b, dt, start } => {
@@ -522,6 +576,8 @@ impl StreamExec<'_, '_> {
                         self.s.st.recycle_flow(fs, bytes);
                         self.s.flow_node[fs] = id;
                         self.s.flow_rf[fs] = rf;
+                        self.s.flow_class[fs] = 0;
+                        self.s.hedge_mate[fs] = u32::MAX;
                         fs
                     } else {
                         let fs = self.sim.push_flow(
@@ -530,8 +586,39 @@ impl StreamExec<'_, '_> {
                         self.s.st.push_flow(bytes);
                         self.s.flow_node.push(id);
                         self.s.flow_rf.push(rf);
+                        self.s.flow_class.push(0);
+                        self.s.hedge_mate.push(u32::MAX);
                         fs
                     };
+                    // degradation layer ([`DesOpts::policies`]): tag the
+                    // slot with its service class and arm the per-request
+                    // deadline / hedge timers off the node's arrival
+                    // floor. Both events validate against the node id at
+                    // fire time, so slot recycling cannot mis-deliver
+                    // them. Off (infinite) knobs schedule nothing — the
+                    // inert-policy path stays bit-identical to no policy.
+                    if let Some(pol) = self.sim.opts.policies.as_ref() {
+                        let class = src.node_class(ni);
+                        self.s.flow_class[slot] = class;
+                        let cp = pol.class(class);
+                        let floor = start.max(0.0);
+                        if cp.deadline.is_finite() {
+                            self.s.heap.push(Reverse(Ev {
+                                t: floor + cp.deadline,
+                                kind: EV_DEADLINE,
+                                flow: slot as u32,
+                                epoch: id,
+                            }));
+                        }
+                        if cp.hedge_delay.is_finite() {
+                            self.s.heap.push(Reverse(Ev {
+                                t: floor + cp.hedge_delay,
+                                kind: EV_HEDGE,
+                                flow: slot as u32,
+                                epoch: id,
+                            }));
+                        }
+                    }
                     (a, b, start, StreamKind::Xfer(slot as u32))
                 }
             };
@@ -1040,6 +1127,14 @@ impl<'t> DesSim<'t> {
         DesSession { sim: self, scratch, opts: None }
     }
 
+    /// The options this simulator was built with (read-only). Lets
+    /// adapters that drive a session — e.g. [`super::run_open_loop`] —
+    /// observe the armed [`DesOpts::policies`] without threading a
+    /// second copy through their own signatures.
+    pub fn opts(&self) -> &DesOpts {
+        &self.opts
+    }
+
     fn link_cap(&self, l: &LinkId) -> f64 {
         let base = self.topo.link_bw(l);
         base * self.opts.degraded.get(l).copied().unwrap_or(1.0)
@@ -1141,11 +1236,41 @@ impl<'t> DesSim<'t> {
             .find(|p| p.links.iter().all(link_up))
     }
 
+    /// Deterministic hedge route ([`DesOpts::policies`]): the first
+    /// minimal candidate (stable candidate order) whose links are all
+    /// up *and* which shares no fabric link with the primary path. The
+    /// endpoint NIC injection/ejection links are necessarily shared, so
+    /// they are exempt — disjointness is about the switch-to-switch
+    /// segments a flap can take down. `None` when no such route exists
+    /// (single-path topology, or everything else is down): the hedge is
+    /// silently skipped and the primary keeps running.
+    fn hedge_path(&self, d: &Dense, rf: &RoutedFlow) -> Option<Path> {
+        let link_up = |l: &LinkId| {
+            self.link_cap(l) * d.fault_mult.get(l).copied().unwrap_or(1.0)
+                > 0.0
+        };
+        let disjoint = |l: &LinkId| {
+            matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_))
+                || !rf.path.links.contains(l)
+        };
+        self.topo
+            .minimal_candidates(rf.flow.src_nic, rf.flow.dst_nic)
+            .into_iter()
+            .find(|p| p.links.iter().all(|l| link_up(l) && disjoint(l)))
+    }
+
     /// One retry-backoff step for flow `fu`: re-arm the timer at
     /// `timeout * backoff^attempt` (consuming one attempt), or mark the
     /// flow failed once `max_retries` attempts are spent. The scheduled
     /// [`EV_RETRY`] carries the post-detach epoch, so it stays valid
     /// exactly until the flow moves again.
+    ///
+    /// When a [`DesOpts::policies`] retry budget is armed (`budgets` is
+    /// `Some`), each re-arm also consumes one unit of the flow's
+    /// class-shared budget; a spent budget fails the flow *now* instead
+    /// of re-arming — retry storms cannot amplify an outage past the
+    /// budget (EXPERIMENTS.md §Graceful degradation).
+    #[allow(clippy::too_many_arguments)]
     fn retry_or_fail(
         &self,
         policy: &FaultPolicy,
@@ -1154,6 +1279,8 @@ impl<'t> DesSim<'t> {
         now: f64,
         fu: u32,
         failed: &mut Vec<u32>,
+        class: u8,
+        budgets: &mut Option<Vec<f64>>,
     ) {
         let (timeout, backoff, max_retries) = match *policy {
             FaultPolicy::RetryBackoff { timeout, backoff, max_retries } => {
@@ -1165,16 +1292,28 @@ impl<'t> DesSim<'t> {
         if st.retry[fi] >= max_retries {
             st.done[fi] = true;
             failed.push(fu);
-        } else {
-            let wait = timeout * backoff.powi(st.retry[fi] as i32);
-            st.retry[fi] += 1;
-            heap.push(Reverse(Ev {
-                t: now + wait,
-                kind: EV_RETRY,
-                flow: fu,
-                epoch: st.epoch[fi],
-            }));
+            return;
         }
+        if let Some(b) = budgets {
+            if let Some(left) = b.get_mut(class as usize) {
+                if *left < 1.0 {
+                    st.done[fi] = true;
+                    failed.push(fu);
+                    return;
+                }
+                if left.is_finite() {
+                    *left -= 1.0;
+                }
+            }
+        }
+        let wait = timeout * backoff.powi(st.retry[fi] as i32);
+        st.retry[fi] += 1;
+        heap.push(Reverse(Ev {
+            t: now + wait,
+            kind: EV_RETRY,
+            flow: fu,
+            epoch: st.epoch[fi],
+        }));
     }
 
     /// Execute every fault event and retry wake-up due at `now` — the
@@ -1193,6 +1332,10 @@ impl<'t> DesSim<'t> {
     /// sweep and completes — delivered bytes are never retroactively
     /// destroyed. `faulted` receives the re-solve seeds; `rf_of(fi)`
     /// recovers flow `fi`'s routed flow for the reroute policy.
+    /// `flow_class` maps slots to service classes (empty outside the
+    /// streaming tier: everything class 0) and `budgets` carries the
+    /// live per-class retry budgets of an armed [`DesOpts::policies`]
+    /// (`None` = unbounded).
     #[allow(clippy::too_many_arguments)]
     fn fault_tick(
         &self,
@@ -1209,6 +1352,8 @@ impl<'t> DesSim<'t> {
         faulted: &mut Vec<usize>,
         failed: &mut Vec<u32>,
         rf_of: &mut dyn FnMut(usize) -> RoutedFlow,
+        flow_class: &[u8],
+        budgets: &mut Option<Vec<f64>>,
     ) {
         // ---- (1) capacity changes, in schedule order ----
         let mut mults: Vec<(LinkId, f64)> = Vec::new();
@@ -1263,7 +1408,10 @@ impl<'t> DesSim<'t> {
                     failed.push(fu);
                 }
                 FaultPolicy::RetryBackoff { .. } => {
-                    self.retry_or_fail(&fs.policy, st, heap, now, fu, failed);
+                    let class = flow_class.get(fi).copied().unwrap_or(0);
+                    self.retry_or_fail(
+                        &fs.policy, st, heap, now, fu, failed, class, budgets,
+                    );
                 }
                 FaultPolicy::Reroute => {
                     let rf0 = rf_of(fi);
@@ -1291,7 +1439,10 @@ impl<'t> DesSim<'t> {
                 .iter()
                 .any(|&l| d.cap[l as usize] == 0.0);
             if still_down {
-                self.retry_or_fail(&fs.policy, st, heap, now, fu, failed);
+                let class = flow_class.get(fi).copied().unwrap_or(0);
+                self.retry_or_fail(
+                    &fs.policy, st, heap, now, fu, failed, class, budgets,
+                );
             } else {
                 arrivals.push(fi);
             }
@@ -2070,6 +2221,8 @@ impl<'t> DesSim<'t> {
         let mut faulted: Vec<usize> = Vec::new();
         let mut failed: Vec<u32> = Vec::new();
         let mut failed_flows = 0usize;
+        let mut retry_budgets =
+            self.opts.policies.as_ref().map(|p| p.retry_budgets());
 
         let mut n_done = 0usize;
 
@@ -2127,7 +2280,7 @@ impl<'t> DesSim<'t> {
                 self.fault_tick(
                     fs, &faults_due, &retry_due, d, map, st, heap, now,
                     completions, arrivals, &mut faulted, &mut failed,
-                    &mut |fi| flows[fi].rf.clone(),
+                    &mut |fi| flows[fi].rf.clone(), &[], &mut retry_budgets,
                 );
                 for &fu in &failed {
                     finish[fu as usize] = f64::NAN;
@@ -2310,6 +2463,8 @@ impl<'t> DesSim<'t> {
         let mut faulted: Vec<usize> = Vec::new();
         let mut failed: Vec<u32> = Vec::new();
         let mut failed_flows = 0usize;
+        let mut retry_budgets =
+            self.opts.policies.as_ref().map(|p| p.retry_budgets());
 
         let mut finished_nodes: Vec<u32> = Vec::new();
 
@@ -2384,7 +2539,7 @@ impl<'t> DesSim<'t> {
                 self.fault_tick(
                     fs, &faults_due, &retry_due, d, map, st, heap, now,
                     completions, arrivals, &mut faulted, &mut failed,
-                    &mut rf_of,
+                    &mut rf_of, &[], &mut retry_budgets,
                 );
                 failed_flows += failed.len();
                 failed.clear();
@@ -2575,13 +2730,32 @@ impl<'t> DesSim<'t> {
         self.stream_sink_impl(src, scratch, on_finish)
     }
 
-    /// Implementation behind [`DesSession::stream`] /
-    /// [`DesSession::stream_sink`] and the legacy `run_stream*` wrappers.
+    /// [`DesSim::stream_outcome_impl`] filtered down to the legacy
+    /// finish-only sink: behind [`DesSession::stream`] /
+    /// [`DesSession::stream_sink`] and the `run_stream*` wrappers.
     fn stream_sink_impl(
         &self,
         src: &mut dyn RoundSource,
         scratch: &mut DesScratch,
         mut on_finish: impl FnMut(u32, f64),
+    ) -> StreamResult {
+        self.stream_outcome_impl(src, scratch, |id, t, o| {
+            if let FlowOutcome::Finished = o {
+                on_finish(id, t);
+            }
+        })
+    }
+
+    /// Implementation behind [`DesSession::stream_outcomes`] (and,
+    /// filtered, every other streaming entry point): the windowed
+    /// streaming executor, including the [`DesOpts::policies`]
+    /// degradation layer (deadline abandonment, hedge spawns, retry
+    /// budgets) and the [`DesOpts::faults`] timeline.
+    fn stream_outcome_impl(
+        &self,
+        src: &mut dyn RoundSource,
+        scratch: &mut DesScratch,
+        mut on_event: impl FnMut(u32, f64, FlowOutcome),
     ) -> StreamResult {
         scratch.reset();
         scratch.map.ensure(self.topo.link_universe());
@@ -2663,7 +2837,14 @@ impl<'t> DesSim<'t> {
         let mut retry_due: Vec<u32> = Vec::new();
         let mut faulted: Vec<usize> = Vec::new();
         let mut failed: Vec<u32> = Vec::new();
+        let mut deadline_due: Vec<u32> = Vec::new();
+        let mut hedge_due: Vec<u32> = Vec::new();
+        let mut cancelled: Vec<usize> = Vec::new();
         let mut failed_flows = 0usize;
+        let mut abandoned_flows = 0usize;
+        let mut hedged_flows = 0usize;
+        let mut retry_budgets =
+            self.opts.policies.as_ref().map(|p| p.retry_budgets());
         let mut makespan = 0.0f64;
 
         while ex.nodes_done < ex.total_nodes || ex.round_ev_pending {
@@ -2685,6 +2866,9 @@ impl<'t> DesSim<'t> {
             faults_due.clear();
             retry_due.clear();
             faulted.clear();
+            deadline_due.clear();
+            hedge_due.clear();
+            cancelled.clear();
             finished_nodes.clear();
             freed.clear();
             let mut rounds_due = false;
@@ -2718,6 +2902,33 @@ impl<'t> DesSim<'t> {
                             retry_due.push(ev.flow);
                         }
                     }
+                    // deadline/hedge timers validate against the node id
+                    // the slot carried at schedule time (`ev.epoch`):
+                    // recycling gives the slot a new node and kills the
+                    // event, while solve-epoch bumps (rate changes,
+                    // fault detaches) leave it armed. A deadline also
+                    // stays live while a hedge twin still runs even if
+                    // this slot itself already failed.
+                    EV_DEADLINE => {
+                        if ex.s.flow_node[fi] == ev.epoch {
+                            let mate = ex.s.hedge_mate[fi];
+                            if !ex.s.st.done[fi]
+                                || (mate != u32::MAX
+                                    && !ex.s.st.done[mate as usize])
+                            {
+                                deadline_due.push(ev.flow);
+                            }
+                        }
+                    }
+                    EV_HEDGE => {
+                        if ex.s.flow_node[fi] == ev.epoch
+                            && !ex.s.st.done[fi]
+                            && ex.s.st.active[fi]
+                            && ex.s.hedge_mate[fi] == u32::MAX
+                        {
+                            hedge_due.push(ev.flow);
+                        }
+                    }
                     // EV_NODE: `flow` carries the global node id
                     _ => finished_nodes.push(ev.flow),
                 }
@@ -2728,14 +2939,37 @@ impl<'t> DesSim<'t> {
             if !faults_due.is_empty() || !retry_due.is_empty() {
                 let fs = fsched.expect("fault events imply a schedule");
                 let DesScratch {
-                    d, map, st, heap, completions, arrivals, flow_rf, ..
+                    d,
+                    map,
+                    st,
+                    heap,
+                    completions,
+                    arrivals,
+                    flow_rf,
+                    flow_class,
+                    ..
                 } = &mut *ex.s;
                 let mut rf_of = |fi: usize| flow_rf[fi].clone();
                 self.fault_tick(
                     fs, &faults_due, &retry_due, d, map, st, heap, now,
                     completions, arrivals, &mut faulted, &mut failed,
-                    &mut rf_of,
+                    &mut rf_of, flow_class, &mut retry_budgets,
                 );
+                // a failed flow only fails its *request* once no hedge
+                // twin is still in flight (the twin may yet complete, or
+                // fail later and notify then — `fail` sinks must be
+                // idempotent: both twins can fail in one sweep)
+                for &fu in &failed {
+                    let fi = fu as usize;
+                    let mate = ex.s.hedge_mate[fi];
+                    if mate == u32::MAX || ex.s.st.done[mate as usize] {
+                        on_event(
+                            ex.s.flow_node[fi],
+                            now,
+                            FlowOutcome::Failed,
+                        );
+                    }
+                }
                 failed_flows += failed.len();
                 failed.clear();
             }
@@ -2791,10 +3025,146 @@ impl<'t> DesSim<'t> {
                 }
             }
 
+            // ---- deadline sweep ([`DesOpts::policies`]): abandon every
+            // due request still on the fabric — the flow (and any hedge
+            // twin) detaches, freeing its bandwidth for survivors, and
+            // the node retires with [`FlowOutcome::Abandoned`]; closed-
+            // loop dependents, if any, release at the abandon instant. A
+            // completion at this same instant wins the tie (mirroring
+            // the fault sweep); a fault-failure this instant leaves the
+            // sweep nothing live to abandon. ----
+            for &du in &deadline_due {
+                let v = du as usize;
+                let mate = ex.s.hedge_mate[v];
+                let twins = [
+                    Some(v),
+                    if mate == u32::MAX { None } else { Some(mate as usize) },
+                ];
+                if twins
+                    .iter()
+                    .flatten()
+                    .any(|w| ex.s.completions.contains(w))
+                {
+                    continue; // completion at this instant wins
+                }
+                let mut any = false;
+                for &w in twins.iter().flatten() {
+                    if ex.s.st.done[w] {
+                        continue; // failed since the event was popped
+                    }
+                    let on_fabric = ex.s.st.active[w];
+                    if on_fabric {
+                        ex.s.st.detach(&ex.s.d, w, now);
+                        // survivors sharing the abandoned flow's links
+                        // re-share its freed capacity: seed their
+                        // components (post-detach, like the fault sweep)
+                        for &l in ex.s.d.links_of(w) {
+                            faulted.extend(
+                                ex.s.st.link_flows[l as usize]
+                                    .iter()
+                                    .map(|&x| x as usize),
+                            );
+                        }
+                    }
+                    ex.s.st.done[w] = true;
+                    // recycle the slot only when no stale EV_ARRIVAL can
+                    // still target it (arrival events are not
+                    // epoch-checked): it was on the fabric, is waiting a
+                    // retry timer (EV_RETRY is epoch-checked), or its
+                    // arrival was already popped this very instant. A
+                    // never-released flow's slot leaks instead —
+                    // harmless, like a failed flow's.
+                    if on_fabric
+                        || ex.s.st.retry[w] > 0
+                        || ex.s.arrivals.contains(&w)
+                    {
+                        freed.push(w as u32);
+                    }
+                    any = true;
+                }
+                if !any {
+                    continue;
+                }
+                ex.s.hedge_mate[v] = u32::MAX;
+                if mate != u32::MAX {
+                    ex.s.hedge_mate[mate as usize] = u32::MAX;
+                }
+                let id = ex.s.flow_node[v];
+                abandoned_flows += 1;
+                makespan = makespan.max(now);
+                let succs = ex.finish_node(id, now);
+                on_event(id, now, FlowOutcome::Abandoned);
+                for su in succs {
+                    let sn = ex.node_mut(su);
+                    sn.deps_left -= 1;
+                    sn.release = sn.release.max(now);
+                    if sn.deps_left == 0 {
+                        relwork.push(su);
+                    }
+                }
+            }
+
+            // ---- hedge spawns ([`DesOpts::policies`]): a due request
+            // still in flight gets a twin on a link-disjoint minimal
+            // route (when one is up). The twin restarts the full
+            // transfer and shares the primary's node: whichever twin
+            // completes first finishes the request, the loser is
+            // cancelled in the completions block below. ----
+            for &hu in &hedge_due {
+                let fi = hu as usize;
+                if ex.s.st.done[fi]
+                    || !ex.s.st.active[fi]
+                    || ex.s.hedge_mate[fi] != u32::MAX
+                    || ex.s.completions.contains(&fi)
+                {
+                    continue; // faulted / finished since the pop
+                }
+                let rf0 = ex.s.flow_rf[fi].clone();
+                let path = match self.hedge_path(&ex.s.d, &rf0) {
+                    Some(p) => p,
+                    None => continue, // no disjoint live route: skip
+                };
+                let id = ex.s.flow_node[fi];
+                let class = ex.s.flow_class[fi];
+                let rf = RoutedFlow { flow: rf0.flow, path };
+                let bytes = rf.flow.bytes as f64;
+                let slot = if let Some(fs) = ex.s.free_slots.pop() {
+                    let fs = fs as usize;
+                    self.push_flow(&mut ex.s.d, &mut ex.s.map, &rf, Some(fs));
+                    ex.s.st.recycle_flow(fs, bytes);
+                    ex.s.flow_node[fs] = id;
+                    ex.s.flow_rf[fs] = rf;
+                    ex.s.flow_class[fs] = class;
+                    ex.s.hedge_mate[fs] = hu;
+                    fs
+                } else {
+                    let fs =
+                        self.push_flow(&mut ex.s.d, &mut ex.s.map, &rf, None);
+                    ex.s.st.push_flow(bytes);
+                    ex.s.flow_node.push(id);
+                    ex.s.flow_rf.push(rf);
+                    ex.s.flow_class.push(class);
+                    ex.s.hedge_mate.push(hu);
+                    fs
+                };
+                ex.s.st.grow_links(ex.s.d.cap.len());
+                ex.s.hedge_mate[fi] = slot as u32;
+                ex.s.arrivals.push(slot);
+                hedged_flows += 1;
+                on_event(id, now, FlowOutcome::Hedged);
+            }
+
             // ---- flow completions: bulk leaves the fabric now, node
             // completes after the latency/queue tail; the slot is
-            // recycled after this batch's solve ----
-            for &fi in &ex.s.completions {
+            // recycled after this batch's solve. First-completion-wins
+            // for hedged pairs: the winner cancels its twin. ----
+            for i in 0..ex.s.completions.len() {
+                let fi = ex.s.completions[i];
+                if ex.s.st.done[fi] {
+                    // hedge loser: its twin completed earlier this batch
+                    cancelled.push(fi);
+                    continue;
+                }
                 ex.s.st.complete(&ex.s.d, fi);
                 let rf = &ex.s.flow_rf[fi];
                 let tail = cm.msg_latency(&rf.path, rf.flow.bytes, rf.flow.buf)
@@ -2810,27 +3180,48 @@ impl<'t> DesSim<'t> {
                     epoch: 0,
                 }));
                 freed.push(fi as u32);
+                let mate = ex.s.hedge_mate[fi];
+                if mate != u32::MAX {
+                    let vi = mate as usize;
+                    ex.s.hedge_mate[fi] = u32::MAX;
+                    ex.s.hedge_mate[vi] = u32::MAX;
+                    if !ex.s.st.done[vi] {
+                        if ex.s.st.active[vi] {
+                            ex.s.st.detach(&ex.s.d, vi, now);
+                            for &l in ex.s.d.links_of(vi) {
+                                faulted.extend(
+                                    ex.s.st.link_flows[l as usize]
+                                        .iter()
+                                        .map(|&x| x as usize),
+                                );
+                            }
+                        }
+                        ex.s.st.done[vi] = true;
+                        freed.push(mate);
+                    }
+                }
+            }
+            // the batch lists feed the solver: drop hedge losers that
+            // were cancelled after being popped as completions/arrivals
+            // this instant (policy-armed runs only — the lists are
+            // untouched otherwise)
+            if self.opts.policies.is_some() {
+                let DesScratch { st, completions, arrivals, .. } =
+                    &mut *ex.s;
+                if !cancelled.is_empty() {
+                    completions.retain(|fi| !cancelled.contains(fi));
+                }
+                arrivals.retain(|&fi| !st.done[fi]);
             }
 
             // ---- node completions: release dependents, materializing
             // the next round the moment a deeper round first releases.
             // Zero-length compute chains collapse within the instant
-            // (the list grows while we walk it, as in `run_dag`). ----
+            // (the list grows while we walk it, as in `run_dag`). The
+            // drain leads the loop so releases seeded by the deadline
+            // sweep above flow through even when nothing finished. ----
             let mut k = 0;
-            while k < finished_nodes.len() {
-                let id = finished_nodes[k];
-                k += 1;
-                makespan = makespan.max(now);
-                let succs = ex.finish_node(id, now);
-                on_finish(id, now);
-                for su in succs {
-                    let sn = ex.node_mut(su);
-                    sn.deps_left -= 1;
-                    sn.release = sn.release.max(now);
-                    if sn.deps_left == 0 {
-                        relwork.push(su);
-                    }
-                }
+            loop {
                 while let Some(rid) = relwork.pop() {
                     let round = ex.node(rid).round;
                     if let Some(t) =
@@ -2884,6 +3275,22 @@ impl<'t> DesSim<'t> {
                         }
                     }
                 }
+                if k >= finished_nodes.len() {
+                    break;
+                }
+                let id = finished_nodes[k];
+                k += 1;
+                makespan = makespan.max(now);
+                let succs = ex.finish_node(id, now);
+                on_event(id, now, FlowOutcome::Finished);
+                for su in succs {
+                    let sn = ex.node_mut(su);
+                    sn.deps_left -= 1;
+                    sn.release = sn.release.max(now);
+                    if sn.deps_left == 0 {
+                        relwork.push(su);
+                    }
+                }
             }
 
             for &fi in &ex.s.arrivals {
@@ -2918,6 +3325,8 @@ impl<'t> DesSim<'t> {
             fastpath_components: ex.s.st.fastpath,
             failed_flows,
             aborted_nodes: ex.total_nodes - ex.nodes_done,
+            abandoned_flows,
+            hedged_flows,
         }
     }
 
@@ -3152,6 +3561,23 @@ impl<'a, 's, 't> DesSession<'a, 's, 't> {
         self
     }
 
+    /// Arm a [`super::degrade::ServicePolicy`] for this session only
+    /// (composes with [`DesSession::opts`] / [`DesSession::faults`] in
+    /// any order). Enforced by the streaming executor; batch executors
+    /// honor only the class-0 retry budget.
+    pub fn policies(
+        mut self,
+        policy: super::degrade::ServicePolicy,
+    ) -> Self {
+        let mut o = self
+            .opts
+            .take()
+            .unwrap_or_else(|| self.sim.opts.clone());
+        o.policies = Some(policy);
+        self.opts = Some(o);
+        self
+    }
+
     /// The simulator this session runs on: the borrowed one, or a
     /// same-topology twin carrying the session's [`DesOpts`] override.
     fn effective(&self) -> DesSim<'t> {
@@ -3202,6 +3628,23 @@ impl<'a, 's, 't> DesSession<'a, 's, 't> {
         let sim = self.effective();
         sim.stream_sink_impl(src, self.scratch, on_finish)
     }
+
+    /// Streaming execution with a full per-node outcome sink:
+    /// `on_event(id, t, outcome)` fires once per terminal outcome
+    /// ([`FlowOutcome::Finished`] / [`FlowOutcome::Failed`] /
+    /// [`FlowOutcome::Abandoned`]) plus once per hedge spawn
+    /// ([`FlowOutcome::Hedged`], non-terminal — the node still reaches a
+    /// terminal outcome later). This is how the open-loop collector
+    /// retires failed and abandoned requests instead of carrying them as
+    /// phantom backlog.
+    pub fn stream_outcomes(
+        self,
+        src: &mut dyn RoundSource,
+        on_event: impl FnMut(u32, f64, FlowOutcome),
+    ) -> StreamResult {
+        let sim = self.effective();
+        sim.stream_outcome_impl(src, self.scratch, on_event)
+    }
 }
 
 const EV_COMPLETION: u8 = 0;
@@ -3231,6 +3674,22 @@ const EV_FAULT: u8 = 4;
 /// capacities — still down re-arms the backoff (or fails past the
 /// retry cap), healthy re-attaches as a normal arrival.
 const EV_RETRY: u8 = 5;
+/// Service-policy deadline ([`DesOpts::policies`], streaming runs only):
+/// `Ev::flow` is the flow slot, `Ev::epoch` the *workload node id* the
+/// slot carried at schedule time. Node-id validation (rather than the
+/// solve-epoch used by `EV_COMPLETION`) is deliberate: commits bump the
+/// slot epoch on every rate change, but a deadline must survive those
+/// and only die when the slot is recycled to a new node. At fire time a
+/// still-running flow is abandoned: detached from its links (freeing
+/// bandwidth for survivors), its node retired with
+/// [`FlowOutcome::Abandoned`]. A completion at the same instant wins.
+const EV_DEADLINE: u8 = 6;
+/// Service-policy hedge trigger ([`DesOpts::policies`], streaming runs
+/// only): same `flow`/`epoch` encoding as `EV_DEADLINE`. At fire time a
+/// still-running flow gets a duplicate spawned on a link-disjoint
+/// minimal route (if one is up); first completion wins and the loser is
+/// cancelled. A completion at the same instant suppresses the hedge.
+const EV_HEDGE: u8 = 7;
 
 /// Heap event for the incremental solver (min-heap through `Reverse`):
 /// ordered by time, completions before arrivals at equal times.

@@ -38,10 +38,16 @@
 //! [`FaultSchedule`] executed inside the DES event heap (`EV_FAULT`),
 //! with reroute / retry-backoff / abort semantics for in-flight flows
 //! crossing a link that goes down.
+//!
+//! [`degrade`] is the overload-control layer riding the open-loop tier:
+//! per-[`RpcClass`] [`ServicePolicy`] (admission shedding, deadlines,
+//! retry budgets, hedging) enforced by the streaming executor
+//! (`EV_DEADLINE`/`EV_HEDGE`) and the arrival adapter.
 
 pub mod analysis;
 pub mod analytic;
 pub mod arrivals;
+pub mod degrade;
 pub mod des;
 pub mod faults;
 pub mod load;
@@ -58,9 +64,10 @@ pub use arrivals::{
     run_open_loop, Arrival, ArrivalSource, PoissonArrivals, RpcClass,
     SteadyCollector, SteadyState, TraceArrivals,
 };
+pub use degrade::{brownout_policy, Admission, ClassPolicy, ServicePolicy};
 pub use des::{
-    DagResult, DesOpts, DesScratch, DesSession, DesSim, StreamResult,
-    TimedFlow,
+    DagResult, DesOpts, DesScratch, DesSession, DesSim, FlowOutcome,
+    StreamResult, TimedFlow,
 };
 pub use faults::{FaultEvent, FaultKind, FaultPolicy, FaultSchedule};
 pub use load::{LoadMap, SparseLoadMap};

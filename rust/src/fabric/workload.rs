@@ -305,6 +305,15 @@ pub trait RoundSource {
     fn next_round_not_before(&mut self) -> f64 {
         0.0
     }
+
+    /// Service class of node `i` of the round most recently returned by
+    /// [`Self::next_round`] — the degradation layer's per-class policy
+    /// lookup (`fabric::degrade`). Closed-loop sources keep the
+    /// default: everything is class 0. Queried only while a
+    /// `ServicePolicy` is armed.
+    fn node_class(&self, _i: usize) -> u8 {
+        0
+    }
 }
 
 impl<F: FnMut() -> Option<Vec<StreamNode>>> RoundSource for F {

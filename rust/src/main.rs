@@ -10,6 +10,7 @@
 //! repro campaign [threads] [out]     parallel scenario sweep (JSON report)
 //! repro openloop [threads] [out]     1M-arrival open-loop service run
 //! repro chaos [threads] [out]        fault-rate x policy chaos sweep
+//! repro brownout [threads] [out]     fault-rate x overload-policy sweep
 //! repro lint [scenario|--all]        pre-execution workload verifier
 //! ```
 //!
@@ -30,7 +31,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: repro \
          <spec|list|reproduce|functional|validate|launch|campaign|openloop\
-         |chaos|lint> ..."
+         |chaos|brownout|lint> ..."
     );
     std::process::exit(2);
 }
@@ -234,6 +235,53 @@ fn main() -> Result<()> {
                 println!("report written to {out}");
             }
         }
+        "brownout" => {
+            // repro brownout [threads] [out.json] — the graceful-
+            // degradation sweep: fault rate (flap count over the service
+            // run) x overload policy (off / shed / full) on the Poisson
+            // RPC service. Each row's schema-v5 `degradation` block
+            // carries the per-class shed/abandoned/failed/hedged
+            // counters and the goodput the policy preserved; like chaos,
+            // cell fault schedules are name-derived, so the report is
+            // deterministic and the CI campaign-determinism job
+            // byte-diffs it across DES_THREADS=1 and DES_THREADS=8.
+            let threads: usize = args
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or_else(pool::default_threads);
+            let cfg = AuroraConfig::small(4, 4);
+            let mut c =
+                Campaign::brownout(&cfg, aurorasim::reproduce::CAMPAIGN_SEED);
+            if let Some(n) = std::env::var("DES_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                for s in &mut c.scenarios {
+                    s.opts.solver_threads = n.max(1);
+                }
+            }
+            let rep = c.run(threads);
+            println!("{}", rep.render_table());
+            for r in &rep.results {
+                if let (Some(ss), true) =
+                    (&r.steady_state, r.policy.is_some())
+                {
+                    let shed: u64 = ss.shed.iter().sum();
+                    let abandoned: u64 = ss.abandoned.iter().sum();
+                    let failed: u64 = ss.failed.iter().sum();
+                    println!(
+                        "{:28} shed {shed:>6}  abandoned {abandoned:>6}  \
+                         failed {failed:>6}  goodput {:.0}/s",
+                        r.name, ss.goodput_flows
+                    );
+                }
+            }
+            if let Some(out) = args.get(2) {
+                rep.write(out)?;
+                println!("report written to {out}");
+            }
+        }
         "lint" => {
             // repro lint [scenario|--all] — run the pre-execution
             // workload verifier (fabric::analysis) over every campaign
@@ -248,6 +296,12 @@ fn main() -> Result<()> {
                 Campaign::standard(&AuroraConfig::small(8, 4), seed)
                     .scenarios;
             scenarios.extend(Campaign::open_loop_aurora(seed).scenarios);
+            // the brownout sweep's service policies go through the same
+            // verifier (analyze_policies) as its workloads
+            scenarios.extend(
+                Campaign::brownout(&AuroraConfig::small(4, 4), seed)
+                    .scenarios,
+            );
             if target != "--all" {
                 scenarios.retain(|s| s.name == target);
                 if scenarios.is_empty() {

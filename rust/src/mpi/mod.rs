@@ -385,6 +385,22 @@ impl<'t> World<'t> {
         self.des_opts.faults = faults;
     }
 
+    /// Install a graceful-degradation [`crate::fabric::ServicePolicy`]
+    /// (admission shedding, deadlines, retry budgets, hedging) on this
+    /// world's DES options: every subsequent
+    /// [`World::open_loop_service`] run enforces it (per-class
+    /// shed/abandoned/failed/hedged counters and goodput come back in
+    /// the [`SteadyState`]). Admission, deadlines and hedging only arm
+    /// on the streaming executor; the class-0 retry budget also bounds
+    /// retry-backoff re-arms in batch Des-tier exchanges. Pass `None`
+    /// to clear; an inert policy is bit-identical to none.
+    pub fn set_service_policy(
+        &mut self,
+        policy: Option<crate::fabric::ServicePolicy>,
+    ) {
+        self.des_opts.policies = policy;
+    }
+
     /// Run an open-loop Poisson RPC service over this world's rank NICs
     /// on the bounded-memory streaming tier ([`crate::fabric::arrivals`]):
     /// `arrivals` flows at `rate`/s, sizes drawn from `mix`, batched

@@ -12,16 +12,28 @@
 //!   `DagWorkload::from_timed` on the identical routed transfers.
 //! * Determinism: the open-loop campaign scenario serializes to
 //!   byte-identical JSON at every DES solver-thread count.
+//!
+//! PR-10 graceful degradation rides the same tier, so its suite lives
+//! here too: fault-failed flows retire through the collector (no
+//! phantom backlog, clean quantiles), an armed-but-inert
+//! [`ServicePolicy`] is bit-identical to no policy, a brownout
+//! (faults + policy) scenario serializes byte-identically at every
+//! solver-thread count, the brownout acceptance property (policy keeps
+//! accepted p99 bounded and backlog flat under a mid-run flap while
+//! the unprotected run's backlog grows with offered load), and hedged
+//! requests completing on a disjoint route.
 
 use aurorasim::campaign::{Campaign, Scenario, Workload};
 use aurorasim::config::AuroraConfig;
 use aurorasim::fabric::arrivals::OpenLoopSource;
 use aurorasim::fabric::des::{DesOpts, DesScratch, DesSim, TimedFlow};
+use aurorasim::fabric::faults::{FaultKind, FaultPolicy, FaultSchedule};
 use aurorasim::fabric::{
-    run_open_loop, workload, Arrival, ArrivalSource, Flow, PoissonArrivals,
-    RoundSource, Router, RoutedFlow, RpcClass, StreamNode, TraceArrivals,
+    brownout_policy, run_open_loop, workload, Arrival, ArrivalSource,
+    ClassPolicy, Flow, PoissonArrivals, RoundSource, Router, RoutedFlow,
+    RpcClass, ServicePolicy, StreamNode, TraceArrivals,
 };
-use aurorasim::topology::Topology;
+use aurorasim::topology::{LinkId, Topology};
 
 fn mix() -> Vec<RpcClass> {
     vec![
@@ -293,4 +305,339 @@ fn sparse_arrivals_skip_empty_windows_without_deadlock() {
     assert_eq!(res.total_nodes, 4);
     assert_eq!(res.late_releases, 0, "sparse windows never release late");
     assert!(res.makespan > 20.0, "the final arrival at t=20 s completes");
+}
+
+// ---------------------------------------- PR-10 graceful degradation
+
+/// Satellite-1 regression: flows failed by the fault policy retire
+/// through the collector at their failure instant. Eight 8 MiB incast
+/// flows onto a NIC that dies at t = 100 us exhaust their retry
+/// backoff and fail; the latency quantiles stay clean (only the fast
+/// bystanders and late probes enter the histogram), and — the phantom
+/// -backlog bug this pins — probe arrivals 50 ms later are admitted
+/// under a backlog-threshold policy, which only holds if the failures
+/// really left the class-0 backlog.
+#[test]
+fn fault_failed_flows_retire_and_keep_quantiles_clean() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let eps = workload::spread_nics(&t, 16);
+    let dead = eps[1];
+    let mut trace = String::from("# t src dst bytes class\n");
+    for i in 0..8 {
+        // class-0 incast onto the doomed NIC: still in flight at the
+        // fault (8 flows sharing one ejection NIC need milliseconds)
+        trace.push_str(&format!("0 {} {dead} 8388608 0\n", eps[2 + i]));
+    }
+    for i in 0..4 {
+        // class-1 bystanders between healthy endpoints: microseconds
+        trace.push_str(&format!(
+            "0 {} {} 65536 1\n",
+            eps[10 + i],
+            eps[10 + (i + 1) % 4]
+        ));
+    }
+    for _ in 0..6 {
+        // late class-0 probes, long after the failures resolved
+        trace.push_str(&format!("0.05 {} {} 65536 0\n", eps[2], eps[3]));
+    }
+    let faults = FaultSchedule::new(FaultPolicy::RetryBackoff {
+        timeout: 25e-6,
+        backoff: 2.0,
+        max_retries: 2,
+    })
+    .at(100e-6, FaultKind::NicDown { endpoint: dead });
+    let run = |policies: Option<ServicePolicy>| {
+        let sim = DesSim::new(
+            &t,
+            DesOpts {
+                faults: Some(faults.clone()),
+                policies,
+                ..DesOpts::default()
+            },
+        );
+        let mut scratch = DesScratch::new();
+        let mut router = Router::with_seed(&t, 3);
+        let src = TraceArrivals::new(trace.as_bytes());
+        run_open_loop(&sim, &mut scratch, src, &mut router, 1e-3, 10e-3)
+    };
+
+    let (res, ss) = run(None);
+    assert_eq!(res.failed_flows, 8, "every incast flow fails");
+    assert_eq!(ss.arrivals, 18, "no policy: every arrival is accepted");
+    assert_eq!(ss.completed, 10, "bystanders and probes complete");
+    assert_eq!(ss.failed.first().copied(), Some(8));
+    assert_eq!(ss.failed.iter().sum::<u64>(), 8);
+    assert!(ss.p50 > 0.0 && ss.p999.is_finite());
+    assert!(
+        ss.p999 < 1e-3,
+        "failed incasts must never enter the histogram (p999 {})",
+        ss.p999
+    );
+    let (_, ss2) = run(None);
+    assert_eq!(ss, ss2, "failure accounting is deterministic");
+
+    // phantom-backlog regression: with a class backlog threshold of 8,
+    // the 6 probes at t = 50 ms are admitted only because the 8 failed
+    // incasts retired from the backlog at their failure instant
+    let probe = ServicePolicy::uniform(
+        2,
+        ClassPolicy { backlog_limit: 8, ..ClassPolicy::OFF },
+    );
+    let (res_p, ss_p) = run(Some(probe));
+    assert_eq!(res_p.failed_flows, 8);
+    assert_eq!(
+        ss_p.shed.iter().sum::<u64>(),
+        0,
+        "failed flows must leave the backlog — probes were shed"
+    );
+    assert_eq!(ss_p.completed, 10);
+}
+
+/// An armed-but-inert [`ServicePolicy`] (every control off) must be
+/// bit-identical to running with no policy at all — the degradation
+/// path may tag and check but never perturb (the test-scale twin of
+/// the gated `degrade_overhead` bench's in-bench equality assertion).
+#[test]
+fn inert_policy_is_bit_identical_to_no_policy() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let nics = workload::spread_nics(&t, 64);
+    let run = |policies: Option<ServicePolicy>| {
+        let sim = DesSim::new(&t, DesOpts { policies, ..DesOpts::default() });
+        let mut scratch = DesScratch::new();
+        let mut router = Router::with_seed(&t, 13);
+        let src =
+            PoissonArrivals::new(13, 80_000.0, 5_000, nics.clone(), mix());
+        run_open_loop(&sim, &mut scratch, src, &mut router, 1e-3, 10e-3)
+    };
+    let (rn, sn) = run(None);
+    let (ri, si) = run(Some(ServicePolicy::uniform(2, ClassPolicy::OFF)));
+    assert_eq!(sn, si, "inert policy must not move steady-state metrics");
+    assert_eq!(rn.makespan.to_bits(), ri.makespan.to_bits());
+    assert_eq!(rn.peak_live_nodes, ri.peak_live_nodes);
+    assert_eq!(ri.abandoned_flows + ri.hedged_flows, 0);
+    assert_eq!(sn.completed, 5_000);
+}
+
+/// The brownout scenario (mid-run flaps + armed policy) serializes to
+/// byte-identical JSON at every DES solver-thread count — EV_DEADLINE
+/// and EV_HEDGE ride the same deterministic event heap as everything
+/// else, and the v5 degradation block is a pure function of the run.
+#[test]
+fn brownout_scenario_json_is_identical_across_solver_threads() {
+    let topo = Topology::new(&AuroraConfig::small(4, 4));
+    let faults = FaultSchedule::random_flaps(
+        &topo,
+        4,
+        0.04,
+        4e-3,
+        11,
+        FaultPolicy::RetryBackoff {
+            timeout: 25e-6,
+            backoff: 2.0,
+            max_retries: 6,
+        },
+    );
+    let scenario = |threads: usize| {
+        Scenario::new(
+            "brownout_det",
+            AuroraConfig::small(4, 4),
+            DesOpts {
+                solver_threads: threads,
+                faults: Some(faults.clone()),
+                policies: Some(brownout_policy(&mix(), 96, 12e-3, 400.0)),
+                ..DesOpts::default()
+            },
+            Workload::OpenLoop {
+                arrivals: 3_000,
+                rate: 60_000.0,
+                endpoints: 64,
+                mix: mix(),
+                quantum: 1e-3,
+                window: 10e-3,
+                bw_multiplier: 1.0,
+                link_fraction: 0.0,
+            },
+            9,
+        )
+    };
+    let report = |threads: usize, workers: usize| {
+        let c = Campaign { scenarios: vec![scenario(threads)] };
+        c.run(workers).to_json().dump_pretty()
+    };
+    let serial = report(1, 1);
+    let fanned = report(8, 2);
+    assert_eq!(
+        serial, fanned,
+        "brownout report must be byte-identical across DES solver threads"
+    );
+    assert!(serial.contains("\"degradation\""));
+    assert!(serial.contains("\"goodput_flows_per_s\""));
+    assert!(serial.contains("\"shed\""));
+}
+
+/// ISSUE-10 acceptance: under a mid-run brownout (the incast NIC
+/// degrades to 10% capacity while offered load stays fixed), the
+/// unprotected run's backlog grows with offered load, while a
+/// backlog-threshold policy caps the backlog at its limit and a
+/// deadline policy keeps the accepted p99 within 2x the healthy p99 —
+/// structurally, since EV_DEADLINE abandons any request the instant
+/// its SLO expires.
+#[test]
+fn brownout_policy_keeps_latency_bounded_and_backlog_flat_under_flap() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let eps = workload::spread_nics(&t, 16);
+    // 100k arrivals/s of 64 KiB onto one ejection NIC: rho ~ 0.3
+    // healthy (22.5 GB/s NIC), rho ~ 3 after the 0.1x degrade
+    let trace = |n: usize| {
+        let mut s = String::new();
+        for i in 0..n {
+            s.push_str(&format!(
+                "{} {} {} 65536 0\n",
+                i as f64 * 1e-5,
+                eps[1 + (i % 12)],
+                eps[0]
+            ));
+        }
+        s
+    };
+    let run = |n: usize, fault: bool, policies: Option<ServicePolicy>| {
+        let faults = if fault {
+            Some(FaultSchedule::new(FaultPolicy::Reroute).at(
+                2e-3,
+                FaultKind::LinkDegrade {
+                    link: LinkId::NicDown(eps[0]),
+                    multiplier: 0.1,
+                },
+            ))
+        } else {
+            None
+        };
+        let sim =
+            DesSim::new(&t, DesOpts { faults, policies, ..DesOpts::default() });
+        let mut scratch = DesScratch::new();
+        let mut router = Router::with_seed(&t, 17);
+        let tr = trace(n);
+        let src = TraceArrivals::new(tr.as_bytes());
+        run_open_loop(&sim, &mut scratch, src, &mut router, 1e-3, 10e-3)
+    };
+
+    let (_, hs) = run(2000, false, None);
+    assert_eq!(hs.completed, 2000);
+    assert!(hs.p99 > 0.0 && hs.p99.is_finite());
+
+    // policy-off: backlog grows monotonically with offered load
+    let (_, so_small) = run(1000, true, None);
+    let (_, so_big) = run(2000, true, None);
+    assert!(
+        so_big.max_backlog[0] > so_small.max_backlog[0],
+        "unprotected backlog must grow with offered load ({} vs {})",
+        so_big.max_backlog[0],
+        so_small.max_backlog[0]
+    );
+
+    // shed-only policy: the backlog threshold caps the queue and sheds
+    // the overload the unprotected run absorbs
+    let shed_policy = ServicePolicy::uniform(
+        1,
+        ClassPolicy { backlog_limit: 64, ..ClassPolicy::OFF },
+    );
+    let (_, son) = run(2000, true, Some(shed_policy));
+    assert!(
+        son.max_backlog[0] <= 64,
+        "backlog must stay at the limit (max {})",
+        son.max_backlog[0]
+    );
+    assert!(
+        so_big.max_backlog[0] >= 4 * son.max_backlog[0],
+        "policy-off backlog ({}) must dwarf the capped one ({})",
+        so_big.max_backlog[0],
+        son.max_backlog[0]
+    );
+    assert!(son.shed.iter().sum::<u64>() > 0, "overload must shed");
+    let retired = son.completed
+        + son.abandoned.iter().sum::<u64>()
+        + son.failed.iter().sum::<u64>();
+    assert_eq!(retired, son.arrivals, "every accepted request retires");
+    assert_eq!(
+        son.arrivals + son.shed.iter().sum::<u64>(),
+        2000,
+        "accepted + shed covers the offered load"
+    );
+
+    // deadline policy: accepted p99 bounded by the SLO, backlog flat
+    let dl_policy = ServicePolicy::uniform(
+        1,
+        ClassPolicy { deadline: hs.p99 * 1.8, ..ClassPolicy::OFF },
+    );
+    let (_, sdl) = run(2000, true, Some(dl_policy));
+    assert!(
+        sdl.p99 <= hs.p99 * 2.0,
+        "deadline policy must keep accepted p99 ({}) within 2x healthy ({})",
+        sdl.p99,
+        hs.p99
+    );
+    assert!(
+        so_big.p99 >= hs.p99 * 2.0,
+        "unprotected p99 ({}) must blow past 2x healthy ({})",
+        so_big.p99,
+        hs.p99
+    );
+    assert!(
+        sdl.max_backlog[0] * 4 <= so_big.max_backlog[0],
+        "abandonment keeps the backlog flat ({} vs {})",
+        sdl.max_backlog[0],
+        so_big.max_backlog[0]
+    );
+    assert!(sdl.abandoned.iter().sum::<u64>() > 0, "overload must abandon");
+    assert!(sdl.completed > 0 && sdl.goodput_flows > 0.0);
+    assert_eq!(sdl.deadline_met, sdl.completed, "every completion met its SLO");
+}
+
+/// Hedged requests duplicate onto a link-disjoint minimal route after
+/// `hedge_delay` and the first completion wins. The primary's non-NIC
+/// links are statically degraded to 1e-3x, so the primary alone would
+/// take ~46 ms; the hedge twin on the disjoint candidate finishes in
+/// microseconds and cancels it.
+#[test]
+fn hedge_duplicates_onto_disjoint_route_and_first_completion_wins() {
+    let t = Topology::new(&AuroraConfig::small(4, 4));
+    let eps = workload::spread_nics(&t, 4);
+    let (s, d) = (eps[0], eps[1]);
+    // probe: an identically seeded router replays the real router's
+    // first (and only) route decision
+    let primary = Router::with_seed(&t, 31).route(&Flow::new(s, d, 1 << 20));
+    assert!(primary.minimal, "zero load routes minimally");
+    let slow: Vec<LinkId> = primary
+        .links
+        .iter()
+        .copied()
+        .filter(|l| !matches!(l, LinkId::NicUp(_) | LinkId::NicDown(_)))
+        .collect();
+    assert!(!slow.is_empty(), "cross-group path has switch links");
+
+    let mut opts = DesOpts::default();
+    for l in &slow {
+        opts.degraded.insert(*l, 1e-3);
+    }
+    opts.policies = Some(ServicePolicy::uniform(
+        1,
+        ClassPolicy { hedge_delay: 50e-6, ..ClassPolicy::OFF },
+    ));
+    let sim = DesSim::new(&t, opts);
+    let mut scratch = DesScratch::new();
+    let mut router = Router::with_seed(&t, 31);
+    let trace = format!("0 {s} {d} 1048576 0\n");
+    let src = TraceArrivals::new(trace.as_bytes());
+    let (res, ss) =
+        run_open_loop(&sim, &mut scratch, src, &mut router, 1e-3, 10e-3);
+    assert_eq!(res.hedged_flows, 1, "the crawling primary hedges");
+    assert_eq!(ss.hedged.iter().sum::<u64>(), 1);
+    assert_eq!(ss.completed, 1, "first completion wins, exactly once");
+    assert_eq!(res.failed_flows, 0);
+    assert!(
+        res.makespan < 5e-3,
+        "the disjoint hedge route must finish in microseconds, not the \
+         primary's ~46 ms crawl (makespan {})",
+        res.makespan
+    );
 }
